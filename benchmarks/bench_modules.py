@@ -1,0 +1,94 @@
+"""Table 4: head-to-head module timings.
+
+Clustering: one-pass sign clustering vs 20-iteration K-means.
+Retrieval:  LUT build + LUT-GEMV vs full-precision q.K^T vs Quest pages.
+Attention:  sparse (7.5 %) fused-dequant attention vs full attention.
+
+CPU microseconds — relative ratios are the comparable quantity (the paper's
+absolute numbers are A100/4090).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_fn
+from repro.core import codebook as cb
+from repro.core import retrieval as rtr
+from repro.data.synthetic import structured_kv
+
+
+def kmeans_codebook(k_sub: jax.Array, iters: int = 20, C: int = 16):
+    """Reference K-means (paper's comparison): k_sub (N, d)."""
+    cents = k_sub[:C]
+    for _ in range(iters):
+        d2 = jnp.sum((k_sub[:, None, :] - cents[None]) ** 2, -1)
+        assign = jnp.argmin(d2, -1)
+        onehot = jax.nn.one_hot(assign, C, dtype=k_sub.dtype)
+        sums = onehot.T @ k_sub
+        counts = jnp.maximum(onehot.sum(0)[:, None], 1.0)
+        cents = sums / counts
+    return cents
+
+
+def run(L: int = 16384, D: int = 64) -> None:
+    header("bench_modules (paper Table 4, 16K tokens)")
+    B, H = 1, 4
+    k, v = structured_kv(jax.random.PRNGKey(0), B, H, L, D)
+    kn, _ = cb.normalize_keys(k)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, D))
+
+    # --- clustering -------------------------------------------------------
+    ours = jax.jit(lambda x: cb.build_self_index(x)[1])
+    t_ours = time_fn(ours, k)
+    k_sub = kn[0, 0].reshape(-1, 4)  # one group's subvectors
+    G = D // 4
+    km = jax.jit(functools.partial(kmeans_codebook, iters=20))
+    t_km_one = time_fn(km, k_sub)
+    t_km = t_km_one * G * H  # paper clusters every group/head
+    emit("modules/clustering/ours_onepass", t_ours, "all groups+heads")
+    emit("modules/clustering/kmeans20", t_km,
+         f"extrapolated x{G * H} groups;speedup={t_km / t_ours:.1f}x")
+
+    # --- retrieval --------------------------------------------------------
+    codes, cents, mu = cb.build_self_index(k)
+    lut_fn = jax.jit(lambda c, qq, ce: rtr.lut_scores(
+        c, rtr.build_lut(qq, ce)))
+    t_lut = time_fn(lut_fn, codes, q, cents)
+    full_fn = jax.jit(lambda qq, kk: jnp.einsum("bhd,bhld->bhl", qq, kk))
+    t_full = time_fn(full_fn, q, k)
+    # Quest-style page scoring (page=16)
+    P = L // 16
+    kp = k.reshape(B, H, P, 16, D)
+    kmin, kmax = kp.min(3), kp.max(3)
+    quest_fn = jax.jit(lambda qq, lo, hi: jnp.sum(
+        jnp.maximum(qq[:, :, None, :] * lo, qq[:, :, None, :] * hi), -1))
+    t_quest = time_fn(quest_fn, q, kmin, kmax)
+    emit("modules/retrieval/lut_gemv", t_lut,
+         f"vs_full={t_full / t_lut:.2f}x")
+    emit("modules/retrieval/full_dot", t_full, "")
+    emit("modules/retrieval/quest_pages", t_quest, "page=16")
+
+    # --- attention --------------------------------------------------------
+    from repro.config import SIKVConfig
+    from repro.core.attention import sikv_decode_attention, masked_attention
+    from repro.core.cache import prefill_compress
+    budget = int(0.075 * L)
+    cfg = SIKVConfig(num_sink_tokens=64, token_budget=budget,
+                     recent_window=16, obs_window=32)
+    q_obs = jax.random.normal(jax.random.PRNGKey(2), (B, H, 32, D))
+    cache = prefill_compress(k, v, q_obs, cfg, capacity=L + 2,
+                             scale_dtype=jnp.float32)
+    qd = jax.random.normal(jax.random.PRNGKey(3), (B, H, 1, D))
+    k_new = jax.random.normal(jax.random.PRNGKey(4), (B, H, 1, D))
+    v_new = jax.random.normal(jax.random.PRNGKey(5), (B, H, 1, D))
+    sparse_fn = jax.jit(lambda *a: sikv_decode_attention(*a, cfg)[0])
+    t_sparse = time_fn(sparse_fn, qd, k_new, v_new, cache)
+    valid = jnp.ones(k.shape[:3], bool)
+    full_attn = jax.jit(lambda *a: masked_attention(*a))
+    t_fullattn = time_fn(full_attn, qd, k, v, valid)
+    emit("modules/attention/sikv_sparse_7.5pct", t_sparse,
+         f"budget={budget};speedup={t_fullattn / t_sparse:.2f}x")
+    emit("modules/attention/full", t_fullattn, "")

@@ -1,0 +1,25 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, header
+from repro.roofline import HW, load_records, roofline_terms
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run() -> None:
+    header("bench_roofline (from dry-run artifacts)")
+    recs = load_records(os.path.abspath(ART))
+    if not recs:
+        print("roofline/no_artifacts,0.0,run repro.launch.dryrun first")
+        return
+    for rec in recs:
+        r = roofline_terms(rec)
+        mesh = "x".join(str(s) for s in rec["mesh"])
+        emit(f"roofline/{rec['arch']}/{rec['shape']}/{mesh}",
+             r["bound_s"] * 1e6,
+             f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
+             f"collective={r['collective_s']:.3e}s;bound={r['dominant']};"
+             f"useful={r['useful_ratio']:.2f}")

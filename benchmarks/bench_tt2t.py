@@ -1,0 +1,41 @@
+"""Table 3 proxy (TT2T): prefill overhead of cache compression.
+
+The paper's claim: one-pass compression adds ~5 % to Time-To-2nd-Token over
+plain FlashAttention prefill.  We time full-model prefill WITH cache
+construction vs the bare forward pass at several prompt lengths (CPU,
+reduced model — the ratio is the claim under test, not absolute seconds).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, header, time_fn
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.models import forward_train, init_params, prefill
+from repro.sparse import get_method
+
+
+def run() -> None:
+    header("bench_tt2t (paper Table 3, prefill overhead)")
+    import dataclasses
+    cfg = reduced_config(get_model_config("llama3.1-8b"), num_layers=2,
+                         d_model=256)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sikv = SIKVConfig(num_sink_tokens=64, token_budget=160,
+                      recent_window=16, obs_window=32)
+    for L in [512, 1024, 2048]:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, L), 0,
+                                  cfg.vocab_size)
+        bare = jax.jit(lambda p, t: forward_train(p, cfg, {"tokens": t})[0])
+        t_bare = time_fn(bare, params, toks, iters=3)
+        m = get_method("sikv", sikv)
+        pre = jax.jit(functools.partial(prefill, cfg=cfg, method=m,
+                                        capacity=L + 16))
+        t_pre = time_fn(lambda p, t: pre(p, batch={"tokens": t})[0],
+                        params, toks, iters=3)
+        emit(f"tt2t/L={L}", t_pre,
+             f"bare={t_bare:.0f}us;overhead={100 * (t_pre / t_bare - 1):.1f}%")

@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing, CSV emission, synthetic workloads."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time in microseconds (jit-compiled callables)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def header(title: str) -> None:
+    print(f"\n# --- {title} " + "-" * max(8, 60 - len(title)))

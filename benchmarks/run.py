@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
+stdout).  ``python -m benchmarks.run [--only <name>]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="substring filter of benchmark module names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_ablation, bench_longbench_proxy,
+                            bench_memory, bench_modules, bench_roofline,
+                            bench_ruler_proxy, bench_tt2t)
+    suites = [
+        ("bench_memory", bench_memory.run),          # Fig 5 / overhead
+        ("bench_longbench_proxy", bench_longbench_proxy.run),  # Table 1
+        ("bench_ruler_proxy", bench_ruler_proxy.run),          # Fig 4 / T2
+        ("bench_modules", bench_modules.run),        # Table 4
+        ("bench_tt2t", bench_tt2t.run),              # Table 3
+        ("bench_ablation", bench_ablation.run),      # Table 5
+        ("bench_roofline", bench_roofline.run),      # dry-run roofline
+    ]
+    failures = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},FAILED,{e!r}")
+    print("\nname,us_per_call,derived  (all rows above)")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

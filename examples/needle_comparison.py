@@ -1,0 +1,46 @@
+"""Needle-retrieval comparison: why self-indexing beats static pruning.
+
+Plants high-relevance "needle" tokens in a long synthetic cache whose
+positions the prefill-time observation window cannot predict, then measures
+which methods' sparse attention still finds them at decode time (the
+mechanism behind the paper's Ruler NS-* rows, where SnapKV collapses to 28 %
+and SIKV holds 100 %).
+
+Run:  PYTHONPATH=src python examples/needle_comparison.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SIKVConfig
+from repro.data.synthetic import needle_cache, scatter_rows
+from repro.sparse import get_method
+
+
+def main() -> None:
+    B, H, L, D, n = 2, 4, 8192, 64, 8
+    budget = 256
+    cfg = SIKVConfig(num_sink_tokens=64, token_budget=budget,
+                     recent_window=16, obs_window=32)
+    q, k, v, pos = needle_cache(jax.random.PRNGKey(0), B, H, L, D, n)
+    # beacon values mark the needles: attention output ~ beacon iff found
+    v = scatter_rows(jnp.zeros_like(v), pos, jnp.full(pos.shape + (D,), 1.0))
+    # observation queries are uninformative about the needles
+    q_obs = jax.random.normal(jax.random.PRNGKey(9), (B, H, 32, D))
+    qd = q[:, :, None, :]
+    zero = jnp.zeros((B, H, 1, D))
+
+    print(f"{'method':16s} needle-mass (1.0 = all attention on needles)")
+    for name in ["sikv", "quest", "double_sparse", "snapkv", "full"]:
+        m = get_method(name, cfg)
+        cache = m.prefill(k, v, q_obs, capacity=L + 8)
+        out, _ = m.decode(qd, zero, zero, cache)
+        # v rows are 1.0 exactly at needles => output magnitude == recall mass
+        mass = float(jnp.mean(jnp.clip(out, 0, 1)))
+        print(f"{name:16s} {mass:.3f}")
+    print("\nSIKV retrieves the needles from 1-bit codes; SnapKV pruned "
+          "them away at prefill and can never recover.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python scripts/render_experiments.py > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline import HW, load_records, roofline_terms  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["mamba2-130m", "qwen2.5-3b", "olmoe-1b-7b", "stablelm-12b",
+              "internvl2-26b", "qwen3-32b", "deepseek-v2-236b",
+              "minitron-8b", "zamba2-2.7b", "whisper-medium"]
+
+
+def fmt_bytes(b):
+    if b >= 2**40:
+        return f"{b / 2**40:.1f} TiB"
+    if b >= 2**30:
+        return f"{b / 2**30:.1f} GiB"
+    return f"{b / 2**20:.1f} MiB"
+
+
+def key(rec):
+    return (ARCH_ORDER.index(rec["arch"]) if rec["arch"] in ARCH_ORDER
+            else 99, SHAPE_ORDER.index(rec["shape"]))
+
+
+def main():
+    recs = load_records(os.path.abspath(ART))
+    base = [r for r in recs if not r.get("variant")
+            and r["method"] == "sikv"]
+    single = sorted([r for r in base if not r["multi_pod"]], key=key)
+    multi = sorted([r for r in base if r["multi_pod"]], key=key)
+
+    print("### Dry-run table — single-pod (16x16 = 256 chips), per-device "
+          "program\n")
+    print("| arch | shape | FLOPs | bytes | collective bytes (#ops) | "
+          "args | temps | compile |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        c = r["collective_bytes"]
+        ct = sum(v for k, v in c.items() if k != "count")
+        m = r["memory_analysis"]
+        print(f"| {r['arch']} | {r['shape']} | {r['flops']:.2e} "
+              f"| {r['bytes_accessed']:.2e} | {ct:.2e} ({c['count']}) "
+              f"| {fmt_bytes(m.get('argument_size_in_bytes', 0))} "
+              f"| {fmt_bytes(m.get('temp_size_in_bytes', 0))} "
+              f"| {r['compile_s']:.0f}s |")
+
+    print("\n### Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print("| arch | shape | FLOPs | bytes | collective bytes (#ops) | "
+          "compile |")
+    print("|---|---|---|---|---|---|")
+    for r in multi:
+        c = r["collective_bytes"]
+        ct = sum(v for k, v in c.items() if k != "count")
+        print(f"| {r['arch']} | {r['shape']} | {r['flops']:.2e} "
+              f"| {r['bytes_accessed']:.2e} | {ct:.2e} ({c['count']}) "
+              f"| {r['compile_s']:.0f}s |")
+
+    print("\n### Roofline — single-pod, TPU v5e terms (s/step/device)\n")
+    print("| arch | shape | compute | memory | collective | bound | "
+          "MODEL_FLOPS/dev | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        t = roofline_terms(r)
+        print(f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} "
+              f"| {t['memory_s']:.2e} | {t['collective_s']:.2e} "
+              f"| **{t['dominant']}** | {t['model_flops']:.2e} "
+              f"| {t['useful_ratio']:.2f} |")
+
+    variants = [r for r in recs if r.get("variant")
+                or r["method"] == "sikv_sp"]
+    if variants:
+        print("\n### Perf-iteration variants\n")
+        print("| arch | shape | variant | FLOPs | bytes | collective | "
+              "temps |")
+        print("|---|---|---|---|---|---|---|")
+        for r in sorted(variants, key=key):
+            c = r["collective_bytes"]
+            ct = sum(v for k, v in c.items() if k != "count")
+            m = r["memory_analysis"]
+            var = r.get("variant") or r["method"]
+            print(f"| {r['arch']} | {r['shape']} | {var} "
+                  f"| {r['flops']:.2e} | {r['bytes_accessed']:.2e} "
+                  f"| {ct:.2e} | {fmt_bytes(m.get('temp_size_in_bytes', 0))}"
+                  f" |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,388 @@
+"""Configuration system for the repro framework.
+
+Dataclass-based, with a registry keyed by ``--arch <id>``.  Every assigned
+architecture registers itself from ``repro.configs.<id>``; the registry is
+populated lazily on first lookup so importing :mod:`repro.config` never pulls
+in model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Layer kinds understood by the unified block stack.
+ATTN = "attn"            # GQA self-attention (+ optional qk_norm / bias)
+MLA = "mla"              # DeepSeek-V2 multi-head latent attention
+MAMBA2 = "mamba2"        # SSD state-space block (attention-free)
+SHARED_ATTN = "shared_attn"  # Zamba2-style shared-weight global attention
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration."""
+
+    num_experts: int
+    top_k: int
+    num_shared_experts: int = 0
+    # d_ff of each expert (may differ from the dense d_ff).
+    expert_d_ff: int = 0
+    # Router auxiliary load-balance loss weight (training only).
+    aux_loss_weight: float = 0.01
+    # Capacity factor for expert-parallel dispatch (tokens per expert slot).
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 multi-head latent attention configuration."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 => full-rank queries
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block configuration."""
+
+    state_dim: int = 128          # N — SSM state size
+    head_dim: int = 64            # P — channels per SSM head
+    expand: int = 2               # d_inner = expand * d_model
+    chunk_size: int = 64          # SSD chunk length
+    conv_width: int = 4           # causal depthwise conv window
+    num_groups: int = 1           # B/C groups (GVA)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture description covering all assigned families."""
+
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 => d_model // num_heads
+    # Layer pattern: entry per layer, one of ATTN/MLA/MAMBA2/SHARED_ATTN.
+    # Empty => all ATTN (or all MAMBA2 for family=="ssm").
+    layer_pattern: Tuple[str, ...] = ()
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # Attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rms_norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # Encoder-decoder (whisper): number of encoder layers; 0 => decoder-only.
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0      # fixed encoder length (audio frames)
+    # Modality frontend stub: input is precomputed embeddings, not token ids.
+    embedding_inputs: bool = False
+    # Activation dtype for compute.
+    dtype: str = "bfloat16"
+    # Rematerialize each layer in the backward pass (activation
+    # checkpointing) — §Perf lever for the train shapes.
+    remat: bool = False
+    # MoE dispatch: "ragged" (grouped matmul via lax.ragged_dot) or
+    # "capacity" (static-capacity batched matmul) — §Perf lever.
+    moe_dispatch: str = "ragged"
+    # Max context the arch supports (informational).
+    max_seq_len: int = 131072
+    # Source citation for the config values.
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def resolved_layer_pattern(self) -> Tuple[str, ...]:
+        if self.layer_pattern:
+            assert len(self.layer_pattern) == self.num_layers, (
+                f"layer_pattern length {len(self.layer_pattern)} != "
+                f"num_layers {self.num_layers}"
+            )
+            return self.layer_pattern
+        if self.family == "ssm":
+            return tuple([MAMBA2] * self.num_layers)
+        return tuple([ATTN] * self.num_layers)
+
+    @property
+    def uses_kv_cache(self) -> bool:
+        return any(
+            k in (ATTN, MLA, SHARED_ATTN) for k in self.resolved_layer_pattern
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6*N*D roofline term)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        total = self.vocab_size * d  # embeddings
+        if not self.tie_embeddings:
+            total += self.vocab_size * d  # lm head
+        for kind in self.resolved_layer_pattern:
+            if kind in (ATTN, SHARED_ATTN):
+                q = d * self.num_heads * hd
+                kv = 2 * d * self.num_kv_heads * hd
+                o = self.num_heads * hd * d
+                total += q + kv + o
+                if self.qkv_bias:
+                    total += (self.num_heads + 2 * self.num_kv_heads) * hd
+            elif kind == MLA:
+                m = self.mla
+                assert m is not None
+                qdim = self.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                total += d * qdim                                    # W_q
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)   # W_dkv
+                total += m.kv_lora_rank * self.num_heads * (
+                    m.qk_nope_head_dim + m.v_head_dim)               # W_uk/W_uv
+                total += self.num_heads * m.v_head_dim * d           # W_o
+            elif kind == MAMBA2:
+                s = self.ssm
+                assert s is not None
+                d_in = s.expand * d
+                # in_proj produces [z, x, B, C, dt]
+                zxbcdt = 2 * d_in + 2 * s.num_groups * s.state_dim + d_in // s.head_dim
+                total += d * zxbcdt
+                total += s.conv_width * (d_in + 2 * s.num_groups * s.state_dim)
+                total += d_in // s.head_dim * 2  # A_log, dt_bias (per head)
+                total += d_in                    # D skip  (per channel)
+                total += d_in * d                # out_proj
+            # FFN
+            if kind != MAMBA2:
+                if self.moe is not None:
+                    e_ff = self.moe.expert_d_ff or self.d_ff
+                    total += self.moe.num_experts * 3 * d * e_ff
+                    total += self.moe.num_shared_experts * 3 * d * e_ff
+                    total += d * self.moe.num_experts  # router
+                else:
+                    total += 3 * d * self.d_ff  # gate/up/down (SwiGLU)
+        # Encoder stack (whisper): same attention+FFN shape, plus cross-attn
+        # in the decoder accounted as one extra attention per decoder layer.
+        if self.num_encoder_layers:
+            enc = (self.num_encoder_layers
+                   * (4 * d * d + 3 * d * self.d_ff))
+            dec_cross = L * 4 * d * d
+            total += enc + dec_cross
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        e_ff = self.moe.expert_d_ff or self.d_ff
+        d = self.d_model
+        inactive = (self.moe.num_experts - self.moe.top_k) * 3 * d * e_ff
+        n_moe_layers = sum(
+            1 for k in self.resolved_layer_pattern if k != MAMBA2)
+        return self.param_count() - n_moe_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Self-Indexing KVCache configuration (the paper's technique)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SIKVConfig:
+    """Self-Indexing KVCache hyper-parameters (paper defaults)."""
+
+    enabled: bool = True
+    group_size: int = 4           # sub-vector dim per sign group (paper: 4)
+    codebook_size: int = 16       # 2**group_size sign clusters
+    key_bits: int = 2             # |K| magnitude quantization bits
+    value_bits: int = 2           # V quantization bits
+    quant_group: int = 32         # elements per quant scale/zp group
+    num_sink_tokens: int = 64     # full-precision sinks (SnapKV-selected)
+    # Budget policy: exactly one of token budget or ratio is used.
+    token_budget: int = 160       # total attended tokens (incl. sinks)
+    sparsity_ratio: float = 0.0   # >0 => keep ratio*L tokens instead
+    recent_window: int = 32       # decode-generated tokens always attended
+    # Observation window for SnapKV-style sink voting at prefill end.
+    obs_window: int = 32
+    use_kernels: bool = False     # route through Pallas kernels (interpret on CPU)
+    # MLA optimization: the attended "value" is a prefix slice of the cached
+    # latent key ([c_kv ; k_rope]); when >0, no separate V cache is stored
+    # and gather returns v = k[..., :value_slice] (-33% cache bytes).
+    value_slice: int = 0
+
+    def budget_for(self, seq_len: int) -> int:
+        if self.sparsity_ratio > 0.0:
+            return max(self.num_sink_tokens + 1,
+                       int(round(self.sparsity_ratio * seq_len)))
+        return self.token_budget
+
+
+# ---------------------------------------------------------------------------
+# Runtime / launch configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned (seq_len, global_batch) workloads."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    sikv: SIKVConfig = field(default_factory=SIKVConfig)
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    # Sparse attention method for baselines: sikv|full|snapkv|quest|
+    # double_sparse|kivi
+    attention_method: str = "sikv"
+
+
+# ---------------------------------------------------------------------------
+# Architecture registry
+# ---------------------------------------------------------------------------
+
+_ARCH_IDS: List[str] = [
+    "mamba2-130m",
+    "qwen2.5-3b",
+    "olmoe-1b-7b",
+    "stablelm-12b",
+    "internvl2-26b",
+    "qwen3-32b",
+    "deepseek-v2-236b",
+    "minitron-8b",
+    "zamba2-2.7b",
+    "whisper-medium",
+    # the paper's own evaluation model (extra, not part of the assigned 10)
+    "llama3.1-8b",
+]
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def register(config: ModelConfig) -> ModelConfig:
+    _REGISTRY[config.name] = config
+    return config
+
+
+def get_model_config(arch_id: str) -> ModelConfig:
+    """Look up an architecture by id, importing its config module lazily."""
+    if arch_id not in _REGISTRY:
+        if arch_id not in _ARCH_IDS:
+            raise KeyError(
+                f"unknown arch {arch_id!r}; known: {sorted(_ARCH_IDS)}")
+        importlib.import_module(_module_name(arch_id))
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_IDS)
+
+
+def reduced_config(cfg: ModelConfig, *, num_layers: int = 2,
+                   d_model: int = 256, num_experts: int = 4,
+                   vocab_size: int = 512) -> ModelConfig:
+    """Smoke-test variant: same family/topology, tiny dims."""
+    heads = max(2, min(cfg.num_heads, d_model // 64))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    # preserve the GQA grouping ratio where possible
+    if cfg.num_kv_heads < cfg.num_heads:
+        ratio = max(2, cfg.num_heads // max(cfg.num_kv_heads, 1))
+        kv = max(1, heads // ratio)
+    pattern = cfg.resolved_layer_pattern
+    if cfg.layer_pattern:
+        # keep family structure: take a representative slice containing at
+        # least one of each kind present
+        kinds: List[str] = []
+        for k in pattern:
+            if k not in kinds:
+                kinds.append(k)
+        new_pattern = tuple((kinds * num_layers)[:num_layers])
+    else:
+        new_pattern = ()
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe,
+            num_experts=min(moe.num_experts, num_experts),
+            top_k=min(moe.top_k, 2),
+            expert_d_ff=min(moe.expert_d_ff or cfg.d_ff, d_model * 2),
+        )
+    mla = cfg.mla
+    if mla is not None:
+        mla = dataclasses.replace(
+            mla, kv_lora_rank=64, qk_nope_head_dim=32, qk_rope_head_dim=16,
+            v_head_dim=32)
+    ssm = cfg.ssm
+    if ssm is not None:
+        ssm = dataclasses.replace(
+            ssm, state_dim=min(ssm.state_dim, 16), head_dim=32,
+            chunk_size=16)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=0,
+        d_ff=d_model * 2,
+        vocab_size=vocab_size,
+        layer_pattern=new_pattern,
+        moe=moe,
+        mla=mla,
+        ssm=ssm,
+        num_encoder_layers=min(cfg.num_encoder_layers, 2),
+        encoder_seq_len=min(cfg.encoder_seq_len, 64) if cfg.encoder_seq_len else 0,
+        max_seq_len=4096,
+        dtype="float32",
+    )

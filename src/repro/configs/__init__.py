@@ -1,0 +1,4 @@
+"""Assigned architecture configs (one module per arch, registry-backed).
+
+Import :func:`repro.config.get_model_config` to resolve ``--arch <id>``.
+"""

@@ -1,0 +1,26 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + 2 shared / 160 routed top-6 MoE
+[arXiv:2405.04434].
+
+All layers use MLA; layer 0 keeps a dense FFN (DeepSeek's first-layer rule is
+approximated by the MoE config applying everywhere — the repro keeps MoE on
+every layer for sharding uniformity, noted in DESIGN.md).
+"""
+from repro.config import MLA, ModelConfig, MLAConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,        # MLA: latent cache is head-shared
+    d_ff=1536,
+    vocab_size=102400,
+    layer_pattern=tuple([MLA] * 60),
+    moe=MoEConfig(num_experts=160, top_k=6, num_shared_experts=2,
+                  expert_d_ff=1536),
+    mla=MLAConfig(kv_lora_rank=512, qk_nope_head_dim=128,
+                  qk_rope_head_dim=64, v_head_dim=128),
+    max_seq_len=131072,
+    source="MLA kv_lora=512, 2 shared+160 routed top-6 [arXiv:2405.04434]",
+))

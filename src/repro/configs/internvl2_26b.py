@@ -1,0 +1,21 @@
+"""internvl2-26b — VLM: InternViT frontend (stub) + InternLM2 backbone
+[arXiv:2404.16821].
+
+The assignment specifies the TRANSFORMER BACKBONE only; ``input_specs``
+provides precomputed patch embeddings (the one sanctioned stub).
+"""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    embedding_inputs=True,   # ViT projector output enters as embeddings
+    max_seq_len=32768,
+    source="InternViT + InternLM2 [arXiv:2404.16821]",
+))

@@ -1,0 +1,16 @@
+"""llama3.1-8b — the paper's own evaluation model (extra config)."""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama3.1-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    max_seq_len=131072,
+    source="Llama3.1-8B-Instruct [arXiv:2407.21783]",
+))

@@ -1,0 +1,17 @@
+"""mamba2-130m — SSD state-space model, attention-free [arXiv:2405.21060]."""
+from repro.config import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=24,            # SSD heads = d_inner / head_dim = 1536/64
+    num_kv_heads=24,
+    d_ff=0,                  # attention-free: Mamba2 block is the whole layer
+    vocab_size=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk_size=64,
+                  conv_width=4, num_groups=1),
+    max_seq_len=1048576,     # O(1) state: unbounded context
+    source="SSD (state-space duality) [arXiv:2405.21060]",
+))

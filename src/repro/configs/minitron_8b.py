@@ -1,0 +1,15 @@
+"""minitron-8b — width-pruned Nemotron dense GQA [arXiv:2407.14679]."""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    max_seq_len=8192,
+    source="pruned nemotron [arXiv:2407.14679]",
+))

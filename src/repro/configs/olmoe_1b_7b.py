@@ -1,0 +1,17 @@
+"""olmoe-1b-7b — 64-expert top-8 MoE [arXiv:2409.02060]."""
+from repro.config import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    moe=MoEConfig(num_experts=64, top_k=8, expert_d_ff=1024),
+    qk_norm=True,
+    max_seq_len=4096,
+    source="64 experts top-8 [arXiv:2409.02060]",
+))

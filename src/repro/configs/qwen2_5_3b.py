@@ -1,0 +1,17 @@
+"""qwen2.5-3b — dense GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B family]."""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,          # aggressive GQA
+    d_ff=11008,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    max_seq_len=131072,
+    source="GQA, QKV bias [hf:Qwen/Qwen2.5-0.5B]",
+))

@@ -1,0 +1,18 @@
+"""qwen3-32b — dense GQA with qk_norm [hf:Qwen/Qwen3-8B family]."""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=25600,
+    vocab_size=151936,
+    qk_norm=True,
+    head_dim=128,
+    rope_theta=1000000.0,
+    max_seq_len=131072,
+    source="qk_norm, GQA [hf:Qwen/Qwen3-8B]",
+))

@@ -1,0 +1,22 @@
+"""whisper-medium — audio enc-dec backbone; conv/mel frontend is a stub
+[arXiv:2212.04356].
+
+``input_specs`` provides precomputed frame embeddings for the encoder
+(1500 frames = 30 s at 50 Hz after the conv downsampler).
+"""
+from repro.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,           # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    num_encoder_layers=24,
+    encoder_seq_len=1500,
+    max_seq_len=448 * 128,   # backbone exercised beyond whisper's own 448
+    source="enc-dec, conv frontend (stub) [arXiv:2212.04356]",
+))

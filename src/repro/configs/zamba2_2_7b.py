@@ -1,0 +1,27 @@
+"""zamba2-2.7b — hybrid: Mamba2 backbone + shared-weight attention blocks
+[arXiv:2411.15242].
+
+Zamba2 interleaves a single shared attention+FFN block into a Mamba2 stack
+(every 6th position here, 9 shared-attention sites over 54 layers).
+"""
+from repro.config import MAMBA2, SHARED_ATTN, ModelConfig, SSMConfig, register
+
+_PATTERN = tuple(
+    SHARED_ATTN if (i % 6) == 5 else MAMBA2 for i in range(54)
+)
+
+CONFIG = register(ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    layer_pattern=_PATTERN,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk_size=64,
+                  conv_width=4, num_groups=1),
+    max_seq_len=1048576,
+    source="Mamba2 + shared attn blocks [arXiv:2411.15242]",
+))

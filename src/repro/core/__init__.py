@@ -1,0 +1,39 @@
+"""Self-Indexing KVCache — the paper's primary contribution.
+
+Sign-based 1-bit VQ of keys that serves simultaneously as (a) the retrieval
+index for dynamic sparse attention and (b) the sign part of the low-bit
+compressed key cache.
+"""
+from repro.core.codebook import (
+    build_codebook,
+    build_self_index,
+    channel_mean,
+    codes_to_signs,
+    normalize_keys,
+    sign_codes,
+)
+from repro.core.quantization import (
+    QuantizedTensor,
+    channel_alpha,
+    dequantize_key,
+    dequantize_tokenwise,
+    pack_bits,
+    quantize_key_magnitude,
+    quantize_tokenwise,
+    unpack_bits,
+)
+from repro.core.retrieval import build_lut, exact_scores, lut_scores, select_topk
+from repro.core.policy import dynamic_k, select_sink_tokens, snapkv_votes
+from repro.core.cache import (
+    SIKVCache,
+    append_token,
+    gather_dequant,
+    init_cache,
+    prefill_compress,
+)
+from repro.core.attention import (
+    full_causal_attention,
+    group_queries,
+    masked_attention,
+    sikv_decode_attention,
+)

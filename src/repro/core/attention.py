@@ -1,0 +1,300 @@
+"""Sparse attention over the Self-Indexing KV cache.
+
+Decode path (the paper's target regime):
+
+1. append the new token to the cache (quantized, using prefill statistics);
+2. LUT-GEMV scoring entirely in the compressed domain (sign codes + 16-entry
+   per-group lookup tables);
+3. top-k selection with sinks excluded and a recent window force-included;
+4. gather + dequantize ONLY the selected tokens;
+5. exact softmax attention over ``[sinks ; selected]``.
+
+A pure-jnp path (always available) and a Pallas-kernel path
+(``cfg.use_kernels``) produce identical results (tested).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core import retrieval as rtr
+from repro.core import policy
+from repro.core.cache import SIKVCache, append_token, gather_dequant
+
+__all__ = [
+    "full_causal_attention",
+    "masked_attention",
+    "sikv_decode_attention",
+    "group_queries",
+]
+
+_NEG = -1e30
+
+
+def group_queries(q: jax.Array, num_kv_heads: int) -> jax.Array:
+    """Sum GQA query heads per KV group: ``(B, Hq, ..., D) -> (B, Hkv, ..., D)``.
+
+    Sum-of-dot-products == dot-of-sums, so retrieval scores aggregated over a
+    query group (what the shared KV head "wants") come from the summed query.
+    """
+    B, Hq = q.shape[:2]
+    g = Hq // num_kv_heads
+    return q.reshape(B, num_kv_heads, g, *q.shape[2:]).sum(axis=2)
+
+
+# materialize (Lq, Lk) logits only below this size; above it, stream over
+# key blocks with O(Lq) memory (§Perf iteration E — prefill shapes were
+# memory-bound on the (L, L) temporaries)
+_FLASH_THRESHOLD = 512 * 512
+_FLASH_BLOCK = 1024
+
+
+def full_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    q_offset: int = 0, mask: jax.Array | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference GQA causal attention.
+
+    Args:
+      q: ``(B, Hq, Lq, D)``; k/v: ``(B, Hkv, Lk, D)``.
+      q_offset: absolute position of q[0] (for decode continuation).
+      scale: logit scale; default ``1/sqrt(D)``.
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    if Lq * Lk > _FLASH_THRESHOLD and mask is None \
+            and Lk % _FLASH_BLOCK == 0:
+        return _streaming_causal_attention(q, k, v, q_offset=q_offset,
+                                           scale=sc)
+    qg = q.reshape(B, Hkv, g, Lq, D)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sc
+    qpos = q_offset + jnp.arange(Lq)[:, None]
+    kpos = jnp.arange(Lk)[None, :]
+    causal = kpos <= qpos
+    if mask is not None:
+        causal = causal & mask[:, None, None, None, :]
+    logits = jnp.where(causal[None, None, None] if mask is None else
+                       causal[:, None, None], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Lq, v.shape[-1]).astype(q.dtype)
+
+
+def _streaming_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    q_offset: int, scale: float, block: int = _FLASH_BLOCK,
+) -> jax.Array:
+    """Flash-style scan over key blocks: O(Lq) live memory, exact softmax.
+
+    XLA-level (pure jnp + lax.scan) so it shards under GSPMD and
+    differentiates; the Pallas kernel in :mod:`repro.kernels` is the
+    TPU-tiled equivalent for wall-clock execution.
+    """
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, Lq, D).astype(jnp.float32)
+    nb = Lk // block
+    kb = k.reshape(B, Hkv, nb, block, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nb, block, D).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.arange(Lq)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, kj, vj = inp
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                            kj.astype(jnp.float32)) * scale
+        kpos = j * block + jnp.arange(block)
+        causal = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(causal[None, None, None], logits, _NEG)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hkv, g, Lq), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Lq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, g, Lq, v.shape[-1]), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(nb), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Lq, v.shape[-1]).astype(q.dtype)
+
+
+def masked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, valid: jax.Array,
+    *, scale: float | None = None,
+) -> jax.Array:
+    """GQA attention of a single-position query over an arbitrary token set.
+
+    Args:
+      q: ``(B, Hq, 1, D)``; k/v: ``(B, Hkv, T, D)``; valid: ``(B, Hkv, T)``.
+      scale: logit scale; default ``1/sqrt(D)``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k.shape[1]
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    qg = q.reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sc
+    logits = jnp.where(valid[:, :, None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, v.shape[-1]).astype(q.dtype)
+
+
+def sikv_decode_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    cache: SIKVCache,
+    cfg: SIKVConfig,
+    *,
+    topk: int | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, SIKVCache]:
+    """One decode step of Self-Indexing sparse attention.
+
+    Args:
+      q: ``(B, Hq, 1, D)`` current query (RoPE applied).
+      k_new, v_new: ``(B, Hkv, 1, D)`` current token's key/value.
+      topk: number of retrieved tokens; default from the budget policy.
+    Returns:
+      ``(attn_out (B, Hq, 1, D), updated cache)``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_new.shape[1]
+    cache = append_token(cache, k_new, v_new, cfg)
+    Lmax = cache.capacity
+    length = cache.length  # includes the new token
+
+    k_dyn = topk if topk is not None else policy.dynamic_k(cfg, Lmax)
+    k_dyn = min(k_dyn, Lmax)
+
+    # ---- compressed-domain scoring (LUT-GEMV) -----------------------------
+    q_sum = group_queries(q[:, :, 0, :], Hkv)              # (B, Hkv, D)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        scores = kops.lut_gemv(
+            cache.codes, q_sum.astype(jnp.float32),
+            cache.centroids.astype(jnp.float32), cfg.group_size)
+    else:
+        lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                            cache.centroids.astype(jnp.float32),
+                            cfg.group_size)                # (B, Hkv, G, C)
+        scores = rtr.lut_scores(cache.codes, lut)          # (B, Hkv, Lmax)
+
+    pos = jnp.arange(Lmax)
+    valid = (pos < length)[None, None, :] & ~cache.sink_mask
+    forced = (pos >= length - cfg.recent_window)[None, None, :] & valid
+    idx, vals = rtr.select_topk(
+        scores, k_dyn,
+        valid_mask=jnp.broadcast_to(valid, scores.shape),
+        forced_mask=jnp.broadcast_to(forced, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+
+    if cfg.use_kernels:
+        # fused dequant+flash kernel over the selected tokens, exact merge
+        # with the full-precision sink segment
+        from repro.kernels import ops as kops
+        take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
+        acc, m, l = kops.sparse_attention_decode(
+            q.astype(jnp.float32), take(cache.codes), take(cache.kmag),
+            take(cache.k_scale), take(cache.k_zp), take(cache.v_q),
+            take(cache.v_scale), take(cache.v_zp),
+            cache.alpha, cache.mu, sel_valid,
+            quant_group=cfg.quant_group, group_size=cfg.group_size,
+            scale=scale)
+        acc_s, m_s, l_s = _sink_flash_state(q, cache, scale)
+        m_all = jnp.maximum(m, m_s)
+        a1 = jnp.exp(m - m_all)[..., None]
+        a2 = jnp.exp(m_s - m_all)[..., None]
+        num = acc * a1 + acc_s * a2
+        den = l[..., None] * a1 + l_s[..., None] * a2
+        out = (num / jnp.maximum(den, 1e-30))[:, :, None, :].astype(q.dtype)
+        return out, cache
+
+    # ---- gather + dequantize only the selected tokens ----------------------
+    k_sel, v_sel = gather_dequant(cache, idx, cfg)
+
+    # ---- exact attention over [sinks ; selected] ---------------------------
+    k_all = jnp.concatenate(
+        [cache.sink_k.astype(jnp.float32), k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [cache.sink_v.astype(jnp.float32), v_sel], axis=2)
+    S = cache.num_sinks
+    sink_valid = jnp.ones((B, Hkv, S), bool)
+    valid_all = jnp.concatenate([sink_valid, sel_valid], axis=2)
+    out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
+    return out, cache
+
+
+def _sink_flash_state(q: jax.Array, cache: SIKVCache, scale: float | None):
+    """Unnormalized flash state of the full-precision sink segment.
+
+    Returns ``(acc (B,Hq,D), m (B,Hq), l (B,Hq))``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = cache.sink_k.shape[1]
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                        cache.sink_k.astype(jnp.float32)) * sc
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bhsd->bhgd", p, cache.sink_v.astype(jnp.float32))
+    Dv = cache.sink_v.shape[-1]
+    return (acc.reshape(B, Hq, Dv), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def sikv_static_attention(
+    q: jax.Array,
+    cache: SIKVCache,
+    cfg: SIKVConfig,
+    *,
+    topk: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Sparse attention over a *static* SIKV cache (no append, no recent
+    window) — used for encoder-decoder cross attention.
+
+    Args: q ``(B, Hq, 1, D)``.  Returns ``(B, Hq, 1, D)``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = cache.sink_k.shape[1]
+    Lmax = cache.capacity
+    k_dyn = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
+                Lmax)
+
+    q_sum = group_queries(q[:, :, 0, :], Hkv)
+    lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                        cache.centroids.astype(jnp.float32), cfg.group_size)
+    scores = rtr.lut_scores(cache.codes, lut)
+
+    pos = jnp.arange(Lmax)
+    valid = (pos < cache.length)[None, None, :] & ~cache.sink_mask
+    idx, vals = rtr.select_topk(
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+    k_sel, v_sel = gather_dequant(cache, idx, cfg)
+    k_all = jnp.concatenate([cache.sink_k.astype(jnp.float32), k_sel], axis=2)
+    v_all = jnp.concatenate([cache.sink_v.astype(jnp.float32), v_sel], axis=2)
+    S = cache.num_sinks
+    valid_all = jnp.concatenate(
+        [jnp.ones((B, Hkv, S), bool), sel_valid], axis=2)
+    return masked_attention(q, k_all, v_all, valid_all, scale=scale)

@@ -1,0 +1,248 @@
+"""The Self-Indexing KV cache container and its lifecycle.
+
+A :class:`SIKVCache` holds, per layer:
+
+* ``codes``        — the 4-bit sign patterns (1 bit/channel), which are BOTH
+                     the retrieval index and the sign part of the compressed
+                     keys (the paper's "self-indexing" property);
+* ``kmag``/``v_q`` — bit-packed 2-bit magnitudes/values + token-wise
+                     group scales/zero-points;
+* ``sink_k/v``     — 64 full-precision SnapKV-selected sink tokens;
+* ``mu/alpha/centroids`` — the prefill-time normalization statistics and the
+                     one-pass codebook, **reused during decoding** (paper:
+                     "The per-channel scaling factors α are also reused
+                     during the decoding stage").
+
+All arrays have a static capacity ``Lmax``; ``length`` tracks the number of
+valid tokens.  Every update is functional (returns a new cache pytree) so the
+whole structure jits/shards cleanly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core import codebook as cb
+from repro.core import quantization as qz
+from repro.core import policy
+
+__all__ = ["SIKVCache", "init_cache", "prefill_compress", "append_token",
+           "gather_dequant", "cache_spec_shapes"]
+
+
+class SIKVCache(NamedTuple):
+    codes: jax.Array      # (B, H, Lmax, G)            int8
+    kmag: jax.Array       # (B, H, Lmax, D*kbits//8)   int8 (packed)
+    k_scale: jax.Array    # (B, H, Lmax, D//qg)        scale_dtype
+    k_zp: jax.Array       # (B, H, Lmax, D//qg)        scale_dtype
+    v_q: jax.Array        # (B, H, Lmax, D*vbits//8)   int8 (packed)
+    v_scale: jax.Array    # (B, H, Lmax, D//qg)        scale_dtype
+    v_zp: jax.Array       # (B, H, Lmax, D//qg)        scale_dtype
+    sink_k: jax.Array     # (B, H, S, D)               full precision
+    sink_v: jax.Array     # (B, H, S, D)
+    sink_mask: jax.Array  # (B, H, Lmax)               bool
+    mu: jax.Array         # (B, H, 1, D)
+    alpha: jax.Array      # (B, H, 1, D)
+    centroids: jax.Array  # (B, H, G, C, gs)
+    length: jax.Array     # ()                         int32
+
+    @property
+    def capacity(self) -> int:
+        return self.codes.shape[2]
+
+    @property
+    def head_dim(self) -> int:
+        return self.mu.shape[-1]
+
+    @property
+    def num_sinks(self) -> int:
+        return self.sink_k.shape[2]
+
+
+def cache_spec_shapes(
+    cfg: SIKVConfig, batch: int, num_kv_heads: int, capacity: int,
+    head_dim: int, *, dtype=jnp.bfloat16, scale_dtype=jnp.bfloat16,
+):
+    """Shape/dtype layout of a cache (used by init and the dry-run specs)."""
+    from repro.core.quantization import effective_quant_group
+    gs = cfg.group_size
+    G = head_dim // gs
+    C = cfg.codebook_size
+    qg = effective_quant_group(head_dim, cfg.quant_group)
+    S = cfg.num_sink_tokens
+    B, H, L, D = batch, num_kv_heads, capacity, head_dim
+    vw = 0 if cfg.value_slice else D * cfg.value_bits // 8
+    vs = 0 if cfg.value_slice else D // qg
+    return dict(
+        codes=((B, H, L, G), jnp.int8),
+        kmag=((B, H, L, D * cfg.key_bits // 8), jnp.int8),
+        k_scale=((B, H, L, D // qg), scale_dtype),
+        k_zp=((B, H, L, D // qg), scale_dtype),
+        v_q=((B, H, L, vw), jnp.int8),
+        v_scale=((B, H, L, vs), scale_dtype),
+        v_zp=((B, H, L, vs), scale_dtype),
+        sink_k=((B, H, S, D), dtype),
+        sink_v=((B, H, S, cfg.value_slice or D), dtype),
+        sink_mask=((B, H, L), jnp.bool_),
+        mu=((B, H, 1, D), dtype),
+        alpha=((B, H, 1, D), dtype),
+        centroids=((B, H, G, C, gs), dtype),
+        length=((), jnp.int32),
+    )
+
+
+def init_cache(cfg: SIKVConfig, batch: int, num_kv_heads: int,
+               capacity: int, head_dim: int, *, dtype=jnp.bfloat16,
+               scale_dtype=jnp.bfloat16) -> SIKVCache:
+    layout = cache_spec_shapes(cfg, batch, num_kv_heads, capacity, head_dim,
+                               dtype=dtype, scale_dtype=scale_dtype)
+    return SIKVCache(**{k: jnp.zeros(s, d) for k, (s, d) in layout.items()})
+
+
+def _pad_to(x: jax.Array, capacity: int, axis: int = 2) -> jax.Array:
+    pad = capacity - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def prefill_compress(
+    k: jax.Array,
+    v: jax.Array,
+    q_obs: jax.Array,
+    cfg: SIKVConfig,
+    *,
+    capacity: int | None = None,
+    causal_offset: int | None = None,
+    scale_dtype=jnp.bfloat16,
+) -> SIKVCache:
+    """Compress full-precision prefill K/V into a self-indexing cache.
+
+    Args:
+      k, v: ``(B, H, L, D)`` keys/values (RoPE already applied to k).
+      q_obs: ``(B, H, W, D)`` observation-window queries, already reduced to
+        one per KV head (sum query heads of each GQA group).
+      capacity: total cache capacity ``Lmax >= L`` (default: L).
+    """
+    B, H, L, D = k.shape
+    Lmax = capacity or L
+    gs = cfg.group_size
+    offset = L - q_obs.shape[2] if causal_offset is None else causal_offset
+
+    # 1) entropy-aware normalization + one-pass sign codebook
+    codes, centroids, mu = cb.build_self_index(k, gs)
+
+    # 2) key-magnitude quantization (signs live in ``codes``)
+    k_norm = k - mu
+    alpha = qz.channel_alpha(k_norm)
+    kq = qz.quantize_key_magnitude(k_norm, alpha, cfg.key_bits, cfg.quant_group)
+
+    # 3) token-wise value quantization (skipped when the value is a slice
+    # of the key latent — MLA share_kv optimization, see SIKVConfig)
+    if cfg.value_slice:
+        empty = jnp.zeros((B, H, L, 0))
+        vq = qz.QuantizedTensor(empty.astype(jnp.int8), empty, empty,
+                                cfg.value_bits, cfg.quant_group, 0)
+    else:
+        vq = qz.quantize_tokenwise(v, cfg.value_bits, cfg.quant_group)
+
+    # 4) SnapKV sink selection on the *original* keys
+    sink_pos, sink_mask = policy.select_sink_tokens(
+        q_obs, k, cfg.num_sink_tokens, causal_offset=offset)
+    take = lambda x: jnp.take_along_axis(x, sink_pos[..., None], axis=2)
+    sink_k, sink_v = take(k), take(v)
+    if cfg.value_slice:
+        sink_v = sink_v[..., : cfg.value_slice]
+
+    sd = scale_dtype
+    return SIKVCache(
+        codes=_pad_to(codes, Lmax),
+        kmag=_pad_to(kq.packed, Lmax),
+        k_scale=_pad_to(kq.scale.astype(sd), Lmax),
+        k_zp=_pad_to(kq.zp.astype(sd), Lmax),
+        v_q=_pad_to(vq.packed, Lmax),
+        v_scale=_pad_to(vq.scale.astype(sd), Lmax),
+        v_zp=_pad_to(vq.zp.astype(sd), Lmax),
+        sink_k=sink_k,
+        sink_v=sink_v,
+        sink_mask=_pad_to(sink_mask, Lmax, axis=2),
+        mu=mu,
+        alpha=alpha,
+        centroids=centroids,
+        length=jnp.asarray(L, jnp.int32),
+    )
+
+
+def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
+                 cfg: SIKVConfig) -> SIKVCache:
+    """Append one decode-step token, quantized with the prefill statistics.
+
+    Args:
+      k_new, v_new: ``(B, H, 1, D)``.
+    """
+    k_norm = k_new - cache.mu
+    codes = cb.sign_codes(k_norm, cfg.group_size)
+    kq = qz.quantize_key_magnitude(
+        k_norm, cache.alpha.astype(jnp.float32), cfg.key_bits, cfg.quant_group)
+    if cfg.value_slice:
+        empty = jnp.zeros(k_new.shape[:3] + (0,))
+        vq = qz.QuantizedTensor(empty.astype(jnp.int8), empty, empty,
+                                cfg.value_bits, cfg.quant_group, 0)
+    else:
+        vq = qz.quantize_tokenwise(v_new, cfg.value_bits, cfg.quant_group)
+
+    pos = cache.length
+    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+        buf, val.astype(buf.dtype), pos, axis=2)
+    return cache._replace(
+        codes=upd(cache.codes, codes),
+        kmag=upd(cache.kmag, kq.packed),
+        k_scale=upd(cache.k_scale, kq.scale),
+        k_zp=upd(cache.k_zp, kq.zp),
+        v_q=upd(cache.v_q, vq.packed),
+        v_scale=upd(cache.v_scale, vq.scale),
+        v_zp=upd(cache.v_zp, vq.zp),
+        length=cache.length + 1,
+    )
+
+
+def gather_dequant(
+    cache: SIKVCache, idx: jax.Array, cfg: SIKVConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Gather selected tokens and dequantize (token-wise random access).
+
+    Args:
+      idx: ``(B, H, T)`` selected positions.
+    Returns:
+      ``(k (B, H, T, D), v (B, H, T, D))`` float32 — ``k`` includes the
+      ``+mu`` shift back so it lives in the original key space.
+    """
+    D = cache.head_dim
+    gs = cfg.group_size
+    qg = qz.effective_quant_group(D, cfg.quant_group)
+    take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
+
+    codes = take(cache.codes)
+    signs = cb.codes_to_signs(codes, gs)
+    kq = qz.QuantizedTensor(
+        packed=take(cache.kmag),
+        scale=take(cache.k_scale).astype(jnp.float32),
+        zp=take(cache.k_zp).astype(jnp.float32),
+        bits=cfg.key_bits, quant_group=qg, orig_dim=D)
+    k = qz.dequantize_key(kq, signs, cache.alpha.astype(jnp.float32))
+    k = k + cache.mu.astype(jnp.float32)
+
+    if cfg.value_slice:
+        return k, k[..., : cfg.value_slice]
+    vq = qz.QuantizedTensor(
+        packed=take(cache.v_q),
+        scale=take(cache.v_scale).astype(jnp.float32),
+        zp=take(cache.v_zp).astype(jnp.float32),
+        bits=cfg.value_bits, quant_group=qg, orig_dim=D)
+    v = qz.dequantize_tokenwise(vq)
+    return k, v

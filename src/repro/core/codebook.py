@@ -1,0 +1,133 @@
+"""One-pass sign-based VQ clustering and entropy-aware normalization.
+
+This is the heart of the paper: keys are split into groups of
+``group_size`` (=4) channels; each sub-vector's *sign pattern* is its VQ code
+(one of ``2**group_size`` = 16 clusters); centroids are per-cluster means
+computed in a single pass (a segment mean — no K-means iterations).
+
+All functions operate on arrays shaped ``(..., L, D)`` where the leading
+dimensions are arbitrary batch/head axes; ``D`` must be divisible by
+``group_size``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "channel_mean",
+    "normalize_keys",
+    "sign_codes",
+    "codes_to_signs",
+    "build_codebook",
+    "build_self_index",
+]
+
+
+def channel_mean(k: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Per-channel mean ``mu_d`` over the token axis (entropy-aware norm).
+
+    Args:
+      k: ``(..., L, D)`` keys.
+      mask: optional ``(..., L)`` boolean validity mask.
+    Returns:
+      ``(..., 1, D)`` channel means (keepdims for broadcasting).
+    """
+    if mask is None:
+        return jnp.mean(k, axis=-2, keepdims=True)
+    m = mask[..., None].astype(k.dtype)
+    denom = jnp.maximum(jnp.sum(m, axis=-2, keepdims=True), 1.0)
+    return jnp.sum(k * m, axis=-2, keepdims=True) / denom
+
+
+def normalize_keys(
+    k: jax.Array, mask: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Subtract the per-channel mean: ``K' = K - mu``.
+
+    Maximizes sign entropy (paper Eq. 5/6).  Softmax/top-k are invariant to
+    this shift *per query* because ``q . mu`` is constant across keys.
+    """
+    mu = channel_mean(k, mask)
+    return k - mu, mu
+
+
+def _bit_weights(group_size: int, dtype=jnp.int32) -> jax.Array:
+    # Paper Eq. 3: first element of the sub-vector is the most significant bit.
+    return (2 ** jnp.arange(group_size - 1, -1, -1)).astype(dtype)
+
+
+def sign_codes(k_norm: jax.Array, group_size: int = 4) -> jax.Array:
+    """Map each ``group_size``-dim sub-vector to its 4-bit sign code.
+
+    ``Code(k) = sum_i [s_i > 0] * 2**(group_size - i)`` (paper Eq. 3), with
+    ``sign(0)`` treated as ``+1`` (bit set) for determinism.
+
+    Args:
+      k_norm: ``(..., L, D)`` normalized keys.
+    Returns:
+      ``(..., L, G)`` int8 codes in ``[0, 2**group_size)``.
+    """
+    *lead, L, D = k_norm.shape
+    assert D % group_size == 0, (D, group_size)
+    G = D // group_size
+    bits = (k_norm >= 0).astype(jnp.int32).reshape(*lead, L, G, group_size)
+    code = jnp.sum(bits * _bit_weights(group_size), axis=-1)
+    return code.astype(jnp.int8)
+
+
+def codes_to_signs(codes: jax.Array, group_size: int = 4) -> jax.Array:
+    """Inverse of the bit-packing: codes ``(..., G)`` -> signs ``(..., G*gs)``
+    in ``{-1, +1}``."""
+    c = codes.astype(jnp.int32)[..., None]
+    shifts = jnp.arange(group_size - 1, -1, -1)
+    bits = (c >> shifts) & 1
+    signs = bits * 2 - 1
+    return signs.reshape(*codes.shape[:-1], codes.shape[-1] * group_size)
+
+
+def build_codebook(
+    k_norm: jax.Array,
+    codes: jax.Array,
+    group_size: int = 4,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Per-cluster centroid means — one pass, no iterations (paper Eq. 4).
+
+    Args:
+      k_norm: ``(..., L, D)`` normalized keys.
+      codes: ``(..., L, G)`` sign codes.
+      mask: optional ``(..., L)`` validity mask.
+    Returns:
+      centroids ``(..., G, C, group_size)`` with ``C = 2**group_size``;
+      empty clusters get the zero centroid (they are never indexed by a key,
+      so their LUT entries are dead weight only).
+    """
+    *lead, L, D = k_norm.shape
+    G = D // group_size
+    C = 2 ** group_size
+    sub = k_norm.reshape(*lead, L, G, group_size)
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), C, dtype=k_norm.dtype)
+    if mask is not None:
+        onehot = onehot * mask[..., None, None].astype(k_norm.dtype)
+    # sums[..., g, c, :] = sum_l onehot[..., l, g, c] * sub[..., l, g, :]
+    sums = jnp.einsum("...lgc,...lgd->...gcd", onehot, sub)
+    counts = jnp.sum(onehot, axis=-3)  # (..., G, C)
+    centroids = sums / jnp.maximum(counts, 1.0)[..., None]
+    return centroids
+
+
+def build_self_index(
+    k: jax.Array,
+    group_size: int = 4,
+    mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full prefill-time index construction.
+
+    Returns ``(codes, centroids, mu)`` where codes double as the 1-bit sign
+    part of the compressed keys (the "self-indexing" property).
+    """
+    k_norm, mu = normalize_keys(k, mask)
+    codes = sign_codes(k_norm, group_size)
+    centroids = build_codebook(k_norm, codes, group_size, mask)
+    return codes, centroids, mu

@@ -1,0 +1,203 @@
+"""Sequence-parallel Self-Indexing decode (beyond-paper optimization).
+
+Baseline GSPMD lowering of the decode step all-gathers the sequence-sharded
+compressed cache to execute the global top-k gather — the roofline shows
+decode shapes collective-bound (e.g. qwen3-32b decode_32k: 0.73 s collective
+vs 0.34 s memory per step).  This module restructures the decode step as an
+explicit ``shard_map`` over the sequence axis:
+
+  1. each shard scores its *local* codes (LUT-GEMV — 1-bit domain, local);
+  2. selects a local top-(k/n_shards);
+  3. gathers + dequantizes only its local selection;
+  4. computes a partial flash state ``(acc, m, l)``;
+  5. a tiny ``pmax/psum`` flash-merge combines shards exactly.
+
+The only cross-shard traffic is the ``(B, Hq, D)`` merge state — several
+orders of magnitude below gathering the cache.  Selection changes from
+global top-k to per-partition top-k (standard distributed-ANN relaxation;
+the union still contains every global top-(k/n) winner per shard and
+empirically matches global top-k recall on structured caches — tested).
+
+The same machinery runs the ``long_500k`` context-parallel configuration by
+sharding the sequence over all mesh axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import SIKVConfig
+from repro.core import retrieval as rtr
+from repro.core.attention import _sink_flash_state, group_queries
+from repro.core.cache import SIKVCache, gather_dequant
+
+__all__ = ["seq_parallel_sikv_decode", "SeqParallelSIKVAttention"]
+
+
+def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
+                        k_local: int, seq_axes, scale):
+    """Body run on every sequence shard (inside shard_map)."""
+    B, Hq, _, D = q.shape
+    Hkv = cache.codes.shape[1]
+    L_local = cache.codes.shape[2]
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= jax.lax.axis_size(a)
+    shard_id = jax.lax.axis_index(seq_axes)
+
+    # ---- local append: write the new token if its position is ours --------
+    from repro.core import codebook as cb
+    from repro.core import quantization as qz
+    new_len = cache.length + 1
+    pos_global = cache.length
+    local_pos = pos_global - shard_id * L_local
+    in_shard = (local_pos >= 0) & (local_pos < L_local)
+    lp = jnp.clip(local_pos, 0, L_local - 1)
+
+    k_norm = k_new - cache.mu
+    codes_new = cb.sign_codes(k_norm, cfg.group_size)
+    kq = qz.quantize_key_magnitude(k_norm, cache.alpha.astype(jnp.float32),
+                                   cfg.key_bits, cfg.quant_group)
+    vq = qz.quantize_tokenwise(v_new, cfg.value_bits, cfg.quant_group)
+
+    def upd(buf, val):
+        cur = jax.lax.dynamic_slice_in_dim(buf, lp, 1, axis=2)
+        val = jnp.where(in_shard, val.astype(buf.dtype), cur)
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, lp, axis=2)
+
+    cache = cache._replace(
+        codes=upd(cache.codes, codes_new),
+        kmag=upd(cache.kmag, kq.packed),
+        k_scale=upd(cache.k_scale, kq.scale),
+        k_zp=upd(cache.k_zp, kq.zp),
+        v_q=upd(cache.v_q, vq.packed),
+        v_scale=upd(cache.v_scale, vq.scale),
+        v_zp=upd(cache.v_zp, vq.zp),
+        length=new_len,
+    )
+
+    # ---- local scoring + local top-k --------------------------------------
+    q_sum = group_queries(q[:, :, 0, :], Hkv)
+    lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                        cache.centroids.astype(jnp.float32), cfg.group_size)
+    scores = rtr.lut_scores(cache.codes, lut)              # (B, Hkv, L_local)
+
+    gpos = shard_id * L_local + jnp.arange(L_local)
+    valid = (gpos < new_len)[None, None, :] & ~cache.sink_mask
+    forced = (gpos >= new_len - cfg.recent_window)[None, None, :] & valid
+    idx, vals = rtr.select_topk(
+        scores, k_local,
+        valid_mask=jnp.broadcast_to(valid, scores.shape),
+        forced_mask=jnp.broadcast_to(forced, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+
+    # ---- local gather + dequant + partial flash ----------------------------
+    k_sel, v_sel = gather_dequant(cache, idx, cfg)
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg, k_sel) * sc
+    logits = jnp.where(sel_valid[:, :, None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1)                           # (B, Hkv, g)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgt,bhtd->bhgd", p, v_sel)
+
+    # ---- exact cross-shard flash merge (tiny collective) ------------------
+    m_g = jax.lax.pmax(m, seq_axes)
+    coeff = jnp.exp(m - m_g)
+    acc_g = jax.lax.psum(acc * coeff[..., None], seq_axes)
+    l_g = jax.lax.psum(l * coeff, seq_axes)
+    Dv = v_sel.shape[-1]
+    return (acc_g.reshape(B, Hq, Dv), m_g.reshape(B, Hq),
+            l_g.reshape(B, Hq), cache)
+
+
+def seq_parallel_sikv_decode(
+    q: jax.Array, k_new: jax.Array, v_new: jax.Array, cache: SIKVCache,
+    cfg: SIKVConfig, *, mesh, batch_axes: Tuple[str, ...] = ("data",),
+    seq_axes: Tuple[str, ...] = ("model",), scale: float | None = None,
+    topk: int | None = None,
+) -> Tuple[jax.Array, SIKVCache]:
+    """Sequence-parallel decode step.  Shapes as
+    :func:`repro.core.attention.sikv_decode_attention`; the cache's
+    token-indexed arrays must be sharded over ``seq_axes``."""
+    from repro.core import policy
+    B = q.shape[0]
+    Lmax = cache.capacity
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+    k_total = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
+                  Lmax)
+    # per-shard quota: ceil(k/n).  Forced recent-window tokens always win the
+    # +inf bias inside their owning shard's top-k, so no extra headroom is
+    # provisioned (iteration C2: the earlier max(recent_window, .) quota
+    # over-gathered 4x at 500k and pushed the memory term past baseline).
+    k_local = max(1, -(-k_total // n_shards))
+
+    bspec = batch_axes if B % _axes_size(mesh, batch_axes) == 0 else None
+    tok = P(bspec, None, seq_axes, None)
+    rep = P(bspec, None, None, None)
+    cache_specs = SIKVCache(
+        codes=tok, kmag=tok, k_scale=tok, k_zp=tok, v_q=tok, v_scale=tok,
+        v_zp=tok, sink_k=rep, sink_v=rep,
+        sink_mask=P(bspec, None, seq_axes), mu=rep, alpha=rep,
+        centroids=P(bspec, None, None, None, None), length=P())
+    qspec = P(bspec, None, None, None)
+
+    body = functools.partial(_local_decode_state, cfg=cfg, k_local=k_local,
+                             seq_axes=seq_axes, scale=scale)
+    acc, m, l, new_cache = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, qspec, qspec, cache_specs),
+        out_specs=(P(bspec, None, None), P(bspec, None), P(bspec, None),
+                   cache_specs),
+        check_vma=False,
+    )(q, k_new, v_new, cache)
+
+    # merge the replicated full-precision sink segment exactly
+    acc_s, m_s, l_s = _sink_flash_state(q, cache, scale)
+    m_all = jnp.maximum(m, m_s)
+    a1 = jnp.exp(m - m_all)[..., None]
+    a2 = jnp.exp(m_s - m_all)[..., None]
+    num = acc * a1 + acc_s * a2
+    den = l[..., None] * a1 + l_s[..., None] * a2
+    out = (num / jnp.maximum(den, 1e-30))[:, :, None, :].astype(q.dtype)
+    return out, new_cache
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+class SeqParallelSIKVAttention:
+    """Method-interface adapter: sequence-parallel SIKV decode."""
+
+    name = "sikv_sp"
+
+    def __init__(self, cfg: SIKVConfig | None = None, *, mesh=None,
+                 batch_axes: Tuple[str, ...] = ("data",),
+                 seq_axes: Tuple[str, ...] = ("model",)):
+        self.cfg = cfg or SIKVConfig()
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self.seq_axes = seq_axes
+
+    def prefill(self, k, v, q_obs, *, capacity=None):
+        from repro.core.cache import prefill_compress
+        return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity)
+
+    def decode(self, q, k_new, v_new, cache, *, scale=None):
+        mesh = self.mesh or jax.sharding.get_abstract_mesh()
+        return seq_parallel_sikv_decode(
+            q, k_new, v_new, cache, self.cfg, mesh=mesh,
+            batch_axes=self.batch_axes, seq_axes=self.seq_axes, scale=scale)

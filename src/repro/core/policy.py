@@ -1,0 +1,69 @@
+"""Budget and sink-token policies.
+
+Sink tokens (paper "Full Precision Sink Tokens"): a SnapKV-style vote over an
+observation window of the last ``obs_window`` prefill queries picks
+``num_sink_tokens`` positions that stay full precision and are *always*
+attended.  The budget policy converts the configured token budget / sparsity
+ratio into the dynamic top-k count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+
+__all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k"]
+
+
+def snapkv_votes(
+    q_obs: jax.Array, k: jax.Array, *, causal_offset: int = 0
+) -> jax.Array:
+    """SnapKV observation-window attention vote.
+
+    Args:
+      q_obs: ``(..., W, D)`` last-W queries (already grouped per KV head —
+        callers sum query heads of a GQA group beforehand or pass per-head).
+      k: ``(..., L, D)`` keys.
+      causal_offset: index of the first observation query in the sequence
+        (queries may only vote for keys at or before their own position).
+    Returns:
+      votes ``(..., L)`` — attention mass each key received.
+    """
+    D = q_obs.shape[-1]
+    logits = jnp.einsum("...wd,...ld->...wl", q_obs, k) / jnp.sqrt(
+        jnp.asarray(D, q_obs.dtype))
+    W, L = logits.shape[-2], logits.shape[-1]
+    qpos = causal_offset + jnp.arange(W)[:, None]
+    kpos = jnp.arange(L)[None, :]
+    neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
+    logits = jnp.where(kpos <= qpos, logits, neg)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.sum(probs, axis=-2)
+
+
+def select_sink_tokens(
+    q_obs: jax.Array,
+    k: jax.Array,
+    num_sinks: int,
+    *,
+    causal_offset: int = 0,
+) -> tuple[jax.Array, jax.Array]:
+    """Pick the ``num_sinks`` highest-vote positions.
+
+    Returns ``(positions (..., S) int32, sink_mask (..., L) bool)``.
+    """
+    votes = snapkv_votes(q_obs, k, causal_offset=causal_offset)
+    L = votes.shape[-1]
+    S = min(num_sinks, L)
+    _, pos = jax.lax.top_k(votes, S)
+    mask = jnp.zeros(votes.shape, bool)
+    mask = jnp.put_along_axis(mask, pos, True, axis=-1, inplace=False)
+    return pos.astype(jnp.int32), mask
+
+
+def dynamic_k(cfg: SIKVConfig, seq_len: int) -> int:
+    """Number of dynamically retrieved tokens (budget minus sinks)."""
+    budget = cfg.budget_for(seq_len)
+    k = max(1, budget - cfg.num_sink_tokens)
+    return min(k, seq_len)

@@ -1,0 +1,151 @@
+"""Token-wise low-bit quantization with sign-bit reuse (paper Eqs. 9-13).
+
+Keys:   the sign bits already live in the VQ codes, so only ``|K'|`` is
+        quantized.  First per-channel max normalization
+        ``K_hat = |K'| / alpha`` (Eq. 12), then token-wise asymmetric B-bit
+        quantization over groups of ``quant_group`` channels (Eqs. 9-10).
+Values: plain token-wise asymmetric B-bit quantization.
+
+Token-wise layout means every per-token group's ``(scale, zp)`` sit next to
+the token — a single token can be reconstructed without touching any other
+token's metadata, which is what makes sparse random access cheap (paper
+"Token-Wise vs. Channel-Wise").
+
+Low-bit codes are bit-packed along the channel axis: ``8 // bits`` values per
+int8 byte.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizedTensor",
+    "quantize_tokenwise",
+    "dequantize_tokenwise",
+    "channel_alpha",
+    "quantize_key_magnitude",
+    "dequantize_key",
+    "pack_bits",
+    "unpack_bits",
+]
+
+
+class QuantizedTensor(NamedTuple):
+    """Packed B-bit tensor + token-wise group scale/zero-point."""
+
+    packed: jax.Array   # (..., L, D * bits // 8) int8
+    scale: jax.Array    # (..., L, D // quant_group)
+    zp: jax.Array       # (..., L, D // quant_group)
+    bits: int
+    quant_group: int
+    orig_dim: int       # D
+
+
+def pack_bits(q: jax.Array, bits: int) -> jax.Array:
+    """Pack unsigned ``bits``-bit integers (last axis) into int8 bytes.
+
+    ``8 % bits == 0`` required; value ``i`` of each byte occupies bits
+    ``[i*bits, (i+1)*bits)`` little-endian.
+    """
+    per = 8 // bits
+    *lead, D = q.shape
+    assert D % per == 0, (D, per)
+    qs = q.astype(jnp.uint8).reshape(*lead, D // per, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    packed = jnp.sum(
+        (qs << shifts).astype(jnp.uint32), axis=-1).astype(jnp.uint8)
+    return packed.astype(jnp.int8)
+
+
+def unpack_bits(packed: jax.Array, bits: int, orig_dim: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns int32 in ``[0, 2**bits)``."""
+    per = 8 // bits
+    p = packed.astype(jnp.uint8).astype(jnp.int32)[..., None]
+    shifts = jnp.arange(per, dtype=jnp.int32) * bits
+    vals = (p >> shifts) & ((1 << bits) - 1)
+    out = vals.reshape(*packed.shape[:-1], packed.shape[-1] * per)
+    return out[..., :orig_dim]
+
+
+def effective_quant_group(dim: int, quant_group: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``quant_group``."""
+    g = min(quant_group, dim)
+    while dim % g:
+        g -= 1
+    return g
+
+
+def _group_minmax(x: jax.Array, quant_group: int):
+    *lead, L, D = x.shape
+    g = x.reshape(*lead, L, D // quant_group, quant_group)
+    return jnp.min(g, axis=-1), jnp.max(g, axis=-1), g
+
+
+def quantize_tokenwise(
+    x: jax.Array, bits: int = 2, quant_group: int = 32
+) -> QuantizedTensor:
+    """Asymmetric B-bit quantization, per-token groups (paper Eqs. 9-10)."""
+    *lead, L, D = x.shape
+    quant_group = effective_quant_group(D, quant_group)
+    vmin, vmax, g = _group_minmax(x, quant_group)
+    levels = (1 << bits) - 1
+    qs = (vmax - vmin) / levels
+    qs = jnp.where(qs <= 0, 1.0, qs)  # degenerate flat groups
+    zp = vmin
+    q = jnp.clip(jnp.round((g - zp[..., None]) / qs[..., None]), 0, levels)
+    q = q.reshape(*lead, L, D).astype(jnp.int32)
+    return QuantizedTensor(
+        packed=pack_bits(q, bits),
+        scale=qs.astype(jnp.float32),
+        zp=zp.astype(jnp.float32),
+        bits=bits,
+        quant_group=quant_group,
+        orig_dim=D,
+    )
+
+
+def dequantize_tokenwise(qt: QuantizedTensor) -> jax.Array:
+    """Paper Eq. 11: ``D(V) = qs * Q(V) + zp``."""
+    q = unpack_bits(qt.packed, qt.bits, qt.orig_dim).astype(jnp.float32)
+    *lead, L, D = q.shape
+    g = q.reshape(*lead, L, D // qt.quant_group, qt.quant_group)
+    deq = g * qt.scale[..., None] + qt.zp[..., None]
+    return deq.reshape(*lead, L, D)
+
+
+def channel_alpha(k_norm: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Per-channel max of ``|K'|`` (paper Eq. 12); shape ``(..., 1, D)``."""
+    a = jnp.abs(k_norm)
+    if mask is not None:
+        a = jnp.where(mask[..., None], a, 0.0)
+    alpha = jnp.max(a, axis=-2, keepdims=True)
+    return jnp.where(alpha <= 0, 1.0, alpha)
+
+
+def quantize_key_magnitude(
+    k_norm: jax.Array,
+    alpha: jax.Array,
+    bits: int = 2,
+    quant_group: int = 32,
+) -> QuantizedTensor:
+    """Quantize ``|K'| / alpha`` token-wise; signs live in the VQ codes."""
+    k_hat = jnp.abs(k_norm) / alpha
+    return quantize_tokenwise(k_hat, bits=bits, quant_group=quant_group)
+
+
+def dequantize_key(
+    qt: QuantizedTensor,
+    signs: jax.Array,
+    alpha: jax.Array,
+) -> jax.Array:
+    """Paper Eq. 13: ``D(|K|) = alpha * (qs * Q + zp)``, signed by the codes.
+
+    Args:
+      signs: ``(..., L, D)`` in {-1, +1} — from :func:`codes_to_signs`.
+      alpha: ``(..., 1, D)`` per-channel scales.
+    """
+    mag = dequantize_tokenwise(qt)
+    return signs.astype(mag.dtype) * mag * alpha

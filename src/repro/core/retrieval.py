@@ -1,0 +1,93 @@
+"""Compressed-domain top-k retrieval: LUT build + LUT-GEMV scoring.
+
+Paper Eq. 8: ``score(q, k) ≈ sum_g Table^(g)[Code(k')^(g)]`` where the table
+holds the dot products of the query sub-vectors against the 16 codebook
+centroids.  On TPU the per-key gather is expressed as a 16-wide one-hot
+contraction (MXU-friendly; TPUs have no fast dynamic gather) — the Pallas
+kernel in :mod:`repro.kernels.lut_gemv` does the same blocked over VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "build_lut",
+    "lut_scores",
+    "exact_scores",
+    "topk_mask",
+    "select_topk",
+]
+
+
+def build_lut(q: jax.Array, centroids: jax.Array, group_size: int = 4) -> jax.Array:
+    """Per-group query/centroid dot products.
+
+    Args:
+      q: ``(..., D)`` query (single decode position; leading axes free).
+      centroids: ``(..., G, C, group_size)``.
+    Returns:
+      lut ``(..., G, C)``.
+    """
+    *lead, D = q.shape
+    G = centroids.shape[-3]
+    qg = q.reshape(*lead, G, group_size)
+    return jnp.einsum("...gd,...gcd->...gc", qg, centroids)
+
+
+def lut_scores(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Approximate scores by summing LUT entries over groups.
+
+    Args:
+      codes: ``(..., L, G)`` int8 sign codes.
+      lut:   ``(..., G, C)``.
+    Returns:
+      ``(..., L)`` approximate ``q . k'`` scores.
+    """
+    C = lut.shape[-1]
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), C, dtype=lut.dtype)
+    # (..., L, G, C) x (..., G, C) -> (..., L)
+    return jnp.einsum("...lgc,...gc->...l", onehot, lut)
+
+
+def exact_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Full-precision reference: ``(..., D) x (..., L, D) -> (..., L)``."""
+    return jnp.einsum("...d,...ld->...l", q, k)
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the top-k entries along the last axis (ties broken by
+    lower index, matching ``jax.lax.top_k``)."""
+    L = scores.shape[-1]
+    k = min(k, L)
+    _, idx = jax.lax.top_k(scores, k)
+    mask = jnp.zeros(scores.shape, dtype=bool)
+    mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+    return mask
+
+
+def select_topk(
+    scores: jax.Array,
+    k: int,
+    *,
+    valid_mask: jax.Array | None = None,
+    forced_mask: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k indices with optional validity/force-include masks.
+
+    Args:
+      scores: ``(..., L)``.
+      valid_mask: positions outside the current cache length -> -inf.
+      forced_mask: positions always selected (recent window) -> +inf bias.
+    Returns:
+      ``(indices (..., k), selected_scores (..., k))``.
+    """
+    neg = jnp.asarray(jnp.finfo(scores.dtype).min, scores.dtype)
+    s = scores
+    if valid_mask is not None:
+        s = jnp.where(valid_mask, s, neg)
+    if forced_mask is not None:
+        big = jnp.asarray(jnp.finfo(scores.dtype).max / 2, scores.dtype)
+        s = jnp.where(forced_mask, big, s)
+    vals, idx = jax.lax.top_k(s, min(k, s.shape[-1]))
+    return idx, vals

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, make_batch_iterator, make_inputs
+from repro.data.synthetic import (lm_sequence_batch, needle_cache,
+                                  structured_kv)

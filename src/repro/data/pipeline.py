@@ -1,0 +1,58 @@
+"""Deterministic, shardable batch pipeline.
+
+Seeded, stateless (step -> batch), so every data-parallel worker derives its
+shard of the global batch without coordination — the standard TPU input
+pattern.  ``make_inputs`` also builds the per-architecture input dict
+(token / embedding / encoder-frame stand-ins) used by training, serving, and
+the dry-run ``input_specs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.data.synthetic import lm_sequence_batch
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+
+
+def make_inputs(cfg: ModelConfig, batch: int, seq_len: int, *,
+                key: jax.Array | None = None,
+                dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """Concrete input batch for one step of the given architecture."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    k1, k2, k3 = jax.random.split(key, 3)
+    out: Dict[str, jax.Array] = {}
+    if cfg.embedding_inputs and not cfg.num_encoder_layers:
+        out["embeds"] = jax.random.normal(
+            k1, (batch, seq_len, cfg.d_model)).astype(dtype)
+        out["labels"] = lm_sequence_batch(k2, batch, seq_len, cfg.vocab_size)
+    else:
+        toks = lm_sequence_batch(k1, batch, seq_len, cfg.vocab_size)
+        out["tokens"] = toks
+        out["labels"] = toks
+    if cfg.num_encoder_layers:
+        Le = cfg.encoder_seq_len or 64
+        out["enc_embeds"] = jax.random.normal(
+            k3, (batch, Le, cfg.d_model)).astype(dtype)
+    return out
+
+
+def make_batch_iterator(model_cfg: ModelConfig, data_cfg: DataConfig,
+                        *, dtype=jnp.bfloat16) -> Iterator[Dict[str, jax.Array]]:
+    """Infinite deterministic batch stream (step-indexed seeding)."""
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(data_cfg.seed), step)
+        yield make_inputs(model_cfg, data_cfg.global_batch, data_cfg.seq_len,
+                          key=key, dtype=dtype)
+        step += 1

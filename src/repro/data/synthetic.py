@@ -1,0 +1,85 @@
+"""Synthetic data generators.
+
+Two kinds:
+
+* token streams with learnable structure (Markov/N-gram-ish) for the training
+  examples — loss must *decrease*, so pure-uniform tokens won't do;
+* structured KV caches with planted "needle" tokens for the retrieval
+  benchmarks — attention keys in real models are anisotropic (strong channel
+  means, a few dominant directions), which is exactly what makes sign-VQ
+  retrieval work, so the proxies plant that structure explicitly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_sequence_batch(key: jax.Array, batch: int, seq_len: int,
+                      vocab: int) -> jax.Array:
+    """Markov-chain token batch: next token = (prev * a + b) mod V with noise.
+
+    Gives a low-entropy conditional distribution a small LM can learn in a
+    few hundred steps.
+    """
+    k1, k2 = jax.random.split(key)
+    a, b = 31, 17
+    noise = jax.random.bernoulli(k1, 0.1, (batch, seq_len))
+    rand = jax.random.randint(k2, (batch, seq_len), 0, vocab)
+    first = rand[:, :1]
+
+    def step(prev, inp):
+        nz, rz = inp
+        nxt = jnp.where(nz, rz, (prev * a + b) % vocab)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(
+        step, first[:, 0], (noise.T[1:], rand.T[1:]))
+    return jnp.concatenate([first, toks.T], axis=1).astype(jnp.int32)
+
+
+def structured_kv(key: jax.Array, batch: int, heads: int, seq_len: int,
+                  head_dim: int, *, mean_scale: float = 1.0,
+                  low_rank: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Keys/values with realistic structure: per-channel bias + low-rank
+    common directions + noise.  Returns ``(k, v)`` each (B, H, L, D)."""
+    ks = jax.random.split(key, 5)
+    mu = mean_scale * jax.random.normal(ks[0], (1, heads, 1, head_dim))
+    basis = jax.random.normal(ks[1], (heads, low_rank, head_dim))
+    coefs = jax.random.normal(ks[2], (batch, heads, seq_len, low_rank))
+    k = mu + jnp.einsum("bhlr,hrd->bhld", coefs, basis) / jnp.sqrt(
+        float(low_rank))
+    k = k + 0.3 * jax.random.normal(ks[3], k.shape)
+    v = jax.random.normal(ks[4], k.shape)
+    return k, v
+
+
+def needle_cache(key: jax.Array, batch: int, heads: int, seq_len: int,
+                 head_dim: int, n_needles: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Cache with planted high-relevance tokens for a known query.
+
+    Returns ``(q (B,H,D), k, v, needle_pos (B,H,n))`` where the needle keys
+    align with q (plus noise) — exact top-k must recover them.
+    """
+    ks = jax.random.split(key, 4)
+    k, v = structured_kv(ks[0], batch, heads, seq_len, head_dim)
+    q = jax.random.normal(ks[1], (batch, heads, head_dim))
+    pos = jax.random.choice(
+        ks[2], seq_len, (batch, heads, n_needles), replace=False)
+    qn = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    needle_k = 4.0 * qn[:, :, None, :] + 0.1 * jax.random.normal(
+        ks[3], (batch, heads, n_needles, head_dim))
+    k = scatter_rows(k, pos, needle_k)
+    return q, k, v, pos
+
+
+def scatter_rows(x: jax.Array, pos: jax.Array, rows: jax.Array) -> jax.Array:
+    """Replace rows of ``x (B,H,L,D)`` at ``pos (B,H,n)`` with
+    ``rows (B,H,n,D)`` (one-hot scatter — positions must be unique)."""
+    L = x.shape[2]
+    onehot = jax.nn.one_hot(pos, L, dtype=x.dtype)          # (B,H,n,L)
+    keep = 1.0 - jnp.sum(onehot, axis=2)                    # (B,H,L)
+    return x * keep[..., None] + jnp.einsum("bhnl,bhnd->bhld", onehot, rows)

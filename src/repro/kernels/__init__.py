@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+lut_gemv          — compressed-domain scoring (retrieval)
+sign_quant        — fused one-pass compression (prefill)
+sparse_attention  — fused dequant + flash decode over selected tokens
+flash_attention   — causal flash prefill baseline
+
+Each kernel ships with a pure-jnp oracle in :mod:`repro.kernels.ref` and a
+shape-adapting jit wrapper in :mod:`repro.kernels.ops`.
+"""

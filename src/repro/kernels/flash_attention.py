@@ -1,0 +1,103 @@
+"""Causal FlashAttention Pallas kernel (prefill baseline).
+
+Classic streaming-softmax formulation: grid ``(N, nQ, nK)`` with the K axis
+innermost; per-(q-block) scratch holds the running ``(acc, m, l)``.  Causal
+block skipping masks fully-future K blocks via ``pl.when`` so their matmuls
+never execute.  Used by the TT2T benchmark as the fp16 attention reference
+and as the full-precision segment of the serving engine's prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr,
+                  *, scale: float, block_q: int, block_k: int, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    # causal block skip: a K block strictly after the last row of this Q
+    # block contributes nothing — skip its matmuls entirely.
+    run = (ik * block_k <= iq * block_q + block_q - 1) if causal \
+        else (ik >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, 0)
+            kpos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, logits.shape, 1)
+            logits = jnp.where(kpos <= qpos, logits, _NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        v = v_ref[0].astype(jnp.float32)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = True) -> jax.Array:
+    """q ``(N, Lq, D)``, k/v ``(N, Lk, D)`` -> ``(N, Lq, D)``.
+
+    ``causal=True`` assumes ``Lq == Lk`` (prefill); lengths must be block
+    multiples (callers pad and mask).
+    """
+    N, Lq, D = q.shape
+    Lk = k.shape[1]
+    assert Lq % block_q == 0 and Lk % block_k == 0, (Lq, Lk)
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    grid = (N, Lq // block_q, Lk // block_k)
+    kern = functools.partial(_flash_kernel, scale=sc, block_q=block_q,
+                             block_k=block_k, causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda n, i, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda n, i, j: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""LUT-GEMV Pallas kernel: compressed-domain attention scoring.
+
+For each cached token, its score is the sum over groups of a 16-entry
+lookup: ``score[l] = sum_g LUT[g, codes[l, g]]``.  TPUs have no fast dynamic
+gather, so the lookup is expressed as a one-hot contraction: the ``(BL, G)``
+code block expands to a ``(BL, G*16)`` one-hot matrix that multiplies the
+flattened LUT ``(G*16, 1)`` on the MXU — mathematically identical, and the
+inner dimension (G*16 = 512 for D=128) is lane-aligned.
+
+VMEM budget per grid step (BL=512, G=32): codes 16 KiB + one-hot 1 MiB(f32)
++ LUT 2 KiB — comfortably inside the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_L = 512
+
+
+def _lut_gemv_kernel(codes_ref, lut_ref, out_ref, *, codebook: int):
+    codes = codes_ref[0].astype(jnp.int32)            # (BL, G)
+    lut = lut_ref[0]                                  # (G, C)
+    BL, G = codes.shape
+    C = codebook
+    # one-hot over the code axis; compare against an iota along a new axis
+    iota = jax.lax.broadcasted_iota(jnp.int32, (BL, G, C), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+    scores = jax.lax.dot_general(
+        onehot.reshape(BL, G * C), lut.reshape(G * C, 1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # (BL, 1)
+    out_ref[0] = scores[:, 0]
+
+
+def lut_gemv_pallas(codes: jax.Array, lut: jax.Array, *,
+                    block_l: int = DEFAULT_BLOCK_L,
+                    interpret: bool = True) -> jax.Array:
+    """Args: codes ``(N, L, G)`` int8, lut ``(N, G, C)`` f32.
+    Returns scores ``(N, L)`` f32.  L must be a multiple of ``block_l``
+    (callers pad; padded scores are masked downstream)."""
+    N, L, G = codes.shape
+    C = lut.shape[-1]
+    assert L % block_l == 0, (L, block_l)
+    grid = (N, L // block_l)
+    return pl.pallas_call(
+        functools.partial(_lut_gemv_kernel, codebook=C),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_l, G), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, G, C), lambda n, i: (n, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_l), lambda n, i: (n, i)),
+        out_shape=jax.ShapeDtypeStruct((N, L), jnp.float32),
+        interpret=interpret,
+    )(codes, lut)

@@ -1,0 +1,132 @@
+"""Jitted wrappers around the Pallas kernels.
+
+These adapt core-layer shapes ``(B, H, ...)`` to the kernels' flattened
+``(N, ...)`` layout, handle padding to block multiples, and pick
+``interpret=True`` automatically off-TPU so the same call sites run on CPU
+(tests) and TPU (production).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lut_gemv import lut_gemv_pallas
+from repro.kernels.sign_quant import sign_quant_pallas
+from repro.kernels.sparse_attention import sparse_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int, value=0):
+    L = x.shape[axis]
+    pad = (-L) % mult
+    if pad == 0:
+        return x, L
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), L
+
+
+def lut_gemv(codes: jax.Array, q_sum: jax.Array, centroids: jax.Array,
+             group_size: int = 4, *, block_l: int = 512) -> jax.Array:
+    """Compressed-domain scores.
+
+    Args: codes ``(B, H, L, G)`` int8; q_sum ``(B, H, D)``;
+    centroids ``(B, H, G, C, gs)``.
+    Returns scores ``(B, H, L)`` f32 (padded positions score garbage — mask
+    with the validity mask downstream, as the core always does).
+    """
+    B, H, L, G = codes.shape
+    C = centroids.shape[-2]
+    # LUT build is a tiny einsum — leave it to XLA, feed the kernel.
+    qg = q_sum.reshape(B, H, G, group_size)
+    lut = jnp.einsum("bhgd,bhgcd->bhgc", qg.astype(jnp.float32),
+                     centroids.astype(jnp.float32))
+    codes_f = codes.reshape(B * H, L, G)
+    bl = min(block_l, L) if L % block_l else block_l
+    codes_p, L0 = _pad_axis(codes_f, 1, bl)
+    scores = lut_gemv_pallas(codes_p, lut.reshape(B * H, G, C),
+                             block_l=bl, interpret=_interpret())
+    return scores[:, :L0].reshape(B, H, L)
+
+
+def sign_quant(k_norm: jax.Array, alpha: jax.Array, *, quant_group: int = 32,
+               group_size: int = 4, block_l: int = 256):
+    """Fused compression. k_norm ``(B, H, L, D)``, alpha ``(B, H, 1, D)``.
+
+    Returns ``(codes, packed, scale, zp)`` with leading ``(B, H, L)`` dims.
+    """
+    B, H, L, D = k_norm.shape
+    kf = k_norm.reshape(B * H, L, D).astype(jnp.float32)
+    af = alpha.reshape(B * H, 1, D).astype(jnp.float32)
+    bl = min(block_l, L) if L % block_l else block_l
+    kf, L0 = _pad_axis(kf, 1, bl)
+    codes, packed, qs, zp = sign_quant_pallas(
+        kf, af, quant_group=quant_group, group_size=group_size,
+        block_l=bl, interpret=_interpret())
+    cut = lambda x: x[:, :L0].reshape(B, H, L0, -1)
+    return cut(codes), cut(packed), cut(qs), cut(zp)
+
+
+def sparse_attention_decode(
+    q, codes_sel, kmag_sel, ks_sel, kz_sel, vq_sel, vs_sel, vz_sel,
+    alpha, mu, sel_valid, *, quant_group: int = 32, group_size: int = 4,
+    scale: float | None = None, block_t: int = 256,
+):
+    """Fused dequant+flash over gathered tokens.
+
+    Args: q ``(B, Hq, 1, D)``; *_sel gathered per ``(B, Hkv, T, ...)``;
+    alpha/mu ``(B, Hkv, 1, D)``; sel_valid ``(B, Hkv, T)`` bool.
+    Returns unnormalized ``(acc (B,Hq,D), m (B,Hq), l (B,Hq))``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv, T = sel_valid.shape[1], sel_valid.shape[2]
+    g = Hq // Hkv
+    N = B * Hkv
+    qf = q.reshape(B, Hkv, g, D).reshape(N, g, D).astype(jnp.float32)
+    flat = lambda x: x.reshape(N, *x.shape[2:])
+    bt = min(block_t, T) if T % block_t else block_t
+    padT = lambda x: _pad_axis(flat(x), 1, bt)[0]
+    mask = padT(sel_valid.astype(jnp.float32))
+    acc, m, l = sparse_attention_pallas(
+        qf, padT(codes_sel), padT(kmag_sel),
+        padT(ks_sel.astype(jnp.float32)), padT(kz_sel.astype(jnp.float32)),
+        padT(vq_sel), padT(vs_sel.astype(jnp.float32)),
+        padT(vz_sel.astype(jnp.float32)),
+        flat(alpha.astype(jnp.float32)), flat(mu.astype(jnp.float32)),
+        mask, quant_group=quant_group, group_size=group_size, scale=scale,
+        block_t=bt, interpret=_interpret())
+    return (acc.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 256, block_k: int = 256) -> jax.Array:
+    """GQA flash attention. q ``(B, Hq, L, D)``, k/v ``(B, Hkv, L, D)``."""
+    B, Hq, Lq, D = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    # expand kv heads to query heads (XLA broadcasts; no copy on TPU)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    qf = q.reshape(B * Hq, Lq, D)
+    kf = k.reshape(B * Hq, Lk, D)
+    vf = v.reshape(B * Hq, Lk, D)
+    bq = min(block_q, Lq) if Lq % block_q else block_q
+    bk = min(block_k, Lk) if Lk % block_k else block_k
+    qf, Lq0 = _pad_axis(qf, 1, bq)
+    kf, _ = _pad_axis(kf, 1, bk)
+    vf, _ = _pad_axis(vf, 1, bk)
+    if kf.shape[1] > Lk and not causal:
+        raise ValueError("non-causal flash requires block-multiple Lk")
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, scale=scale,
+                                 block_q=bq, block_k=bk,
+                                 interpret=_interpret())
+    return out[:, :Lq0].reshape(B, Hq, Lq0, D)

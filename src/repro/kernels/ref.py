@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+These re-express the kernels' contracts independently of
+:mod:`repro.core` so kernel tests do not depend on the core's internals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_gemv_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """codes ``(..., L, G)`` int8, lut ``(..., G, C)`` -> scores ``(..., L)``."""
+    C = lut.shape[-1]
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), C, dtype=lut.dtype)
+    return jnp.einsum("...lgc,...gc->...l", onehot, lut)
+
+
+def unpack2_ref(packed: jax.Array, D: int) -> jax.Array:
+    """int8-packed 2-bit values (..., D//4) -> int32 (..., D)."""
+    p = packed.astype(jnp.uint8).astype(jnp.int32)[..., None]
+    vals = (p >> (jnp.arange(4) * 2)) & 0x3
+    return vals.reshape(*packed.shape[:-1], packed.shape[-1] * 4)[..., :D]
+
+
+def signs_ref(codes: jax.Array, group_size: int = 4) -> jax.Array:
+    c = codes.astype(jnp.int32)[..., None]
+    bits = (c >> jnp.arange(group_size - 1, -1, -1)) & 1
+    signs = bits * 2 - 1
+    return signs.reshape(*codes.shape[:-1], codes.shape[-1] * group_size)
+
+
+def dequant_k_ref(codes, kmag, k_scale, k_zp, alpha, mu, quant_group: int):
+    """Dequantized keys from the compressed layout.
+
+    codes (T,G) kmag (T,D//4) packed, k_scale/zp (T,D//qg), alpha/mu (1,D).
+    """
+    D = alpha.shape[-1]
+    mag = unpack2_ref(kmag, D).astype(jnp.float32)
+    T = mag.shape[0]
+    g = mag.reshape(T, D // quant_group, quant_group)
+    mag = (g * k_scale[..., None] + k_zp[..., None]).reshape(T, D)
+    return signs_ref(codes).astype(jnp.float32) * mag * alpha + mu
+
+
+def dequant_v_ref(v_q, v_scale, v_zp, D: int, quant_group: int):
+    mag = unpack2_ref(v_q, D).astype(jnp.float32)
+    T = mag.shape[0]
+    g = mag.reshape(T, D // quant_group, quant_group)
+    return (g * v_scale[..., None] + v_zp[..., None]).reshape(T, D)
+
+
+def sparse_attention_ref(q, codes, kmag, k_scale, k_zp, v_q, v_scale, v_zp,
+                         alpha, mu, valid, quant_group: int,
+                         scale: float | None = None):
+    """Partial flash state over the quantized selected set.
+
+    q (g, D); per-token tensors (T, ...); valid (T,) bool.
+    Returns (acc (g, D), m (g,), l (g,)) — unnormalized attention state so the
+    caller can merge the full-precision sink segment exactly.
+    """
+    D = q.shape[-1]
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    k = dequant_k_ref(codes, kmag, k_scale, k_zp, alpha, mu, quant_group)
+    v = dequant_v_ref(v_q, v_scale, v_zp, D, quant_group)
+    logits = (q.astype(jnp.float32) @ k.T) * sc            # (g, T)
+    logits = jnp.where(valid[None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    acc = p @ v
+    return acc, m, l
+
+
+def merge_flash_ref(acc1, m1, l1, acc2, m2, l2):
+    """Exact merge of two partial attention states."""
+    m = jnp.maximum(m1, m2)
+    a1, a2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+    return (acc1 * a1[:, None] + acc2 * a2[:, None],
+            m, l1 * a1 + l2 * a2)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """Plain softmax attention; q (Lq, D), k/v (Lk, D)."""
+    D = q.shape[-1]
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * sc
+    if causal:
+        Lq, Lk = logits.shape
+        qpos = jnp.arange(Lq)[:, None] + (Lk - Lq)
+        logits = jnp.where(jnp.arange(Lk)[None, :] <= qpos, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return (w @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def sign_quant_ref(k_norm: jax.Array, alpha: jax.Array, quant_group: int,
+                   group_size: int = 4):
+    """Fused compression oracle.
+
+    k_norm (L, D), alpha (1, D) ->
+      codes (L, G) int8, packed 2-bit |k|/alpha (L, D//4),
+      scale (L, D//qg), zp (L, D//qg).
+    """
+    L, D = k_norm.shape
+    G = D // group_size
+    bits = (k_norm >= 0).astype(jnp.int32).reshape(L, G, group_size)
+    w = 2 ** jnp.arange(group_size - 1, -1, -1)
+    codes = jnp.sum(bits * w, axis=-1).astype(jnp.int8)
+
+    khat = jnp.abs(k_norm) / alpha
+    g = khat.reshape(L, D // quant_group, quant_group)
+    vmin = jnp.min(g, axis=-1)
+    vmax = jnp.max(g, axis=-1)
+    qs = jnp.where(vmax > vmin, (vmax - vmin) / 3.0, 1.0)
+    q = jnp.clip(jnp.round((g - vmin[..., None]) / qs[..., None]), 0, 3)
+    q = q.reshape(L, D).astype(jnp.int32)
+    qq = q.reshape(L, D // 4, 4)
+    packed = jnp.sum(qq << (jnp.arange(4) * 2), axis=-1).astype(jnp.uint8)
+    return codes, packed.astype(jnp.int8), qs, vmin

@@ -1,0 +1,93 @@
+"""Fused prefill-compression Pallas kernel.
+
+One pass over the normalized keys produces, per token block:
+  * 4-bit sign codes (the self-index),
+  * 2-bit quantized magnitudes bit-packed 4-per-byte,
+  * per-token group (scale, zero-point).
+
+This is the paper's "one-pass" property as a kernel: compression cost is a
+single streaming read of K' — no iterative clustering, no second pass.  All
+ops are element-wise/reduction (VPU); no MXU involvement, so it overlaps
+well with prefill matmuls on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_L = 256
+
+
+def _sign_quant_kernel(k_ref, alpha_ref, codes_ref, packed_ref, qs_ref,
+                       zp_ref, *, group_size: int, quant_group: int):
+    k = k_ref[0].astype(jnp.float32)                  # (BL, D)
+    alpha = alpha_ref[0].astype(jnp.float32)          # (1, D)
+    BL, D = k.shape
+    G = D // group_size
+
+    # sign codes (first channel of the group = MSB); bit weights are built
+    # with an in-kernel iota (pallas kernels cannot capture trace constants)
+    bits = (k >= 0).astype(jnp.int32).reshape(BL, G, group_size)
+    ex = jax.lax.broadcasted_iota(jnp.int32, (BL, G, group_size), 2)
+    w = jnp.left_shift(1, group_size - 1 - ex)
+    codes_ref[0] = jnp.sum(bits * w, axis=-1).astype(jnp.int8)
+
+    # 2-bit magnitude quantization of |k| / alpha over quant groups
+    khat = jnp.abs(k) / alpha
+    g = khat.reshape(BL, D // quant_group, quant_group)
+    vmin = jnp.min(g, axis=-1)
+    vmax = jnp.max(g, axis=-1)
+    qs = jnp.where(vmax > vmin, (vmax - vmin) / 3.0, 1.0)
+    q = jnp.clip(jnp.round((g - vmin[..., None]) / qs[..., None]), 0, 3)
+    q = q.reshape(BL, D).astype(jnp.int32)
+
+    # pack 4 x 2-bit per int8 byte (little-endian within the byte)
+    qq = q.reshape(BL, D // 4, 4)
+    shifts = 2 * jax.lax.broadcasted_iota(jnp.int32, (BL, D // 4, 4), 2)
+    packed = jnp.sum(jnp.left_shift(qq, shifts), axis=-1)
+    packed_ref[0] = packed.astype(jnp.uint8).astype(jnp.int8)
+    qs_ref[0] = qs
+    zp_ref[0] = vmin
+
+
+def sign_quant_pallas(k_norm: jax.Array, alpha: jax.Array, *,
+                      quant_group: int = 32, group_size: int = 4,
+                      block_l: int = DEFAULT_BLOCK_L,
+                      interpret: bool = True):
+    """Args: k_norm ``(N, L, D)``, alpha ``(N, 1, D)``.
+
+    Returns ``(codes (N,L,G) int8, packed (N,L,D//4) int8,
+    scale (N,L,D//qg) f32, zp (N,L,D//qg) f32)``.
+    """
+    N, L, D = k_norm.shape
+    G = D // group_size
+    assert L % block_l == 0, (L, block_l)
+    grid = (N, L // block_l)
+    kern = functools.partial(_sign_quant_kernel, group_size=group_size,
+                             quant_group=quant_group)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_l, D), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, 1, D), lambda n, i: (n, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_l, G), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, block_l, D // 4), lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, block_l, D // quant_group),
+                         lambda n, i: (n, i, 0)),
+            pl.BlockSpec((1, block_l, D // quant_group),
+                         lambda n, i: (n, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, L, G), jnp.int8),
+            jax.ShapeDtypeStruct((N, L, D // 4), jnp.int8),
+            jax.ShapeDtypeStruct((N, L, D // quant_group), jnp.float32),
+            jax.ShapeDtypeStruct((N, L, D // quant_group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(k_norm, alpha)

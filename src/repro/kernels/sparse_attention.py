@@ -1,0 +1,162 @@
+"""Sparse FlashAttention decode kernel with fused dequantization.
+
+The paper's CUDA kernel gathers selected tokens and dequantizes them inside
+the attention pass.  TPU adaptation (DESIGN.md §2): the index-based gather
+stays an XLA dynamic-gather (TPU DMA wants >=(8,128) tiles; per-token HBM
+gathers inside a kernel are pathological), while THIS kernel fuses everything
+downstream — 2-bit unpack, sign application, ``alpha*(qs*q+zp)+mu`` dequant,
+QK^T, streaming softmax, and PV — into a single VMEM-resident pass, so the
+dequantized K/V never round-trip to HBM.  That is the bandwidth win the paper
+reports (6.7x over full FlashAttention at 7.5 % density).
+
+The kernel emits an *unnormalized* flash state ``(acc, m, l)`` so the caller
+can exactly merge the full-precision sink-token segment (see
+``ref.merge_flash_ref``) before the final normalization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 256
+_NEG = -1e30
+
+
+def _unpack2(packed: jax.Array, D: int) -> jax.Array:
+    """(T, D//4) int8 -> (T, D) int32 in [0, 3]."""
+    p = packed.astype(jnp.uint8).astype(jnp.int32)
+    T, Dq = p.shape
+    shifts = 2 * jax.lax.broadcasted_iota(jnp.int32, (T, Dq, 4), 2)
+    vals = jnp.right_shift(p[:, :, None], shifts) & 0x3
+    return vals.reshape(T, D)
+
+
+def _signs(codes: jax.Array, group_size: int, D: int) -> jax.Array:
+    """(T, G) int8 -> (T, D) float32 in {-1, +1}."""
+    c = codes.astype(jnp.int32)
+    T, G = c.shape
+    ex = jax.lax.broadcasted_iota(jnp.int32, (T, G, group_size), 2)
+    bits = jnp.right_shift(c[:, :, None], group_size - 1 - ex) & 1
+    return (bits * 2 - 1).reshape(T, D).astype(jnp.float32)
+
+
+def _sparse_attn_kernel(q_ref, codes_ref, kmag_ref, ks_ref, kz_ref,
+                        vq_ref, vs_ref, vz_ref, alpha_ref, mu_ref, mask_ref,
+                        acc_out, m_out, l_out,
+                        acc, m_scr, l_scr,
+                        *, group_size: int, quant_group: int, scale: float):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0].astype(jnp.float32)                     # (g, D)
+    D = q.shape[-1]
+    alpha = alpha_ref[0, 0].astype(jnp.float32)          # (D,)
+    mu = mu_ref[0, 0].astype(jnp.float32)                # (D,)
+
+    # ---- fused dequantization of the K block --------------------------------
+    signs = _signs(codes_ref[0], group_size, D)          # (BT, D)
+    mag = _unpack2(kmag_ref[0], D).astype(jnp.float32)
+    BT = mag.shape[0]
+    magg = mag.reshape(BT, D // quant_group, quant_group)
+    mag = (magg * ks_ref[0][..., None] + kz_ref[0][..., None]).reshape(BT, D)
+    k = signs * mag * alpha + mu                         # (BT, D)
+
+    # ---- scores + streaming softmax update ----------------------------------
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (g, BT)
+    mask = mask_ref[0] > 0                               # (BT,)
+    logits = jnp.where(mask[None, :], logits, _NEG)
+
+    m_prev = m_scr[...]                                  # (g, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)                          # (g, BT)
+    corr = jnp.exp(m_prev - m_new)                       # (g, 1)
+
+    # ---- fused dequantization of the V block --------------------------------
+    vmag = _unpack2(vq_ref[0], D).astype(jnp.float32)
+    vg = vmag.reshape(BT, D // quant_group, quant_group)
+    v = (vg * vs_ref[0][..., None] + vz_ref[0][..., None]).reshape(BT, D)
+
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_scr[...] = m_new
+
+    @pl.when(t == pl.num_programs(1) - 1)
+    def _done():
+        acc_out[0] = acc[...]
+        m_out[0] = m_scr[...][:, 0]
+        l_out[0] = l_scr[...][:, 0]
+
+
+def sparse_attention_pallas(
+    q, codes, kmag, k_scale, k_zp, v_q, v_scale, v_zp, alpha, mu, mask,
+    *, quant_group: int = 32, group_size: int = 4,
+    scale: float | None = None, block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = True,
+):
+    """Fused dequant + flash attention over gathered quantized tokens.
+
+    Args (N = batch*kv_heads, g = GQA group size, T = selected tokens):
+      q ``(N, g, D)``; codes ``(N, T, G)``; kmag/v_q ``(N, T, D//4)``;
+      k_scale/k_zp/v_scale/v_zp ``(N, T, D//qg)``; alpha/mu ``(N, 1, D)``;
+      mask ``(N, T)`` float {0,1}.
+    Returns:
+      ``(acc (N, g, D), m (N, g), l (N, g))`` unnormalized flash state.
+    """
+    N, g, D = q.shape
+    T = codes.shape[1]
+    G = codes.shape[2]
+    nq = k_scale.shape[-1]
+    assert T % block_t == 0, (T, block_t)
+    qg_eff = D // nq
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    grid = (N, T // block_t)
+    kern = functools.partial(_sparse_attn_kernel, group_size=group_size,
+                             quant_group=qg_eff, scale=sc)
+    row = lambda n, t: (n, t, 0)
+    fixed = lambda n, t: (n, 0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, D), fixed),              # q
+            pl.BlockSpec((1, block_t, G), row),          # codes
+            pl.BlockSpec((1, block_t, D // 4), row),     # kmag
+            pl.BlockSpec((1, block_t, nq), row),         # k_scale
+            pl.BlockSpec((1, block_t, nq), row),         # k_zp
+            pl.BlockSpec((1, block_t, D // 4), row),     # v_q
+            pl.BlockSpec((1, block_t, nq), row),         # v_scale
+            pl.BlockSpec((1, block_t, nq), row),         # v_zp
+            pl.BlockSpec((1, 1, D), fixed),              # alpha
+            pl.BlockSpec((1, 1, D), fixed),              # mu
+            pl.BlockSpec((1, block_t), lambda n, t: (n, t)),  # mask
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, D), fixed),
+            pl.BlockSpec((1, g), lambda n, t: (n, 0)),
+            pl.BlockSpec((1, g), lambda n, t: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, g, D), jnp.float32),
+            jax.ShapeDtypeStruct((N, g), jnp.float32),
+            jax.ShapeDtypeStruct((N, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, D), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, codes, kmag, k_scale, k_zp, v_q, v_scale, v_zp, alpha, mu, mask)

@@ -1,0 +1,270 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) combination
+on the production mesh and record memory / cost / collective statistics.
+
+MUST set the fake-device flag before ANY other import (jax locks the device
+count on first init) — do not move these two lines.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import functools
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (INPUT_SHAPES, SIKVConfig, TrainConfig,
+                          get_model_config, list_archs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (decode_cache_sds, input_sds,
+                                   param_sharded_sds, shard_tree_specs,
+                                   param_spec)
+from repro.models import decode_step, prefill
+from repro.models.transformer import loss_fn
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.sparse import get_method
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s4": 0.5, "u4": 0.5}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-operand bytes of every collective op in the HLO."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    shape_re = re.compile(r"\w+\[[\d,]*\](?:\{[^}]*\})?")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for c in _COLLECTIVES:
+            # match "= <shape> all-reduce(" or "= (<shapes>) all-reduce("
+            if re.search(rf"=\s.*\b{c}(-start|-done)?\(", stripped):
+                lhs = stripped.split("=", 1)[1].split(f" {c}", 1)[0]
+                if c + "-done" in stripped:
+                    continue  # counted at -start
+                for sh in shape_re.findall(lhs):
+                    out[c] += _shape_bytes(sh)
+                out["count"] += 1
+                break
+    return out
+
+
+def make_train_step(cfg, tc: TrainConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        lr = cosine_schedule(tc, opt_state.step)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                tc, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   **metrics}
+    return train_step
+
+
+def sikv_config_for(shape_name: str) -> SIKVConfig:
+    if shape_name == "long_500k":
+        # fixed 4096-token budget at 500k (0.8 % density) keeps the gather
+        # tile bounded; ratio budgets at this length retrieve 39k tokens
+        return SIKVConfig(token_budget=4096, recent_window=64)
+    if shape_name == "decode_32k":
+        return SIKVConfig(sparsity_ratio=0.075, recent_window=64)  # paper Ruler
+    return SIKVConfig()
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                method: str = "sikv", verbose: bool = True,
+                remat: bool = False, moe_dispatch: str = "ragged",
+                value_slice: bool = False, expert_fsdp: bool = False,
+                variant: str = "") -> Dict[str, Any]:
+    import dataclasses
+    cfg = get_model_config(arch)
+    if remat or moe_dispatch != "ragged":
+        cfg = dataclasses.replace(cfg, remat=remat, moe_dispatch=moe_dispatch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sikv = sikv_config_for(shape_name)
+    if value_slice and cfg.mla is not None:
+        # beyond-paper MLA optimization: the value is a prefix slice of the
+        # cached latent key -> no separate V cache (see SIKVConfig)
+        sikv = dataclasses.replace(sikv, value_slice=cfg.mla.kv_lora_rank)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        rule = (functools.partial(param_spec, expert_fsdp=True)
+                if expert_fsdp else param_spec)
+        params_sds = param_sharded_sds(cfg, mesh, rule=rule)
+        if shape.mode == "train":
+            tc = TrainConfig()
+            opt_sds = jax.eval_shape(adamw_init, params_sds)
+            opt_sds = shard_tree_specs(opt_sds, mesh, param_spec)
+            batch = input_sds(cfg, shape.global_batch, shape.seq_len, mesh)
+            fn = make_train_step(cfg, tc)
+            lowered = jax.jit(fn).lower(params_sds, opt_sds, batch)
+        elif shape.mode == "prefill":
+            m = get_method(method, sikv)
+            batch = input_sds(cfg, shape.global_batch, shape.seq_len, mesh,
+                              labels=False)
+            fn = functools.partial(prefill, cfg=cfg, method=m,
+                                   capacity=shape.seq_len)
+            lowered = jax.jit(lambda p, b: fn(p, batch=b)).lower(
+                params_sds, batch)
+        else:  # decode
+            if method == "sikv_sp":
+                from repro.core.distributed import SeqParallelSIKVAttention
+                from repro.launch.mesh import data_axes
+                dp = data_axes(mesh)
+                n_dp = 1
+                for a in dp:
+                    n_dp *= mesh.shape[a]
+                seq_shard = shape.global_batch % n_dp != 0
+                m = SeqParallelSIKVAttention(
+                    sikv, mesh=mesh, batch_axes=dp,
+                    seq_axes=(tuple(mesh.axis_names) if seq_shard
+                              else ("model",)))
+            else:
+                m = get_method(method, sikv)
+            caches = decode_cache_sds(cfg, sikv, shape.global_batch,
+                                      shape.seq_len, mesh,
+                                      method="sikv" if method == "sikv_sp"
+                                      else method)
+            inputs = input_sds(cfg, shape.global_batch, 1, mesh,
+                               labels=False)
+            inputs.pop("enc_embeds", None)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = functools.partial(decode_step, cfg=cfg, method=m)
+            lowered = jax.jit(
+                lambda p, i, pp, c: fn(p, inputs=i, pos=pp, caches=c)
+            ).lower(params_sds, inputs, pos, caches)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in ("bytes_accessed", "output_size_in_bytes",
+                 "temp_size_in_bytes", "argument_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if mem is not None and hasattr(mem, attr):
+            mem_info[attr] = int(getattr(mem, attr))
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mode": shape.mode,
+        "method": method,
+        "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "num_devices": int(mesh.devices.size),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "memory_analysis": mem_info,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "variant": variant,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh={rec['mesh']} "
+              f"method={method}: lower {t_lower:.1f}s compile "
+              f"{t_compile:.1f}s flops={rec['flops']:.3e} "
+              f"bytes={rec['bytes_accessed']:.3e} "
+              f"coll={sum(v for k, v in coll.items() if k != 'count'):.3e}")
+        if mem is not None:
+            print(f"         memory_analysis: {mem_info}")
+    return rec
+
+
+def save_record(rec: Dict[str, Any], out_dir: str | None = None) -> str:
+    out_dir = out_dir or os.path.abspath(ARTIFACT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "x".join(str(s) for s in rec["mesh"])
+    var = ("_" + rec["variant"]) if rec.get("variant") else ""
+    name = f"{rec['arch']}_{rec['shape']}_{rec['method']}_{mesh_tag}{var}.json"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    choices=["all"] + list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--method", default="sikv")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--moe-dispatch", default="ragged",
+                    choices=["ragged", "capacity"])
+    ap.add_argument("--value-slice", action="store_true",
+                    help="MLA share-KV cache optimization")
+    ap.add_argument("--expert-fsdp", action="store_true",
+                    help="shard MoE experts over data axes too")
+    ap.add_argument("--variant", default="",
+                    help="artifact tag for perf-iteration runs")
+    args = ap.parse_args()
+
+    archs = list_archs()[:10] if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if args.skip_existing:
+                mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+                var = ("_" + args.variant) if args.variant else ""
+                name = f"{arch}_{shape}_{args.method}_{mesh_tag}{var}.json"
+                out_dir = args.out or os.path.abspath(ARTIFACT_DIR)
+                if os.path.exists(os.path.join(out_dir, name)):
+                    print(f"[dryrun] skip existing {arch} x {shape}")
+                    continue
+            try:
+                rec = lower_combo(arch, shape, multi_pod=args.multi_pod,
+                                  method=args.method, remat=args.remat,
+                                  moe_dispatch=args.moe_dispatch,
+                                  value_slice=args.value_slice,
+                                  expert_fsdp=args.expert_fsdp,
+                                  variant=args.variant)
+                print("  ->", save_record(rec, args.out))
+            except Exception as e:  # noqa: BLE001 — report, keep sweeping
+                failures.append((arch, shape, repr(e)))
+                print(f"[dryrun] FAIL {arch} x {shape}: {e}")
+    if failures:
+        raise SystemExit(
+            f"{len(failures)} dry-run combination(s) failed: {failures}")
+    print("[dryrun] all combinations lowered and compiled OK")
+
+
+if __name__ == "__main__":
+    main()

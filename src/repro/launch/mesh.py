@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any device
+query; tests must keep seeing 1 CPU device).
+
+Target hardware: TPU v5e pods — 256 chips/pod as (data=16, model=16);
+multi-pod doubles along a leading "pod" (pure data-parallel) axis.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for tests (requires >= prod(shape) visible devices)."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """The pure data-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,0 +1,68 @@
+"""Serving driver: batched generation through the Self-Indexing KV cache.
+
+``--method`` switches between SIKV and the baselines for head-to-head runs.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig, get_model_config, list_archs, \
+    reduced_config
+from repro.data.synthetic import lm_sequence_batch
+from repro.models import init_params
+from repro.serving import Request, RequestScheduler, ServingEngine
+from repro.sparse import method_names
+
+
+def serve(arch: str, *, method: str = "sikv", batch: int = 4,
+          prompt_len: int = 128, max_new: int = 32, n_requests: int = 8,
+          reduced: bool = True, seed: int = 0, verbose: bool = True):
+    cfg = get_model_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    sikv = SIKVConfig(num_sink_tokens=min(64, prompt_len // 4),
+                      token_budget=max(32, prompt_len // 4),
+                      recent_window=16, obs_window=16)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    engine = ServingEngine(params, cfg, sikv, method=method,
+                           batch_size=batch, prompt_len=prompt_len,
+                           max_new_tokens=max_new)
+    sched = RequestScheduler(engine)
+    prompts = lm_sequence_batch(jax.random.PRNGKey(seed + 1), n_requests,
+                                prompt_len, cfg.vocab_size)
+    for i in range(n_requests):
+        sched.submit(Request(uid=i, prompt=[int(t) for t in prompts[i]],
+                             max_new_tokens=max_new))
+    t0 = time.time()
+    done = sched.flush()
+    dt = time.time() - t0
+    tput = done * max_new / dt
+    if verbose:
+        print(f"[serve] {arch} method={method}: {done} requests, "
+              f"{max_new} new tokens each, {dt:.2f}s "
+              f"({tput:.1f} tok/s aggregate)")
+    return sched, tput
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3.1-8b", choices=list_archs())
+    ap.add_argument("--method", default="sikv", choices=method_names())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    args = ap.parse_args()
+    serve(args.arch, method=args.method, batch=args.batch,
+          prompt_len=args.prompt_len, max_new=args.max_new,
+          n_requests=args.requests)
+
+
+if __name__ == "__main__":
+    main()

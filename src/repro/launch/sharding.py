@@ -1,0 +1,265 @@
+"""PartitionSpec rules for parameters, inputs, and decode caches.
+
+Conventions (see DESIGN.md §4):
+
+* ``model`` axis: tensor parallel — attention heads / FFN hidden / experts /
+  vocab.  A dimension is sharded only when evenly divisible; otherwise the
+  rule falls back to the next candidate or replication (GSPMD handles any
+  residual resharding).
+* data axes (``data`` + optional ``pod``): batch parallel; for the
+  batch-1 ``long_500k`` decode shape the *sequence* axis of the KV cache is
+  sharded over all axes instead (context parallelism — cheap here because
+  SIKV scoring runs in the 1-bit compressed domain).
+* Mamba2/SSM block weights are replicated over ``model`` (their irregular
+  inner dims don't tile cleanly); their compute parallelism is pure data —
+  documented in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, SIKVConfig
+from repro.core.cache import cache_spec_shapes
+from repro.launch.mesh import data_axes
+
+
+def _axis_size(mesh, name) -> int:
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= _axis_size(mesh, a)
+        return n
+    return mesh.shape[name]
+
+
+def _div(n: int, mesh, axis) -> bool:
+    return n % _axis_size(mesh, axis) == 0
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_COL_PARALLEL = re.compile(
+    r"(wq|wk|wv|bq|bk|bv|gate|up|w_uk|w_uv|w_dkv|w_kr|lm_head|router)'?\]?$")
+_ROW_PARALLEL = re.compile(r"(wo|down|out_proj)'?\]?$")
+_REPLICATED = re.compile(
+    r"(norm|bias|A_log|dt_bias|conv_w|conv_b|in_proj|\bD\b)")
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh, *,
+               expert_fsdp: bool = False) -> P:
+    """Sharding rule for one parameter, keyed on its tree path."""
+    m = "model"
+    if "mamba" in path or "in_proj" in path or "conv" in path:
+        return P()  # SSM blocks: replicated weights, data-parallel compute
+    if re.search(r"(norm|A_log|dt_bias)", path):
+        return P()
+    if "embed" in path and len(shape) == 2:
+        V, d = shape
+        if _div(V, mesh, m):
+            return P(m, None)
+        if _div(d, mesh, m):
+            return P(None, m)
+        return P()
+    if len(shape) == 3:  # MoE expert stacks (E, in, out)
+        if expert_fsdp:
+            # iteration D2: experts over data axes AND ff over model —
+            # 236B-scale params would not fit 16 GiB HBM at 16-way sharding
+            dp = data_axes(mesh)
+            if _div(shape[0], mesh, dp) and _div(shape[2], mesh, m):
+                return P(dp, None, m)
+        if _div(shape[0], mesh, m):
+            return P(m, None, None)
+        return P()
+    if len(shape) == 2:
+        if _ROW_PARALLEL.search(path):
+            if _div(shape[0], mesh, m):
+                return P(m, None)
+            if _div(shape[1], mesh, m):
+                return P(None, m)
+            return P()
+        # column-parallel default for every other matrix
+        if _div(shape[1], mesh, m):
+            return P(None, m)
+        if _div(shape[0], mesh, m):
+            return P(m, None)
+        return P()
+    if len(shape) == 1 and _COL_PARALLEL.search(path):
+        if _div(shape[0], mesh, m):
+            return P(m)
+        return P()
+    return P()
+
+
+def shard_tree_specs(tree_sds: Any, mesh, rule) -> Any:
+    """Attach NamedShardings to a ShapeDtypeStruct tree via ``rule(path,
+    shape, mesh) -> PartitionSpec``."""
+    flat, treedef = jax.tree.flatten_with_path(tree_sds)
+    out = []
+    for path, leaf in flat:
+        spec = rule(jax.tree_util.keystr(path), leaf.shape, mesh)
+        out.append(jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec)))
+    return treedef.unflatten(out)
+
+
+def param_sharded_sds(cfg: ModelConfig, mesh, rule=param_spec) -> Any:
+    """ShapeDtypeStruct tree of the model params with production shardings."""
+    from repro.models import init_params
+    sds = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return shard_tree_specs(sds, mesh, rule)
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def batch_spec(name: str, shape: Tuple[int, ...], mesh) -> P:
+    """Training/prefill input rule: batch over the data axes."""
+    dp = data_axes(mesh)
+    B = shape[0]
+    if B % _axis_size(mesh, dp) == 0:
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def input_sds(cfg: ModelConfig, batch: int, seq_len: int, mesh, *,
+              labels: bool = True, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one input batch (no allocation)."""
+    out: Dict[str, Any] = {}
+
+    def mk(name, shape, dt):
+        out[name] = jax.ShapeDtypeStruct(
+            shape, dt, sharding=NamedSharding(
+                mesh, batch_spec(name, shape, mesh)))
+
+    if cfg.embedding_inputs and not cfg.num_encoder_layers:
+        mk("embeds", (batch, seq_len, cfg.d_model), dtype)
+        if labels:
+            mk("labels", (batch, seq_len), jnp.int32)
+    else:
+        mk("tokens", (batch, seq_len), jnp.int32)
+        if labels:
+            mk("labels", (batch, seq_len), jnp.int32)
+    if cfg.num_encoder_layers:
+        mk("enc_embeds", (batch, cfg.encoder_seq_len or 64, cfg.d_model),
+           dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def _cache_dims_for_layer(cfg: ModelConfig, kind: str) -> Tuple[int, int]:
+    """(num_kv_heads, cache_key_dim) for an attention-ish layer."""
+    if kind == "mla":
+        m = cfg.mla
+        return 1, m.kv_lora_rank + m.qk_rope_head_dim
+    return cfg.num_kv_heads, cfg.resolved_head_dim
+
+
+def sikv_cache_sds(cfg: ModelConfig, sikv: SIKVConfig, kind: str,
+                   batch: int, capacity: int, mesh, *, seq_shard: bool):
+    """SIKVCache ShapeDtypeStructs with shardings for one layer."""
+    from repro.core.cache import SIKVCache
+    H, D = _cache_dims_for_layer(cfg, kind)
+    layout = cache_spec_shapes(sikv, batch, H, capacity, D)
+    dp = data_axes(mesh)
+    b_ok = batch % _axis_size(mesh, dp) == 0
+    all_axes = tuple(mesh.axis_names)
+    seq_axes = all_axes if seq_shard else ("model",)
+    l_ok = capacity % _axis_size(mesh, seq_axes) == 0
+
+    def spec_for(name, shape):
+        ndim = len(shape)
+        b = dp if (b_ok and not seq_shard) else None
+        if name in ("codes", "kmag", "k_scale", "k_zp", "v_q", "v_scale",
+                    "v_zp"):
+            return P(b, None, seq_axes if l_ok else None, None)
+        if name == "sink_mask":
+            return P(b, None, seq_axes if l_ok else None)
+        if name in ("sink_k", "sink_v", "mu", "alpha", "centroids"):
+            return P(*([b] + [None] * (ndim - 1)))
+        return P()  # length scalar
+
+    out = {}
+    for name, (shape, dt) in layout.items():
+        out[name] = jax.ShapeDtypeStruct(
+            shape, dt, sharding=NamedSharding(mesh, spec_for(name, shape)))
+    return SIKVCache(**out)
+
+
+def full_cache_sds(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+                   mesh, *, seq_shard: bool, dtype=jnp.float32):
+    from repro.sparse.full import FullCache
+    H, D = _cache_dims_for_layer(cfg, kind)
+    dp = data_axes(mesh)
+    b_ok = batch % _axis_size(mesh, dp) == 0
+    all_axes = tuple(mesh.axis_names)
+    seq_axes = all_axes if seq_shard else ("model",)
+    l_ok = capacity % _axis_size(mesh, seq_axes) == 0
+    b = dp if (b_ok and not seq_shard) else None
+    kv_spec = P(b, None, seq_axes if l_ok else None, None)
+    sds = lambda spec, shape, dt: jax.ShapeDtypeStruct(
+        shape, dt, sharding=NamedSharding(mesh, spec))
+    return FullCache(
+        k=sds(kv_spec, (batch, H, capacity, D), dtype),
+        v=sds(kv_spec, (batch, H, capacity, D), dtype),
+        length=sds(P(), (), jnp.int32),
+    )
+
+
+def mamba_state_sds(cfg: ModelConfig, batch: int, mesh):
+    from repro.models.mamba2 import MambaState, _dims
+    s, d_inner, H, conv_dim = _dims(cfg)
+    dp = data_axes(mesh)
+    b_ok = batch % _axis_size(mesh, dp) == 0
+    b = dp if b_ok else None
+    sds = lambda spec, shape, dt: jax.ShapeDtypeStruct(
+        shape, dt, sharding=NamedSharding(mesh, spec))
+    return MambaState(
+        conv=sds(P(b, None, None), (batch, s.conv_width - 1, conv_dim),
+                 jnp.float32),
+        ssm=sds(P(b, None, None, None),
+                (batch, H, s.head_dim, s.state_dim), jnp.float32),
+    )
+
+
+def decode_cache_sds(cfg: ModelConfig, sikv: SIKVConfig, batch: int,
+                     capacity: int, mesh, *, method: str = "sikv"):
+    """Per-layer decode-cache ShapeDtypeStructs for the whole model.
+
+    ``long_500k``-style shapes (batch smaller than the data axes) switch to
+    sequence sharding of the cache (context parallelism).
+    """
+    dp = data_axes(mesh)
+    seq_shard = batch % _axis_size(mesh, dp) != 0
+    caches = []
+    for kind in cfg.resolved_layer_pattern:
+        if kind == "mamba2":
+            caches.append({"mamba": mamba_state_sds(cfg, batch, mesh)})
+            continue
+        entry = {}
+        if method == "sikv":
+            entry["self"] = sikv_cache_sds(cfg, sikv, kind, batch, capacity,
+                                           mesh, seq_shard=seq_shard)
+        else:
+            entry["self"] = full_cache_sds(cfg, kind, batch, capacity, mesh,
+                                           seq_shard=seq_shard)
+        if cfg.num_encoder_layers:
+            Le = cfg.encoder_seq_len or 64
+            if method == "sikv":
+                entry["cross"] = sikv_cache_sds(cfg, sikv, kind, batch, Le,
+                                                mesh, seq_shard=False)
+            else:
+                entry["cross"] = full_cache_sds(cfg, kind, batch, Le, mesh,
+                                                seq_shard=False)
+        caches.append(entry)
+    return caches

@@ -1,0 +1,95 @@
+"""Training driver.
+
+Runs real steps on the available devices (CPU here; the same code path runs
+on a TPU mesh — pass ``--mesh data,model`` with real hardware).  Used by the
+end-to-end training example and the ~100M-model run in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (TrainConfig, get_model_config, list_archs,
+                          reduced_config)
+from repro.data import DataConfig, make_batch_iterator
+from repro.models import init_params
+from repro.models.transformer import loss_fn
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.checkpoint import save_checkpoint
+
+
+def make_train_step(cfg, tc: TrainConfig):
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        lr = cosine_schedule(tc, opt_state.step)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                tc, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(arch: str, *, steps: int = 200, batch: int = 8, seq_len: int = 256,
+          reduced: bool = True, lr: float = 3e-4, log_every: int = 10,
+          ckpt_path: str | None = None, dtype: str = "float32",
+          d_model: int = 256, num_layers: int = 2, seed: int = 0):
+    cfg = get_model_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg, num_layers=num_layers, d_model=d_model)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype=dtype)
+    tc = TrainConfig(learning_rate=lr, warmup_steps=max(steps // 20, 5),
+                     total_steps=steps, seed=seed)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    step_fn = make_train_step(cfg, tc)
+    data = make_batch_iterator(cfg, DataConfig(batch, seq_len, seed),
+                               dtype=jnp.dtype(dtype))
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        batch_data = next(data)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_data)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"{(time.time() - t0):.1f}s")
+    if ckpt_path:
+        save_checkpoint(ckpt_path, {"params": params, "opt": opt_state},
+                        step=steps)
+        print(f"checkpoint saved to {ckpt_path}")
+    return params, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3.1-8b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--num-layers", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (needs real hardware)")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    _, history = train(args.arch, steps=args.steps, batch=args.batch,
+                       seq_len=args.seq_len, reduced=not args.full_size,
+                       lr=args.lr, ckpt_path=args.ckpt,
+                       d_model=args.d_model, num_layers=args.num_layers)
+    first, last = history[0][1], history[-1][1]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'DECREASED' if last < first else 'did not decrease'})")
+
+
+if __name__ == "__main__":
+    main()

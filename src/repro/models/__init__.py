@@ -1,0 +1,10 @@
+"""Model zoo: unified transformer covering dense GQA, MoE, MLA, Mamba2 (SSD),
+hybrid, VLM-backbone, and audio enc-dec families."""
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    prefill,
+)

@@ -1,0 +1,105 @@
+"""GQA self-attention block (QKV bias and qk_norm variants).
+
+The block exposes three entry points:
+
+* ``attn_forward``      — full causal attention (training / prefill);
+* ``attn_project``      — q/k/v projection + RoPE only (cache construction);
+* ``attn_decode``       — single-token decode against a cache, where the
+                          cache/attention mechanism is pluggable (SIKV or a
+                          baseline from :mod:`repro.sparse`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import INIT_STD, apply_rope, rms_norm
+
+Params = Dict[str, Any]
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": (jax.random.normal(k1, (d, Hq * hd)) * INIT_STD).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, Hkv * hd)) * INIT_STD).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, Hkv * hd)) * INIT_STD).astype(dtype),
+        "wo": (jax.random.normal(k4, (Hq * hd, d)) * INIT_STD).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_project(
+    params: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project hidden states to rotated q/k and v.
+
+    Args:
+      x: ``(B, L, d_model)``; positions ``(L,)``.
+    Returns:
+      q ``(B, Hq, L, hd)``, k ``(B, Hkv, L, hd)``, v ``(B, Hkv, L, hd)``.
+    """
+    B, L, _ = x.shape
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, L, Hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, L, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, L, Hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rms_norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rms_norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_output(params: Params, cfg: ModelConfig, o: jax.Array) -> jax.Array:
+    """``(B, Hq, L, hd) -> (B, L, d_model)`` via the output projection."""
+    B, Hq, L, hd = o.shape
+    return o.transpose(0, 2, 1, 3).reshape(B, L, Hq * hd) @ params["wo"]
+
+
+def attn_forward(
+    params: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+    *, cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    causal: bool = True,
+) -> jax.Array:
+    """Full attention (training / prefill). ``cross_kv`` overrides k/v for
+    encoder-decoder cross attention (non-causal)."""
+    from repro.core.attention import full_causal_attention
+    q, k, v = attn_project(params, cfg, x, positions)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    if causal:
+        o = full_causal_attention(q, k, v)
+    else:
+        B, Hq, Lq, hd = q.shape
+        Hkv = k.shape[1]
+        g = Hq // Hkv
+        qg = q.reshape(B, Hkv, g, Lq, hd)
+        logits = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+            k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+        o = o.reshape(B, Hq, Lq, hd).astype(q.dtype)
+    return attn_output(params, cfg, o)

@@ -1,0 +1,74 @@
+"""Shared neural-net building blocks (pure JAX, pytree params)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+INIT_STD = 0.02
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (d_in, d_out)) * INIT_STD).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.
+
+    Args:
+      x: ``(..., L, D)`` with D even (heads in leading axes).
+      positions: ``(L,)`` or broadcastable absolute positions.
+    """
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (L, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : D // 2], x[..., D // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ params["gate"])
+    return (g * (x @ params["up"])) @ params["down"]
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model)) * INIT_STD).astype(dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross entropy; logits ``(B, L, V)``, labels ``(B, L)``."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,235 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan + recurrent decode.
+
+Follows "Transformers are SSMs" (arXiv:2405.21060): scalar-identity A per
+head, depthwise causal conv on (x, B, C), softplus dt, gated RMSNorm.
+
+The SSD scan is the chunked block-decomposition: intra-chunk attention-like
+quadratic term + inter-chunk recurrent state passing via ``jax.lax.scan`` —
+sub-quadratic in L (O(L·Q) with chunk size Q) and TPU-friendly (all matmuls).
+
+Decode keeps O(1) state: ``(conv ring buffer, SSM state (H, P, N))`` — the
+reason SSM/hybrid archs run the ``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models.layers import INIT_STD, rms_norm
+
+Params = Dict[str, Any]
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_dim) — last conv inputs
+    ssm: jax.Array    # (B, H, P, N) float32
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    assert s is not None
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.num_groups * s.state_dim
+    return s, d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    s, d_inner, H, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_inner + 2 * s.num_groups * s.state_dim + H
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": (jax.random.normal(k1, (d, proj_out)) * INIT_STD
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_dim)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(k4, (d_inner, d)) * INIT_STD
+                     ).astype(dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d_inner, H, _ = _dims(cfg)
+    gn = s.num_groups * s.state_dim
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: xbc ``(B, L, C)``, w ``(W, C)``."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array, Cm: jax.Array,
+    chunk: int, init_state: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    Args:
+      x:  (B, L, H, P) inputs; dt: (B, L, H); A: (H,) negative;
+      Bm, Cm: (B, L, H, N) (already broadcast over groups).
+    Returns:
+      (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rs = lambda t: t.reshape(Bsz, nc, chunk, *t.shape[2:])
+    xc, dtc, Bc, Cc = rs(x), rs(dt), rs(Bm), rs(Cm)
+
+    dA = dtc * A            # (B, nc, Q, H) log-decay per step (negative)
+    cum = jnp.cumsum(dA, axis=2)
+    total = cum[:, :, -1:, :]                       # (B, nc, 1, H)
+
+    # intra-chunk: y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i . B_j) dt_j x_j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc)          # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum(
+        "bcijh,bcijh,bcjh,bcjhp->bcihp", cb, decay, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) dt_j (B_j ⊗ x_j)
+    state_decay = jnp.exp(total - cum)                     # (B,nc,Q,H)
+    S_chunk = jnp.einsum(
+        "bcjh,bcjh,bcjhn,bcjhp->bchpn", state_decay, dtc, Bc, xc)
+
+    # inter-chunk recurrence over c: S_prev_{c+1} = exp(total_c) S_prev_c + S_c
+    chunk_decay = jnp.exp(total[:, :, 0, :])               # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), x.dtype)
+
+    def step(S, inp):
+        dec, Sc = inp   # dec (B,H), Sc (B,H,P,N)
+        S_prev = S
+        S = dec[:, :, None, None] * S + Sc
+        return S, S_prev
+
+    final, S_prevs = jax.lax.scan(
+        step,
+        init_state,
+        (chunk_decay.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)),
+    )
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # inter-chunk output: y[i] += exp(cum_i) C_i . S_prev
+    y_inter = jnp.einsum(
+        "bcih,bcihn,bchpn->bcihp", jnp.exp(cum), Cc, S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y, final
+
+
+def mamba_forward(
+    params: Params, cfg: ModelConfig, xin: jax.Array,
+    init_state: MambaState | None = None,
+) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence forward. xin ``(B, L, d_model)``."""
+    s, d_inner, H, conv_dim = _dims(cfg)
+    Bsz, L, _ = xin.shape
+    P, N, G = s.head_dim, s.state_dim, s.num_groups
+
+    zxbcdt = xin @ params["in_proj"]
+    z, x, Bm, Cm, dt_raw = _split_proj(cfg, zxbcdt)
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_in = xbc
+    if init_state is not None:
+        conv_in = jnp.concatenate([init_state.conv.astype(xbc.dtype), xbc],
+                                  axis=1)
+        conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+        conv_out = conv_out[:, -L:, :]
+    else:
+        conv_out = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x, Bm, Cm = jnp.split(
+        conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    xf = x.reshape(Bsz, L, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    Bh = Bm.reshape(Bsz, L, G, 1, N).astype(jnp.float32)
+    Bh = jnp.broadcast_to(Bh, (Bsz, L, G, H // G, N)).reshape(Bsz, L, H, N)
+    Ch = Cm.reshape(Bsz, L, G, 1, N).astype(jnp.float32)
+    Ch = jnp.broadcast_to(Ch, (Bsz, L, G, H // G, N)).reshape(Bsz, L, H, N)
+
+    pad = (-L) % s.chunk_size
+    if pad:
+        padfn = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                  [(0, 0)] * (t.ndim - 2))
+        xf, dt, Bh, Ch = padfn(xf), padfn(dt), padfn(Bh), padfn(Ch)
+    ssm0 = None if init_state is None else init_state.ssm
+    y, final = _ssd_chunked(xf, dt, A, Bh, Ch, s.chunk_size, ssm0)
+    y = y[:, :L]
+
+    y = y + params["D"][None, None, :, None] * xf[:, :L]
+    y = y.reshape(Bsz, L, d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.rms_norm_eps)
+    out = y @ params["out_proj"]
+
+    tail = conv_in[:, -(s.conv_width - 1):, :] if init_state is not None \
+        else xbc[:, -(s.conv_width - 1):, :]
+    if L < s.conv_width - 1 and init_state is None:
+        tail = jnp.pad(xbc, ((0, 0), (s.conv_width - 1 - L, 0), (0, 0)))
+    return out, MambaState(conv=tail, ssm=final)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> MambaState:
+    s, d_inner, H, conv_dim = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+    )
+
+
+def mamba_decode_step(
+    params: Params, cfg: ModelConfig, xin: jax.Array, state: MambaState,
+) -> Tuple[jax.Array, MambaState]:
+    """One-token decode. xin ``(B, 1, d_model)``; O(1) state update."""
+    s, d_inner, H, conv_dim = _dims(cfg)
+    Bsz = xin.shape[0]
+    P, N, G = s.head_dim, s.state_dim, s.num_groups
+
+    zxbcdt = xin @ params["in_proj"]
+    z, x, Bm, Cm, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)      # (B, 1, conv_dim)
+
+    window = jnp.concatenate([state.conv.astype(xbc.dtype), xbc], axis=1)
+    conv_out = jnp.sum(window * params["conv_w"], axis=1, keepdims=True)
+    conv_out = jax.nn.silu(conv_out + params["conv_b"])
+    x, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+
+    xf = x.reshape(Bsz, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    Bh = jnp.broadcast_to(
+        Bm.reshape(Bsz, G, 1, N), (Bsz, G, H // G, N)).reshape(Bsz, H, N)
+    Ch = jnp.broadcast_to(
+        Cm.reshape(Bsz, G, 1, N), (Bsz, G, H // G, N)).reshape(Bsz, H, N)
+
+    decay = jnp.exp(dt * A)                                  # (B, H)
+    ssm = decay[:, :, None, None] * state.ssm + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xf, Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, Ch.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xf
+    y = y.reshape(Bsz, 1, d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.rms_norm_eps)
+    out = y @ params["out_proj"]
+    return out, MambaState(conv=window[:, 1:], ssm=ssm)

@@ -1,0 +1,132 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with Self-Indexing latent cache.
+
+MLA caches a single per-token latent ``c_kv (r=512)`` plus a shared RoPE key
+``k_rope (64)`` instead of per-head K/V.  Decode uses weight absorption:
+
+    logit_h = (W_uk^T q_nope_h) . c  +  q_rope_h . k_rope
+    out_h   = W_uv_h (sum_t w_t c_t)
+
+Beyond-paper composition (see DESIGN.md §Arch-applicability): the
+Self-Indexing machinery applies *to the latent*: the cached "key" is
+``[c_kv ; k_rope] (576)``, the effective query is ``[W_uk^T q_nope ; q_rope]``
+(same space), so sign-VQ retrieval + 2-bit magnitudes work unchanged — the
+attended "value" is the first 512 dims of the gathered key (no separate value
+cache needed).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import INIT_STD, apply_rope, rms_norm
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mla
+    assert m is not None
+    return m, m.qk_nope_head_dim + m.qk_rope_head_dim
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> Params:
+    m, qk_dim = _dims(cfg)
+    d, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    rnd = lambda k, shape: (jax.random.normal(k, shape) * INIT_STD).astype(dtype)
+    return {
+        "wq": rnd(ks[0], (d, H * qk_dim)),
+        "w_dkv": rnd(ks[1], (d, m.kv_lora_rank)),
+        "w_kr": rnd(ks[2], (d, m.qk_rope_head_dim)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": rnd(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim)),
+        "w_uv": rnd(ks[4], (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": rnd(ks[5], (H * m.v_head_dim, d)),
+    }
+
+
+def mla_latent(params: Params, cfg: ModelConfig, x: jax.Array,
+               positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-token latents: ``(c_kv (B,L,r), k_rope (B,L,rope))``."""
+    m, _ = _dims(cfg)
+    c = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.rms_norm_eps)
+    k_rope = apply_rope(x @ params["w_kr"], positions, cfg.rope_theta)
+    return c, k_rope
+
+
+def mla_queries(params: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Queries split into nope/rope: ``(q_nope (B,H,L,dn), q_rope (B,H,L,dr))``."""
+    m, qk_dim = _dims(cfg)
+    B, L, _ = x.shape
+    H = cfg.num_heads
+    q = (x @ params["wq"]).reshape(B, L, H, qk_dim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_absorbed_queries(params: Params, cfg: ModelConfig,
+                         q_nope: jax.Array) -> jax.Array:
+    """Absorb W_uk: ``q_eff (B,H,L,r) = q_nope @ W_uk_h^T`` per head."""
+    m, _ = _dims(cfg)
+    H = cfg.num_heads
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    return jnp.einsum("bhld,rhd->bhlr", q_nope.astype(jnp.float32),
+                      w_uk.astype(jnp.float32))
+
+
+def mla_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array) -> jax.Array:
+    """Full causal MLA (training / prefill), non-absorbed form.
+
+    x ``(B, L, d)`` -> ``(B, L, d)``.
+    """
+    m, qk_dim = _dims(cfg)
+    B, L, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = mla_queries(params, cfg, x, positions)
+    c, k_rope = mla_latent(params, cfg, x, positions)
+    k_nope = (c @ params["w_uk"]).reshape(
+        B, L, H, m.qk_nope_head_dim).transpose(0, 2, 1, 3)
+    v = (c @ params["w_uv"]).reshape(
+        B, L, H, m.v_head_dim).transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(k_rope[:, None], (B, H, L, m.qk_rope_head_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    from repro.core.attention import full_causal_attention
+    o = full_causal_attention(q, k, v, scale=1.0 / float(qk_dim) ** 0.5)
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, H * m.v_head_dim)
+    return o @ params["wo"]
+
+
+def mla_latent_key(c: jax.Array, k_rope: jax.Array) -> jax.Array:
+    """Cacheable per-token latent key ``[c ; k_rope] (B, 1, L, r+rope)``
+    (head axis of size 1 — MLA's cache is head-shared)."""
+    return jnp.concatenate([c, k_rope], axis=-1)[:, None]
+
+
+def mla_effective_query(params: Params, cfg: ModelConfig, q_nope: jax.Array,
+                        q_rope: jax.Array) -> jax.Array:
+    """Decode-time absorbed query in latent space ``(B, H, L, r+rope)``."""
+    q_eff = mla_absorbed_queries(params, cfg, q_nope)
+    return jnp.concatenate([q_eff, q_rope.astype(q_eff.dtype)], axis=-1)
+
+
+def mla_output(params: Params, cfg: ModelConfig,
+               o_latent: jax.Array) -> jax.Array:
+    """Map attended latents ``(B, H, 1, r)`` to the model dim ``(B, 1, d)``."""
+    m, _ = _dims(cfg)
+    H = cfg.num_heads
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bhlr,rhv->bhlv", o_latent.astype(jnp.float32),
+                   w_uv.astype(jnp.float32))
+    B, _, L, _ = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(B, L, H * m.v_head_dim)
+    return (o @ params["wo"].astype(jnp.float32)).astype(o_latent.dtype)

@@ -1,0 +1,393 @@
+"""Unified decoder stack covering all assigned architecture families.
+
+Layer kinds (``config.layer_pattern``): GQA attention, MLA, Mamba2 (SSD),
+Zamba2-style shared-weight attention.  FFN is dense SwiGLU or MoE.
+Encoder-decoder (whisper) adds a bidirectional encoder + per-layer cross
+attention.  Modality frontends (ViT patches / audio frames) enter as
+precomputed embeddings per the assignment carve-out.
+
+Three entry points: ``forward_train`` (full causal, teacher-forced),
+``prefill`` (full attention + cache construction through a pluggable
+:mod:`repro.sparse` method), ``decode_step`` (one token; sparse attention
+through the method's compressed cache).
+"""
+from __future__ import annotations
+
+import functools
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN, MAMBA2, MLA, SHARED_ATTN, ModelConfig
+from repro.models import mla as mla_mod
+from repro.models.attention import (attn_forward, attn_init, attn_output,
+                                    attn_project)
+from repro.models.layers import (cross_entropy_loss, dense_init,
+                                 embedding_init, rms_norm, swiglu, swiglu_init)
+from repro.models.mamba2 import (MambaState, mamba_decode_step, mamba_forward,
+                                 mamba_init, mamba_init_state)
+from repro.models.moe import moe_forward, moe_init
+from repro.core.attention import full_causal_attention, group_queries
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    pattern = cfg.resolved_layer_pattern
+    keys = jax.random.split(key, len(pattern) + 8)
+    params: Params = {"layers": []}
+
+    needs_embed = (not cfg.embedding_inputs) or cfg.num_encoder_layers > 0
+    if needs_embed:
+        params["embed"] = embedding_init(keys[-1], cfg.vocab_size, d, dt)
+    if not cfg.tie_embeddings or not needs_embed:
+        params["lm_head"] = dense_init(keys[-2], d, cfg.vocab_size, dt)
+    params["final_norm"] = jnp.ones((d,), dt)
+
+    if any(k == SHARED_ATTN for k in pattern):
+        params["shared_attn"] = attn_init(keys[-3], cfg, dt)
+
+    for i, kind in enumerate(pattern):
+        lk = jax.random.split(keys[i], 4)
+        layer: Params = {"norm1": jnp.ones((d,), dt)}
+        if kind == ATTN:
+            layer["attn"] = attn_init(lk[0], cfg, dt)
+        elif kind == MLA:
+            layer["mla"] = mla_mod.mla_init(lk[0], cfg, dt)
+        elif kind == MAMBA2:
+            layer["mamba"] = mamba_init(lk[0], cfg, dt)
+        elif kind == SHARED_ATTN:
+            pass  # weights shared via params["shared_attn"]
+        if kind != MAMBA2:
+            layer["norm2"] = jnp.ones((d,), dt)
+            if cfg.moe is not None:
+                layer["moe"] = moe_init(lk[1], cfg, dt)
+            else:
+                layer["ffn"] = swiglu_init(lk[1], d, cfg.d_ff, dt)
+        params["layers"].append(layer)
+
+    if cfg.num_encoder_layers:
+        enc_keys = jax.random.split(keys[-4], cfg.num_encoder_layers)
+        params["encoder"] = {
+            "layers": [
+                {
+                    "norm1": jnp.ones((d,), dt),
+                    "attn": attn_init(jax.random.split(ek, 2)[0], cfg, dt),
+                    "norm2": jnp.ones((d,), dt),
+                    "ffn": swiglu_init(jax.random.split(ek, 2)[1], d,
+                                       cfg.d_ff, dt),
+                }
+                for ek in enc_keys
+            ],
+            "final_norm": jnp.ones((d,), dt),
+        }
+        cross_keys = jax.random.split(keys[-5], len(pattern))
+        params["cross"] = [
+            {"norm": jnp.ones((d,), dt), "attn": attn_init(ck, cfg, dt)}
+            for ck in cross_keys
+        ]
+    return params
+
+
+def _attn_params(params: Params, layer: Params, kind: str):
+    return params["shared_attn"] if kind == SHARED_ATTN else layer["attn"]
+
+
+def _lm_head(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "lm_head" in params:
+        return x @ params["lm_head"]
+    return x @ params["embed"].T
+
+
+def _ffn(layer: Params, cfg: ModelConfig, x: jax.Array
+         ) -> Tuple[jax.Array, jax.Array]:
+    if "moe" in layer:
+        return moe_forward(layer["moe"], cfg, x)
+    return swiglu(layer["ffn"], x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jax.Array
+           ) -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings ``(B, Le, d)``."""
+    enc = params["encoder"]
+    x = enc_embeds
+    Le = x.shape[1]
+    positions = jnp.arange(Le)
+    for layer in enc["layers"]:
+        h = rms_norm(x, layer["norm1"], cfg.rms_norm_eps)
+        x = x + attn_forward(layer["attn"], cfg, h, positions, causal=False)
+        h = rms_norm(x, layer["norm2"], cfg.rms_norm_eps)
+        x = x + swiglu(layer["ffn"], h)
+    return rms_norm(x, enc["final_norm"], cfg.rms_norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# training / full forward
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+                 ) -> jax.Array:
+    if cfg.embedding_inputs and not cfg.num_encoder_layers:
+        return batch["embeds"].astype(_dtype(cfg))
+    return jnp.take(params["embed"], batch["tokens"], axis=0)
+
+
+def forward_train(params: Params, cfg: ModelConfig,
+                  batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced full forward.  Returns ``(logits (B,L,V), aux_loss)``."""
+    x = embed_inputs(params, cfg, batch)
+    B, L, d = x.shape
+    positions = jnp.arange(L)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    enc_out = None
+    if cfg.num_encoder_layers:
+        enc_out = encode(params, cfg, batch["enc_embeds"].astype(x.dtype))
+
+    pattern = cfg.resolved_layer_pattern
+
+    def layer_body(kind, layer, shared_attn, cross, x, positions, enc_out):
+        aux = jnp.zeros((), jnp.float32)
+        h = rms_norm(x, layer["norm1"], cfg.rms_norm_eps)
+        if kind == MAMBA2:
+            out, _ = mamba_forward(layer["mamba"], cfg, h)
+            return x + out, aux
+        if kind == MLA:
+            x = x + mla_mod.mla_forward(layer["mla"], cfg, h, positions)
+        else:  # ATTN / SHARED_ATTN
+            ap = shared_attn if kind == SHARED_ATTN else layer["attn"]
+            x = x + attn_forward(ap, cfg, h, positions)
+        if enc_out is not None:
+            hc = rms_norm(x, cross["norm"], cfg.rms_norm_eps)
+            enc_pos = jnp.arange(enc_out.shape[1])
+            kq, kk, kv = attn_project(cross["attn"], cfg, enc_out,
+                                      jnp.zeros_like(enc_pos))
+            x = x + attn_forward(cross["attn"], cfg, hc,
+                                 jnp.zeros_like(positions),
+                                 cross_kv=(kk, kv), causal=False)
+        h = rms_norm(x, layer["norm2"], cfg.rms_norm_eps)
+        f, aux = _ffn(layer, cfg, h)
+        return x + f, aux
+
+    for i, layer in enumerate(params["layers"]):
+        kind = pattern[i]
+        body = functools.partial(layer_body, kind)
+        if cfg.remat:
+            # Full per-layer activation checkpointing (§Perf iteration A):
+            # 3.9x temp reduction on mamba2 train at +0.3% flops.  Iteration
+            # A2 tried policy=dots_saveable — it erased the win (the large
+            # SSD intermediates ARE dot outputs), so full remat it is; see
+            # EXPERIMENTS.md §Perf for the measured comparison.
+            body = jax.checkpoint(body)
+        x, aux = body(layer, params.get("shared_attn"),
+                      params["cross"][i] if enc_out is not None else None,
+                      x, positions, enc_out)
+        aux_total = aux_total + aux
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    return _lm_head(params, cfg, x), aux_total
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward_train(params, cfg, batch)
+    ce = cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    n_layers = max(1, len(params["layers"]))
+    total = ce + aux_w * aux / n_layers
+    return total, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill: full attention + cache construction through a sparse method
+# ---------------------------------------------------------------------------
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            method, *, capacity: Optional[int] = None, obs_window: int = 32,
+            ) -> Tuple[jax.Array, List[Any]]:
+    """Exact full-attention prefill; builds each layer's decode cache.
+
+    Returns ``(last-position logits (B, V), caches)``.
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, L, d = x.shape
+    positions = jnp.arange(L)
+    W = min(obs_window, L)
+    mla_scale = None
+    if cfg.mla is not None:
+        mla_scale = 1.0 / float(
+            cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** 0.5
+
+    enc_out = None
+    if cfg.num_encoder_layers:
+        enc_out = encode(params, cfg, batch["enc_embeds"].astype(x.dtype))
+
+    caches: List[Any] = []
+    pattern = cfg.resolved_layer_pattern
+    for i, layer in enumerate(params["layers"]):
+        kind = pattern[i]
+        h = rms_norm(x, layer["norm1"], cfg.rms_norm_eps)
+        if kind == MAMBA2:
+            out, state = mamba_forward(layer["mamba"], cfg, h)
+            x = x + out
+            caches.append({"mamba": state})
+            continue
+        entry: Dict[str, Any] = {}
+        if kind == MLA:
+            mp = layer["mla"]
+            q_nope, q_rope = mla_mod.mla_queries(mp, cfg, h, positions)
+            c, k_rope = mla_mod.mla_latent(mp, cfg, h, positions)
+            latent_k = mla_mod.mla_latent_key(c, k_rope)     # (B,1,L,r+rope)
+            q_eff = mla_mod.mla_effective_query(mp, cfg, q_nope, q_rope)
+            q_obs = group_queries(q_eff[:, :, L - W:, :], 1)  # (B,1,W,r+rope)
+            entry["self"] = method.prefill(
+                latent_k.astype(jnp.float32),
+                latent_k.astype(jnp.float32), q_obs, capacity=capacity)
+            x = x + mla_mod.mla_forward(mp, cfg, h, positions)
+        else:
+            ap = _attn_params(params, layer, kind)
+            q, k, v = attn_project(ap, cfg, h, positions)
+            q_obs = group_queries(q[:, :, L - W:, :], cfg.num_kv_heads)
+            entry["self"] = method.prefill(k.astype(jnp.float32),
+                                           v.astype(jnp.float32), q_obs,
+                                           capacity=capacity)
+            o = full_causal_attention(q, k, v)
+            x = x + attn_output(ap, cfg, o)
+        if enc_out is not None:
+            cl = params["cross"][i]
+            hc = rms_norm(x, cl["norm"], cfg.rms_norm_eps)
+            enc_pos = jnp.zeros((enc_out.shape[1],), jnp.int32)
+            cq, ck, cv = attn_project(cl["attn"], cfg, enc_out, enc_pos)
+            q_obs_c = group_queries(
+                attn_project(cl["attn"], cfg, hc,
+                             jnp.zeros_like(positions))[0][:, :, L - W:, :],
+                cfg.num_kv_heads)
+            entry["cross"] = method.prefill(ck.astype(jnp.float32),
+                                            cv.astype(jnp.float32), q_obs_c)
+            x = x + attn_forward(cl["attn"], cfg, hc,
+                                 jnp.zeros_like(positions),
+                                 cross_kv=(ck, cv), causal=False)
+        h = rms_norm(x, layer["norm2"], cfg.rms_norm_eps)
+        f, _ = _ffn(layer, cfg, h)
+        x = x + f
+        caches.append(entry)
+
+    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.rms_norm_eps)
+    return _lm_head(params, cfg, x)[:, 0, :], caches
+
+
+# ---------------------------------------------------------------------------
+# decode: one token through the sparse caches
+# ---------------------------------------------------------------------------
+
+def decode_step(params: Params, cfg: ModelConfig,
+                inputs: Dict[str, jax.Array], pos: jax.Array, caches: List[Any],
+                method) -> Tuple[jax.Array, List[Any]]:
+    """One decode step.
+
+    Args:
+      inputs: ``{"tokens": (B, 1)}`` (or ``{"embeds": (B,1,d)}``).
+      pos: scalar int32 — absolute position of this token.
+    Returns:
+      ``(logits (B, V), updated caches)``.
+    """
+    x = embed_inputs(params, cfg, inputs)
+    B = x.shape[0]
+    positions = jnp.reshape(pos, (1,))
+    mla_scale = None
+    if cfg.mla is not None:
+        mla_scale = 1.0 / float(
+            cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** 0.5
+
+    new_caches: List[Any] = []
+    pattern = cfg.resolved_layer_pattern
+    for i, layer in enumerate(params["layers"]):
+        kind = pattern[i]
+        entry = caches[i]
+        h = rms_norm(x, layer["norm1"], cfg.rms_norm_eps)
+        if kind == MAMBA2:
+            out, state = mamba_decode_step(layer["mamba"], cfg, h,
+                                           entry["mamba"])
+            x = x + out
+            new_caches.append({"mamba": state})
+            continue
+        new_entry: Dict[str, Any] = {}
+        if kind == MLA:
+            mp = layer["mla"]
+            q_nope, q_rope = mla_mod.mla_queries(mp, cfg, h, positions)
+            c, k_rope = mla_mod.mla_latent(mp, cfg, h, positions)
+            latent_k = mla_mod.mla_latent_key(c, k_rope)
+            q_eff = mla_mod.mla_effective_query(mp, cfg, q_nope, q_rope)
+            o, new_entry["self"] = method.decode(
+                q_eff.astype(jnp.float32), latent_k.astype(jnp.float32),
+                latent_k.astype(jnp.float32), entry["self"], scale=mla_scale)
+            o_latent = o[..., : cfg.mla.kv_lora_rank]
+            x = x + mla_mod.mla_output(mp, cfg, o_latent).astype(x.dtype)
+        else:
+            ap = _attn_params(params, layer, kind)
+            q, k, v = attn_project(ap, cfg, h, positions)
+            o, new_entry["self"] = method.decode(
+                q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), entry["self"])
+            x = x + attn_output(ap, cfg, o.astype(x.dtype))
+        if "cross" in entry:
+            cl = params["cross"][i]
+            hc = rms_norm(x, cl["norm"], cfg.rms_norm_eps)
+            cq, _, _ = attn_project(cl["attn"], cfg, hc,
+                                    jnp.zeros((1,), jnp.int32))
+            o, new_entry["cross"] = _attend_static(
+                method, cq.astype(jnp.float32), entry["cross"])
+            x = x + attn_output(cl["attn"], cfg, o.astype(x.dtype))
+        h = rms_norm(x, layer["norm2"], cfg.rms_norm_eps)
+        f, _ = _ffn(layer, cfg, h)
+        x = x + f
+        new_caches.append(new_entry)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    return _lm_head(params, cfg, x)[:, 0, :], new_caches
+
+
+def _attend_static(method, q: jax.Array, cache) -> Tuple[jax.Array, Any]:
+    """Cross-attention: attend over a static (non-growing) cache."""
+    from repro.sparse.full import FullCache
+    from repro.core.attention import masked_attention
+    from repro.core.cache import SIKVCache
+    if isinstance(cache, SIKVCache):
+        from repro.core.attention import sikv_static_attention
+        return sikv_static_attention(q, cache, method.cfg), cache
+    if isinstance(cache, FullCache):
+        valid = jnp.arange(cache.capacity)[None, None, :] < cache.length
+        valid = jnp.broadcast_to(valid, cache.k.shape[:3])
+        return masked_attention(q, cache.k, cache.v, valid), cache
+    # baselines: dense fallback over whatever full-precision view exists
+    raise NotImplementedError(
+        f"cross-attention not supported for cache {type(cache).__name__}; "
+        "use method 'sikv' or 'full' for encoder-decoder models")
+
+
+def init_decode_state(params: Params, cfg: ModelConfig, batch: int
+                      ) -> List[Any]:
+    """Fresh decode state for SSM layers (attention caches come from prefill)."""
+    states = []
+    for kind in cfg.resolved_layer_pattern:
+        if kind == MAMBA2:
+            states.append({"mamba": mamba_init_state(cfg, batch)})
+        else:
+            states.append(None)
+    return states

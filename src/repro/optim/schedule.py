@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def cosine_schedule(cfg: TrainConfig, step):
+    """Linear warmup then cosine decay to 10 % of peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.learning_rate * (0.1 + 0.9 * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, roofline_terms, analyze_record,
+                                     load_records, format_table)

@@ -1,0 +1,112 @@
+"""Roofline analysis from dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step *per device*
+(the dry-run's cost_analysis is for the partitioned per-device program):
+
+    compute    = HLO_FLOPs / peak_FLOPs_per_chip
+    memory     = HLO_bytes / HBM_bw_per_chip
+    collective = collective_bytes / (links * link_bw)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(each chip drives multiple links; we charge the whole per-device collective
+byte volume to a 2-link budget, a deliberately conservative torus estimate).
+
+Also reported: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundant compute —
+note HLO counts fwd-only for inference shapes, so the factor is 2*N*D there).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+    links_per_chip: int = 2           # conservative effective links
+    hbm_bytes: float = 16e9           # HBM capacity per chip (v5e)
+
+
+def model_flops_per_step(rec: Dict[str, Any]) -> float:
+    """6*N*D for training, 2*N*D per generated/processed token otherwise,
+    *per device* (divide global by device count)."""
+    n_active = rec["active_param_count"]
+    mode = rec["mode"]
+    if mode == "train":
+        tokens = 4096 * 256
+        factor = 6.0
+    elif mode == "prefill":
+        tokens = 32768 * 32
+        factor = 2.0
+    else:  # decode: one token per sequence in the batch
+        tokens = {"decode_32k": 128, "long_500k": 1}.get(rec["shape"], 1)
+        factor = 2.0
+    return factor * n_active * tokens / rec["num_devices"]
+
+
+def roofline_terms(rec: Dict[str, Any], hw: HW = HW()) -> Dict[str, Any]:
+    coll = rec.get("collective_bytes", {})
+    coll_total = sum(v for k, v in coll.items() if k != "count")
+    t_compute = rec["flops"] / hw.peak_flops
+    t_memory = rec["bytes_accessed"] / hw.hbm_bw
+    t_coll = coll_total / (hw.link_bw * hw.links_per_chip)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_step(rec)
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "bound_s": terms[dom],
+        "model_flops": mf,
+        "useful_ratio": mf / rec["flops"] if rec["flops"] else 0.0,
+        "collective_total_bytes": coll_total,
+    }
+
+
+def analyze_record(rec: Dict[str, Any], hw: HW = HW()) -> Dict[str, Any]:
+    return {**rec, "roofline": roofline_terms(rec, hw)}
+
+
+def load_records(art_dir: str) -> List[Dict[str, Any]]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def format_table(recs: Iterable[Dict[str, Any]], hw: HW = HW()) -> str:
+    rows = ["| arch | shape | mesh | compute (s) | memory (s) | "
+            "collective (s) | bound | useful |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in recs:
+        r = roofline_terms(rec, hw)
+        mesh = "x".join(str(s) for s in rec["mesh"])
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {mesh} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    args = ap.parse_args()
+    recs = load_records(os.path.abspath(args.dir))
+    print(format_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Request scheduler: groups queued requests into fixed-shape batches.
+
+Static-shape batching (the TPU-friendly regime): requests are admitted into
+batch slots; a batch launches when full or when ``flush`` is called.  Slot
+padding uses token id 0 and results are trimmed per-request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.serving.engine import ServingEngine
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    result: Optional[List[int]] = None
+
+
+@dataclass
+class RequestScheduler:
+    engine: ServingEngine
+    queue: List[Request] = field(default_factory=list)
+    completed: Dict[int, Request] = field(default_factory=dict)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _run_batch(self, batch: List[Request]) -> None:
+        tokens = self.engine.pad_prompts([r.prompt for r in batch])
+        n_new = max(r.max_new_tokens for r in batch)
+        gen, _ = self.engine.generate(tokens, max_new_tokens=n_new)
+        for i, req in enumerate(batch):
+            req.result = [int(t) for t in gen[i, : req.max_new_tokens]]
+            self.completed[req.uid] = req
+
+    def flush(self) -> int:
+        """Run all queued requests; returns number completed."""
+        done = 0
+        B = self.engine.batch_size
+        while self.queue:
+            batch = self.queue[:B]
+            self.queue = self.queue[B:]
+            self._run_batch(batch)
+            done += len(batch)
+        return done

@@ -1,0 +1,40 @@
+"""Sparse/compressed attention methods: SIKV (the paper) + its baselines."""
+from __future__ import annotations
+
+from repro.config import SIKVConfig
+from repro.sparse.base import AttentionMethod
+from repro.sparse.full import FullAttention, FullCache
+from repro.sparse.sikv import SIKVAttention
+from repro.sparse.snapkv import SnapKVAttention
+from repro.sparse.quest import QuestAttention, QuestCache
+from repro.sparse.double_sparse import DoubleSparseAttention, DoubleSparseCache
+from repro.sparse.kivi import KiviAttention, KiviCache
+
+
+def _sikv_sp(cfg=None):
+    from repro.core.distributed import SeqParallelSIKVAttention
+    return SeqParallelSIKVAttention(cfg)
+
+
+_METHODS = {
+    "sikv_sp": _sikv_sp,
+    "full": FullAttention,
+    "sikv": SIKVAttention,
+    "snapkv": SnapKVAttention,
+    "quest": QuestAttention,
+    "double_sparse": DoubleSparseAttention,
+    "kivi": KiviAttention,
+}
+
+
+def get_method(name: str, cfg: SIKVConfig | None = None) -> AttentionMethod:
+    if name not in _METHODS:
+        raise KeyError(f"unknown attention method {name!r}; "
+                       f"known: {sorted(_METHODS)}")
+    return _METHODS[name](cfg)
+
+
+def method_names() -> list[str]:
+    """Single-device method ids ("sikv_sp" needs a sequence-sharded mesh —
+    reach it via get_method/dryrun explicitly)."""
+    return sorted(m for m in _METHODS if m != "sikv_sp")

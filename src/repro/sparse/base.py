@@ -1,0 +1,33 @@
+"""Common interface for KV-cache attention methods (SIKV + baselines).
+
+Every method implements:
+
+* ``prefill(k, v, q_obs, *, capacity) -> cache`` — build its cache from the
+  full-precision prefill K/V (``(B, Hkv, L, D)``) and the observation-window
+  queries ``q_obs (B, Hkv, W, D)`` (query heads already summed per GQA group);
+* ``decode(q, k_new, v_new, cache, *, scale=None) -> (out, cache)`` — one
+  decode step: ``q (B, Hq, 1, D)``, new token's k/v ``(B, Hkv, 1, D)``.
+
+The budget semantics (token budget / sparsity ratio / sinks / recent window)
+come from the shared :class:`repro.config.SIKVConfig` so all methods are
+compared under identical budgets, mirroring the paper's setup.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Tuple
+
+import jax
+
+from repro.config import SIKVConfig
+
+
+class AttentionMethod(Protocol):
+    name: str
+    cfg: SIKVConfig
+
+    def prefill(self, k: jax.Array, v: jax.Array, q_obs: jax.Array,
+                *, capacity: int | None = None) -> Any: ...
+
+    def decode(self, q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+               cache: Any, *, scale: float | None = None
+               ) -> Tuple[jax.Array, Any]: ...

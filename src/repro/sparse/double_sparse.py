@@ -1,0 +1,89 @@
+"""DoubleSparse baseline — label-channel token sparsity (Yang et al. 2024b).
+
+A small set of "label" channels (16 of D, picked by a query/key magnitude
+statistic at prefill — standing in for the paper's offline calibration)
+approximates the attention scores; the top-k tokens under the approximate
+scores get full-precision attention.  Equivalent to a 2-bit-per-parameter
+index over the key cache (16/128 channels × fp16), matching the paper's
+"Cache Bits (K,V,Index) = 16,16,2" row.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core.attention import group_queries, masked_attention
+from repro.core.retrieval import select_topk
+
+
+class DoubleSparseCache(NamedTuple):
+    k: jax.Array         # (B, H, Lmax, D)
+    v: jax.Array         # (B, H, Lmax, D)
+    k_label: jax.Array   # (B, H, Lmax, R) — label-channel slice of k
+    channels: jax.Array  # (B, H, R) int32 — label channel ids
+    length: jax.Array    # ()
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+class DoubleSparseAttention:
+    name = "double_sparse"
+
+    def __init__(self, cfg: SIKVConfig | None = None, num_channels: int = 16):
+        self.cfg = cfg or SIKVConfig()
+        self.num_channels = num_channels
+
+    def prefill(self, k, v, q_obs, *, capacity=None) -> DoubleSparseCache:
+        B, H, L, D = k.shape
+        R = min(self.num_channels, D)
+        cap = capacity or L
+        # channel saliency: E|q| * E|k| per channel (AWQ-style proxy)
+        sal = (jnp.mean(jnp.abs(q_obs), axis=2)
+               * jnp.mean(jnp.abs(k), axis=2))         # (B, H, D)
+        _, channels = jax.lax.top_k(sal, R)
+        k_label = jnp.take_along_axis(k, channels[:, :, None, :], axis=3)
+        pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, cap - L), (0, 0)))
+        return DoubleSparseCache(
+            k=pad(k), v=pad(v), k_label=pad(k_label),
+            channels=channels.astype(jnp.int32),
+            length=jnp.asarray(L, jnp.int32))
+
+    def decode(self, q, k_new, v_new, cache: DoubleSparseCache, *, scale=None
+               ) -> Tuple[jax.Array, DoubleSparseCache]:
+        cfg = self.cfg
+        B, Hq, _, D = q.shape
+        H = k_new.shape[1]
+        pos = cache.length
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), pos, axis=2)
+        kl_new = jnp.take_along_axis(
+            k_new, cache.channels[:, :, None, :], axis=3)
+        cache = DoubleSparseCache(
+            k=upd(cache.k, k_new), v=upd(cache.v, v_new),
+            k_label=upd(cache.k_label, kl_new),
+            channels=cache.channels, length=cache.length + 1)
+
+        q_sum = group_queries(q[:, :, 0, :], H)
+        q_label = jnp.take_along_axis(q_sum, cache.channels, axis=2)
+        scores = jnp.einsum(
+            "bhr,bhlr->bhl", q_label.astype(jnp.float32),
+            cache.k_label.astype(jnp.float32))
+        Lmax = cache.capacity
+        budget = min(cfg.budget_for(Lmax), Lmax)
+        p = jnp.arange(Lmax)
+        valid = p[None, None, :] < cache.length
+        forced = (p[None, None, :] >= cache.length - cfg.recent_window) & valid
+        idx, vals = select_topk(
+            scores, budget,
+            valid_mask=jnp.broadcast_to(valid, scores.shape),
+            forced_mask=jnp.broadcast_to(forced, scores.shape))
+        sel_valid = vals > jnp.finfo(scores.dtype).min / 4
+        take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
+        out = masked_attention(q, take(cache.k), take(cache.v), sel_valid,
+                               scale=scale)
+        return out, cache

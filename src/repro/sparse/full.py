@@ -1,0 +1,50 @@
+"""Full-precision dense KV cache — the fp16 FlashAttention reference point."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core.attention import masked_attention
+
+
+class FullCache(NamedTuple):
+    k: jax.Array       # (B, H, Lmax, D)
+    v: jax.Array       # (B, H, Lmax, D)
+    length: jax.Array  # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def append_kv(cache: FullCache, k_new: jax.Array, v_new: jax.Array
+              ) -> FullCache:
+    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+        buf, val.astype(buf.dtype), cache.length, axis=2)
+    return FullCache(k=upd(cache.k, k_new), v=upd(cache.v, v_new),
+                     length=cache.length + 1)
+
+
+class FullAttention:
+    name = "full"
+
+    def __init__(self, cfg: SIKVConfig | None = None):
+        self.cfg = cfg or SIKVConfig()
+
+    def prefill(self, k, v, q_obs, *, capacity=None) -> FullCache:
+        L = k.shape[2]
+        cap = capacity or L
+        pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, cap - L), (0, 0)))
+        return FullCache(k=pad(k), v=pad(v),
+                         length=jnp.asarray(L, jnp.int32))
+
+    def decode(self, q, k_new, v_new, cache: FullCache, *, scale=None
+               ) -> Tuple[jax.Array, FullCache]:
+        cache = append_kv(cache, k_new, v_new)
+        valid = jnp.arange(cache.capacity)[None, None, :] < cache.length
+        valid = jnp.broadcast_to(valid, cache.k.shape[:3])
+        out = masked_attention(q, cache.k, cache.v, valid, scale=scale)
+        return out, cache

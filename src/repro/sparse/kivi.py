@@ -1,0 +1,107 @@
+"""KIVI baseline — tuning-free asymmetric 2-bit quantization (Liu et al. 2024c).
+
+Channel-wise 2-bit K (per-channel scale/zp over the token axis) + token-wise
+2-bit V, with a full-precision residual window for recent tokens.  Dense
+attention over ALL tokens with a decompress-then-compute path — the exact
+strategy the paper's Figure 5 shows losing to the fused sparse kernel.
+No sparsity: this isolates the quantization axis of the comparison.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core.attention import masked_attention
+from repro.core.quantization import (QuantizedTensor, dequantize_tokenwise,
+                                     pack_bits, quantize_tokenwise,
+                                     unpack_bits)
+
+
+class KiviCache(NamedTuple):
+    k_packed: jax.Array   # (B, H, Lq, D*bits//8) int8 — quantized prefix
+    k_scale: jax.Array    # (B, H, 1, D) channel-wise
+    k_zp: jax.Array       # (B, H, 1, D)
+    v_packed: jax.Array   # (B, H, Lq, D*bits//8) int8 (token-wise groups)
+    v_scale: jax.Array    # (B, H, Lq, D//qg)
+    v_zp: jax.Array       # (B, H, Lq, D//qg)
+    quant_len: jax.Array  # () — number of quantized tokens
+    res_k: jax.Array      # (B, H, R, D) full-precision residual ring
+    res_v: jax.Array      # (B, H, R, D)
+    res_len: jax.Array    # ()
+
+    @property
+    def capacity(self) -> int:
+        return self.k_packed.shape[2] + self.res_k.shape[2]
+
+
+class KiviAttention:
+    name = "kivi"
+
+    def __init__(self, cfg: SIKVConfig | None = None, residual: int = 128):
+        self.cfg = cfg or SIKVConfig()
+        self.residual = residual
+
+    def prefill(self, k, v, q_obs, *, capacity=None) -> KiviCache:
+        cfg = self.cfg
+        B, H, L, D = k.shape
+        bits, qg = cfg.key_bits, cfg.quant_group
+        cap = capacity or L
+        Lq = cap  # quantized region capacity
+
+        # channel-wise K quantization (KIVI's key layout)
+        kmin = jnp.min(k, axis=2, keepdims=True)
+        kmax = jnp.max(k, axis=2, keepdims=True)
+        levels = (1 << bits) - 1
+        ks = jnp.where(kmax > kmin, (kmax - kmin) / levels, 1.0)
+        kq = jnp.clip(jnp.round((k - kmin) / ks), 0, levels).astype(jnp.int32)
+        k_packed = pack_bits(kq, bits)
+
+        vq = quantize_tokenwise(v, bits, qg)
+
+        padq = lambda x: jnp.pad(
+            x, ((0, 0), (0, 0), (0, Lq - L), (0, 0)))
+        R = self.residual
+        return KiviCache(
+            k_packed=padq(k_packed),
+            k_scale=ks.astype(jnp.float32), k_zp=kmin.astype(jnp.float32),
+            v_packed=padq(vq.packed),
+            v_scale=padq(vq.scale), v_zp=padq(vq.zp),
+            quant_len=jnp.asarray(L, jnp.int32),
+            res_k=jnp.zeros((B, H, R, D), k.dtype),
+            res_v=jnp.zeros((B, H, R, D), v.dtype),
+            res_len=jnp.asarray(0, jnp.int32))
+
+    def decode(self, q, k_new, v_new, cache: KiviCache, *, scale=None
+               ) -> Tuple[jax.Array, KiviCache]:
+        cfg = self.cfg
+        bits, qg = cfg.key_bits, cfg.quant_group
+        B, H, Lq, _ = cache.k_packed.shape
+        D = k_new.shape[-1]
+        # append to the full-precision residual (ring not needed for our
+        # bounded decode runs; assert capacity in callers)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), cache.res_len, axis=2)
+        cache = cache._replace(res_k=upd(cache.res_k, k_new),
+                               res_v=upd(cache.res_v, v_new),
+                               res_len=cache.res_len + 1)
+
+        # decompress-then-compute over the whole quantized prefix
+        kq = unpack_bits(cache.k_packed, bits, D).astype(jnp.float32)
+        k_deq = kq * cache.k_scale + cache.k_zp
+        vt = QuantizedTensor(cache.v_packed, cache.v_scale.astype(jnp.float32),
+                             cache.v_zp.astype(jnp.float32), bits, qg, D)
+        v_deq = dequantize_tokenwise(vt)
+
+        k_all = jnp.concatenate(
+            [k_deq, cache.res_k.astype(jnp.float32)], axis=2)
+        v_all = jnp.concatenate(
+            [v_deq, cache.res_v.astype(jnp.float32)], axis=2)
+        pos = jnp.arange(Lq + cache.res_k.shape[2])[None, None, :]
+        valid = (pos < cache.quant_len) | (
+            (pos >= Lq) & (pos < Lq + cache.res_len))
+        valid = jnp.broadcast_to(valid, k_all.shape[:3])
+        out = masked_attention(q, k_all, v_all, valid, scale=scale)
+        return out, cache

@@ -1,0 +1,110 @@
+"""Quest baseline — page-level dynamic sparsity (Tang et al. 2024).
+
+Keys are grouped into pages of 16; each page stores element-wise min/max of
+its keys.  Per decode query, the page upper bound
+``sum_d max(q_d * min_d, q_d * max_d)`` ranks pages; the token budget worth
+of top pages participates in full-precision attention.  This is the 2-bit
+"Index" column of the paper's tables (page metadata = 2×fp16 per 16 tokens
+per channel ≈ 2 bits/parameter).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core.attention import masked_attention
+from repro.core.retrieval import select_topk
+
+
+class QuestCache(NamedTuple):
+    k: jax.Array       # (B, H, Lmax, D)
+    v: jax.Array       # (B, H, Lmax, D)
+    kmin: jax.Array    # (B, H, P, D)
+    kmax: jax.Array    # (B, H, P, D)
+    length: jax.Array  # ()
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[2] // self.kmin.shape[2]
+
+
+class QuestAttention:
+    name = "quest"
+
+    def __init__(self, cfg: SIKVConfig | None = None, page_size: int = 16):
+        self.cfg = cfg or SIKVConfig()
+        self.page_size = page_size
+
+    def prefill(self, k, v, q_obs, *, capacity=None) -> QuestCache:
+        B, H, L, D = k.shape
+        ps = self.page_size
+        cap = capacity or L
+        cap = ((cap + ps - 1) // ps) * ps
+        pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, cap - L), (0, 0)))
+        kp, vp = pad(k), pad(v)
+        P = cap // ps
+        pos = jnp.arange(cap)
+        valid = (pos < L).reshape(P, ps)[None, None, :, :, None]
+        kpages = kp.reshape(B, H, P, ps, D)
+        big = jnp.asarray(jnp.finfo(kp.dtype).max, kp.dtype)
+        kmin = jnp.min(jnp.where(valid, kpages, big), axis=3)
+        kmax = jnp.max(jnp.where(valid, kpages, -big), axis=3)
+        return QuestCache(k=kp, v=vp, kmin=kmin, kmax=kmax,
+                          length=jnp.asarray(L, jnp.int32))
+
+    def decode(self, q, k_new, v_new, cache: QuestCache, *, scale=None
+               ) -> Tuple[jax.Array, QuestCache]:
+        cfg = self.cfg
+        ps = self.page_size
+        B, Hq, _, D = q.shape
+        H = k_new.shape[1]
+        # append + update page stats
+        pos = cache.length
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), pos, axis=2)
+        k_, v_ = upd(cache.k, k_new), upd(cache.v, v_new)
+        page = pos // ps
+        kmin_p = jax.lax.dynamic_slice_in_dim(cache.kmin, page, 1, axis=2)
+        kmax_p = jax.lax.dynamic_slice_in_dim(cache.kmax, page, 1, axis=2)
+        kn = k_new.astype(cache.kmin.dtype)
+        kmin = jax.lax.dynamic_update_slice_in_dim(
+            cache.kmin, jnp.minimum(kmin_p, kn), page, axis=2)
+        kmax = jax.lax.dynamic_update_slice_in_dim(
+            cache.kmax, jnp.maximum(kmax_p, kn), page, axis=2)
+        cache = QuestCache(k=k_, v=v_, kmin=kmin, kmax=kmax,
+                           length=cache.length + 1)
+
+        # page upper-bound scores from the group-summed query
+        from repro.core.attention import group_queries
+        q_sum = group_queries(q[:, :, 0, :], H).astype(jnp.float32)
+        ub = jnp.sum(
+            jnp.maximum(q_sum[:, :, None, :] * cache.kmin.astype(jnp.float32),
+                        q_sum[:, :, None, :] * cache.kmax.astype(jnp.float32)),
+            axis=-1)                                        # (B, H, P)
+        Pn = ub.shape[-1]
+        n_pages = max(1, min(cfg.budget_for(cache.capacity) // ps, Pn))
+        page_pos = jnp.arange(Pn)
+        page_valid = page_pos[None, None, :] * ps < cache.length
+        last_page = (cache.length - 1) // ps
+        forced = page_pos[None, None, :] == last_page
+        pidx, pvals = select_topk(
+            ub, n_pages,
+            valid_mask=jnp.broadcast_to(page_valid, ub.shape),
+            forced_mask=jnp.broadcast_to(forced, ub.shape))
+        sel_page_valid = pvals > jnp.finfo(ub.dtype).min / 4
+
+        # gather the selected pages' tokens
+        tok = (pidx[..., None] * ps + jnp.arange(ps)).reshape(B, H, -1)
+        take = lambda x: jnp.take_along_axis(x, tok[..., None], axis=2)
+        k_sel, v_sel = take(cache.k), take(cache.v)
+        tok_valid = (tok < cache.length) & jnp.repeat(
+            sel_page_valid, ps, axis=-1)
+        out = masked_attention(q, k_sel, v_sel, tok_valid, scale=scale)
+        return out, cache

@@ -1,0 +1,25 @@
+"""Self-Indexing KVCache exposed through the common method interface."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.config import SIKVConfig
+from repro.core.attention import sikv_decode_attention
+from repro.core.cache import SIKVCache, prefill_compress
+
+
+class SIKVAttention:
+    name = "sikv"
+
+    def __init__(self, cfg: SIKVConfig | None = None):
+        self.cfg = cfg or SIKVConfig()
+
+    def prefill(self, k, v, q_obs, *, capacity=None) -> SIKVCache:
+        return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity)
+
+    def decode(self, q, k_new, v_new, cache: SIKVCache, *, scale=None
+               ) -> Tuple[jax.Array, SIKVCache]:
+        return sikv_decode_attention(q, k_new, v_new, cache, self.cfg,
+                                     scale=scale)

@@ -1,0 +1,57 @@
+"""SnapKV baseline — one-shot static pruning at prefill (Li et al. 2024).
+
+The observation-window attention vote keeps the top ``budget`` tokens (plus
+the window itself); everything else is discarded permanently.  Decode tokens
+are appended to the kept set.  Cheap and simple, but unrecoverable — the
+paper's Table 1/2 shows it degrading on retrieval-heavy tasks, which our
+``bench_longbench_proxy`` reproduces via recall.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core.attention import masked_attention
+from repro.core.policy import snapkv_votes
+from repro.sparse.full import FullCache, append_kv
+
+
+class SnapKVAttention:
+    name = "snapkv"
+
+    def __init__(self, cfg: SIKVConfig | None = None, decode_margin: int = 512):
+        self.cfg = cfg or SIKVConfig()
+        self.decode_margin = decode_margin
+
+    def prefill(self, k, v, q_obs, *, capacity=None) -> FullCache:
+        cfg = self.cfg
+        B, H, L, D = k.shape
+        budget = min(cfg.budget_for(L), L)
+        W = q_obs.shape[2]
+        votes = snapkv_votes(q_obs, k, causal_offset=L - W)
+        # always keep the observation window itself (SnapKV keeps the tail)
+        pos = jnp.arange(L)
+        tail_bonus = jnp.where(pos >= L - min(W, budget),
+                               jnp.finfo(votes.dtype).max / 4, 0.0)
+        votes = votes + tail_bonus[None, None, :]
+        _, keep = jax.lax.top_k(votes, budget)
+        keep = jnp.sort(keep, axis=-1)  # preserve positional order
+        take = lambda x: jnp.take_along_axis(x, keep[..., None], axis=2)
+        k_kept, v_kept = take(k), take(v)
+        cap = capacity if capacity is not None else budget + self.decode_margin
+        cap = max(cap, budget)
+        pad = lambda x: jnp.pad(
+            x, ((0, 0), (0, 0), (0, cap - budget), (0, 0)))
+        return FullCache(k=pad(k_kept), v=pad(v_kept),
+                         length=jnp.asarray(budget, jnp.int32))
+
+    def decode(self, q, k_new, v_new, cache: FullCache, *, scale=None
+               ) -> Tuple[jax.Array, FullCache]:
+        cache = append_kv(cache, k_new, v_new)
+        valid = jnp.arange(cache.capacity)[None, None, :] < cache.length
+        valid = jnp.broadcast_to(valid, cache.k.shape[:3])
+        out = masked_attention(q, cache.k, cache.v, valid, scale=scale)
+        return out, cache

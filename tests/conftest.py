@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+# Tests run single-device on CPU; the multi-device dry-run is exercised in a
+# subprocess (test_sharding.py) so this process never forces fake devices.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,90 @@
+"""Unit tests for one-pass sign-based clustering (paper Eqs. 1-7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cb
+
+
+def test_sign_codes_match_paper_eq3():
+    # Code(k) = sum (1+s_i)/2 * 2^(4-i): first element is the MSB
+    k = jnp.array([[[+1.0, -1.0, -1.0, -1.0],    # 1000 -> 8
+                    [-1.0, +1.0, +1.0, +1.0],    # 0111 -> 7
+                    [+1.0, +1.0, +1.0, +1.0],    # 1111 -> 15
+                    [-1.0, -1.0, -1.0, -1.0]]])  # 0000 -> 0
+    k = k.reshape(1, 4, 4)
+    codes = cb.sign_codes(k)
+    assert codes.shape == (1, 4, 1)
+    np.testing.assert_array_equal(np.asarray(codes)[0, :, 0], [8, 7, 15, 0])
+
+
+def test_codes_to_signs_roundtrip(rng):
+    k = jax.random.normal(rng, (2, 3, 64, 32))
+    codes = cb.sign_codes(k)
+    signs = cb.codes_to_signs(codes)
+    np.testing.assert_array_equal(np.asarray(signs > 0),
+                                  np.asarray(k >= 0))
+
+
+def test_normalization_zero_means(rng):
+    k = jax.random.normal(rng, (2, 2, 128, 16)) + 3.0
+    kn, mu = cb.normalize_keys(k)
+    np.testing.assert_allclose(np.asarray(jnp.mean(kn, axis=-2)), 0.0,
+                               atol=1e-5)
+
+
+def test_normalization_balances_signs(rng):
+    # biased keys -> signs all positive; after normalization ~50/50
+    k = jax.random.normal(rng, (1, 1, 4096, 8)) + 2.0
+    assert float(jnp.mean(k >= 0)) > 0.97
+    kn, _ = cb.normalize_keys(k)
+    frac = float(jnp.mean(kn >= 0))
+    assert 0.45 < frac < 0.55
+
+
+def test_centroids_are_cluster_means(rng):
+    k = jax.random.normal(rng, (1, 1, 512, 8))
+    kn, _ = cb.normalize_keys(k)
+    codes = cb.sign_codes(kn)
+    cents = cb.build_codebook(kn, codes)
+    kn_np = np.asarray(kn)[0, 0].reshape(512, 2, 4)
+    codes_np = np.asarray(codes)[0, 0]
+    for g in range(2):
+        for c in range(16):
+            members = kn_np[codes_np[:, g] == c, g, :]
+            if len(members):
+                np.testing.assert_allclose(
+                    np.asarray(cents)[0, 0, g, c], members.mean(0),
+                    rtol=1e-4, atol=1e-5)
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(cents)[0, 0, g, c], 0.0)
+
+
+def test_centroid_signs_consistent(rng):
+    """Each non-empty centroid must live in its own sign orthant."""
+    k = jax.random.normal(rng, (1, 2, 1024, 16))
+    kn, _ = cb.normalize_keys(k)
+    codes = cb.sign_codes(kn)
+    cents = cb.build_codebook(kn, codes)
+    for g in range(4):
+        for c in range(16):
+            cent = np.asarray(cents)[0, 0, g, c]
+            if np.all(cent == 0):
+                continue
+            bits = [(c >> (3 - i)) & 1 for i in range(4)]
+            for i, b in enumerate(bits):
+                if b:
+                    assert cent[i] >= 0
+                else:
+                    assert cent[i] <= 0
+
+
+def test_masked_build(rng):
+    k = jax.random.normal(rng, (1, 1, 64, 8))
+    mask = jnp.arange(64) < 40
+    mu_m = cb.channel_mean(k, mask[None, None])
+    mu_ref = jnp.mean(k[:, :, :40], axis=-2, keepdims=True)
+    np.testing.assert_allclose(np.asarray(mu_m), np.asarray(mu_ref),
+                               rtol=1e-5)

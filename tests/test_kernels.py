@@ -1,0 +1,194 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cb
+from repro.core import quantization as qz
+from repro.core.attention import full_causal_attention
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lut_gemv import lut_gemv_pallas
+from repro.kernels.sign_quant import sign_quant_pallas
+from repro.kernels.sparse_attention import sparse_attention_pallas
+
+
+# ---------------------------------------------------------------------------
+# lut_gemv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,D,block", [(256, 64, 64), (512, 128, 128),
+                                       (128, 32, 128), (1024, 64, 512)])
+def test_lut_gemv_shapes(rng, L, D, block):
+    N, G, C = 3, D // 4, 16
+    codes = jax.random.randint(rng, (N, L, G), 0, 16).astype(jnp.int8)
+    lut = jax.random.normal(jax.random.PRNGKey(1), (N, G, C))
+    bl = min(block, L)
+    out = lut_gemv_pallas(codes, lut, block_l=bl)
+    expect = ref.lut_gemv_ref(codes, lut)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lut_gemv_ops_wrapper(rng):
+    B, H, L, D = 2, 2, 300, 64
+    k = jax.random.normal(rng, (B, H, L, D))
+    kn, _ = cb.normalize_keys(k)
+    codes = cb.sign_codes(kn)
+    cents = cb.build_codebook(kn, codes)
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, H, D))
+    out = ops.lut_gemv(codes, q, cents)
+    from repro.core import retrieval as rtr
+    expect = rtr.lut_scores(codes, rtr.build_lut(q, cents))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sign_quant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,D,qg", [(256, 64, 32), (128, 128, 32),
+                                    (64, 32, 16)])
+def test_sign_quant_vs_ref(rng, L, D, qg):
+    N = 2
+    kn = jax.random.normal(rng, (N, L, D))
+    alpha = jnp.max(jnp.abs(kn), axis=1, keepdims=True)
+    codes, packed, qs, zp = sign_quant_pallas(
+        kn, alpha, quant_group=qg, block_l=min(64, L))
+    for n in range(N):
+        c_r, p_r, qs_r, zp_r = ref.sign_quant_ref(kn[n], alpha[n], qg)
+        np.testing.assert_array_equal(np.asarray(codes[n]), np.asarray(c_r))
+        np.testing.assert_array_equal(np.asarray(packed[n]), np.asarray(p_r))
+        np.testing.assert_allclose(np.asarray(qs[n]), np.asarray(qs_r),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(zp[n]), np.asarray(zp_r),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_sign_quant_matches_core(rng):
+    B, H, L, D = 1, 2, 128, 64
+    k = jax.random.normal(rng, (B, H, L, D))
+    kn, _ = cb.normalize_keys(k)
+    alpha = qz.channel_alpha(kn)
+    codes_k, packed_k, qs_k, zp_k = ops.sign_quant(kn, alpha)
+    codes_c = cb.sign_codes(kn)
+    kq = qz.quantize_key_magnitude(kn, alpha)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_c))
+    np.testing.assert_array_equal(np.asarray(packed_k), np.asarray(kq.packed))
+
+
+# ---------------------------------------------------------------------------
+# sparse_attention (fused dequant decode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g,T,D,block", [(2, 128, 64, 64), (4, 64, 32, 64),
+                                         (1, 256, 128, 128)])
+def test_sparse_attention_vs_ref(rng, g, T, D, block):
+    N, G = 2, D // 4
+    qg = 32 if D % 32 == 0 else 16
+    ks = jax.random.split(rng, 12)
+    q = jax.random.normal(ks[0], (N, g, D))
+    codes = jax.random.randint(ks[1], (N, T, G), 0, 16).astype(jnp.int8)
+    kmag = jax.random.randint(ks[2], (N, T, D // 4), -128, 128
+                              ).astype(jnp.int8)
+    k_scale = jax.random.uniform(ks[3], (N, T, D // qg), minval=0.01,
+                                 maxval=0.3)
+    k_zp = jax.random.uniform(ks[4], (N, T, D // qg), minval=0.0, maxval=0.1)
+    v_q = jax.random.randint(ks[5], (N, T, D // 4), -128, 128
+                             ).astype(jnp.int8)
+    v_scale = jax.random.uniform(ks[6], (N, T, D // qg), minval=0.01,
+                                 maxval=0.3)
+    v_zp = jax.random.uniform(ks[7], (N, T, D // qg), minval=-0.2,
+                              maxval=0.2)
+    alpha = jax.random.uniform(ks[8], (N, 1, D), minval=0.5, maxval=2.0)
+    mu = jax.random.normal(ks[9], (N, 1, D)) * 0.2
+    mask = (jax.random.uniform(ks[10], (N, T)) > 0.2).astype(jnp.float32)
+    mask = mask.at[:, 0].set(1.0)  # ensure at least one valid token
+
+    bt = min(block, T)
+    acc, m, l = sparse_attention_pallas(
+        q, codes, kmag, k_scale, k_zp, v_q, v_scale, v_zp, alpha, mu, mask,
+        quant_group=qg, block_t=bt)
+    for n in range(N):
+        a_r, m_r, l_r = ref.sparse_attention_ref(
+            q[n], codes[n], kmag[n], k_scale[n], k_zp[n], v_q[n], v_scale[n],
+            v_zp[n], alpha[n], mu[n], mask[n] > 0, qg)
+        np.testing.assert_allclose(np.asarray(acc[n]), np.asarray(a_r),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(m[n]), np.asarray(m_r),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(l[n]), np.asarray(l_r),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_merge_flash_state(rng):
+    """Merging two partial states == softmax over the union."""
+    g, T, D = 2, 32, 16
+    q = jax.random.normal(rng, (g, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2 * T, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2 * T, D))
+    sc = 1.0 / np.sqrt(D)
+    logits = (q @ k.T) * sc
+    w = jax.nn.softmax(logits, -1)
+    expect = w @ v
+
+    def part(ks, vs):
+        lg = (q @ ks.T) * sc
+        m = jnp.max(lg, -1)
+        p = jnp.exp(lg - m[:, None])
+        return p @ vs, m, jnp.sum(p, -1)
+
+    a1, m1, l1 = part(k[:T], v[:T])
+    a2, m2, l2 = part(k[T:], v[T:])
+    acc, m, l = ref.merge_flash_ref(a1, m1, l1, a2, m2, l2)
+    np.testing.assert_allclose(np.asarray(acc / l[:, None]),
+                               np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Lq,Lk,D,bq,bk,causal", [
+    (128, 128, 64, 64, 64, True),
+    (256, 256, 32, 128, 64, True),
+    (64, 128, 64, 64, 64, False),
+    (128, 128, 128, 32, 32, True),
+])
+def test_flash_vs_ref(rng, Lq, Lk, D, bq, bk, causal):
+    N = 2
+    q = jax.random.normal(rng, (N, Lq, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (N, Lk, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (N, Lk, D))
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk)
+    for n in range(N):
+        expect = ref.flash_attention_ref(q[n], k[n], v[n], causal=causal)
+        np.testing.assert_allclose(np.asarray(out[n]), np.asarray(expect),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(rng, dtype):
+    q = jax.random.normal(rng, (1, 128, 64)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 64)).astype(dtype)
+    out = flash_attention_pallas(q, k, v, block_q=64, block_k=64)
+    assert out.dtype == dtype
+    expect = ref.flash_attention_ref(q[0], k[0], v[0])
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out[0], np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_gqa_wrapper(rng):
+    q = jax.random.normal(rng, (2, 8, 192, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 192, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 192, 64))
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    expect = full_causal_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)

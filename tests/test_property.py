@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codebook as cb
+from repro.core import quantization as qz
+from repro.core import retrieval as rtr
+
+jax.config.update("jax_platform_name", "cpu")
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(key, shape, scale=2.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# Softmax / top-k shift invariance (paper Eq. 7) — the normalization's
+# correctness argument.
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), L=st.integers(4, 64),
+       shift=st.floats(-50, 50, allow_nan=False))
+@settings(**_SETTINGS)
+def test_softmax_shift_invariance(seed, L, shift):
+    x = _arr(seed, (L,))
+    a = jax.nn.softmax(x)
+    b = jax.nn.softmax(x + shift)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16), L=st.integers(8, 64),
+       k=st.integers(1, 8), shift=st.floats(-20, 20, allow_nan=False))
+@settings(**_SETTINGS)
+def test_topk_shift_invariance(seed, L, k, shift):
+    """Adding q.mu (constant per query) never changes the selected set."""
+    s = _arr(seed, (L,))
+    k = min(k, L)
+    i1 = set(np.asarray(jax.lax.top_k(s, k)[1]).tolist())
+    i2 = set(np.asarray(jax.lax.top_k(s + shift, k)[1]).tolist())
+    assert i1 == i2
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**_SETTINGS)
+def test_attention_invariant_to_key_mean_shift(seed):
+    """softmax(q.(k+c)) V == softmax(q.k) V for channel shift c (Eq. 5-7)."""
+    q = _arr(seed, (8,))
+    k = _arr(seed + 1, (16, 8))
+    v = _arr(seed + 2, (16, 4))
+    c = _arr(seed + 3, (8,))
+    w1 = jax.nn.softmax(k @ q)
+    w2 = jax.nn.softmax((k + c) @ q)
+    np.testing.assert_allclose(np.asarray(w1 @ v), np.asarray(w2 @ v),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sign-code bijectivity and packing
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), L=st.integers(1, 32),
+       G=st.integers(1, 8))
+@settings(**_SETTINGS)
+def test_sign_code_bijective(seed, L, G):
+    k = _arr(seed, (1, L, G * 4))
+    codes = cb.sign_codes(k)
+    signs = cb.codes_to_signs(codes)
+    assert bool(jnp.all((signs > 0) == (k >= 0)))
+    # re-encoding the sign vector gives identical codes
+    codes2 = cb.sign_codes(signs.astype(jnp.float32))
+    assert bool(jnp.all(codes == codes2))
+
+
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([1, 2, 4]),
+       n=st.integers(1, 16))
+@settings(**_SETTINGS)
+def test_pack_bits_bijective(seed, bits, n):
+    per = 8 // bits
+    D = n * per
+    vals = jax.random.randint(jax.random.PRNGKey(seed), (3, D), 0, 2 ** bits)
+    out = qz.unpack_bits(qz.pack_bits(vals, bits), bits, D)
+    assert bool(jnp.all(out == vals))
+
+
+# ---------------------------------------------------------------------------
+# Quantization error bound
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.01, 100,
+                                                   allow_nan=False))
+@settings(**_SETTINGS)
+def test_quant_error_bounded_by_half_step(seed, scale):
+    x = _arr(seed, (1, 1, 8, 32), scale)
+    qt = qz.quantize_tokenwise(x, bits=2, quant_group=32)
+    deq = qz.dequantize_tokenwise(qt)
+    step = np.repeat(np.asarray(qt.scale), 32, axis=-1)
+    err = np.abs(np.asarray(deq - x))
+    assert np.all(err <= step / 2 + 1e-5 * scale + 1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval properties
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**16), L=st.integers(16, 128))
+@settings(**_SETTINGS)
+def test_lut_scores_linear_in_query(seed, L):
+    """score(aq1 + bq2) == a*score(q1) + b*score(q2) — LUT-GEMV is linear."""
+    k = _arr(seed, (1, L, 16))
+    kn, _ = cb.normalize_keys(k)
+    codes = cb.sign_codes(kn)
+    cents = cb.build_codebook(kn, codes)
+    q1, q2 = _arr(seed + 1, (1, 16)), _arr(seed + 2, (1, 16))
+    s1 = rtr.lut_scores(codes, rtr.build_lut(q1, cents))
+    s2 = rtr.lut_scores(codes, rtr.build_lut(q2, cents))
+    s12 = rtr.lut_scores(codes, rtr.build_lut(2.0 * q1 - 0.5 * q2, cents))
+    np.testing.assert_allclose(np.asarray(s12),
+                               np.asarray(2.0 * s1 - 0.5 * s2),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**_SETTINGS)
+def test_centroid_scores_preserve_cluster_order(seed):
+    """All keys with the same code get the same LUT score."""
+    k = _arr(seed, (1, 64, 8))
+    kn, _ = cb.normalize_keys(k)
+    codes = cb.sign_codes(kn)
+    cents = cb.build_codebook(kn, codes)
+    q = _arr(seed + 1, (1, 8))
+    s = np.asarray(rtr.lut_scores(codes, rtr.build_lut(q, cents)))[0]
+    c_np = np.asarray(codes)[0]
+    keys = [tuple(row) for row in c_np]
+    seen = {}
+    for i, kk in enumerate(keys):
+        if kk in seen:
+            assert abs(s[i] - s[seen[kk]]) < 1e-4
+        else:
+            seen[kk] = i

@@ -1,0 +1,67 @@
+"""Unit tests for token-wise quantization with sign reuse (paper Eqs. 9-13)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cb
+from repro.core import quantization as qz
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4])
+def test_pack_unpack_roundtrip(rng, bits):
+    vals = jax.random.randint(rng, (3, 5, 64), 0, 2 ** bits)
+    packed = qz.pack_bits(vals, bits)
+    assert packed.shape == (3, 5, 64 * bits // 8)
+    out = qz.unpack_bits(packed, bits, 64)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+
+@pytest.mark.parametrize("bits,qg", [(2, 32), (2, 16), (4, 32)])
+def test_quant_error_bound(rng, bits, qg):
+    x = jax.random.normal(rng, (2, 2, 128, 64)) * 3.0
+    qt = qz.quantize_tokenwise(x, bits=bits, quant_group=qg)
+    deq = qz.dequantize_tokenwise(qt)
+    # error <= qs/2 per element (asymmetric uniform quantization)
+    scale = np.asarray(qt.scale)
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    bound = np.repeat(scale, qg, axis=-1) / 2 + 1e-6
+    assert np.all(err <= bound)
+
+
+def test_flat_group_degenerate(rng):
+    x = jnp.ones((1, 1, 4, 32)) * 5.0
+    qt = qz.quantize_tokenwise(x)
+    deq = qz.dequantize_tokenwise(qt)
+    np.testing.assert_allclose(np.asarray(deq), 5.0, atol=1e-6)
+
+
+def test_key_dequant_uses_signs(rng):
+    k = jax.random.normal(rng, (1, 2, 256, 32))
+    kn, mu = cb.normalize_keys(k)
+    codes = cb.sign_codes(kn)
+    signs = cb.codes_to_signs(codes)
+    alpha = qz.channel_alpha(kn)
+    qt = qz.quantize_key_magnitude(kn, alpha)
+    deq = qz.dequantize_key(qt, signs, alpha)
+    # sign of reconstruction matches the stored sign bits wherever nonzero
+    nz = np.abs(np.asarray(deq)) > 1e-9
+    np.testing.assert_array_equal(
+        (np.asarray(deq) > 0)[nz], np.asarray(signs > 0)[nz])
+    # relative reconstruction error is bounded for 2-bit + per-channel alpha
+    rel = np.abs(np.asarray(deq - kn)) / (np.asarray(alpha) + 1e-9)
+    assert rel.mean() < 0.2
+
+
+def test_alpha_positive_and_covers(rng):
+    k = jax.random.normal(rng, (1, 1, 64, 16))
+    kn, _ = cb.normalize_keys(k)
+    alpha = qz.channel_alpha(kn)
+    assert np.all(np.asarray(alpha) > 0)
+    assert np.all(np.abs(np.asarray(kn)) <= np.asarray(alpha) + 1e-6)
+
+
+def test_effective_quant_group():
+    assert qz.effective_quant_group(576, 32) == 32
+    assert qz.effective_quant_group(80, 32) == 20
+    assert qz.effective_quant_group(7, 32) == 7

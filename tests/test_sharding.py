@@ -1,0 +1,111 @@
+"""Distribution tests: sharding rules + a real multi-device dry-run in a
+subprocess (fake devices must be configured before jax initializes)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.config import get_model_config
+from repro.launch.sharding import param_spec
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16, "pod": 2}
+    axis_names = ("data", "model")
+
+
+def test_param_spec_rules():
+    m = _FakeMesh()
+    # column parallel
+    assert param_spec("['layers'][0]['attn']['wq']", (4096, 4096), m) \
+        == jax.sharding.PartitionSpec(None, "model")
+    # row parallel
+    assert param_spec("['layers'][0]['attn']['wo']", (4096, 4096), m) \
+        == jax.sharding.PartitionSpec("model", None)
+    # norm replicated
+    assert param_spec("['layers'][0]['norm1']", (4096,), m) \
+        == jax.sharding.PartitionSpec()
+    # moe experts over model
+    assert param_spec("['layers'][0]['moe']['gate']", (64, 2048, 1024), m) \
+        == jax.sharding.PartitionSpec("model", None, None)
+    # mamba replicated
+    assert param_spec("['layers'][0]['mamba']['in_proj']", (768, 3352), m) \
+        == jax.sharding.PartitionSpec()
+    # indivisible vocab falls back to d_model sharding
+    assert param_spec("['embed']", (50280, 768), m) \
+        == jax.sharding.PartitionSpec(None, "model")
+    assert param_spec("['embed']", (151936, 2048), m) \
+        == jax.sharding.PartitionSpec("model", None)
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, functools
+    from jax.sharding import AxisType
+    from repro.config import (SIKVConfig, TrainConfig, get_model_config,
+                              reduced_config)
+    from repro.launch.sharding import (decode_cache_sds, input_sds,
+                                       param_sharded_sds)
+    from repro.launch.dryrun import make_train_step, collective_bytes
+    from repro.models import decode_step
+    from repro.optim import adamw_init
+    from repro.sparse import get_method
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    import dataclasses
+    cfg = reduced_config(get_model_config("qwen2.5-3b"), d_model=512)
+    cfg = dataclasses.replace(cfg, vocab_size=512)
+    sikv = SIKVConfig(num_sink_tokens=8, token_budget=24, recent_window=4)
+
+    with jax.set_mesh(mesh):
+        params = param_sharded_sds(cfg, mesh)
+        # train step lowers + compiles
+        from repro.launch.sharding import shard_tree_specs, param_spec
+        opt = shard_tree_specs(jax.eval_shape(adamw_init, params), mesh,
+                               param_spec)
+        batch = input_sds(cfg, 8, 64, mesh)
+        fn = make_train_step(cfg, TrainConfig())
+        c1 = jax.jit(fn).lower(params, opt, batch).compile()
+        assert c1.cost_analysis().get("flops", 0) > 0
+        # decode step lowers + compiles with sharded sikv caches
+        caches = decode_cache_sds(cfg, sikv, 8, 64, mesh, method="sikv")
+        inputs = input_sds(cfg, 8, 1, mesh, labels=False)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        m = get_method("sikv", sikv)
+        fn2 = functools.partial(decode_step, cfg=cfg, method=m)
+        c2 = jax.jit(lambda p, i, pp, c: fn2(p, inputs=i, pos=pp, caches=c)
+                     ).lower(params, inputs, pos, caches).compile()
+        coll = collective_bytes(c2.as_text())
+        print("TRAIN_OK DECODE_OK coll_count=%d" % coll["count"])
+""")
+
+
+@pytest.mark.slow
+def test_multi_device_dryrun_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(SRC))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "TRAIN_OK DECODE_OK" in out.stdout
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes, _shape_bytes
+    hlo = """
+      %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+      %ag.1 = bf16[512]{0} all-gather(bf16[256]{0} %y), dimensions={0}
+      %nothing = f32[2]{0} add(f32[2]{0} %a, f32[2]{0} %b)
+    """
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 512 * 2
+    assert out["count"] == 2
+    assert _shape_bytes("bf16[2,3]") == 12

@@ -1,0 +1,95 @@
+"""Data pipeline, optimizer, checkpointing unit tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.config import TrainConfig, get_model_config, reduced_config
+from repro.data import DataConfig, make_batch_iterator, make_inputs
+from repro.data.synthetic import lm_sequence_batch
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def test_lm_batch_learnable_structure(rng):
+    toks = lm_sequence_batch(rng, 4, 256, 101)
+    # the Markov rule holds for ~90% of transitions
+    t = np.asarray(toks)
+    pred = (t[:, :-1] * 31 + 17) % 101
+    frac = (pred == t[:, 1:]).mean()
+    assert 0.8 < frac < 0.99
+
+
+def test_batch_iterator_deterministic():
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    dc = DataConfig(global_batch=2, seq_len=32, seed=7)
+    b1 = next(make_batch_iterator(cfg, dc))
+    b2 = next(make_batch_iterator(cfg, dc))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_make_inputs_all_families():
+    for arch in ["qwen2.5-3b", "internvl2-26b", "whisper-medium",
+                 "mamba2-130m"]:
+        cfg = reduced_config(get_model_config(arch))
+        b = make_inputs(cfg, 2, 16)
+        assert "labels" in b
+        if cfg.embedding_inputs and not cfg.num_encoder_layers:
+            assert b["embeds"].shape == (2, 16, cfg.d_model)
+        else:
+            assert b["tokens"].shape == (2, 16)
+        if cfg.num_encoder_layers:
+            assert "enc_embeds" in b
+
+
+def test_adamw_reduces_quadratic():
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=0.0, grad_clip=1e9)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for i in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, gn = adamw_update(params, grads, state, cfg,
+                                         cosine_schedule(cfg, i))
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_grad_clip_applies():
+    cfg = TrainConfig(grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    _, _, gnorm = adamw_update(params, {"w": jnp.full(3, 100.0)}, state,
+                               cfg, 0.0)
+    assert float(gnorm) > 100.0  # reported pre-clip norm
+
+
+def test_schedule_shape():
+    cfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(cfg, 0)) == 0.0
+    assert abs(float(cosine_schedule(cfg, 10)) - 1e-3) < 1e-9
+    assert float(cosine_schedule(cfg, 100)) < 2e-4
+
+
+def test_checkpoint_roundtrip_nested():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": [{"c": jnp.ones(4)}, jnp.zeros((2, 2), jnp.int8)]}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree, step=3)
+        out = load_checkpoint(d, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"a": jnp.ones((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, tree)
+        bad = {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)}
+        with pytest.raises(AssertionError):
+            load_checkpoint(d, bad)
