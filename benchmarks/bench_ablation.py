@@ -46,7 +46,8 @@ def _decode_mse(k, v, q, q_obs, cfg, *, sign_only_retrieval=False,
             cache.codes,
             rtr.build_lut(q_kv, cache.centroids.astype(jnp.float32)))
     pos = jnp.arange(cache.capacity)
-    valid = (pos < cache.length)[None, None] & ~cache.sink_mask
+    valid = (pos[None, None, :] < cache.length[:, None, None]) \
+        & ~cache.sink_mask
     k_dyn = max(1, cfg.token_budget - cfg.num_sink_tokens)
     idx, vals = rtr.select_topk(
         scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))

@@ -39,3 +39,11 @@ def run() -> None:
                         params, toks, iters=3)
         emit(f"tt2t/L={L}", t_pre,
              f"bare={t_bare:.0f}us;overhead={100 * (t_pre / t_bare - 1):.1f}%")
+        # ragged (right-padded) prefill: per-sequence lengths thread pad
+        # masks through the compression stats — overhead should be ~free
+        lens = jnp.asarray([L // 2], jnp.int32)
+        t_rag = time_fn(
+            lambda p, t: pre(p, batch={"tokens": t, "lengths": lens})[0],
+            params, toks, iters=3)
+        emit(f"tt2t_ragged/L={L}", t_rag,
+             f"dense={t_pre:.0f}us;overhead={100 * (t_rag / t_pre - 1):.1f}%")

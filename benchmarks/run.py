@@ -17,7 +17,7 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_longbench_proxy,
                             bench_memory, bench_modules, bench_roofline,
-                            bench_ruler_proxy, bench_tt2t)
+                            bench_ruler_proxy, bench_serving, bench_tt2t)
     suites = [
         ("bench_memory", bench_memory.run),          # Fig 5 / overhead
         ("bench_longbench_proxy", bench_longbench_proxy.run),  # Table 1
@@ -25,6 +25,7 @@ def main() -> None:
         ("bench_modules", bench_modules.run),        # Table 4
         ("bench_tt2t", bench_tt2t.run),              # Table 3
         ("bench_ablation", bench_ablation.run),      # Table 5
+        ("bench_serving", bench_serving.run),        # continuous batching
         ("bench_roofline", bench_roofline.run),      # dry-run roofline
     ]
     failures = []

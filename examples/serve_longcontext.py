@@ -5,6 +5,26 @@ Trains a small LM first (so generations are meaningful), then serves a
 request batch with each method and reports throughput + agreement with the
 full-precision cache.
 
+Serving model — slot lifecycle (continuous batching):
+
+* the engine owns ``batch_size`` independent **slots**; each holds one
+  request's caches, with per-sequence ``(B,)`` cache lengths so prompts of
+  different lengths coexist (right-padding never pollutes sink selection,
+  normalization statistics, or top-k retrieval);
+* ``RequestScheduler.run()`` admits a request into any free slot (batch-1
+  prefill inserted into the live batch — the first token arrives here, the
+  request's **TTFT** point), steps every active slot together, and
+  *retires* finished slots mid-decode, refilling them from the queue
+  without recompiling anything (all shapes static);
+* per-request service stats land on each ``Request``: ``ttft`` (submit ->
+  first token) and ``tpot`` (mean seconds per subsequent token);
+  ``RequestScheduler.service_stats()`` aggregates them, and
+  ``engine.stats`` counts program launches (compare batching policies with
+  ``benchmarks/bench_serving.py``);
+* ``flush_lockstep()`` keeps the seed's fixed-group batching as the
+  baseline: each group runs to its longest member — under mixed-length
+  traffic it launches strictly more engine programs than ``run()``.
+
 Run:  PYTHONPATH=src python examples/serve_longcontext.py [--steps 120]
 """
 import argparse
@@ -51,13 +71,17 @@ def main() -> None:
             sched.submit(Request(uid=i, prompt=[int(t) for t in prompts[i]],
                                  max_new_tokens=args.max_new))
         t0 = time.time()
-        sched.flush()
+        sched.flush()  # continuous batching: slots retire + refill mid-decode
         dt = time.time() - t0
         gen = jnp.asarray([sched.completed[i].result
                            for i in range(args.requests)])
         results[method] = (gen, dt)
+        svc = sched.service_stats()
         print(f"{method:14s} {dt:6.2f}s "
-              f"({args.requests * args.max_new / dt:7.1f} tok/s)")
+              f"({args.requests * args.max_new / dt:7.1f} tok/s, "
+              f"ttft={svc['ttft_mean'] * 1e3:.0f}ms "
+              f"tpot={svc['tpot_mean'] * 1e3:.0f}ms, "
+              f"{eng.invocations()} engine launches)")
 
     full_gen = results["full"][0]
     print("\n== agreement with the full-precision cache ==")

@@ -15,10 +15,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import tree_flatten_with_path
+
 
 def _leaf_paths(tree: Any):
     paths = []
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = tree_flatten_with_path(tree)
     for path, leaf in flat:
         paths.append((jax.tree_util.keystr(path), leaf))
     return paths, treedef

@@ -1,0 +1,78 @@
+"""JAX version compatibility shims.
+
+The repo targets the newest JAX APIs but must run on older installs (the CI
+image pins jax 0.4.x).  Every cross-version API touch goes through this
+module so call sites stay clean:
+
+* ``tree_flatten_with_path`` — ``jax.tree.flatten_with_path`` (>=0.5) vs
+  ``jax.tree_util.tree_flatten_with_path``;
+* ``make_mesh`` — ``axis_types=`` keyword only exists on newer JAX;
+* ``shard_map`` — moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+  and renamed ``check_rep`` -> ``check_vma``;
+* ``use_mesh`` — ``jax.set_mesh`` (new) vs the plain ``Mesh`` context manager;
+* ``AxisType`` — absent on older JAX (``None`` there; meshes are Auto-typed
+  implicitly).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def tree_flatten_with_path(tree: Any):
+    tree_mod = getattr(jax, "tree", None)
+    if tree_mod is not None and hasattr(tree_mod, "flatten_with_path"):
+        return tree_mod.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(AxisType.Auto,) * len(axis_names))
+        except TypeError:  # pragma: no cover
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` for jit'd code."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if isinstance(mesh, contextlib.AbstractContextManager):
+        return mesh  # Mesh is its own context manager on older jax
+    return contextlib.nullcontext(mesh)  # pragma: no cover
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable ``shard_map`` (replication checking disabled)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check)
+        except TypeError:  # pragma: no cover - some versions use check_rep
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check)
+    from jax.experimental.shard_map import shard_map as _sm  # type: ignore
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)
+
+
+def abstract_mesh():
+    """Active mesh, if the running JAX exposes one (else ``None``)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    # older jax: the thread-local physical mesh from the ``with mesh:`` ctx
+    from jax.interpreters import pxla  # pragma: no cover
+    env = getattr(pxla, "thread_resources", None)
+    return getattr(env, "env", None) and env.env.physical_mesh or None

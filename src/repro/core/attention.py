@@ -2,12 +2,17 @@
 
 Decode path (the paper's target regime):
 
-1. append the new token to the cache (quantized, using prefill statistics);
+1. append the new token to the cache (quantized, using prefill statistics;
+   a full-precision copy lands in the recent ring);
 2. LUT-GEMV scoring entirely in the compressed domain (sign codes + 16-entry
    per-group lookup tables);
-3. top-k selection with sinks excluded and a recent window force-included;
+3. top-k selection over the quantized region — sinks and the recent ring are
+   excluded (they are always attended, at full precision);
 4. gather + dequantize ONLY the selected tokens;
-5. exact softmax attention over ``[sinks ; selected]``.
+5. exact softmax attention over ``[sinks ; recent ring ; selected]``.
+
+Every mask is per-sequence: ``cache.length`` is ``(B,)`` so ragged
+right-padded prompts and continuous-batching slots never attend pad garbage.
 
 A pure-jnp path (always available) and a Pallas-kernel path
 (``cfg.use_kernels``) produce identical results (tested).
@@ -22,7 +27,8 @@ import jax.numpy as jnp
 from repro.config import SIKVConfig
 from repro.core import retrieval as rtr
 from repro.core import policy
-from repro.core.cache import SIKVCache, append_token, gather_dequant
+from repro.core.cache import (SIKVCache, append_token, gather_dequant,
+                              ring_positions)
 
 __all__ = [
     "full_causal_attention",
@@ -62,6 +68,7 @@ def full_causal_attention(
     Args:
       q: ``(B, Hq, Lq, D)``; k/v: ``(B, Hkv, Lk, D)``.
       q_offset: absolute position of q[0] (for decode continuation).
+      mask: optional ``(B, Lk)`` key-validity mask (pad exclusion).
       scale: logit scale; default ``1/sqrt(D)``.
     """
     B, Hq, Lq, D = q.shape
@@ -154,6 +161,31 @@ def masked_attention(
     return out.reshape(B, Hq, 1, v.shape[-1]).astype(q.dtype)
 
 
+def _ring_segment(cache: SIKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-precision recent-ring segment + per-sequence validity.
+
+    A ring slot is attended iff it holds a real position (``>= 0``) that is
+    not already covered by the sink segment.
+
+    Returns ``(ring_k (B,Hkv,R,D), ring_v (B,Hkv,R,Dv), valid (B,Hkv,R))``.
+    """
+    R = cache.recent_window
+    rp = ring_positions(cache.length, R)                     # (B, R)
+    rp_c = jnp.clip(rp, 0, cache.capacity - 1)
+    is_sink = jnp.take_along_axis(cache.sink_mask, rp_c[:, None, :], axis=2)
+    valid = (rp >= 0)[:, None, :] & ~is_sink                 # (B, Hkv, R)
+    return (cache.res_k.astype(jnp.float32),
+            cache.res_v.astype(jnp.float32), valid)
+
+
+def _quant_valid_mask(cache: SIKVCache) -> jax.Array:
+    """Positions eligible for compressed-domain top-k: inside the sequence,
+    older than the recent ring, and not a sink.  ``(B, 1|Hkv, Lmax)``."""
+    pos = jnp.arange(cache.capacity)
+    lo = (cache.length - cache.recent_window)[:, None, None]
+    return (pos[None, None, :] < lo) & ~cache.sink_mask
+
+
 def sikv_decode_attention(
     q: jax.Array,
     k_new: jax.Array,
@@ -169,7 +201,8 @@ def sikv_decode_attention(
     Args:
       q: ``(B, Hq, 1, D)`` current query (RoPE applied).
       k_new, v_new: ``(B, Hkv, 1, D)`` current token's key/value.
-      topk: number of retrieved tokens; default from the budget policy.
+      topk: number of retrieved quantized tokens; default from the budget
+        policy (``budget - sinks - recent_window``).
     Returns:
       ``(attn_out (B, Hq, 1, D), updated cache)``.
     """
@@ -177,7 +210,6 @@ def sikv_decode_attention(
     Hkv = k_new.shape[1]
     cache = append_token(cache, k_new, v_new, cfg)
     Lmax = cache.capacity
-    length = cache.length  # includes the new token
 
     k_dyn = topk if topk is not None else policy.dynamic_k(cfg, Lmax)
     k_dyn = min(k_dyn, Lmax)
@@ -195,19 +227,18 @@ def sikv_decode_attention(
                             cfg.group_size)                # (B, Hkv, G, C)
         scores = rtr.lut_scores(cache.codes, lut)          # (B, Hkv, Lmax)
 
-    pos = jnp.arange(Lmax)
-    valid = (pos < length)[None, None, :] & ~cache.sink_mask
-    forced = (pos >= length - cfg.recent_window)[None, None, :] & valid
+    valid = _quant_valid_mask(cache)
     idx, vals = rtr.select_topk(
-        scores, k_dyn,
-        valid_mask=jnp.broadcast_to(valid, scores.shape),
-        forced_mask=jnp.broadcast_to(forced, scores.shape))
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
     sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
                                    scores.dtype)
+    ring_k, ring_v, ring_valid = _ring_segment(cache)
+    S = cache.num_sinks
+    sink_valid = jnp.ones((B, Hkv, S), bool)
 
     if cfg.use_kernels:
         # fused dequant+flash kernel over the selected tokens, exact merge
-        # with the full-precision sink segment
+        # with the full-precision [sinks ; ring] segment
         from repro.kernels import ops as kops
         take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
         acc, m, l = kops.sparse_attention_decode(
@@ -229,36 +260,49 @@ def sikv_decode_attention(
     # ---- gather + dequantize only the selected tokens ----------------------
     k_sel, v_sel = gather_dequant(cache, idx, cfg)
 
-    # ---- exact attention over [sinks ; selected] ---------------------------
+    # ---- exact attention over [sinks ; ring ; selected] --------------------
     k_all = jnp.concatenate(
-        [cache.sink_k.astype(jnp.float32), k_sel], axis=2)
+        [cache.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
     v_all = jnp.concatenate(
-        [cache.sink_v.astype(jnp.float32), v_sel], axis=2)
-    S = cache.num_sinks
-    sink_valid = jnp.ones((B, Hkv, S), bool)
-    valid_all = jnp.concatenate([sink_valid, sel_valid], axis=2)
+        [cache.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
+    valid_all = jnp.concatenate([sink_valid, ring_valid, sel_valid], axis=2)
     out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
     return out, cache
 
 
-def _sink_flash_state(q: jax.Array, cache: SIKVCache, scale: float | None):
-    """Unnormalized flash state of the full-precision sink segment.
+def _fp_flash_state(q: jax.Array, k_fp: jax.Array, v_fp: jax.Array,
+                    valid: jax.Array, scale: float | None):
+    """Unnormalized flash state of a full-precision segment.
 
-    Returns ``(acc (B,Hq,D), m (B,Hq), l (B,Hq))``.
+    Args: q ``(B, Hq, 1, D)``; k_fp/v_fp ``(B, Hkv, T, ·)``;
+    valid ``(B, Hkv, T)``.
+    Returns ``(acc (B,Hq,Dv), m (B,Hq), l (B,Hq))``.
     """
     B, Hq, _, D = q.shape
-    Hkv = cache.sink_k.shape[1]
+    Hkv = k_fp.shape[1]
     g = Hq // Hkv
     sc = scale if scale is not None else 1.0 / float(D) ** 0.5
     qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
-    logits = jnp.einsum("bhgd,bhsd->bhgs", qg,
-                        cache.sink_k.astype(jnp.float32)) * sc
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k_fp) * sc
+    logits = jnp.where(valid[:, :, None, :], logits, _NEG)
     m = jnp.max(logits, axis=-1)
     p = jnp.exp(logits - m[..., None])
     l = jnp.sum(p, axis=-1)
-    acc = jnp.einsum("bhgs,bhsd->bhgd", p, cache.sink_v.astype(jnp.float32))
-    Dv = cache.sink_v.shape[-1]
+    acc = jnp.einsum("bhgs,bhsd->bhgd", p, v_fp)
+    Dv = v_fp.shape[-1]
     return (acc.reshape(B, Hq, Dv), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def _sink_flash_state(q: jax.Array, cache: SIKVCache, scale: float | None):
+    """Flash state of ``[sinks ; recent ring]`` (both full precision)."""
+    B, Hq = q.shape[:2]
+    Hkv = cache.sink_k.shape[1]
+    ring_k, ring_v, ring_valid = _ring_segment(cache)
+    k_fp = jnp.concatenate([cache.sink_k.astype(jnp.float32), ring_k], 2)
+    v_fp = jnp.concatenate([cache.sink_v.astype(jnp.float32), ring_v], 2)
+    valid = jnp.concatenate(
+        [jnp.ones((B, Hkv, cache.num_sinks), bool), ring_valid], 2)
+    return _fp_flash_state(q, k_fp, v_fp, valid, scale)
 
 
 def sikv_static_attention(
@@ -269,10 +313,11 @@ def sikv_static_attention(
     topk: int | None = None,
     scale: float | None = None,
 ) -> jax.Array:
-    """Sparse attention over a *static* SIKV cache (no append, no recent
-    window) — used for encoder-decoder cross attention.
+    """Sparse attention over a *static* SIKV cache (no append) — used for
+    encoder-decoder cross attention.  The sink and ring segments are always
+    attended at full precision, matching the decode path.
 
-    Args: q ``(B, Hq, 1, D)``.  Returns ``(B, Hq, 1, D)``.
+    Args: q ``(B, Hq, 1, D)``.  Returns ``(B, Hq, 1, Dv)``.
     """
     B, Hq, _, D = q.shape
     Hkv = cache.sink_k.shape[1]
@@ -285,16 +330,18 @@ def sikv_static_attention(
                         cache.centroids.astype(jnp.float32), cfg.group_size)
     scores = rtr.lut_scores(cache.codes, lut)
 
-    pos = jnp.arange(Lmax)
-    valid = (pos < cache.length)[None, None, :] & ~cache.sink_mask
+    valid = _quant_valid_mask(cache)
     idx, vals = rtr.select_topk(
         scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
     sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
                                    scores.dtype)
     k_sel, v_sel = gather_dequant(cache, idx, cfg)
-    k_all = jnp.concatenate([cache.sink_k.astype(jnp.float32), k_sel], axis=2)
-    v_all = jnp.concatenate([cache.sink_v.astype(jnp.float32), v_sel], axis=2)
+    ring_k, ring_v, ring_valid = _ring_segment(cache)
+    k_all = jnp.concatenate(
+        [cache.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [cache.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
     S = cache.num_sinks
     valid_all = jnp.concatenate(
-        [jnp.ones((B, Hkv, S), bool), sel_valid], axis=2)
+        [jnp.ones((B, Hkv, S), bool), ring_valid, sel_valid], axis=2)
     return masked_attention(q, k_all, v_all, valid_all, scale=scale)

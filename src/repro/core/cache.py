@@ -8,14 +8,20 @@ A :class:`SIKVCache` holds, per layer:
 * ``kmag``/``v_q`` — bit-packed 2-bit magnitudes/values + token-wise
                      group scales/zero-points;
 * ``sink_k/v``     — 64 full-precision SnapKV-selected sink tokens;
+* ``res_k/v``      — a full-precision ring over the ``recent_window`` most
+                     recent tokens (KIVI-style residual); the recent window
+                     is *always attended* and attends exactly instead of
+                     round-tripping through the 2-bit store;
 * ``mu/alpha/centroids`` — the prefill-time normalization statistics and the
                      one-pass codebook, **reused during decoding** (paper:
                      "The per-channel scaling factors α are also reused
                      during the decoding stage").
 
-All arrays have a static capacity ``Lmax``; ``length`` tracks the number of
-valid tokens.  Every update is functional (returns a new cache pytree) so the
-whole structure jits/shards cleanly.
+All arrays have a static capacity ``Lmax``.  ``length`` is a ``(B,)`` vector
+— every sequence in the batch owns its own valid length, so ragged
+(right-padded) prompts and continuous-batching slots coexist in one cache
+without attending pad garbage.  Every update is functional (returns a new
+cache pytree) so the whole structure jits/shards cleanly.
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ from repro.core import quantization as qz
 from repro.core import policy
 
 __all__ = ["SIKVCache", "init_cache", "prefill_compress", "append_token",
-           "gather_dequant", "cache_spec_shapes"]
+           "gather_dequant", "cache_spec_shapes", "ring_positions",
+           "batched_update_token"]
 
 
 class SIKVCache(NamedTuple):
@@ -42,12 +49,14 @@ class SIKVCache(NamedTuple):
     v_scale: jax.Array    # (B, H, Lmax, D//qg)        scale_dtype
     v_zp: jax.Array       # (B, H, Lmax, D//qg)        scale_dtype
     sink_k: jax.Array     # (B, H, S, D)               full precision
-    sink_v: jax.Array     # (B, H, S, D)
+    sink_v: jax.Array     # (B, H, S, Dv)
     sink_mask: jax.Array  # (B, H, Lmax)               bool
+    res_k: jax.Array      # (B, H, R, D)               full-precision ring
+    res_v: jax.Array      # (B, H, R, Dv)
     mu: jax.Array         # (B, H, 1, D)
     alpha: jax.Array      # (B, H, 1, D)
     centroids: jax.Array  # (B, H, G, C, gs)
-    length: jax.Array     # ()                         int32
+    length: jax.Array     # (B,)                       int32
 
     @property
     def capacity(self) -> int:
@@ -61,6 +70,10 @@ class SIKVCache(NamedTuple):
     def num_sinks(self) -> int:
         return self.sink_k.shape[2]
 
+    @property
+    def recent_window(self) -> int:
+        return self.res_k.shape[2]
+
 
 def cache_spec_shapes(
     cfg: SIKVConfig, batch: int, num_kv_heads: int, capacity: int,
@@ -73,7 +86,9 @@ def cache_spec_shapes(
     C = cfg.codebook_size
     qg = effective_quant_group(head_dim, cfg.quant_group)
     S = cfg.num_sink_tokens
+    R = cfg.recent_window
     B, H, L, D = batch, num_kv_heads, capacity, head_dim
+    Dv = cfg.value_slice or D
     vw = 0 if cfg.value_slice else D * cfg.value_bits // 8
     vs = 0 if cfg.value_slice else D // qg
     return dict(
@@ -85,12 +100,14 @@ def cache_spec_shapes(
         v_scale=((B, H, L, vs), scale_dtype),
         v_zp=((B, H, L, vs), scale_dtype),
         sink_k=((B, H, S, D), dtype),
-        sink_v=((B, H, S, cfg.value_slice or D), dtype),
+        sink_v=((B, H, S, Dv), dtype),
         sink_mask=((B, H, L), jnp.bool_),
+        res_k=((B, H, R, D), dtype),
+        res_v=((B, H, R, Dv), dtype),
         mu=((B, H, 1, D), dtype),
         alpha=((B, H, 1, D), dtype),
         centroids=((B, H, G, C, gs), dtype),
-        length=((), jnp.int32),
+        length=((B,), jnp.int32),
     )
 
 
@@ -111,6 +128,42 @@ def _pad_to(x: jax.Array, capacity: int, axis: int = 2) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def ring_positions(length: jax.Array, window: int) -> jax.Array:
+    """Absolute position held by each ring slot, per sequence.
+
+    Slot ``i`` stores the unique position ``p`` in ``[length - R, length)``
+    with ``p % R == i``.  Negative entries mean "slot not yet written".
+
+    Args:
+      length: ``(B,)`` current lengths.
+    Returns:
+      ``(B, R)`` int32 positions (may be negative => invalid).
+    """
+    i = jnp.arange(window)[None, :]
+    l = length[:, None]
+    return l - window + ((i - l) % window)
+
+
+def batched_update_token(buf: jax.Array, val: jax.Array,
+                         pos: jax.Array) -> jax.Array:
+    """Write one token per sequence at per-sequence positions (axis 2).
+
+    ``buf (B, H, L, ...)``, ``val (B, H, 1, ...)``, ``pos (B,)``.
+    Lowers to a scatter (one row per sequence, in-place under jit) rather
+    than an O(L) masked select.  Out-of-range positions (``pos >= L`` or
+    ``< 0``) write nothing, which makes retired-but-still-stepping serving
+    slots memory-safe.
+    """
+    B, L = buf.shape[0], buf.shape[2]
+    ok = (pos >= 0) & (pos < L)
+    p = jnp.clip(pos, 0, L - 1)
+    b = jnp.arange(B)
+    cur = buf[b, :, p]                                   # (B, H, ...)
+    new = jnp.where(ok.reshape((B,) + (1,) * (buf.ndim - 2)),
+                    val[:, :, 0].astype(buf.dtype), cur)
+    return buf.at[b, :, p].set(new)
+
+
 def prefill_compress(
     k: jax.Array,
     v: jax.Array,
@@ -118,7 +171,8 @@ def prefill_compress(
     cfg: SIKVConfig,
     *,
     capacity: int | None = None,
-    causal_offset: int | None = None,
+    causal_offset: int | jax.Array | None = None,
+    lengths: jax.Array | None = None,
     scale_dtype=jnp.bfloat16,
 ) -> SIKVCache:
     """Compress full-precision prefill K/V into a self-indexing cache.
@@ -128,18 +182,42 @@ def prefill_compress(
       q_obs: ``(B, H, W, D)`` observation-window queries, already reduced to
         one per KV head (sum query heads of each GQA group).
       capacity: total cache capacity ``Lmax >= L`` (default: L).
+      lengths: optional ``(B,)`` per-sequence valid prompt lengths for
+        right-padded batches.  Pad tokens are excluded from the
+        normalization statistics (``mu``/``alpha``), the codebook, and the
+        sink vote, and can never be retrieved (``length`` masks them).
     """
     B, H, L, D = k.shape
     Lmax = capacity or L
     gs = cfg.group_size
-    offset = L - q_obs.shape[2] if causal_offset is None else causal_offset
+    R = cfg.recent_window
+    if lengths is None:
+        lengths = jnp.full((B,), L, jnp.int32)
+    else:
+        lengths = jnp.clip(jnp.asarray(lengths, jnp.int32), 0, L)
+    W = q_obs.shape[2]
+    qpos = None
+    if causal_offset is None:
+        offset = jnp.maximum(lengths - W, 0)
+        # the observation window is gathered with clipping (see
+        # models.transformer._obs_queries): prompts shorter than W repeat
+        # the position-0 query, so each slot votes under its query's TRUE
+        # position — slot-index positions would let it vote acausally
+        qpos = jnp.clip(lengths[:, None] - W + jnp.arange(W)[None, :],
+                        0, L - 1)
+    else:
+        offset = jnp.asarray(causal_offset)
+        if offset.ndim == 0:
+            offset = jnp.broadcast_to(offset, (B,))
+    key_valid = jnp.arange(L)[None, :] < lengths[:, None]      # (B, L)
+    kv_mask = key_valid[:, None, :]                            # (B, 1, L)
 
-    # 1) entropy-aware normalization + one-pass sign codebook
-    codes, centroids, mu = cb.build_self_index(k, gs)
+    # 1) entropy-aware normalization + one-pass sign codebook (pad-masked)
+    codes, centroids, mu = cb.build_self_index(k, gs, mask=kv_mask)
 
     # 2) key-magnitude quantization (signs live in ``codes``)
     k_norm = k - mu
-    alpha = qz.channel_alpha(k_norm)
+    alpha = qz.channel_alpha(k_norm, mask=kv_mask)
     kq = qz.quantize_key_magnitude(k_norm, alpha, cfg.key_bits, cfg.quant_group)
 
     # 3) token-wise value quantization (skipped when the value is a slice
@@ -151,13 +229,23 @@ def prefill_compress(
     else:
         vq = qz.quantize_tokenwise(v, cfg.value_bits, cfg.quant_group)
 
-    # 4) SnapKV sink selection on the *original* keys
+    # 4) SnapKV sink selection on the *original* keys (pads never win)
     sink_pos, sink_mask = policy.select_sink_tokens(
-        q_obs, k, cfg.num_sink_tokens, causal_offset=offset)
+        q_obs, k, cfg.num_sink_tokens, causal_offset=offset,
+        key_valid=key_valid, query_positions=qpos)
     take = lambda x: jnp.take_along_axis(x, sink_pos[..., None], axis=2)
     sink_k, sink_v = take(k), take(v)
+
+    # 5) full-precision recent ring: the last R valid tokens per sequence
+    rp = ring_positions(lengths, R)                            # (B, R)
+    rp_c = jnp.clip(rp, 0, L - 1)[:, None, :, None]
+    res_k = jnp.take_along_axis(k, rp_c, axis=2)
+    res_v = jnp.take_along_axis(v, rp_c, axis=2)
+    res_k = jnp.where((rp >= 0)[:, None, :, None], res_k, 0.0)
+    res_v = jnp.where((rp >= 0)[:, None, :, None], res_v, 0.0)
     if cfg.value_slice:
         sink_v = sink_v[..., : cfg.value_slice]
+        res_v = res_v[..., : cfg.value_slice]
 
     sd = scale_dtype
     return SIKVCache(
@@ -171,16 +259,19 @@ def prefill_compress(
         sink_k=sink_k,
         sink_v=sink_v,
         sink_mask=_pad_to(sink_mask, Lmax, axis=2),
+        res_k=res_k,
+        res_v=res_v,
         mu=mu,
         alpha=alpha,
         centroids=centroids,
-        length=jnp.asarray(L, jnp.int32),
+        length=lengths,
     )
 
 
 def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
                  cfg: SIKVConfig) -> SIKVCache:
-    """Append one decode-step token, quantized with the prefill statistics.
+    """Append one decode-step token per sequence, quantized with the prefill
+    statistics; each sequence writes at its own ``length``.
 
     Args:
       k_new, v_new: ``(B, H, 1, D)``.
@@ -193,12 +284,15 @@ def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
         empty = jnp.zeros(k_new.shape[:3] + (0,))
         vq = qz.QuantizedTensor(empty.astype(jnp.int8), empty, empty,
                                 cfg.value_bits, cfg.quant_group, 0)
+        v_ring = v_new[..., : cfg.value_slice]
     else:
         vq = qz.quantize_tokenwise(v_new, cfg.value_bits, cfg.quant_group)
+        v_ring = v_new
 
-    pos = cache.length
-    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-        buf, val.astype(buf.dtype), pos, axis=2)
+    pos = cache.length                                       # (B,)
+    R = cache.recent_window
+    upd = lambda buf, val: batched_update_token(buf, val, pos)
+    slot = pos % R
     return cache._replace(
         codes=upd(cache.codes, codes),
         kmag=upd(cache.kmag, kq.packed),
@@ -207,6 +301,8 @@ def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
         v_q=upd(cache.v_q, vq.packed),
         v_scale=upd(cache.v_scale, vq.scale),
         v_zp=upd(cache.v_zp, vq.zp),
+        res_k=batched_update_token(cache.res_k, k_new, slot),
+        res_v=batched_update_token(cache.res_v, v_ring, slot),
         length=cache.length + 1,
     )
 

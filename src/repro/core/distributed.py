@@ -18,6 +18,11 @@ global top-k to per-partition top-k (standard distributed-ANN relaxation;
 the union still contains every global top-(k/n) winner per shard and
 empirically matches global top-k recall on structured caches — tested).
 
+Per-sequence state: ``cache.length`` is ``(B,)`` — each sequence appends at
+its own position (the owning shard writes, the rest no-op) and masks
+validity per sequence.  The replicated full-precision segments (sinks +
+recent ring) merge outside the shard_map.
+
 The same machinery runs the ``long_500k`` context-parallel configuration by
 sharding the sequence over all mesh axes.
 """
@@ -30,10 +35,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map as compat_shard_map
 from repro.config import SIKVConfig
 from repro.core import retrieval as rtr
 from repro.core.attention import _sink_flash_state, group_queries
-from repro.core.cache import SIKVCache, gather_dequant
+from repro.core.cache import SIKVCache, batched_update_token, gather_dequant
 
 __all__ = ["seq_parallel_sikv_decode", "SeqParallelSIKVAttention"]
 
@@ -44,19 +50,15 @@ def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
     B, Hq, _, D = q.shape
     Hkv = cache.codes.shape[1]
     L_local = cache.codes.shape[2]
-    n_shards = 1
-    for a in seq_axes:
-        n_shards *= jax.lax.axis_size(a)
     shard_id = jax.lax.axis_index(seq_axes)
 
-    # ---- local append: write the new token if its position is ours --------
+    # ---- local append: each sequence writes iff its position is ours ------
     from repro.core import codebook as cb
     from repro.core import quantization as qz
-    new_len = cache.length + 1
-    pos_global = cache.length
-    local_pos = pos_global - shard_id * L_local
-    in_shard = (local_pos >= 0) & (local_pos < L_local)
-    lp = jnp.clip(local_pos, 0, L_local - 1)
+    new_len = cache.length + 1                       # (B,)
+    pos_global = cache.length                        # (B,)
+    local_pos = pos_global - shard_id * L_local      # (B,) may be OOB
+    R = cache.recent_window
 
     k_norm = k_new - cache.mu
     codes_new = cb.sign_codes(k_norm, cfg.group_size)
@@ -64,11 +66,10 @@ def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
                                    cfg.key_bits, cfg.quant_group)
     vq = qz.quantize_tokenwise(v_new, cfg.value_bits, cfg.quant_group)
 
-    def upd(buf, val):
-        cur = jax.lax.dynamic_slice_in_dim(buf, lp, 1, axis=2)
-        val = jnp.where(in_shard, val.astype(buf.dtype), cur)
-        return jax.lax.dynamic_update_slice_in_dim(buf, val, lp, axis=2)
-
+    # batched_update_token no-ops on out-of-range positions, so sequences
+    # whose append lands in another shard write nothing here
+    upd = lambda buf, val: batched_update_token(buf, val, local_pos)
+    slot = pos_global % R                            # ring replicated
     cache = cache._replace(
         codes=upd(cache.codes, codes_new),
         kmag=upd(cache.kmag, kq.packed),
@@ -77,6 +78,8 @@ def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
         v_q=upd(cache.v_q, vq.packed),
         v_scale=upd(cache.v_scale, vq.scale),
         v_zp=upd(cache.v_zp, vq.zp),
+        res_k=batched_update_token(cache.res_k, k_new, slot),
+        res_v=batched_update_token(cache.res_v, v_new, slot),
         length=new_len,
     )
 
@@ -86,13 +89,12 @@ def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
                         cache.centroids.astype(jnp.float32), cfg.group_size)
     scores = rtr.lut_scores(cache.codes, lut)              # (B, Hkv, L_local)
 
-    gpos = shard_id * L_local + jnp.arange(L_local)
-    valid = (gpos < new_len)[None, None, :] & ~cache.sink_mask
-    forced = (gpos >= new_len - cfg.recent_window)[None, None, :] & valid
+    gpos = shard_id * L_local + jnp.arange(L_local)        # (L_local,)
+    # quantized-region candidates: inside the sequence, older than the ring
+    valid = (gpos[None, None, :] < (new_len - R)[:, None, None]) \
+        & ~cache.sink_mask
     idx, vals = rtr.select_topk(
-        scores, k_local,
-        valid_mask=jnp.broadcast_to(valid, scores.shape),
-        forced_mask=jnp.broadcast_to(forced, scores.shape))
+        scores, k_local, valid_mask=jnp.broadcast_to(valid, scores.shape))
     sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
                                    scores.dtype)
 
@@ -135,10 +137,9 @@ def seq_parallel_sikv_decode(
         n_shards *= mesh.shape[a]
     k_total = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
                   Lmax)
-    # per-shard quota: ceil(k/n).  Forced recent-window tokens always win the
-    # +inf bias inside their owning shard's top-k, so no extra headroom is
-    # provisioned (iteration C2: the earlier max(recent_window, .) quota
-    # over-gathered 4x at 500k and pushed the memory term past baseline).
+    # per-shard quota: ceil(k/n) (iteration C2: extra headroom over-gathered
+    # 4x at 500k and pushed the memory term past baseline; the recent window
+    # lives in the replicated fp ring now, so no force-include is needed)
     k_local = max(1, -(-k_total // n_shards))
 
     bspec = batch_axes if B % _axes_size(mesh, batch_axes) == 0 else None
@@ -147,22 +148,23 @@ def seq_parallel_sikv_decode(
     cache_specs = SIKVCache(
         codes=tok, kmag=tok, k_scale=tok, k_zp=tok, v_q=tok, v_scale=tok,
         v_zp=tok, sink_k=rep, sink_v=rep,
-        sink_mask=P(bspec, None, seq_axes), mu=rep, alpha=rep,
-        centroids=P(bspec, None, None, None, None), length=P())
+        sink_mask=P(bspec, None, seq_axes), res_k=rep, res_v=rep,
+        mu=rep, alpha=rep,
+        centroids=P(bspec, None, None, None, None), length=P(bspec))
     qspec = P(bspec, None, None, None)
 
     body = functools.partial(_local_decode_state, cfg=cfg, k_local=k_local,
                              seq_axes=seq_axes, scale=scale)
-    acc, m, l, new_cache = jax.shard_map(
+    acc, m, l, new_cache = compat_shard_map(
         body, mesh=mesh,
         in_specs=(qspec, qspec, qspec, cache_specs),
         out_specs=(P(bspec, None, None), P(bspec, None), P(bspec, None),
                    cache_specs),
-        check_vma=False,
     )(q, k_new, v_new, cache)
 
-    # merge the replicated full-precision sink segment exactly
-    acc_s, m_s, l_s = _sink_flash_state(q, cache, scale)
+    # merge the replicated full-precision [sinks ; ring] segment exactly
+    # (from the updated cache — the ring already holds the new token)
+    acc_s, m_s, l_s = _sink_flash_state(q, new_cache, scale)
     m_all = jnp.maximum(m, m_s)
     a1 = jnp.exp(m - m_all)[..., None]
     a2 = jnp.exp(m_s - m_all)[..., None]
@@ -192,12 +194,14 @@ class SeqParallelSIKVAttention:
         self.batch_axes = batch_axes
         self.seq_axes = seq_axes
 
-    def prefill(self, k, v, q_obs, *, capacity=None):
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None):
         from repro.core.cache import prefill_compress
-        return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity)
+        return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity,
+                                lengths=lengths)
 
     def decode(self, q, k_new, v_new, cache, *, scale=None):
-        mesh = self.mesh or jax.sharding.get_abstract_mesh()
+        from repro.compat import abstract_mesh
+        mesh = self.mesh or abstract_mesh()
         return seq_parallel_sikv_decode(
             q, k_new, v_new, cache, self.cfg, mesh=mesh,
             batch_axes=self.batch_axes, seq_axes=self.seq_axes, scale=scale)

@@ -5,6 +5,10 @@ observation window of the last ``obs_window`` prefill queries picks
 ``num_sink_tokens`` positions that stay full precision and are *always*
 attended.  The budget policy converts the configured token budget / sparsity
 ratio into the dynamic top-k count.
+
+All entry points accept per-sequence batching: ``causal_offset`` may be a
+``(B,)`` vector (ragged right-padded prompts) and an optional ``key_valid``
+mask keeps pad tokens out of the votes and the sink selection.
 """
 from __future__ import annotations
 
@@ -17,7 +21,10 @@ __all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k"]
 
 
 def snapkv_votes(
-    q_obs: jax.Array, k: jax.Array, *, causal_offset: int = 0
+    q_obs: jax.Array, k: jax.Array, *,
+    causal_offset: int | jax.Array = 0,
+    key_valid: jax.Array | None = None,
+    query_positions: jax.Array | None = None,
 ) -> jax.Array:
     """SnapKV observation-window attention vote.
 
@@ -27,6 +34,14 @@ def snapkv_votes(
       k: ``(..., L, D)`` keys.
       causal_offset: index of the first observation query in the sequence
         (queries may only vote for keys at or before their own position).
+        Scalar, or ``(B,)`` for per-sequence prompt lengths.
+      key_valid: optional ``(B, L)`` (or broadcastable) mask; invalid (pad)
+        keys receive no votes.
+      query_positions: optional ``(B, W)`` exact position of each window
+        query, overriding ``causal_offset + arange(W)``.  Needed when the
+        window was gathered with clipping (prompts shorter than W repeat
+        the position-0 query) — each slot must vote under ITS query's
+        causal mask, not its slot index's.
     Returns:
       votes ``(..., L)`` — attention mass each key received.
     """
@@ -34,10 +49,25 @@ def snapkv_votes(
     logits = jnp.einsum("...wd,...ld->...wl", q_obs, k) / jnp.sqrt(
         jnp.asarray(D, q_obs.dtype))
     W, L = logits.shape[-2], logits.shape[-1]
-    qpos = causal_offset + jnp.arange(W)[:, None]
+    if query_positions is not None:  # (B, W) -> (B, 1, W, 1)
+        qpos = query_positions[:, None, :, None]
+    else:
+        offs = jnp.asarray(causal_offset)
+        if offs.ndim:  # (B,) -> (B, 1, W, 1) against logits (B, H, W, L)
+            qpos = offs[:, None, None, None] \
+                + jnp.arange(W)[None, None, :, None]
+        else:
+            qpos = offs + jnp.arange(W)[:, None]
     kpos = jnp.arange(L)[None, :]
+    allowed = kpos <= qpos
+    if key_valid is not None:
+        kv = key_valid
+        while kv.ndim < logits.ndim:
+            kv = kv[:, None] if kv.ndim >= 1 else kv[None]
+        # key_valid (B, L) -> (B, 1, 1, L)
+        allowed = allowed & kv
     neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
-    logits = jnp.where(kpos <= qpos, logits, neg)
+    logits = jnp.where(allowed, logits, neg)
     probs = jax.nn.softmax(logits, axis=-1)
     return jnp.sum(probs, axis=-2)
 
@@ -47,23 +77,45 @@ def select_sink_tokens(
     k: jax.Array,
     num_sinks: int,
     *,
-    causal_offset: int = 0,
+    causal_offset: int | jax.Array = 0,
+    key_valid: jax.Array | None = None,
+    query_positions: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Pick the ``num_sinks`` highest-vote positions.
 
+    Pad keys (``key_valid`` False) are never selected; if a sequence has
+    fewer than ``num_sinks`` valid tokens the surplus slots degenerate to
+    position 0 (a valid token attended with extra weight).
+
     Returns ``(positions (..., S) int32, sink_mask (..., L) bool)``.
     """
-    votes = snapkv_votes(q_obs, k, causal_offset=causal_offset)
+    votes = snapkv_votes(q_obs, k, causal_offset=causal_offset,
+                         key_valid=key_valid,
+                         query_positions=query_positions)
     L = votes.shape[-1]
     S = min(num_sinks, L)
-    _, pos = jax.lax.top_k(votes, S)
+    if key_valid is not None:
+        kv = key_valid
+        while kv.ndim < votes.ndim:
+            kv = kv[:, None]
+        neg = jnp.asarray(jnp.finfo(votes.dtype).min, votes.dtype)
+        votes = jnp.where(kv, votes, neg)
+        vals, pos = jax.lax.top_k(votes, S)
+        pos = jnp.where(vals > neg / 2, pos, 0)
+    else:
+        _, pos = jax.lax.top_k(votes, S)
     mask = jnp.zeros(votes.shape, bool)
     mask = jnp.put_along_axis(mask, pos, True, axis=-1, inplace=False)
     return pos.astype(jnp.int32), mask
 
 
 def dynamic_k(cfg: SIKVConfig, seq_len: int) -> int:
-    """Number of dynamically retrieved tokens (budget minus sinks)."""
+    """Number of dynamically retrieved tokens.
+
+    The total attended budget splits three ways: full-precision sinks +
+    the full-precision recent ring (``recent_window``) + this top-k of
+    quantized tokens.
+    """
     budget = cfg.budget_for(seq_len)
-    k = max(1, budget - cfg.num_sink_tokens)
+    k = max(1, budget - cfg.num_sink_tokens - cfg.recent_window)
     return min(k, seq_len)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.config import (INPUT_SHAPES, SIKVConfig, TrainConfig,
                           get_model_config, list_archs)
+from repro.compat import use_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (decode_cache_sds, input_sds,
                                    param_sharded_sds, shard_tree_specs,
@@ -115,7 +116,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
         sikv = dataclasses.replace(sikv, value_slice=cfg.mla.kv_lora_rank)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         rule = (functools.partial(param_spec, expert_fsdp=True)
                 if expert_fsdp else param_spec)
         params_sds = param_sharded_sds(cfg, mesh, rule=rule)

@@ -100,7 +100,8 @@ def param_spec(path: str, shape: Tuple[int, ...], mesh, *,
 def shard_tree_specs(tree_sds: Any, mesh, rule) -> Any:
     """Attach NamedShardings to a ShapeDtypeStruct tree via ``rule(path,
     shape, mesh) -> PartitionSpec``."""
-    flat, treedef = jax.tree.flatten_with_path(tree_sds)
+    from repro.compat import tree_flatten_with_path
+    flat, treedef = tree_flatten_with_path(tree_sds)
     out = []
     for path, leaf in flat:
         spec = rule(jax.tree_util.keystr(path), leaf.shape, mesh)
@@ -185,9 +186,12 @@ def sikv_cache_sds(cfg: ModelConfig, sikv: SIKVConfig, kind: str,
             return P(b, None, seq_axes if l_ok else None, None)
         if name == "sink_mask":
             return P(b, None, seq_axes if l_ok else None)
-        if name in ("sink_k", "sink_v", "mu", "alpha", "centroids"):
+        if name in ("sink_k", "sink_v", "res_k", "res_v", "mu", "alpha",
+                    "centroids"):
             return P(*([b] + [None] * (ndim - 1)))
-        return P()  # length scalar
+        if name == "length":  # (B,) per-sequence lengths
+            return P(b)
+        return P()
 
     out = {}
     for name, (shape, dt) in layout.items():

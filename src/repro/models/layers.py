@@ -33,12 +33,15 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 
     Args:
       x: ``(..., L, D)`` with D even (heads in leading axes).
-      positions: ``(L,)`` or broadcastable absolute positions.
+      positions: ``(L,)`` or ``(B, L)`` (per-sequence decode positions in a
+        ragged batch) absolute positions.
     """
     D = x.shape[-1]
     freqs = rope_freqs(D, theta)                       # (D/2,)
     angles = positions[..., :, None].astype(jnp.float32) * freqs  # (L, D/2)
     cos, sin = jnp.cos(angles), jnp.sin(angles)
+    if positions.ndim == 2 and x.ndim == 4:
+        cos, sin = cos[:, None], sin[:, None]          # (B, 1, L, D/2)
     x1, x2 = x[..., : D // 2], x[..., D // 2:]
     out = jnp.concatenate(
         [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

@@ -218,16 +218,36 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
 # prefill: full attention + cache construction through a sparse method
 # ---------------------------------------------------------------------------
 
+def _obs_queries(q: jax.Array, lengths: Optional[jax.Array], L: int, W: int
+                 ) -> jax.Array:
+    """Last-W *valid* queries per sequence: ``(B, H, L, D) -> (B, H, W, D)``.
+
+    For ragged right-padded prompts the observation window must end at each
+    sequence's own last token, not at the pad tail — pad queries would
+    poison the SnapKV sink vote.
+    """
+    if lengths is None:
+        return q[:, :, L - W:, :]
+    idx = jnp.clip(lengths[:, None] - W + jnp.arange(W)[None, :], 0, L - 1)
+    return jnp.take_along_axis(q, idx[:, None, :, None], axis=2)
+
+
 def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             method, *, capacity: Optional[int] = None, obs_window: int = 32,
             ) -> Tuple[jax.Array, List[Any]]:
     """Exact full-attention prefill; builds each layer's decode cache.
 
-    Returns ``(last-position logits (B, V), caches)``.
+    ``batch["lengths"]`` (optional, ``(B,)``) marks each right-padded
+    sequence's true prompt length: caches record per-sequence lengths, the
+    observation window tracks each sequence's tail, and the returned logits
+    come from each sequence's last *valid* position.
+
+    Returns ``(last-valid-position logits (B, V), caches)``.
     """
     x = embed_inputs(params, cfg, batch)
     B, L, d = x.shape
     positions = jnp.arange(L)
+    lengths = batch.get("lengths")
     W = min(obs_window, L)
     mla_scale = None
     if cfg.mla is not None:
@@ -255,18 +275,22 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             c, k_rope = mla_mod.mla_latent(mp, cfg, h, positions)
             latent_k = mla_mod.mla_latent_key(c, k_rope)     # (B,1,L,r+rope)
             q_eff = mla_mod.mla_effective_query(mp, cfg, q_nope, q_rope)
-            q_obs = group_queries(q_eff[:, :, L - W:, :], 1)  # (B,1,W,r+rope)
+            q_obs = group_queries(
+                _obs_queries(q_eff, lengths, L, W), 1)        # (B,1,W,r+rope)
             entry["self"] = method.prefill(
                 latent_k.astype(jnp.float32),
-                latent_k.astype(jnp.float32), q_obs, capacity=capacity)
+                latent_k.astype(jnp.float32), q_obs, capacity=capacity,
+                lengths=lengths)
             x = x + mla_mod.mla_forward(mp, cfg, h, positions)
         else:
             ap = _attn_params(params, layer, kind)
             q, k, v = attn_project(ap, cfg, h, positions)
-            q_obs = group_queries(q[:, :, L - W:, :], cfg.num_kv_heads)
+            q_obs = group_queries(_obs_queries(q, lengths, L, W),
+                                  cfg.num_kv_heads)
             entry["self"] = method.prefill(k.astype(jnp.float32),
                                            v.astype(jnp.float32), q_obs,
-                                           capacity=capacity)
+                                           capacity=capacity,
+                                           lengths=lengths)
             o = full_causal_attention(q, k, v)
             x = x + attn_output(ap, cfg, o)
         if enc_out is not None:
@@ -275,8 +299,8 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             enc_pos = jnp.zeros((enc_out.shape[1],), jnp.int32)
             cq, ck, cv = attn_project(cl["attn"], cfg, enc_out, enc_pos)
             q_obs_c = group_queries(
-                attn_project(cl["attn"], cfg, hc,
-                             jnp.zeros_like(positions))[0][:, :, L - W:, :],
+                _obs_queries(attn_project(cl["attn"], cfg, hc,
+                             jnp.zeros_like(positions))[0], lengths, L, W),
                 cfg.num_kv_heads)
             entry["cross"] = method.prefill(ck.astype(jnp.float32),
                                             cv.astype(jnp.float32), q_obs_c)
@@ -288,7 +312,12 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         x = x + f
         caches.append(entry)
 
-    x = rms_norm(x[:, -1:, :], params["final_norm"], cfg.rms_norm_eps)
+    if lengths is not None:  # each sequence's last VALID position
+        x = jnp.take_along_axis(
+            x, jnp.clip(lengths - 1, 0, L - 1)[:, None, None], axis=1)
+    else:
+        x = x[:, -1:, :]
+    x = rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
     return _lm_head(params, cfg, x)[:, 0, :], caches
 
 
@@ -303,13 +332,16 @@ def decode_step(params: Params, cfg: ModelConfig,
 
     Args:
       inputs: ``{"tokens": (B, 1)}`` (or ``{"embeds": (B,1,d)}``).
-      pos: scalar int32 — absolute position of this token.
+      pos: int32 absolute position of this token — scalar (lock-step batch)
+        or ``(B,)`` (continuous batching: each slot decodes at its own
+        position; RoPE rotates per sequence).
     Returns:
       ``(logits (B, V), updated caches)``.
     """
     x = embed_inputs(params, cfg, inputs)
     B = x.shape[0]
-    positions = jnp.reshape(pos, (1,))
+    pos = jnp.asarray(pos)
+    positions = pos[:, None] if pos.ndim else jnp.reshape(pos, (1,))
     mla_scale = None
     if cfg.mla is not None:
         mla_scale = 1.0 / float(
@@ -372,7 +404,8 @@ def _attend_static(method, q: jax.Array, cache) -> Tuple[jax.Array, Any]:
         from repro.core.attention import sikv_static_attention
         return sikv_static_attention(q, cache, method.cfg), cache
     if isinstance(cache, FullCache):
-        valid = jnp.arange(cache.capacity)[None, None, :] < cache.length
+        valid = (jnp.arange(cache.capacity)[None, None, :]
+                 < cache.length[:, None, None])
         valid = jnp.broadcast_to(valid, cache.k.shape[:3])
         return masked_attention(q, cache.k, cache.v, valid), cache
     # baselines: dense fallback over whatever full-precision view exists

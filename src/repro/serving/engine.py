@@ -1,16 +1,37 @@
-"""Batched serving engine: prefill -> compress -> sparse decode.
+"""Slot-based serving engine: prefill -> compress -> sparse decode.
 
-The engine owns two jitted programs:
+The engine owns three jitted programs, all with static shapes so each
+compiles exactly once per configuration:
 
-* ``_prefill``: exact full attention over the prompt, then one-pass cache
-  compression per layer (the paper's TT2T regime — compression rides along
-  with prefill);
-* ``_step``: one decode token through the compressed caches (LUT-GEMV
-  scoring + top-k + fused dequant attention when ``sikv.use_kernels``).
+* ``_prefill``      — lock-step batched prefill (exact full attention over
+  the prompts, then one-pass cache compression per layer — the paper's TT2T
+  regime);
+* ``_prefill_one``  — the same program at batch 1, used by continuous
+  batching to admit a single request into a free slot while the other slots
+  keep decoding;
+* ``_step``         — one decode token through the compressed caches for the
+  whole batch; ``pos`` is a ``(B,)`` vector so every slot decodes at its own
+  sequence position (LUT-GEMV scoring + top-k + fused dequant attention when
+  ``sikv.use_kernels``).
 
-Static shapes: prompts are padded to the engine's ``prompt_len`` and the
-cache capacity is ``prompt_len + max_new_tokens``, so both programs compile
-once per configuration.
+Slot lifecycle (continuous batching):
+
+1. ``admit(slot, prompt)`` prefills the request at batch 1, inserts the
+   resulting caches into the slot's batch row (a jitted
+   ``dynamic_update_slice`` over every cache leaf), and returns the first
+   generated token (TTFT point);
+2. ``step()`` advances *all* slots one token; retired/free slots still flow
+   through the program (static shapes) but their outputs are ignored and
+   their cache rows are dead — the next ``admit`` fully overwrites them,
+   and the per-sequence range guard in ``batched_update_token`` stops any
+   write past capacity;
+3. ``retire(slot)`` frees the slot; the next ``admit`` overwrites it without
+   recompiling anything.
+
+Per-request service stats (TTFT/TPOT) are collected by the scheduler from
+the admit/step timestamps; the engine counts program invocations
+(``stats["prefills"]``, ``stats["steps"]``) so batching policies can be
+compared by work actually launched.
 """
 from __future__ import annotations
 
@@ -26,6 +47,14 @@ from repro.models.transformer import Params
 from repro.sparse import get_method
 
 
+def _insert_slot(batched: Any, single: Any, slot: jax.Array) -> Any:
+    """Write a batch-1 cache pytree into row ``slot`` of a batched pytree."""
+    def ins(buf, val):
+        idx = (slot,) + (0,) * (buf.ndim - 1)
+        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+    return jax.tree_util.tree_map(ins, batched, single)
+
+
 class ServingEngine:
     def __init__(self, params: Params, cfg: ModelConfig,
                  sikv: SIKVConfig | None = None, *, method: str = "sikv",
@@ -38,45 +67,76 @@ class ServingEngine:
         self.batch_size = batch_size
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
-        capacity = prompt_len + max_new_tokens
+        self.capacity = prompt_len + max_new_tokens
         self._prefill = jax.jit(functools.partial(
-            prefill, cfg=cfg, method=self.method, capacity=capacity))
+            prefill, cfg=cfg, method=self.method, capacity=self.capacity))
+        self._prefill_one = self._prefill  # same program; batch-1 inputs
         self._step = jax.jit(functools.partial(
             decode_step, cfg=cfg, method=self.method))
+        self._insert = jax.jit(_insert_slot)
+        self.stats: Dict[str, int] = {"prefills": 0, "steps": 0}
+        # live slot state (continuous batching)
+        self._caches: Any = None
+        self._tok = jnp.zeros((batch_size,), jnp.int32)    # next input token
+        self._pos = jnp.full((batch_size,), self.capacity, jnp.int32)
 
-    def pad_prompts(self, prompts: List[List[int]]) -> jnp.ndarray:
-        """Left-truncate / right-pad prompts to ``(batch, prompt_len)``."""
+    # ------------------------------------------------------------------
+    # prompt shaping
+    # ------------------------------------------------------------------
+
+    def pad_prompts(self, prompts: List[List[int]]
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Left-truncate / right-pad prompts to ``(batch, prompt_len)``.
+
+        Returns ``(tokens, lengths)`` — ``lengths (batch,)`` holds each
+        prompt's true (post-truncation) length so pad tokens never pollute
+        cache statistics or retrieval.
+        """
         B, Lp = self.batch_size, self.prompt_len
         out = jnp.zeros((B, Lp), jnp.int32)
+        lens = [0] * B
         for i, p in enumerate(prompts[:B]):
             toks = jnp.asarray(p[-Lp:], jnp.int32)
             out = out.at[i, : toks.shape[0]].set(toks)
-        return out
+            lens[i] = int(toks.shape[0])
+        return out, jnp.asarray(lens, jnp.int32)
+
+    # ------------------------------------------------------------------
+    # lock-step generation (whole batch prefilled and decoded together)
+    # ------------------------------------------------------------------
 
     def generate(self, tokens: jnp.ndarray,
                  extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
-                 *, max_new_tokens: Optional[int] = None
+                 *, lengths: Optional[jnp.ndarray] = None,
+                 max_new_tokens: Optional[int] = None
                  ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-        """Greedy generation.
+        """Greedy lock-step generation.
 
         Args:
-          tokens: ``(batch, prompt_len)`` int32.
+          tokens: ``(batch, prompt_len)`` int32 (right-padded).
+          lengths: optional ``(batch,)`` true prompt lengths.
         Returns:
           ``(generated (batch, n_new), stats)``.
         """
         n_new = max_new_tokens or self.max_new_tokens
         batch = {"tokens": tokens}
+        if lengths is not None:
+            batch["lengths"] = jnp.asarray(lengths, jnp.int32)
         if extra_inputs:
             batch.update(extra_inputs)
         logits, caches = self._prefill(self.params, batch=batch)
+        self.stats["prefills"] += 1
         outs = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos0 = (batch["lengths"] if lengths is not None
+                else jnp.full((tokens.shape[0],), self.prompt_len, jnp.int32))
         for step in range(n_new):
             outs.append(tok)
-            pos = jnp.asarray(self.prompt_len + step, jnp.int32)
+            pos = pos0 + step
             logits, caches = self._step(
                 self.params, inputs={"tokens": tok[:, None]}, pos=pos,
                 caches=caches)
+            self.stats["steps"] += 1
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         gen = jnp.stack(outs, axis=1)
         stats = {
@@ -85,3 +145,61 @@ class ServingEngine:
             "method": self.method.name,
         }
         return gen, stats
+
+    # ------------------------------------------------------------------
+    # continuous batching: per-slot admit / step / retire
+    # ------------------------------------------------------------------
+
+    def admit(self, slot: int, prompt: List[int]) -> int:
+        """Prefill ``prompt`` into batch row ``slot``; returns the first
+        generated token.  Compiles nothing new after the first call."""
+        assert 0 <= slot < self.batch_size
+        Lp = self.prompt_len
+        toks = jnp.asarray(prompt[-Lp:], jnp.int32)
+        length = int(toks.shape[0])
+        row = jnp.zeros((1, Lp), jnp.int32).at[0, :length].set(toks)
+        batch = {"tokens": row,
+                 "lengths": jnp.asarray([length], jnp.int32)}
+        logits, caches_one = self._prefill_one(self.params, batch=batch)
+        self.stats["prefills"] += 1
+        if self._caches is None:
+            self._caches = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((self.batch_size,) + x.shape[1:],
+                                    x.dtype), caches_one)
+        self._caches = self._insert(self._caches, caches_one,
+                                    jnp.asarray(slot, jnp.int32))
+        first = int(jnp.argmax(logits[0]))
+        self._tok = self._tok.at[slot].set(first)
+        self._pos = self._pos.at[slot].set(length)
+        return first
+
+    def step(self) -> List[int]:
+        """Advance every slot one token; returns the new token per slot.
+
+        Free/retired slots still flow through the program (static shapes —
+        no recompilation); their outputs are garbage and callers ignore
+        them.  Their dead cache rows may keep absorbing writes until their
+        per-sequence length passes capacity (then the range guard no-ops) —
+        harmless, because ``admit`` rebuilds the whole row.
+        """
+        assert self._caches is not None, "admit() at least one request first"
+        logits, self._caches = self._step(
+            self.params, inputs={"tokens": self._tok[:, None]},
+            pos=self._pos, caches=self._caches)
+        self.stats["steps"] += 1
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._tok = tok
+        self._pos = self._pos + 1
+        return [int(t) for t in tok]
+
+    def retire(self, slot: int) -> None:
+        """Free a slot.  Parking the position past capacity keeps RoPE
+        rotations finite; the row's cache contents are simply dead until
+        the next ``admit`` overwrites them (writes past capacity are
+        range-guarded in ``batched_update_token``)."""
+        self._pos = self._pos.at[slot].set(self.capacity)
+        self._tok = self._tok.at[slot].set(0)
+
+    def invocations(self) -> int:
+        """Total jitted program launches (prefills + decode steps)."""
+        return self.stats["prefills"] + self.stats["steps"]

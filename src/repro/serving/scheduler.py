@@ -1,15 +1,26 @@
-"""Request scheduler: groups queued requests into fixed-shape batches.
+"""Request scheduler: continuous batching over engine slots.
 
-Static-shape batching (the TPU-friendly regime): requests are admitted into
-batch slots; a batch launches when full or when ``flush`` is called.  Slot
-padding uses token id 0 and results are trimmed per-request.
+Requests of different prompt/generation lengths occupy independent batch
+slots.  A slot is admitted (batch-1 prefill inserted into the live batch),
+decoded in lock-step with whichever other slots happen to be active, and
+retired the moment its request completes — the freed slot is refilled from
+the queue *mid-decode*, without recompiling (all shapes static).
+
+Compare with lock-step batching (``flush_lockstep``): there, a batch of B
+requests runs until the *longest* request finishes and the queue only
+advances between batches.  Under mixed-length traffic the continuous
+scheduler launches strictly fewer engine programs (measured by
+``engine.invocations()`` — see ``benchmarks/bench_serving.py``).
+
+Per-request service stats: ``ttft`` (submit -> first token, which arrives
+with the admitting prefill) and ``tpot`` (mean seconds per subsequent
+token).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
-
-import jax.numpy as jnp
 
 from repro.serving.engine import ServingEngine
 
@@ -18,8 +29,22 @@ from repro.serving.engine import ServingEngine
 class Request:
     uid: int
     prompt: List[int]
+    # clamped to the engine's max_new_tokens (its cache headroom) at admission
     max_new_tokens: int = 32
     result: Optional[List[int]] = None
+    # service stats (filled by the scheduler)
+    t_submit: float = 0.0
+    ttft: float = 0.0
+    tpot: float = 0.0
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    remaining: int = 0
+    t_last: float = 0.0
+    decode_time: float = 0.0
+    decode_tokens: int = 0
 
 
 @dataclass
@@ -29,23 +54,109 @@ class RequestScheduler:
     completed: Dict[int, Request] = field(default_factory=dict)
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.time()
         self.queue.append(req)
 
-    def _run_batch(self, batch: List[Request]) -> None:
-        tokens = self.engine.pad_prompts([r.prompt for r in batch])
-        n_new = max(r.max_new_tokens for r in batch)
-        gen, _ = self.engine.generate(tokens, max_new_tokens=n_new)
-        for i, req in enumerate(batch):
-            req.result = [int(t) for t in gen[i, : req.max_new_tokens]]
-            self.completed[req.uid] = req
+    # ------------------------------------------------------------------
+    # continuous batching
+    # ------------------------------------------------------------------
+
+    def _admit_next(self, slots: List[_Slot], i: int) -> None:
+        req = self.queue.pop(0)
+        first = self.engine.admit(i, req.prompt)
+        now = time.time()
+        req.result = [first]
+        req.ttft = now - req.t_submit
+        slot = slots[i]
+        slot.req = req
+        # clamp to the engine's cache headroom: past it, appends would
+        # no-op and tokens would degrade silently
+        slot.remaining = min(req.max_new_tokens,
+                             self.engine.max_new_tokens) - 1
+        slot.t_last = now
+        slot.decode_time = 0.0
+        slot.decode_tokens = 0
+        if slot.remaining <= 0:
+            self._retire(slots, i)
+
+    def _retire(self, slots: List[_Slot], i: int) -> None:
+        req = slots[i].req
+        assert req is not None
+        req.tpot = (slots[i].decode_time / slots[i].decode_tokens
+                    if slots[i].decode_tokens else 0.0)
+        self.completed[req.uid] = req
+        slots[i].req = None
+        self.engine.retire(i)
+
+    def run(self) -> int:
+        """Serve the whole queue with continuous batching; returns the
+        number of completed requests."""
+        B = self.engine.batch_size
+        slots = [_Slot() for _ in range(B)]
+        done0 = len(self.completed)
+        while self.queue or any(s.req is not None for s in slots):
+            for i in range(B):
+                if slots[i].req is None and self.queue:
+                    self._admit_next(slots, i)
+            if not any(s.req is not None for s in slots):
+                continue  # every admitted request finished at its prefill;
+                # keep draining the queue
+            toks = self.engine.step()
+            now = time.time()
+            for i in range(B):
+                slot = slots[i]
+                if slot.req is None:
+                    continue
+                slot.req.result.append(toks[i])
+                slot.decode_time += now - slot.t_last
+                slot.decode_tokens += 1
+                slot.t_last = now
+                slot.remaining -= 1
+                if slot.remaining <= 0:
+                    self._retire(slots, i)
+        return len(self.completed) - done0
 
     def flush(self) -> int:
-        """Run all queued requests; returns number completed."""
+        """Serve all queued requests (continuous batching)."""
+        return self.run()
+
+    # ------------------------------------------------------------------
+    # lock-step baseline (kept for apples-to-apples benchmarking)
+    # ------------------------------------------------------------------
+
+    def _run_batch_lockstep(self, batch: List[Request]) -> None:
+        tokens, lengths = self.engine.pad_prompts([r.prompt for r in batch])
+        n_new = min(max(r.max_new_tokens for r in batch),
+                    self.engine.max_new_tokens)
+        gen, _ = self.engine.generate(tokens, lengths=lengths,
+                                      max_new_tokens=n_new)
+        now = time.time()
+        for i, req in enumerate(batch):
+            req.result = [int(t) for t in gen[i, : req.max_new_tokens]]
+            req.ttft = now - req.t_submit
+            req.tpot = (now - req.t_submit) / max(1, len(req.result))
+            self.completed[req.uid] = req
+
+    def flush_lockstep(self) -> int:
+        """Seed-style lock-step batching: fixed request groups, each batch
+        runs to the longest member, queue advances only between batches."""
         done = 0
         B = self.engine.batch_size
         while self.queue:
             batch = self.queue[:B]
             self.queue = self.queue[B:]
-            self._run_batch(batch)
+            self._run_batch_lockstep(batch)
             done += len(batch)
         return done
+
+    # ------------------------------------------------------------------
+
+    def service_stats(self) -> Dict[str, float]:
+        """Aggregate TTFT/TPOT over completed requests (seconds)."""
+        if not self.completed:
+            return {"ttft_mean": 0.0, "tpot_mean": 0.0}
+        reqs = list(self.completed.values())
+        return {
+            "ttft_mean": sum(r.ttft for r in reqs) / len(reqs),
+            "tpot_mean": sum(r.tpot for r in reqs) / len(reqs),
+        }

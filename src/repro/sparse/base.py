@@ -2,11 +2,16 @@
 
 Every method implements:
 
-* ``prefill(k, v, q_obs, *, capacity) -> cache`` — build its cache from the
-  full-precision prefill K/V (``(B, Hkv, L, D)``) and the observation-window
-  queries ``q_obs (B, Hkv, W, D)`` (query heads already summed per GQA group);
+* ``prefill(k, v, q_obs, *, capacity, lengths=None) -> cache`` — build its
+  cache from the full-precision prefill K/V (``(B, Hkv, L, D)``) and the
+  observation-window queries ``q_obs (B, Hkv, W, D)`` (query heads already
+  summed per GQA group).  ``lengths (B,)`` marks the valid prompt length of
+  each right-padded sequence; pad tokens must never be attended, selected as
+  sinks, or pollute any statistics;
 * ``decode(q, k_new, v_new, cache, *, scale=None) -> (out, cache)`` — one
   decode step: ``q (B, Hq, 1, D)``, new token's k/v ``(B, Hkv, 1, D)``.
+  Each sequence appends at its own ``cache.length`` entry — all caches keep
+  per-sequence ``(B,)`` lengths so ragged batches decode correctly.
 
 The budget semantics (token budget / sparsity ratio / sinks / recent window)
 come from the shared :class:`repro.config.SIKVConfig` so all methods are
@@ -17,6 +22,7 @@ from __future__ import annotations
 from typing import Any, Protocol, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 
@@ -26,8 +32,23 @@ class AttentionMethod(Protocol):
     cfg: SIKVConfig
 
     def prefill(self, k: jax.Array, v: jax.Array, q_obs: jax.Array,
-                *, capacity: int | None = None) -> Any: ...
+                *, capacity: int | None = None,
+                lengths: jax.Array | None = None) -> Any: ...
 
     def decode(self, q: jax.Array, k_new: jax.Array, v_new: jax.Array,
                cache: Any, *, scale: float | None = None
                ) -> Tuple[jax.Array, Any]: ...
+
+
+def full_lengths(batch: int, L: int,
+                 lengths: jax.Array | None) -> jax.Array:
+    """``(B,)`` int32 lengths; defaults to the full (unpadded) ``L``."""
+    if lengths is None:
+        return jnp.full((batch,), L, jnp.int32)
+    return jnp.clip(jnp.asarray(lengths, jnp.int32), 0, L)
+
+
+def length_valid_mask(length: jax.Array, capacity: int) -> jax.Array:
+    """Per-sequence validity over token positions: ``(B, 1, capacity)``."""
+    pos = jnp.arange(capacity)
+    return pos[None, None, :] < length[:, None, None]

@@ -6,6 +6,9 @@ approximates the attention scores; the top-k tokens under the approximate
 scores get full-precision attention.  Equivalent to a 2-bit-per-parameter
 index over the key cache (16/128 channels × fp16), matching the paper's
 "Cache Bits (K,V,Index) = 16,16,2" row.
+
+Per-sequence lengths: channel saliency excludes pad tokens; append and
+validity are per sequence.
 """
 from __future__ import annotations
 
@@ -16,7 +19,9 @@ import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 from repro.core.attention import group_queries, masked_attention
+from repro.core.cache import batched_update_token
 from repro.core.retrieval import select_topk
+from repro.sparse.base import full_lengths
 
 
 class DoubleSparseCache(NamedTuple):
@@ -24,7 +29,7 @@ class DoubleSparseCache(NamedTuple):
     v: jax.Array         # (B, H, Lmax, D)
     k_label: jax.Array   # (B, H, Lmax, R) — label-channel slice of k
     channels: jax.Array  # (B, H, R) int32 — label channel ids
-    length: jax.Array    # ()
+    length: jax.Array    # (B,)
 
     @property
     def capacity(self) -> int:
@@ -38,20 +43,25 @@ class DoubleSparseAttention:
         self.cfg = cfg or SIKVConfig()
         self.num_channels = num_channels
 
-    def prefill(self, k, v, q_obs, *, capacity=None) -> DoubleSparseCache:
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None
+                ) -> DoubleSparseCache:
         B, H, L, D = k.shape
         R = min(self.num_channels, D)
         cap = capacity or L
-        # channel saliency: E|q| * E|k| per channel (AWQ-style proxy)
+        lens = full_lengths(B, L, lengths)
+        kmask = (jnp.arange(L)[None, :] < lens[:, None])[:, None, :, None]
+        denom = jnp.maximum(lens, 1)[:, None, None].astype(k.dtype)
+        # channel saliency: E|q| * E|k| per channel (AWQ-style proxy),
+        # means over valid tokens only
         sal = (jnp.mean(jnp.abs(q_obs), axis=2)
-               * jnp.mean(jnp.abs(k), axis=2))         # (B, H, D)
+               * jnp.sum(jnp.abs(k) * kmask, axis=2) / denom)   # (B, H, D)
         _, channels = jax.lax.top_k(sal, R)
         k_label = jnp.take_along_axis(k, channels[:, :, None, :], axis=3)
         pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, cap - L), (0, 0)))
         return DoubleSparseCache(
             k=pad(k), v=pad(v), k_label=pad(k_label),
             channels=channels.astype(jnp.int32),
-            length=jnp.asarray(L, jnp.int32))
+            length=lens)
 
     def decode(self, q, k_new, v_new, cache: DoubleSparseCache, *, scale=None
                ) -> Tuple[jax.Array, DoubleSparseCache]:
@@ -59,13 +69,12 @@ class DoubleSparseAttention:
         B, Hq, _, D = q.shape
         H = k_new.shape[1]
         pos = cache.length
-        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-            buf, val.astype(buf.dtype), pos, axis=2)
         kl_new = jnp.take_along_axis(
             k_new, cache.channels[:, :, None, :], axis=3)
         cache = DoubleSparseCache(
-            k=upd(cache.k, k_new), v=upd(cache.v, v_new),
-            k_label=upd(cache.k_label, kl_new),
+            k=batched_update_token(cache.k, k_new, pos),
+            v=batched_update_token(cache.v, v_new, pos),
+            k_label=batched_update_token(cache.k_label, kl_new, pos),
             channels=cache.channels, length=cache.length + 1)
 
         q_sum = group_queries(q[:, :, 0, :], H)
@@ -76,8 +85,9 @@ class DoubleSparseAttention:
         Lmax = cache.capacity
         budget = min(cfg.budget_for(Lmax), Lmax)
         p = jnp.arange(Lmax)
-        valid = p[None, None, :] < cache.length
-        forced = (p[None, None, :] >= cache.length - cfg.recent_window) & valid
+        length = cache.length[:, None, None]
+        valid = p[None, None, :] < length
+        forced = (p[None, None, :] >= length - cfg.recent_window) & valid
         idx, vals = select_topk(
             scores, budget,
             valid_mask=jnp.broadcast_to(valid, scores.shape),

@@ -8,12 +8,14 @@ import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 from repro.core.attention import masked_attention
+from repro.core.cache import batched_update_token
+from repro.sparse.base import full_lengths, length_valid_mask
 
 
 class FullCache(NamedTuple):
     k: jax.Array       # (B, H, Lmax, D)
     v: jax.Array       # (B, H, Lmax, D)
-    length: jax.Array  # () int32
+    length: jax.Array  # (B,) int32
 
     @property
     def capacity(self) -> int:
@@ -22,10 +24,11 @@ class FullCache(NamedTuple):
 
 def append_kv(cache: FullCache, k_new: jax.Array, v_new: jax.Array
               ) -> FullCache:
-    upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-        buf, val.astype(buf.dtype), cache.length, axis=2)
-    return FullCache(k=upd(cache.k, k_new), v=upd(cache.v, v_new),
-                     length=cache.length + 1)
+    """Per-sequence append: each batch entry writes at its own length."""
+    return FullCache(
+        k=batched_update_token(cache.k, k_new, cache.length),
+        v=batched_update_token(cache.v, v_new, cache.length),
+        length=cache.length + 1)
 
 
 class FullAttention:
@@ -34,17 +37,18 @@ class FullAttention:
     def __init__(self, cfg: SIKVConfig | None = None):
         self.cfg = cfg or SIKVConfig()
 
-    def prefill(self, k, v, q_obs, *, capacity=None) -> FullCache:
-        L = k.shape[2]
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None
+                ) -> FullCache:
+        B, _, L, _ = k.shape
         cap = capacity or L
         pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, cap - L), (0, 0)))
         return FullCache(k=pad(k), v=pad(v),
-                         length=jnp.asarray(L, jnp.int32))
+                         length=full_lengths(B, L, lengths))
 
     def decode(self, q, k_new, v_new, cache: FullCache, *, scale=None
                ) -> Tuple[jax.Array, FullCache]:
         cache = append_kv(cache, k_new, v_new)
-        valid = jnp.arange(cache.capacity)[None, None, :] < cache.length
+        valid = length_valid_mask(cache.length, cache.capacity)
         valid = jnp.broadcast_to(valid, cache.k.shape[:3])
         out = masked_attention(q, cache.k, cache.v, valid, scale=scale)
         return out, cache

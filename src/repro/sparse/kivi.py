@@ -5,6 +5,10 @@ Channel-wise 2-bit K (per-channel scale/zp over the token axis) + token-wise
 attention over ALL tokens with a decompress-then-compute path — the exact
 strategy the paper's Figure 5 shows losing to the fused sparse kernel.
 No sparsity: this isolates the quantization axis of the comparison.
+
+Per-sequence lengths: the channel-wise K statistics are computed over valid
+tokens only, and both the quantized prefix and the residual keep ``(B,)``
+lengths.
 """
 from __future__ import annotations
 
@@ -15,9 +19,11 @@ import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 from repro.core.attention import masked_attention
+from repro.core.cache import batched_update_token
 from repro.core.quantization import (QuantizedTensor, dequantize_tokenwise,
                                      pack_bits, quantize_tokenwise,
                                      unpack_bits)
+from repro.sparse.base import full_lengths
 
 
 class KiviCache(NamedTuple):
@@ -27,10 +33,10 @@ class KiviCache(NamedTuple):
     v_packed: jax.Array   # (B, H, Lq, D*bits//8) int8 (token-wise groups)
     v_scale: jax.Array    # (B, H, Lq, D//qg)
     v_zp: jax.Array       # (B, H, Lq, D//qg)
-    quant_len: jax.Array  # () — number of quantized tokens
+    quant_len: jax.Array  # (B,) — number of quantized tokens per sequence
     res_k: jax.Array      # (B, H, R, D) full-precision residual ring
     res_v: jax.Array      # (B, H, R, D)
-    res_len: jax.Array    # ()
+    res_len: jax.Array    # (B,)
 
     @property
     def capacity(self) -> int:
@@ -44,16 +50,20 @@ class KiviAttention:
         self.cfg = cfg or SIKVConfig()
         self.residual = residual
 
-    def prefill(self, k, v, q_obs, *, capacity=None) -> KiviCache:
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None
+                ) -> KiviCache:
         cfg = self.cfg
         B, H, L, D = k.shape
         bits, qg = cfg.key_bits, cfg.quant_group
         cap = capacity or L
         Lq = cap  # quantized region capacity
+        lens = full_lengths(B, L, lengths)
+        kmask = (jnp.arange(L)[None, :] < lens[:, None])[:, None, :, None]
 
-        # channel-wise K quantization (KIVI's key layout)
-        kmin = jnp.min(k, axis=2, keepdims=True)
-        kmax = jnp.max(k, axis=2, keepdims=True)
+        # channel-wise K quantization (KIVI's key layout), valid tokens only
+        big = jnp.asarray(jnp.finfo(k.dtype).max, k.dtype)
+        kmin = jnp.min(jnp.where(kmask, k, big), axis=2, keepdims=True)
+        kmax = jnp.max(jnp.where(kmask, k, -big), axis=2, keepdims=True)
         levels = (1 << bits) - 1
         ks = jnp.where(kmax > kmin, (kmax - kmin) / levels, 1.0)
         kq = jnp.clip(jnp.round((k - kmin) / ks), 0, levels).astype(jnp.int32)
@@ -69,10 +79,10 @@ class KiviAttention:
             k_scale=ks.astype(jnp.float32), k_zp=kmin.astype(jnp.float32),
             v_packed=padq(vq.packed),
             v_scale=padq(vq.scale), v_zp=padq(vq.zp),
-            quant_len=jnp.asarray(L, jnp.int32),
+            quant_len=lens,
             res_k=jnp.zeros((B, H, R, D), k.dtype),
             res_v=jnp.zeros((B, H, R, D), v.dtype),
-            res_len=jnp.asarray(0, jnp.int32))
+            res_len=jnp.zeros((B,), jnp.int32))
 
     def decode(self, q, k_new, v_new, cache: KiviCache, *, scale=None
                ) -> Tuple[jax.Array, KiviCache]:
@@ -80,13 +90,15 @@ class KiviAttention:
         bits, qg = cfg.key_bits, cfg.quant_group
         B, H, Lq, _ = cache.k_packed.shape
         D = k_new.shape[-1]
-        # append to the full-precision residual (ring not needed for our
-        # bounded decode runs; assert capacity in callers)
-        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-            buf, val.astype(buf.dtype), cache.res_len, axis=2)
-        cache = cache._replace(res_k=upd(cache.res_k, k_new),
-                               res_v=upd(cache.res_v, v_new),
-                               res_len=cache.res_len + 1)
+        # append to the full-precision residual ring: once R tokens have
+        # accumulated the oldest slot is overwritten, so the most recent R
+        # decode tokens always stay attended (KIVI's residual window)
+        R = cache.res_k.shape[2]
+        slot = cache.res_len % R
+        cache = cache._replace(
+            res_k=batched_update_token(cache.res_k, k_new, slot),
+            res_v=batched_update_token(cache.res_v, v_new, slot),
+            res_len=cache.res_len + 1)
 
         # decompress-then-compute over the whole quantized prefix
         kq = unpack_bits(cache.k_packed, bits, D).astype(jnp.float32)
@@ -100,8 +112,9 @@ class KiviAttention:
         v_all = jnp.concatenate(
             [v_deq, cache.res_v.astype(jnp.float32)], axis=2)
         pos = jnp.arange(Lq + cache.res_k.shape[2])[None, None, :]
-        valid = (pos < cache.quant_len) | (
-            (pos >= Lq) & (pos < Lq + cache.res_len))
+        ql = cache.quant_len[:, None, None]
+        rl = jnp.minimum(cache.res_len, R)[:, None, None]
+        valid = (pos < ql) | ((pos >= Lq) & (pos < Lq + rl))
         valid = jnp.broadcast_to(valid, k_all.shape[:3])
         out = masked_attention(q, k_all, v_all, valid, scale=scale)
         return out, cache

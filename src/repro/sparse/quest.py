@@ -6,6 +6,9 @@ its keys.  Per decode query, the page upper bound
 of top pages participates in full-precision attention.  This is the 2-bit
 "Index" column of the paper's tables (page metadata = 2×fp16 per 16 tokens
 per channel ≈ 2 bits/parameter).
+
+Per-sequence lengths: page stats exclude pad tokens, appends land at each
+sequence's own position, and page/token validity masks are per sequence.
 """
 from __future__ import annotations
 
@@ -16,7 +19,9 @@ import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 from repro.core.attention import masked_attention
+from repro.core.cache import batched_update_token
 from repro.core.retrieval import select_topk
+from repro.sparse.base import full_lengths
 
 
 class QuestCache(NamedTuple):
@@ -24,7 +29,7 @@ class QuestCache(NamedTuple):
     v: jax.Array       # (B, H, Lmax, D)
     kmin: jax.Array    # (B, H, P, D)
     kmax: jax.Array    # (B, H, P, D)
-    length: jax.Array  # ()
+    length: jax.Array  # (B,)
 
     @property
     def capacity(self) -> int:
@@ -42,22 +47,24 @@ class QuestAttention:
         self.cfg = cfg or SIKVConfig()
         self.page_size = page_size
 
-    def prefill(self, k, v, q_obs, *, capacity=None) -> QuestCache:
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None
+                ) -> QuestCache:
         B, H, L, D = k.shape
         ps = self.page_size
         cap = capacity or L
         cap = ((cap + ps - 1) // ps) * ps
+        lens = full_lengths(B, L, lengths)
         pad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, cap - L), (0, 0)))
         kp, vp = pad(k), pad(v)
         P = cap // ps
         pos = jnp.arange(cap)
-        valid = (pos < L).reshape(P, ps)[None, None, :, :, None]
+        valid = (pos[None, :] < lens[:, None]).reshape(B, P, ps)
+        valid = valid[:, None, :, :, None]               # (B, 1, P, ps, 1)
         kpages = kp.reshape(B, H, P, ps, D)
         big = jnp.asarray(jnp.finfo(kp.dtype).max, kp.dtype)
         kmin = jnp.min(jnp.where(valid, kpages, big), axis=3)
         kmax = jnp.max(jnp.where(valid, kpages, -big), axis=3)
-        return QuestCache(k=kp, v=vp, kmin=kmin, kmax=kmax,
-                          length=jnp.asarray(L, jnp.int32))
+        return QuestCache(k=kp, v=vp, kmin=kmin, kmax=kmax, length=lens)
 
     def decode(self, q, k_new, v_new, cache: QuestCache, *, scale=None
                ) -> Tuple[jax.Array, QuestCache]:
@@ -65,19 +72,22 @@ class QuestAttention:
         ps = self.page_size
         B, Hq, _, D = q.shape
         H = k_new.shape[1]
-        # append + update page stats
-        pos = cache.length
-        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-            buf, val.astype(buf.dtype), pos, axis=2)
-        k_, v_ = upd(cache.k, k_new), upd(cache.v, v_new)
-        page = pos // ps
-        kmin_p = jax.lax.dynamic_slice_in_dim(cache.kmin, page, 1, axis=2)
-        kmax_p = jax.lax.dynamic_slice_in_dim(cache.kmax, page, 1, axis=2)
-        kn = k_new.astype(cache.kmin.dtype)
-        kmin = jax.lax.dynamic_update_slice_in_dim(
-            cache.kmin, jnp.minimum(kmin_p, kn), page, axis=2)
-        kmax = jax.lax.dynamic_update_slice_in_dim(
-            cache.kmax, jnp.maximum(kmax_p, kn), page, axis=2)
+        # per-sequence append + page-stat update
+        pos = cache.length                                   # (B,)
+        k_ = batched_update_token(cache.k, k_new, pos)
+        v_ = batched_update_token(cache.v, v_new, pos)
+        page = pos // ps                                     # (B,)
+        kn = k_new.astype(cache.kmin.dtype)                  # (B, H, 1, D)
+        kmin = batched_update_token(
+            cache.kmin,
+            jnp.minimum(jnp.take_along_axis(
+                cache.kmin, page[:, None, None, None], axis=2), kn),
+            page)
+        kmax = batched_update_token(
+            cache.kmax,
+            jnp.maximum(jnp.take_along_axis(
+                cache.kmax, page[:, None, None, None], axis=2), kn),
+            page)
         cache = QuestCache(k=k_, v=v_, kmin=kmin, kmax=kmax,
                            length=cache.length + 1)
 
@@ -91,9 +101,10 @@ class QuestAttention:
         Pn = ub.shape[-1]
         n_pages = max(1, min(cfg.budget_for(cache.capacity) // ps, Pn))
         page_pos = jnp.arange(Pn)
-        page_valid = page_pos[None, None, :] * ps < cache.length
-        last_page = (cache.length - 1) // ps
-        forced = page_pos[None, None, :] == last_page
+        page_valid = page_pos[None, None, :] * ps \
+            < cache.length[:, None, None]
+        last_page = (cache.length - 1) // ps                 # (B,)
+        forced = page_pos[None, None, :] == last_page[:, None, None]
         pidx, pvals = select_topk(
             ub, n_pages,
             valid_mask=jnp.broadcast_to(page_valid, ub.shape),
@@ -104,7 +115,7 @@ class QuestAttention:
         tok = (pidx[..., None] * ps + jnp.arange(ps)).reshape(B, H, -1)
         take = lambda x: jnp.take_along_axis(x, tok[..., None], axis=2)
         k_sel, v_sel = take(cache.k), take(cache.v)
-        tok_valid = (tok < cache.length) & jnp.repeat(
+        tok_valid = (tok < cache.length[:, None, None]) & jnp.repeat(
             sel_page_valid, ps, axis=-1)
         out = masked_attention(q, k_sel, v_sel, tok_valid, scale=scale)
         return out, cache

@@ -16,8 +16,10 @@ class SIKVAttention:
     def __init__(self, cfg: SIKVConfig | None = None):
         self.cfg = cfg or SIKVConfig()
 
-    def prefill(self, k, v, q_obs, *, capacity=None) -> SIKVCache:
-        return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity)
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None
+                ) -> SIKVCache:
+        return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity,
+                                lengths=lengths)
 
     def decode(self, q, k_new, v_new, cache: SIKVCache, *, scale=None
                ) -> Tuple[jax.Array, SIKVCache]:

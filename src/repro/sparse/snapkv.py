@@ -5,6 +5,10 @@ the window itself); everything else is discarded permanently.  Decode tokens
 are appended to the kept set.  Cheap and simple, but unrecoverable — the
 paper's Table 1/2 shows it degrading on retrieval-heavy tasks, which our
 ``bench_longbench_proxy`` reproduces via recall.
+
+Ragged batches: pad tokens receive ``-inf`` votes so they sort after every
+valid token (prompts are right-padded), and each sequence's kept length is
+``min(budget, prompt_len)``.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax.numpy as jnp
 from repro.config import SIKVConfig
 from repro.core.attention import masked_attention
 from repro.core.policy import snapkv_votes
+from repro.sparse.base import full_lengths, length_valid_mask
 from repro.sparse.full import FullCache, append_kv
 
 
@@ -26,17 +31,27 @@ class SnapKVAttention:
         self.cfg = cfg or SIKVConfig()
         self.decode_margin = decode_margin
 
-    def prefill(self, k, v, q_obs, *, capacity=None) -> FullCache:
+    def prefill(self, k, v, q_obs, *, capacity=None, lengths=None
+                ) -> FullCache:
         cfg = self.cfg
         B, H, L, D = k.shape
         budget = min(cfg.budget_for(L), L)
         W = q_obs.shape[2]
-        votes = snapkv_votes(q_obs, k, causal_offset=L - W)
+        lens = full_lengths(B, L, lengths)
+        key_valid = jnp.arange(L)[None, :] < lens[:, None]      # (B, L)
+        # window gathered with clipping for short prompts — vote under each
+        # query's true position (see policy.snapkv_votes)
+        qpos = jnp.clip(lens[:, None] - W + jnp.arange(W)[None, :], 0, L - 1)
+        votes = snapkv_votes(q_obs, k, query_positions=qpos,
+                             key_valid=key_valid)
         # always keep the observation window itself (SnapKV keeps the tail)
         pos = jnp.arange(L)
-        tail_bonus = jnp.where(pos >= L - min(W, budget),
-                               jnp.finfo(votes.dtype).max / 4, 0.0)
-        votes = votes + tail_bonus[None, None, :]
+        tail = (pos[None, :] >= (lens - min(W, budget))[:, None]) \
+            & key_valid
+        big = jnp.finfo(votes.dtype).max / 4
+        votes = votes + jnp.where(tail[:, None, :], big, 0.0)
+        neg = jnp.asarray(jnp.finfo(votes.dtype).min, votes.dtype)
+        votes = jnp.where(key_valid[:, None, :], votes, neg)
         _, keep = jax.lax.top_k(votes, budget)
         keep = jnp.sort(keep, axis=-1)  # preserve positional order
         take = lambda x: jnp.take_along_axis(x, keep[..., None], axis=2)
@@ -46,12 +61,12 @@ class SnapKVAttention:
         pad = lambda x: jnp.pad(
             x, ((0, 0), (0, 0), (0, cap - budget), (0, 0)))
         return FullCache(k=pad(k_kept), v=pad(v_kept),
-                         length=jnp.asarray(budget, jnp.int32))
+                         length=jnp.minimum(budget, lens))
 
     def decode(self, q, k_new, v_new, cache: FullCache, *, scale=None
                ) -> Tuple[jax.Array, FullCache]:
         cache = append_kv(cache, k_new, v_new)
-        valid = jnp.arange(cache.capacity)[None, None, :] < cache.length
+        valid = length_valid_mask(cache.length, cache.capacity)
         valid = jnp.broadcast_to(valid, cache.k.shape[:3])
         out = masked_attention(q, cache.k, cache.v, valid, scale=scale)
         return out, cache

@@ -75,7 +75,7 @@ def test_static_attention_no_append(rng):
     k, v, cache, q, _, _ = _setup(rng)
     out = sikv_static_attention(q, cache, CFG)
     assert out.shape == q.shape
-    assert int(cache.length) == k.shape[2]  # unchanged
+    assert int(cache.length[0]) == k.shape[2]  # unchanged
     assert not bool(jnp.any(jnp.isnan(out)))
 
 

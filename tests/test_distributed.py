@@ -16,7 +16,7 @@ _SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh, use_mesh
     from repro.config import SIKVConfig
     from repro.core.cache import prefill_compress, gather_dequant
     from repro.core.attention import (sikv_decode_attention,
@@ -24,8 +24,7 @@ _SUBPROC = textwrap.dedent("""
     from repro.core.distributed import seq_parallel_sikv_decode
     from repro.data.synthetic import structured_kv
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     B, Hq, Hkv, L, D = 4, 8, 4, 256, 64
     cfg = SIKVConfig(num_sink_tokens=16, token_budget=64, recent_window=8,
                      obs_window=8)
@@ -38,13 +37,13 @@ _SUBPROC = textwrap.dedent("""
     vn = jax.random.normal(jax.random.PRNGKey(4), (B, Hkv, 1, D))
 
     ref, cache_ref = sikv_decode_attention(q, kn, vn, cache, cfg, topk=64)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out, cache_sp = jax.jit(lambda *a: seq_parallel_sikv_decode(
             *a, cfg, mesh=mesh, batch_axes=("data",), seq_axes=("model",),
             topk=64))(q, kn, vn, cache)
     assert out.shape == ref.shape
     assert not bool(jnp.any(jnp.isnan(out)))
-    assert int(cache_sp.length) == int(cache_ref.length) == L + 1
+    assert int(cache_sp.length[0]) == int(cache_ref.length[0]) == L + 1
 
     # per-partition top-k must match global top-k output quality vs full
     full = full_causal_attention(

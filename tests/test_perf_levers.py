@@ -21,11 +21,21 @@ def test_remat_is_exact(rng):
     cfg_r = dataclasses.replace(cfg, remat=True)
     l1, _ = loss_fn(p, cfg, batch)
     l2, _ = loss_fn(p, cfg_r, batch)
+    # forward values are bitwise identical: remat only changes what the
+    # BACKWARD pass recomputes
     assert float(l1) == float(l2)
     g1 = jax.grad(lambda pp: loss_fn(pp, cfg, batch)[0])(p)
     g2 = jax.grad(lambda pp: loss_fn(pp, cfg_r, batch)[0])(p)
+    # gradients are numerically equal but not bitwise: XLA fuses the
+    # rematerialized forward into the backward program, which re-tiles the
+    # matmuls feeding rms_norm and reassociates their f32 reductions
+    # (minimal repro: grad of matmul->rms_norm under jax.checkpoint differs
+    # in the last ulp; each op in isolation is bitwise stable).  Bound the
+    # divergence at reduction-rounding scale — a real remat bug (stale or
+    # missing residual) shows up orders of magnitude above this.
     for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
 
 
 def test_capacity_dispatch_matches_ragged_when_unconstrained(rng):
