@@ -80,3 +80,54 @@ def run() -> None:
         emit(f"memory/llama8b_cache_gib/L={L}", 0.0,
              f"fp16={full:.2f}GiB;sikv={ours:.2f}GiB;"
              f"ratio={full / ours:.2f}x")
+
+    paged_vs_dense()
+
+
+def _dense_token_bytes(cache) -> int:
+    """Bytes of the token-indexed arrays of a dense cache (incl. sink_mask
+    metadata), excluding the fixed per-slot state both layouts share."""
+    return sum(arr.nbytes for arr in cache._asdict().values()
+               if arr.ndim >= 3 and arr.shape[2] == cache.capacity)
+
+
+def paged_vs_dense(*, Lmax: int = 2048, page_size: int = 64,
+                   B: int = 4, H: int = 2, D: int = 128) -> None:
+    """MEASURED paged-pool HBM vs dense per-slot allocation (allocated
+    jax arrays, ``nbytes``) at several request-length mixes.
+
+    Dense reserves ``B * Lmax`` tokens regardless of load; the pool holds
+    exactly the pages the mix touches (plus the block table).  The
+    ``shared-prompts`` mix shows prefix caching: identical prompts store
+    their pages once.
+    """
+    header("bench_memory: paged pool vs dense per-slot (measured)")
+    from repro.core.cache import init_cache
+    from repro.paged.cache import init_paged_cache, paged_token_bytes
+
+    cfg = SIKVConfig()
+    dense = init_cache(cfg, B, H, Lmax, D)
+    dense_bytes = _dense_token_bytes(dense)
+    template = init_cache(cfg, 1, H, Lmax, D)
+
+    pages = lambda length: -(-length // page_size)
+    mixes = {
+        "uniform-max": [Lmax] * B,
+        "mixed": [Lmax, Lmax // 2, Lmax // 4, Lmax // 8],
+        "uniform-short": [Lmax // 8] * B,
+    }
+    for name, lengths in mixes.items():
+        num_pages = sum(pages(l) for l in lengths)
+        paged = init_paged_cache(template, num_pages, page_size, B)
+        pb = paged_token_bytes(paged)
+        emit(f"memory/paged_vs_dense/{name}", 0.0,
+             f"lengths={lengths};pages={num_pages};paged_bytes={pb};"
+             f"dense_bytes={dense_bytes};ratio={dense_bytes / pb:.2f}x")
+
+    # prefix sharing: B identical full-length prompts -> one page set
+    num_pages = pages(Lmax)
+    paged = init_paged_cache(template, num_pages, page_size, B)
+    pb = paged_token_bytes(paged)
+    emit("memory/paged_vs_dense/shared-prompts", 0.0,
+         f"lengths={[Lmax] * B};pages={num_pages};paged_bytes={pb};"
+         f"dense_bytes={dense_bytes};ratio={dense_bytes / pb:.2f}x")

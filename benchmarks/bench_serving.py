@@ -1,5 +1,5 @@
 """Serving throughput under mixed-length traffic: continuous batching vs
-lock-step batching.
+lock-step batching, and paged-pool vs dense-slot concurrency.
 
 The workload mixes >= 3 distinct prompt lengths and heterogeneous
 ``max_new_tokens`` — the regime the paper targets (memory-efficient
@@ -12,6 +12,12 @@ programs.
 Emits, per policy: engine invocations (prefills + decode steps — the
 apples-to-apples work metric), wall time, aggregate token throughput, and
 mean TTFT/TPOT.
+
+The paged section fixes a token-store HBM budget (what a dense engine with
+``dense_slots`` slots allocates), gives the paged engine the SAME budget in
+pool pages, runs a mixed-length workload with repeated prompts, and reports
+the peak number of simultaneously-active sequences each layout sustains,
+plus per-request prefix-cache hits.
 """
 from __future__ import annotations
 
@@ -23,7 +29,8 @@ from benchmarks.common import emit, header
 from repro.config import SIKVConfig, get_model_config, reduced_config
 from repro.data.synthetic import lm_sequence_batch
 from repro.models import init_params
-from repro.serving import Request, RequestScheduler, ServingEngine
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine)
 
 
 def _mixed_requests(cfg, n: int, prompt_len: int):
@@ -82,7 +89,100 @@ def run(*, batch: int = 2, prompt_len: int = 64, n_requests: int = 6,
          f"lockstep={results['lockstep']};continuous={results['continuous']};"
          f"saved={saved}")
     assert results["continuous"] < results["lockstep"], results
+
+    results["paged"] = paged_concurrency(params, cfg, sikv,
+                                         prompt_len=prompt_len)
     return results
+
+
+def _repeat_prompts(cfg, prompt_len: int, repeats: int = 3):
+    """3 distinct prompt lengths, each prompt text repeated ``repeats``
+    times (identical repeats => prefix-cache hits)."""
+    toks = lm_sequence_batch(jax.random.PRNGKey(21), 3, prompt_len,
+                             cfg.vocab_size)
+    plens = [prompt_len, prompt_len // 2, prompt_len // 4]
+    base = [[int(t) for t in toks[i, : plens[i]]] for i in range(3)]
+    reqs = []
+    for i, p in enumerate(base):
+        for r in range(repeats):
+            reqs.append(Request(uid=len(reqs), prompt=list(p),
+                                max_new_tokens=4))
+    return reqs
+
+
+def paged_concurrency(params, cfg, sikv, *, prompt_len: int = 64,
+                      page_size: int = 16, dense_slots: int = 2):
+    """Max concurrent sequences under a FIXED token-store budget.
+
+    The budget is what ``dense_slots`` dense slots allocate; the paged
+    engine gets the identical number of page-bytes
+    (``dense_slots * pages_per_seq`` pages) and serves the same workload.
+    Page admission + prefix sharing let it run strictly more sequences at
+    once; the acceptance bar is >= 2x.
+    """
+    header("bench_serving: paged pool vs dense slots @ fixed HBM budget")
+    max_new = max(16, prompt_len // 4)
+
+    # dense baseline: concurrency == the slots the budget buys
+    eng_d = ServingEngine(params, cfg, sikv, method="sikv",
+                          batch_size=dense_slots, prompt_len=prompt_len,
+                          max_new_tokens=max_new)
+    sched_d = RequestScheduler(eng_d)
+    for r in _repeat_prompts(cfg, prompt_len):
+        sched_d.submit(r)
+    t0 = time.time()
+    done_d = sched_d.run()
+    dt_d = time.time() - t0
+    dense_bytes = eng_d.token_store_bytes()
+    emit("serving/budget/dense", dt_d * 1e6,
+         f"requests={done_d};slots={dense_slots};"
+         f"peak_concurrent={sched_d.peak_active};"
+         f"token_store_bytes={dense_bytes};"
+         f"invocations={eng_d.invocations()}")
+
+    # paged: same page-bytes, many cheap slots, admission on free pages
+    pages_per_seq = -(-(prompt_len + max_new) // page_size)
+    num_pages = dense_slots * pages_per_seq
+    eng_p = PagedServingEngine(params, cfg, sikv, batch_size=8,
+                               prompt_len=prompt_len, max_new_tokens=max_new,
+                               page_size=page_size, num_pages=num_pages)
+    sched_p = RequestScheduler(eng_p)
+    for r in _repeat_prompts(cfg, prompt_len):
+        sched_p.submit(r)
+    t0 = time.time()
+    done_p = sched_p.run()
+    dt_p = time.time() - t0
+    paged_bytes = eng_p.token_store_bytes()
+    pstats = eng_p.pool_stats()
+    emit("serving/budget/paged", dt_p * 1e6,
+         f"requests={done_p};pages={num_pages};page_size={page_size};"
+         f"peak_concurrent={sched_p.peak_active};"
+         f"token_store_bytes={paged_bytes};"
+         f"registry_state_bytes={pstats['registry_state_bytes']};"
+         f"prefix_hits={pstats['prefix_hits']};"
+         f"cow_copies={pstats['cow_copies']};"
+         f"evictions={pstats['evictions']};"
+         f"invocations={eng_p.invocations()};"
+         f"prefills={eng_p.stats['prefills']};"
+         f"steps={eng_p.stats['steps']};"
+         f"aux_launches={eng_p.stats['aux_launches']}")
+    for uid in sorted(sched_p.completed):
+        req = sched_p.completed[uid]
+        emit(f"serving/budget/request/{uid}", 0.0,
+             f"prompt_len={len(req.prompt)};prefix_hit={req.prefix_hit};"
+             f"shared_pages={req.shared_pages};"
+             f"tokens={len(req.result)}")
+
+    ratio = sched_p.peak_active / max(1, sched_d.peak_active)
+    emit("serving/budget/concurrency", 0.0,
+         f"dense_peak={sched_d.peak_active};paged_peak={sched_p.peak_active};"
+         f"ratio={ratio:.2f}x;"
+         f"paged_bytes_over_dense={paged_bytes / dense_bytes:.3f}")
+    assert done_p == done_d, (done_p, done_d)
+    assert sched_p.peak_active >= 2 * sched_d.peak_active, (
+        sched_p.peak_active, sched_d.peak_active)
+    return {"dense_peak": sched_d.peak_active,
+            "paged_peak": sched_p.peak_active}
 
 
 if __name__ == "__main__":

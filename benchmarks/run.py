@@ -13,21 +13,31 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None,
                     help="substring filter of benchmark module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: the fast suites at tiny shapes "
+                         "(memory accounting + serving/paged concurrency)")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_longbench_proxy,
                             bench_memory, bench_modules, bench_roofline,
                             bench_ruler_proxy, bench_serving, bench_tt2t)
-    suites = [
-        ("bench_memory", bench_memory.run),          # Fig 5 / overhead
-        ("bench_longbench_proxy", bench_longbench_proxy.run),  # Table 1
-        ("bench_ruler_proxy", bench_ruler_proxy.run),          # Fig 4 / T2
-        ("bench_modules", bench_modules.run),        # Table 4
-        ("bench_tt2t", bench_tt2t.run),              # Table 3
-        ("bench_ablation", bench_ablation.run),      # Table 5
-        ("bench_serving", bench_serving.run),        # continuous batching
-        ("bench_roofline", bench_roofline.run),      # dry-run roofline
-    ]
+    if args.smoke:
+        suites = [
+            ("bench_memory", bench_memory.run),
+            ("bench_serving",
+             lambda: bench_serving.run(prompt_len=32, n_requests=4)),
+        ]
+    else:
+        suites = [
+            ("bench_memory", bench_memory.run),          # Fig 5 / overhead
+            ("bench_longbench_proxy", bench_longbench_proxy.run),  # Table 1
+            ("bench_ruler_proxy", bench_ruler_proxy.run),          # Fig 4/T2
+            ("bench_modules", bench_modules.run),        # Table 4
+            ("bench_tt2t", bench_tt2t.run),              # Table 3
+            ("bench_ablation", bench_ablation.run),      # Table 5
+            ("bench_serving", bench_serving.run),        # batching + paged
+            ("bench_roofline", bench_roofline.run),      # dry-run roofline
+        ]
     failures = []
     for name, fn in suites:
         if args.only and args.only not in name:

@@ -1,0 +1,96 @@
+"""Paged compressed-KV serving: block tables, prefix sharing, copy-on-write.
+
+Drives :class:`repro.serving.PagedServingEngine` on a reduced model
+(random weights — this demo is about the memory manager, not the text):
+
+1. serves a mixed-length workload with repeated prompts through a page
+   pool a fraction of the dense worst case;
+2. shows prefix-cache hits skipping prefill (pages + statistics re-bound
+   to the new slot), copy-on-write un-sharing on divergence, and LRU
+   eviction of registered prompts under allocation pressure;
+3. compares measured token-store HBM and peak concurrency against the
+   dense per-slot engine under the same byte budget.
+
+Run:  PYTHONPATH=src python examples/paged_serving.py
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.data.synthetic import lm_sequence_batch
+from repro.models import init_params
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--dense-slots", type=int, default=2,
+                    help="dense slots whose HBM defines the shared budget")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sikv = SIKVConfig(num_sink_tokens=8, token_budget=28, recent_window=4,
+                      obs_window=8)
+    max_new = args.prompt_len // 4
+
+    # 3 distinct prompts x 3 identical copies each => prefix-cache traffic
+    toks = lm_sequence_batch(jax.random.PRNGKey(5), 3, args.prompt_len,
+                             cfg.vocab_size)
+    plens = [args.prompt_len, args.prompt_len // 2, args.prompt_len // 4]
+    requests = []
+    for i in range(3):
+        p = [int(t) for t in toks[i, : plens[i]]]
+        for _ in range(3):
+            requests.append(Request(uid=len(requests), prompt=list(p),
+                                    max_new_tokens=4))
+
+    print("== dense per-slot engine (the HBM budget baseline) ==")
+    dense = ServingEngine(params, cfg, sikv, method="sikv",
+                          batch_size=args.dense_slots,
+                          prompt_len=args.prompt_len, max_new_tokens=max_new)
+    sd = RequestScheduler(dense)
+    for r in requests:
+        sd.submit(Request(uid=r.uid, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens))
+    sd.run()
+    print(f"  peak concurrency {sd.peak_active} "
+          f"(= its {args.dense_slots} slots), "
+          f"token store {dense.token_store_bytes()} B, "
+          f"{dense.invocations()} engine launches")
+
+    print("\n== paged engine, SAME token-store budget ==")
+    pages_per_seq = -(-(args.prompt_len + max_new) // args.page_size)
+    eng = PagedServingEngine(params, cfg, sikv, batch_size=8,
+                             prompt_len=args.prompt_len,
+                             max_new_tokens=max_new,
+                             page_size=args.page_size,
+                             num_pages=args.dense_slots * pages_per_seq)
+    sp = RequestScheduler(eng)
+    for r in requests:
+        sp.submit(r)
+    sp.run()
+    for uid in sorted(sp.completed):
+        req = sp.completed[uid]
+        tag = (f"prefix HIT ({req.shared_pages} pages shared, prefill "
+               "skipped)") if req.prefix_hit else "miss (prefilled)"
+        print(f"  request {uid}: prompt {len(req.prompt):3d} tok -> {tag}")
+    stats = eng.pool_stats()
+    print(f"  peak concurrency {sp.peak_active} vs dense {sd.peak_active} "
+          f"under {stats['num_pages']} pages of {args.page_size} tokens")
+    print(f"  token store {eng.token_store_bytes()} B; "
+          f"prefix hits {stats['prefix_hits']}, "
+          f"cow copies {stats['cow_copies']}, "
+          f"evictions {stats['evictions']}, "
+          f"{eng.invocations()} engine launches "
+          f"({eng.stats['prefills']} prefills)")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,10 @@ Serving model — slot lifecycle (continuous batching):
   baseline: each group runs to its longest member — under mixed-length
   traffic it launches strictly more engine programs than ``run()``.
 
+For the paged-pool variant of the engine (block tables, prefix caching,
+copy-on-write — decouples concurrency from max context length) see
+``examples/paged_serving.py`` and DESIGN.md §3.
+
 Run:  PYTHONPATH=src python examples/serve_longcontext.py [--steps 120]
 """
 import argparse

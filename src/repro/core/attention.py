@@ -35,6 +35,9 @@ __all__ = [
     "masked_attention",
     "sikv_decode_attention",
     "group_queries",
+    "ring_segment_parts",
+    "quant_valid_mask_parts",
+    "sink_flash_state_parts",
 ]
 
 _NEG = -1e30
@@ -84,9 +87,9 @@ def full_causal_attention(
                         k.astype(jnp.float32)) * sc
     qpos = q_offset + jnp.arange(Lq)[:, None]
     kpos = jnp.arange(Lk)[None, :]
-    causal = kpos <= qpos
+    causal = kpos <= qpos                                  # (Lq, Lk)
     if mask is not None:
-        causal = causal & mask[:, None, None, None, :]
+        causal = causal & mask[:, None, :]                 # (B, Lq, Lk)
     logits = jnp.where(causal[None, None, None] if mask is None else
                        causal[:, None, None], logits, _NEG)
     w = jax.nn.softmax(logits, axis=-1)
@@ -161,29 +164,45 @@ def masked_attention(
     return out.reshape(B, Hq, 1, v.shape[-1]).astype(q.dtype)
 
 
-def _ring_segment(cache: SIKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:
+def ring_segment_parts(
+    res_k: jax.Array, res_v: jax.Array, sink_mask: jax.Array,
+    length: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Full-precision recent-ring segment + per-sequence validity.
 
     A ring slot is attended iff it holds a real position (``>= 0``) that is
-    not already covered by the sink segment.
+    not already covered by the sink segment.  Takes the pieces explicitly so
+    the paged cache (which materializes ``sink_mask`` through its block
+    table) shares this exact code path with the dense cache.
 
     Returns ``(ring_k (B,Hkv,R,D), ring_v (B,Hkv,R,Dv), valid (B,Hkv,R))``.
     """
-    R = cache.recent_window
-    rp = ring_positions(cache.length, R)                     # (B, R)
-    rp_c = jnp.clip(rp, 0, cache.capacity - 1)
-    is_sink = jnp.take_along_axis(cache.sink_mask, rp_c[:, None, :], axis=2)
+    R = res_k.shape[2]
+    capacity = sink_mask.shape[-1]
+    rp = ring_positions(length, R)                           # (B, R)
+    rp_c = jnp.clip(rp, 0, capacity - 1)
+    is_sink = jnp.take_along_axis(sink_mask, rp_c[:, None, :], axis=2)
     valid = (rp >= 0)[:, None, :] & ~is_sink                 # (B, Hkv, R)
-    return (cache.res_k.astype(jnp.float32),
-            cache.res_v.astype(jnp.float32), valid)
+    return (res_k.astype(jnp.float32), res_v.astype(jnp.float32), valid)
+
+
+def _ring_segment(cache: SIKVCache) -> tuple[jax.Array, jax.Array, jax.Array]:
+    return ring_segment_parts(cache.res_k, cache.res_v, cache.sink_mask,
+                              cache.length)
+
+
+def quant_valid_mask_parts(sink_mask: jax.Array, length: jax.Array,
+                           recent_window: int) -> jax.Array:
+    """Positions eligible for compressed-domain top-k: inside the sequence,
+    older than the recent ring, and not a sink.  ``(B, 1|Hkv, Lmax)``."""
+    pos = jnp.arange(sink_mask.shape[-1])
+    lo = (length - recent_window)[:, None, None]
+    return (pos[None, None, :] < lo) & ~sink_mask
 
 
 def _quant_valid_mask(cache: SIKVCache) -> jax.Array:
-    """Positions eligible for compressed-domain top-k: inside the sequence,
-    older than the recent ring, and not a sink.  ``(B, 1|Hkv, Lmax)``."""
-    pos = jnp.arange(cache.capacity)
-    lo = (cache.length - cache.recent_window)[:, None, None]
-    return (pos[None, None, :] < lo) & ~cache.sink_mask
+    return quant_valid_mask_parts(cache.sink_mask, cache.length,
+                                  cache.recent_window)
 
 
 def sikv_decode_attention(
@@ -293,16 +312,25 @@ def _fp_flash_state(q: jax.Array, k_fp: jax.Array, v_fp: jax.Array,
     return (acc.reshape(B, Hq, Dv), m.reshape(B, Hq), l.reshape(B, Hq))
 
 
-def _sink_flash_state(q: jax.Array, cache: SIKVCache, scale: float | None):
+def sink_flash_state_parts(q: jax.Array, sink_k: jax.Array, sink_v: jax.Array,
+                           res_k: jax.Array, res_v: jax.Array,
+                           sink_mask: jax.Array, length: jax.Array,
+                           scale: float | None):
     """Flash state of ``[sinks ; recent ring]`` (both full precision)."""
-    B, Hq = q.shape[:2]
-    Hkv = cache.sink_k.shape[1]
-    ring_k, ring_v, ring_valid = _ring_segment(cache)
-    k_fp = jnp.concatenate([cache.sink_k.astype(jnp.float32), ring_k], 2)
-    v_fp = jnp.concatenate([cache.sink_v.astype(jnp.float32), ring_v], 2)
-    valid = jnp.concatenate(
-        [jnp.ones((B, Hkv, cache.num_sinks), bool), ring_valid], 2)
+    B = q.shape[0]
+    Hkv, S = sink_k.shape[1], sink_k.shape[2]
+    ring_k, ring_v, ring_valid = ring_segment_parts(res_k, res_v, sink_mask,
+                                                    length)
+    k_fp = jnp.concatenate([sink_k.astype(jnp.float32), ring_k], 2)
+    v_fp = jnp.concatenate([sink_v.astype(jnp.float32), ring_v], 2)
+    valid = jnp.concatenate([jnp.ones((B, Hkv, S), bool), ring_valid], 2)
     return _fp_flash_state(q, k_fp, v_fp, valid, scale)
+
+
+def _sink_flash_state(q: jax.Array, cache: SIKVCache, scale: float | None):
+    return sink_flash_state_parts(q, cache.sink_k, cache.sink_v, cache.res_k,
+                                  cache.res_v, cache.sink_mask, cache.length,
+                                  scale)
 
 
 def sikv_static_attention(

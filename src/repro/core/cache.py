@@ -37,7 +37,8 @@ from repro.core import policy
 
 __all__ = ["SIKVCache", "init_cache", "prefill_compress", "append_token",
            "gather_dequant", "cache_spec_shapes", "ring_positions",
-           "batched_update_token"]
+           "batched_update_token", "quantize_decode_token",
+           "dequantize_gathered"]
 
 
 class SIKVCache(NamedTuple):
@@ -268,18 +269,19 @@ def prefill_compress(
     )
 
 
-def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
-                 cfg: SIKVConfig) -> SIKVCache:
-    """Append one decode-step token per sequence, quantized with the prefill
-    statistics; each sequence writes at its own ``length``.
+def quantize_decode_token(k_new: jax.Array, v_new: jax.Array,
+                          mu: jax.Array, alpha: jax.Array, cfg: SIKVConfig):
+    """Quantize one decode token with the (reused) prefill statistics.
 
-    Args:
-      k_new, v_new: ``(B, H, 1, D)``.
+    Shared by the dense and the paged cache so both append bit-identical
+    data.  Returns ``(codes, kq, vq, v_ring)`` where ``kq``/``vq`` are
+    :class:`~repro.core.quantization.QuantizedTensor` and ``v_ring`` is the
+    full-precision value destined for the recent ring.
     """
-    k_norm = k_new - cache.mu
+    k_norm = k_new - mu
     codes = cb.sign_codes(k_norm, cfg.group_size)
     kq = qz.quantize_key_magnitude(
-        k_norm, cache.alpha.astype(jnp.float32), cfg.key_bits, cfg.quant_group)
+        k_norm, alpha.astype(jnp.float32), cfg.key_bits, cfg.quant_group)
     if cfg.value_slice:
         empty = jnp.zeros(k_new.shape[:3] + (0,))
         vq = qz.QuantizedTensor(empty.astype(jnp.int8), empty, empty,
@@ -288,6 +290,19 @@ def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
     else:
         vq = qz.quantize_tokenwise(v_new, cfg.value_bits, cfg.quant_group)
         v_ring = v_new
+    return codes, kq, vq, v_ring
+
+
+def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
+                 cfg: SIKVConfig) -> SIKVCache:
+    """Append one decode-step token per sequence, quantized with the prefill
+    statistics; each sequence writes at its own ``length``.
+
+    Args:
+      k_new, v_new: ``(B, H, 1, D)``.
+    """
+    codes, kq, vq, v_ring = quantize_decode_token(
+        k_new, v_new, cache.mu, cache.alpha, cfg)
 
     pos = cache.length                                       # (B,)
     R = cache.recent_window
@@ -307,6 +322,40 @@ def append_token(cache: SIKVCache, k_new: jax.Array, v_new: jax.Array,
     )
 
 
+def dequantize_gathered(
+    codes: jax.Array, kmag: jax.Array, k_scale: jax.Array, k_zp: jax.Array,
+    v_q: jax.Array, v_scale: jax.Array, v_zp: jax.Array,
+    mu: jax.Array, alpha: jax.Array, cfg: SIKVConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Dequantize already-gathered token fields ``(B, H, T, ...)``.
+
+    The shared tail of :func:`gather_dequant` — the paged cache gathers the
+    same fields through its block table and dequantizes through this exact
+    code path, which is what keeps paged and dense decode bit-identical.
+    """
+    D = mu.shape[-1]
+    gs = cfg.group_size
+    qg = qz.effective_quant_group(D, cfg.quant_group)
+    signs = cb.codes_to_signs(codes, gs)
+    kq = qz.QuantizedTensor(
+        packed=kmag,
+        scale=k_scale.astype(jnp.float32),
+        zp=k_zp.astype(jnp.float32),
+        bits=cfg.key_bits, quant_group=qg, orig_dim=D)
+    k = qz.dequantize_key(kq, signs, alpha.astype(jnp.float32))
+    k = k + mu.astype(jnp.float32)
+
+    if cfg.value_slice:
+        return k, k[..., : cfg.value_slice]
+    vq = qz.QuantizedTensor(
+        packed=v_q,
+        scale=v_scale.astype(jnp.float32),
+        zp=v_zp.astype(jnp.float32),
+        bits=cfg.value_bits, quant_group=qg, orig_dim=D)
+    v = qz.dequantize_tokenwise(vq)
+    return k, v
+
+
 def gather_dequant(
     cache: SIKVCache, idx: jax.Array, cfg: SIKVConfig
 ) -> tuple[jax.Array, jax.Array]:
@@ -318,27 +367,8 @@ def gather_dequant(
       ``(k (B, H, T, D), v (B, H, T, D))`` float32 — ``k`` includes the
       ``+mu`` shift back so it lives in the original key space.
     """
-    D = cache.head_dim
-    gs = cfg.group_size
-    qg = qz.effective_quant_group(D, cfg.quant_group)
     take = lambda x: jnp.take_along_axis(x, idx[..., None], axis=2)
-
-    codes = take(cache.codes)
-    signs = cb.codes_to_signs(codes, gs)
-    kq = qz.QuantizedTensor(
-        packed=take(cache.kmag),
-        scale=take(cache.k_scale).astype(jnp.float32),
-        zp=take(cache.k_zp).astype(jnp.float32),
-        bits=cfg.key_bits, quant_group=qg, orig_dim=D)
-    k = qz.dequantize_key(kq, signs, cache.alpha.astype(jnp.float32))
-    k = k + cache.mu.astype(jnp.float32)
-
-    if cfg.value_slice:
-        return k, k[..., : cfg.value_slice]
-    vq = qz.QuantizedTensor(
-        packed=take(cache.v_q),
-        scale=take(cache.v_scale).astype(jnp.float32),
-        zp=take(cache.v_zp).astype(jnp.float32),
-        bits=cfg.value_bits, quant_group=qg, orig_dim=D)
-    v = qz.dequantize_tokenwise(vq)
-    return k, v
+    return dequantize_gathered(
+        take(cache.codes), take(cache.kmag), take(cache.k_scale),
+        take(cache.k_zp), take(cache.v_q), take(cache.v_scale),
+        take(cache.v_zp), cache.mu, cache.alpha, cfg)

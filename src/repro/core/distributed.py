@@ -53,18 +53,16 @@ def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
     shard_id = jax.lax.axis_index(seq_axes)
 
     # ---- local append: each sequence writes iff its position is ours ------
-    from repro.core import codebook as cb
-    from repro.core import quantization as qz
+    from repro.core.cache import quantize_decode_token
     new_len = cache.length + 1                       # (B,)
     pos_global = cache.length                        # (B,)
     local_pos = pos_global - shard_id * L_local      # (B,) may be OOB
     R = cache.recent_window
 
-    k_norm = k_new - cache.mu
-    codes_new = cb.sign_codes(k_norm, cfg.group_size)
-    kq = qz.quantize_key_magnitude(k_norm, cache.alpha.astype(jnp.float32),
-                                   cfg.key_bits, cfg.quant_group)
-    vq = qz.quantize_tokenwise(v_new, cfg.value_bits, cfg.quant_group)
+    # the one decode-token quantization code path (shared with the dense
+    # and paged appends) — also handles cfg.value_slice correctly
+    codes_new, kq, vq, v_ring = quantize_decode_token(
+        k_new, v_new, cache.mu, cache.alpha, cfg)
 
     # batched_update_token no-ops on out-of-range positions, so sequences
     # whose append lands in another shard write nothing here
@@ -79,7 +77,7 @@ def _local_decode_state(q, k_new, v_new, cache: SIKVCache, cfg: SIKVConfig,
         v_scale=upd(cache.v_scale, vq.scale),
         v_zp=upd(cache.v_zp, vq.zp),
         res_k=batched_update_token(cache.res_k, k_new, slot),
-        res_v=batched_update_token(cache.res_v, v_new, slot),
+        res_v=batched_update_token(cache.res_v, v_ring, slot),
         length=new_len,
     )
 

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 
-__all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k"]
+__all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k", "pages_needed"]
 
 
 def snapkv_votes(
@@ -61,10 +61,9 @@ def snapkv_votes(
     kpos = jnp.arange(L)[None, :]
     allowed = kpos <= qpos
     if key_valid is not None:
-        kv = key_valid
+        kv = key_valid                   # (B, L) -> (B, 1, ..., L)
         while kv.ndim < logits.ndim:
-            kv = kv[:, None] if kv.ndim >= 1 else kv[None]
-        # key_valid (B, L) -> (B, 1, 1, L)
+            kv = kv[:, None]
         allowed = allowed & kv
     neg = jnp.asarray(jnp.finfo(logits.dtype).min, logits.dtype)
     logits = jnp.where(allowed, logits, neg)
@@ -107,6 +106,26 @@ def select_sink_tokens(
     mask = jnp.zeros(votes.shape, bool)
     mask = jnp.put_along_axis(mask, pos, True, axis=-1, inplace=False)
     return pos.astype(jnp.int32), mask
+
+
+def pages_needed(prompt_len: int, max_new: int, page_size: int,
+                 *, prefix_hit: bool = False) -> int:
+    """Worst-case NEW pages a request can consume (admission policy).
+
+    Admission on free *pages* (not free slots) is what decouples concurrency
+    from max length.  The count is conservative so an admitted request can
+    never hit pool exhaustion mid-decode:
+
+    * miss: every page covering ``[0, prompt_len + max_new)`` is fresh;
+    * prefix hit: the ``prompt_len // page_size`` *full* prompt pages stay
+      shared forever (appends never touch them); everything else — the
+      partial tail page (copied on first divergent append) and all decode
+      pages — may need a fresh page.
+    """
+    total = -(-(prompt_len + max_new) // page_size)
+    if prefix_hit:
+        return total - prompt_len // page_size
+    return total
 
 
 def dynamic_k(cfg: SIKVConfig, seq_len: int) -> int:

@@ -17,6 +17,8 @@ __all__ = [
     "exact_scores",
     "topk_mask",
     "select_topk",
+    "gather_page_view",
+    "gather_selected_paged",
 ]
 
 
@@ -48,6 +50,55 @@ def lut_scores(codes: jax.Array, lut: jax.Array) -> jax.Array:
     onehot = jax.nn.one_hot(codes.astype(jnp.int32), C, dtype=lut.dtype)
     # (..., L, G, C) x (..., G, C) -> (..., L)
     return jnp.einsum("...lgc,...gc->...l", onehot, lut)
+
+
+def gather_page_view(field: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize a per-slot logical view of a paged pool field.
+
+    The sign-index scoring path gathers PAGES (not tokens) through the block
+    table — page granularity keeps the gather DMA-friendly on TPU (see
+    DESIGN.md §3) — and the result feeds :func:`lut_scores` / the LUT-GEMV
+    kernel unchanged.  Only the tiny ``codes``/``sink_mask`` fields are ever
+    viewed this way; the wide quantized fields are gathered token-wise at
+    top-k size via :func:`gather_selected_paged`.
+
+    Args:
+      field: ``(P, H, page_size, ...)`` pool array.
+      block_table: ``(B, pages_per_seq)`` int32; ``-1`` = unmapped (the
+        gathered rows for unmapped pages are garbage — downstream validity
+        masks exclude them, exactly as the dense path masks its zero rows).
+    Returns:
+      ``(B, H, pages_per_seq * page_size, ...)``.
+    """
+    bt = jnp.clip(block_table, 0, field.shape[0] - 1)
+    g = field[bt]                              # (B, npages, H, ps, ...)
+    g = jnp.moveaxis(g, 1, 2)                  # (B, H, npages, ps, ...)
+    return g.reshape(g.shape[0], g.shape[1], -1, *g.shape[4:])
+
+
+def gather_selected_paged(field: jax.Array, block_table: jax.Array,
+                          idx: jax.Array, page_size: int) -> jax.Array:
+    """Token-wise gather of selected logical positions through a block table.
+
+    Args:
+      field: ``(P, H, page_size, ...)`` pool array.
+      block_table: ``(B, pages_per_seq)`` int32.
+      idx: ``(B, H, T)`` selected logical positions (per KV head).
+    Returns:
+      ``(B, H, T, ...)`` — positions whose page is unmapped return garbage;
+      callers mask them via the top-k selection validity, as the dense path
+      already does.
+    """
+    B, H, T = idx.shape
+    P = field.shape[0]
+    page_l = jnp.clip(idx // page_size, 0, block_table.shape[1] - 1)
+    off = idx % page_size
+    bt = jnp.broadcast_to(block_table[:, None, :],
+                          (B, H, block_table.shape[1]))
+    pg = jnp.take_along_axis(bt, page_l, axis=2)             # (B, H, T)
+    pg = jnp.clip(pg, 0, P - 1)
+    h = jnp.arange(H)[None, :, None]
+    return field[pg, h, off]
 
 
 def exact_scores(q: jax.Array, k: jax.Array) -> jax.Array:

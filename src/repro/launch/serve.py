@@ -1,6 +1,8 @@
 """Serving driver: batched generation through the Self-Indexing KV cache.
 
-``--method`` switches between SIKV and the baselines for head-to-head runs.
+``--method`` switches between SIKV and the baselines for head-to-head runs;
+``--paged`` serves through the paged compressed-KV pool (block tables +
+prefix caching, see DESIGN.md §3) instead of dense per-slot caches.
 """
 from __future__ import annotations
 
@@ -14,13 +16,15 @@ from repro.config import SIKVConfig, get_model_config, list_archs, \
     reduced_config
 from repro.data.synthetic import lm_sequence_batch
 from repro.models import init_params
-from repro.serving import Request, RequestScheduler, ServingEngine
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine)
 from repro.sparse import method_names
 
 
 def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           prompt_len: int = 128, max_new: int = 32, n_requests: int = 8,
-          reduced: bool = True, seed: int = 0, verbose: bool = True):
+          reduced: bool = True, seed: int = 0, verbose: bool = True,
+          paged: bool = False, page_size: int = 16):
     cfg = get_model_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -30,9 +34,19 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
                       token_budget=max(32, prompt_len // 4),
                       recent_window=16, obs_window=16)
     params = init_params(jax.random.PRNGKey(seed), cfg)
-    engine = ServingEngine(params, cfg, sikv, method=method,
-                           batch_size=batch, prompt_len=prompt_len,
-                           max_new_tokens=max_new)
+    if paged:
+        if method != "sikv":
+            raise ValueError(
+                f"--paged serves through the sikv_paged cache; it cannot "
+                f"run method {method!r} — drop --paged for baseline runs")
+        engine = PagedServingEngine(params, cfg, sikv, batch_size=batch,
+                                    prompt_len=prompt_len,
+                                    max_new_tokens=max_new,
+                                    page_size=page_size)
+    else:
+        engine = ServingEngine(params, cfg, sikv, method=method,
+                               batch_size=batch, prompt_len=prompt_len,
+                               max_new_tokens=max_new)
     sched = RequestScheduler(engine)
     prompts = lm_sequence_batch(jax.random.PRNGKey(seed + 1), n_requests,
                                 prompt_len, cfg.vocab_size)
@@ -44,9 +58,12 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
     dt = time.time() - t0
     tput = done * max_new / dt
     if verbose:
-        print(f"[serve] {arch} method={method}: {done} requests, "
+        tag = f"paged(page_size={page_size})" if paged else f"method={method}"
+        print(f"[serve] {arch} {tag}: {done} requests, "
               f"{max_new} new tokens each, {dt:.2f}s "
               f"({tput:.1f} tok/s aggregate)")
+        if paged:
+            print(f"[serve] pool: {engine.pool_stats()}")
     return sched, tput
 
 
@@ -58,10 +75,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged compressed-KV pool")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
     serve(args.arch, method=args.method, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new,
-          n_requests=args.requests)
+          n_requests=args.requests, paged=args.paged,
+          page_size=args.page_size)
 
 
 if __name__ == "__main__":

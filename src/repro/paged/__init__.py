@@ -1,0 +1,30 @@
+"""Paged compressed-KV pool: block-table memory management for serving.
+
+Device side (:mod:`repro.paged.cache`, :mod:`repro.paged.attention`):
+pooled ``(num_pages, H, page_size, ...)`` arrays for every quantized cache
+field, per-slot block tables, and a decode attention that is bit-exact
+against the dense :class:`~repro.core.cache.SIKVCache` path.
+
+Host side (:mod:`repro.paged.pool`): free-list allocation, refcounts,
+copy-on-write, and whole-prompt prefix caching.
+
+Serving integration lives in :class:`repro.serving.PagedServingEngine`.
+"""
+from repro.paged.attention import paged_sikv_decode_attention
+from repro.paged.cache import (PagedSIKVCache, append_token_paged,
+                               copy_pool_page, init_paged_cache,
+                               insert_prefill_pages, insert_slot_state,
+                               paged_gather_dequant, paged_token_bytes,
+                               set_block_entry, tree_copy_page,
+                               tree_set_block_entry)
+from repro.paged.pool import (PagePool, PoolExhausted, PrefixEntry,
+                              SlotPageManager)
+
+__all__ = [
+    "PagedSIKVCache", "PagePool", "PoolExhausted", "PrefixEntry",
+    "SlotPageManager", "append_token_paged", "copy_pool_page",
+    "init_paged_cache", "insert_prefill_pages", "insert_slot_state",
+    "paged_gather_dequant", "paged_sikv_decode_attention",
+    "paged_token_bytes", "set_block_entry", "tree_copy_page",
+    "tree_set_block_entry",
+]

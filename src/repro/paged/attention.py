@@ -1,0 +1,123 @@
+"""Sparse decode attention over the paged Self-Indexing cache.
+
+Mirrors :func:`repro.core.attention.sikv_decode_attention` step for step —
+append, compressed-domain LUT scoring, top-k, gather+dequant of only the
+selected tokens, exact merge with the full-precision [sinks ; ring] segment
+— with the two memory touches routed through the block table:
+
+* scoring gathers the sign-code PAGES into a per-slot logical view
+  (:func:`~repro.core.retrieval.gather_page_view`).  The codes are the
+  retrieval index, ~21x smaller than fp16 keys, so this transient view is
+  cheap — and it feeds the existing LUT-GEMV kernel unchanged;
+* the top-k winners are gathered token-wise from the pool
+  (:func:`~repro.core.retrieval.gather_selected_paged`) and fed to the
+  existing fused dequant-attention kernel unchanged (DESIGN.md §2-3:
+  gather outside, fuse inside).
+
+Every arithmetic op is shared with the dense path, which is why paged and
+dense decode are bit-exact against each other (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core import policy
+from repro.core import retrieval as rtr
+from repro.core.attention import (group_queries, masked_attention,
+                                  quant_valid_mask_parts, ring_segment_parts,
+                                  sink_flash_state_parts)
+from repro.paged.cache import (PagedSIKVCache, append_token_paged,
+                               paged_gather_dequant)
+
+__all__ = ["paged_sikv_decode_attention"]
+
+
+def paged_sikv_decode_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    paged: PagedSIKVCache,
+    cfg: SIKVConfig,
+    *,
+    topk: int | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, PagedSIKVCache]:
+    """One decode step of Self-Indexing sparse attention, paged.
+
+    Args:
+      q: ``(B, Hq, 1, D)`` current query (RoPE applied).
+      k_new, v_new: ``(B, Hkv, 1, D)`` current token's key/value.
+    Returns:
+      ``(attn_out (B, Hq, 1, Dv), updated paged cache)``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_new.shape[1]
+    paged = append_token_paged(paged, k_new, v_new, cfg)
+    Lmax = paged.capacity
+
+    k_dyn = topk if topk is not None else policy.dynamic_k(cfg, Lmax)
+    k_dyn = min(k_dyn, Lmax)
+
+    # ---- compressed-domain scoring: page-gathered sign codes --------------
+    codes = rtr.gather_page_view(paged.codes, paged.block_table)
+    sink_mask = rtr.gather_page_view(paged.sink_mask, paged.block_table)
+    q_sum = group_queries(q[:, :, 0, :], Hkv)                # (B, Hkv, D)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        scores = kops.lut_gemv(
+            codes, q_sum.astype(jnp.float32),
+            paged.centroids.astype(jnp.float32), cfg.group_size)
+    else:
+        lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                            paged.centroids.astype(jnp.float32),
+                            cfg.group_size)
+        scores = rtr.lut_scores(codes, lut)                  # (B, Hkv, Lmax)
+
+    valid = quant_valid_mask_parts(sink_mask, paged.length,
+                                   paged.recent_window)
+    idx, vals = rtr.select_topk(
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+
+    if cfg.use_kernels:
+        # token-wise physical gather of the winners, then the existing fused
+        # dequant+flash kernel, exactly as the dense path runs it
+        from repro.kernels import ops as kops
+        take = lambda f: rtr.gather_selected_paged(
+            getattr(paged, f), paged.block_table, idx, paged.page_size)
+        acc, m, l = kops.sparse_attention_decode(
+            q.astype(jnp.float32), take("codes"), take("kmag"),
+            take("k_scale"), take("k_zp"), take("v_q"),
+            take("v_scale"), take("v_zp"),
+            paged.alpha, paged.mu, sel_valid,
+            quant_group=cfg.quant_group, group_size=cfg.group_size,
+            scale=scale)
+        acc_s, m_s, l_s = sink_flash_state_parts(
+            q, paged.sink_k, paged.sink_v, paged.res_k, paged.res_v,
+            sink_mask, paged.length, scale)
+        m_all = jnp.maximum(m, m_s)
+        a1 = jnp.exp(m - m_all)[..., None]
+        a2 = jnp.exp(m_s - m_all)[..., None]
+        num = acc * a1 + acc_s * a2
+        den = l[..., None] * a1 + l_s[..., None] * a2
+        out = (num / jnp.maximum(den, 1e-30))[:, :, None, :].astype(q.dtype)
+        return out, paged
+
+    # ---- gather + dequantize only the selected tokens ---------------------
+    k_sel, v_sel = paged_gather_dequant(paged, idx, cfg)
+
+    # ---- exact attention over [sinks ; ring ; selected] -------------------
+    ring_k, ring_v, ring_valid = ring_segment_parts(
+        paged.res_k, paged.res_v, sink_mask, paged.length)
+    S = paged.num_sinks
+    sink_valid = jnp.ones((B, Hkv, S), bool)
+    k_all = jnp.concatenate(
+        [paged.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [paged.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
+    valid_all = jnp.concatenate([sink_valid, ring_valid, sel_valid], axis=2)
+    out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
+    return out, paged

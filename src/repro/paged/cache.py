@@ -1,0 +1,294 @@
+"""Paged Self-Indexing KV cache: pooled pages + per-slot block tables.
+
+The dense :class:`~repro.core.cache.SIKVCache` allocates ``(B, H, Lmax, ...)``
+per slot, so a 512-token request reserves (and a serving batch pays for) the
+worst-case context.  Here every *token-indexed* field — ``codes``, ``kmag``,
+``k_scale``/``k_zp``, ``v_q``, ``v_scale``/``v_zp`` and the per-token
+``sink_mask`` metadata — lives once, in shared ``(num_pages, H, page_size,
+...)`` pool arrays, and each serving slot owns only a ``(pages_per_seq,)``
+row of the block table mapping its logical pages to physical ones.  The
+*per-sequence* state (full-precision sinks, the recent ring, and the reused
+prefill statistics ``mu``/``alpha``/centroids) stays per-slot — it does not
+grow with length and cannot be shared across different prompts.
+
+Everything here is functional jax (jits/shards like the dense cache); WHICH
+page a slot owns is decided host-side by :mod:`repro.paged.pool`.
+
+Layout choice: one page spans all KV heads of ``page_size`` consecutive
+tokens of one sequence — the same page granularity for every layer, so one
+host-side allocation covers a token range in all layers at once (vLLM-style
+shared block tables, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core.cache import (SIKVCache, batched_update_token,
+                              dequantize_gathered, quantize_decode_token)
+from repro.core.retrieval import gather_selected_paged
+
+__all__ = [
+    "PagedSIKVCache", "init_paged_cache", "insert_prefill_pages",
+    "insert_slot_state", "append_token_paged", "paged_gather_dequant",
+    "copy_pool_page", "set_block_entry", "clear_slot_row",
+    "tree_copy_page", "tree_set_block_entry", "tree_clear_slot_row",
+    "paged_token_bytes", "PER_SLOT_FIELDS", "TOKEN_FIELDS",
+]
+
+# pool-resident, token-indexed fields (page-major layout)
+TOKEN_FIELDS = ("codes", "kmag", "k_scale", "k_zp", "v_q", "v_scale",
+                "v_zp", "sink_mask")
+# per-slot fields that never grow with sequence length
+PER_SLOT_FIELDS = ("sink_k", "sink_v", "res_k", "res_v", "mu", "alpha",
+                   "centroids")
+
+
+class PagedSIKVCache(NamedTuple):
+    # ---- shared pool, page-major: (P, H, page_size, ...) ----
+    codes: jax.Array       # (P, H, ps, G)             int8
+    kmag: jax.Array        # (P, H, ps, D*kbits//8)    int8 (packed)
+    k_scale: jax.Array     # (P, H, ps, D//qg)
+    k_zp: jax.Array        # (P, H, ps, D//qg)
+    v_q: jax.Array         # (P, H, ps, vw)            int8 (packed)
+    v_scale: jax.Array     # (P, H, ps, vs)
+    v_zp: jax.Array        # (P, H, ps, vs)
+    sink_mask: jax.Array   # (P, H, ps)                bool
+    # ---- per-slot ----
+    block_table: jax.Array  # (B, pages_per_seq)       int32, -1 = unmapped
+    sink_k: jax.Array      # (B, H, S, D)
+    sink_v: jax.Array      # (B, H, S, Dv)
+    res_k: jax.Array       # (B, H, R, D)
+    res_v: jax.Array       # (B, H, R, Dv)
+    mu: jax.Array          # (B, H, 1, D)
+    alpha: jax.Array       # (B, H, 1, D)
+    centroids: jax.Array   # (B, H, G, C, gs)
+    length: jax.Array      # (B,)                      int32
+
+    @property
+    def num_pages(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.codes.shape[2]
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.block_table.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Logical per-slot capacity (== the dense cache's ``Lmax``)."""
+        return self.pages_per_seq * self.page_size
+
+    @property
+    def head_dim(self) -> int:
+        return self.mu.shape[-1]
+
+    @property
+    def num_sinks(self) -> int:
+        return self.sink_k.shape[2]
+
+    @property
+    def recent_window(self) -> int:
+        return self.res_k.shape[2]
+
+
+def init_paged_cache(dense: SIKVCache, num_pages: int, page_size: int,
+                     num_slots: int) -> PagedSIKVCache:
+    """Build an empty paged cache shaped after a dense template.
+
+    ``dense`` (any batch) supplies the field dtypes and trailing dims, so
+    the pool works for every configuration the dense cache supports (GQA,
+    MLA latent keys, ``value_slice``).  ``dense.capacity`` must be a
+    page-size multiple — it becomes the logical per-slot capacity.
+    """
+    if dense.capacity % page_size:
+        raise ValueError(
+            f"dense capacity {dense.capacity} not divisible by "
+            f"page_size {page_size}")
+    pages_per_seq = dense.capacity // page_size
+    pool = {
+        f: jnp.zeros((num_pages,) + (getattr(dense, f).shape[1],)
+                     + (page_size,) + getattr(dense, f).shape[3:],
+                     getattr(dense, f).dtype)
+        for f in TOKEN_FIELDS
+    }
+    slot = {
+        f: jnp.zeros((num_slots,) + getattr(dense, f).shape[1:],
+                     getattr(dense, f).dtype)
+        for f in PER_SLOT_FIELDS
+    }
+    return PagedSIKVCache(
+        block_table=jnp.full((num_slots, pages_per_seq), -1, jnp.int32),
+        length=jnp.zeros((num_slots,), jnp.int32),
+        **pool, **slot)
+
+
+def _paged_view(src: jax.Array, pages_per_seq: int,
+                page_size: int) -> jax.Array:
+    """``(H, L, ...) -> (npages, H, ps, ...)`` page-major reshape."""
+    s = src.reshape(src.shape[0], pages_per_seq, page_size, *src.shape[2:])
+    return jnp.moveaxis(s, 1, 0)
+
+
+def insert_prefill_pages(paged: PagedSIKVCache, dense: SIKVCache,
+                         slot: jax.Array,
+                         page_ids: jax.Array) -> PagedSIKVCache:
+    """Scatter a batch-1 dense prefill cache into the pool + slot row.
+
+    Args:
+      dense: batch-1 cache with ``capacity == paged.capacity``.
+      page_ids: ``(pages_per_seq,)`` int32 — physical page per logical page;
+        ``-1`` entries (pages beyond the prompt, allocated lazily during
+        decode) are dropped by the scatter's out-of-bounds mode.
+    """
+    P = paged.num_pages
+    ids = jnp.where(page_ids >= 0, page_ids, P)  # OOB => dropped
+    upd: dict[str, jax.Array] = {}
+    for f in TOKEN_FIELDS:
+        buf = getattr(paged, f)
+        src = _paged_view(getattr(dense, f)[0], paged.pages_per_seq,
+                          paged.page_size)
+        upd[f] = buf.at[ids].set(src.astype(buf.dtype))
+    for f in PER_SLOT_FIELDS:
+        buf = getattr(paged, f)
+        upd[f] = buf.at[slot].set(getattr(dense, f)[0].astype(buf.dtype))
+    upd["block_table"] = paged.block_table.at[slot].set(page_ids)
+    upd["length"] = paged.length.at[slot].set(dense.length[0])
+    return paged._replace(**upd)
+
+
+def insert_slot_state(paged: PagedSIKVCache, slot_state: dict,
+                      slot: jax.Array, page_ids: jax.Array,
+                      length: jax.Array) -> PagedSIKVCache:
+    """Admit a prefix-cache hit: bind shared pages + the stored per-slot
+    statistics to ``slot`` without touching the pool (no prefill ran)."""
+    upd = {
+        f: getattr(paged, f).at[slot].set(
+            slot_state[f][0].astype(getattr(paged, f).dtype))
+        for f in PER_SLOT_FIELDS
+    }
+    upd["block_table"] = paged.block_table.at[slot].set(page_ids)
+    upd["length"] = paged.length.at[slot].set(length)
+    return paged._replace(**upd)
+
+
+def append_token_paged(paged: PagedSIKVCache, k_new: jax.Array,
+                       v_new: jax.Array, cfg: SIKVConfig) -> PagedSIKVCache:
+    """Append one decode token per slot through the block table.
+
+    Quantization goes through the exact dense code path
+    (:func:`~repro.core.cache.quantize_decode_token`), then scatters into
+    ``pool[block_table[b, pos // ps], :, pos % ps]``.  Guards mirror the
+    dense range guard: positions past capacity, or whose page is unmapped,
+    write nothing (dead serving slots stay memory-safe).  The appended
+    slot's ``sink_mask`` is cleared explicitly — a freshly (re)allocated
+    page may hold stale metadata from a previous sequence, where the dense
+    cache could rely on its zero-initialized rows.
+    """
+    codes, kq, vq, v_ring = quantize_decode_token(
+        k_new, v_new, paged.mu, paged.alpha, cfg)
+
+    ps, P = paged.page_size, paged.num_pages
+    pos = paged.length                                        # (B,)
+    page_l = jnp.clip(pos // ps, 0, paged.pages_per_seq - 1)
+    pg = jnp.take_along_axis(paged.block_table, page_l[:, None], axis=1)[:, 0]
+    ok = (pos >= 0) & (pos < paged.capacity) & (pg >= 0)
+    pg = jnp.where(ok, pg, P)                                 # OOB => dropped
+    off = pos % ps
+
+    def upd(buf, val):  # val (B, H, 1, X) -> write (B, H, X) rows
+        return buf.at[pg, :, off].set(val[:, :, 0].astype(buf.dtype))
+
+    R = paged.recent_window
+    return paged._replace(
+        codes=upd(paged.codes, codes),
+        kmag=upd(paged.kmag, kq.packed),
+        k_scale=upd(paged.k_scale, kq.scale),
+        k_zp=upd(paged.k_zp, kq.zp),
+        v_q=upd(paged.v_q, vq.packed),
+        v_scale=upd(paged.v_scale, vq.scale),
+        v_zp=upd(paged.v_zp, vq.zp),
+        sink_mask=paged.sink_mask.at[pg, :, off].set(False),
+        res_k=batched_update_token(paged.res_k, k_new, pos % R),
+        res_v=batched_update_token(paged.res_v, v_ring, pos % R),
+        length=paged.length + 1,
+    )
+
+
+def paged_gather_dequant(paged: PagedSIKVCache, idx: jax.Array,
+                         cfg: SIKVConfig) -> tuple[jax.Array, jax.Array]:
+    """Gather + dequantize selected logical positions ``idx (B, H, T)``.
+
+    The token-wise physical gather routes through the block table; the
+    dequantization is the dense
+    :func:`~repro.core.cache.dequantize_gathered` verbatim.
+    """
+    take = lambda f: gather_selected_paged(getattr(paged, f),
+                                           paged.block_table, idx,
+                                           paged.page_size)
+    return dequantize_gathered(
+        take("codes"), take("kmag"), take("k_scale"), take("k_zp"),
+        take("v_q"), take("v_scale"), take("v_zp"),
+        paged.mu, paged.alpha, cfg)
+
+
+def copy_pool_page(paged: PagedSIKVCache, src: jax.Array,
+                   dst: jax.Array) -> PagedSIKVCache:
+    """Copy one physical page (all token fields) — the copy-on-write step."""
+    return paged._replace(**{
+        f: getattr(paged, f).at[dst].set(getattr(paged, f)[src])
+        for f in TOKEN_FIELDS
+    })
+
+
+def set_block_entry(paged: PagedSIKVCache, slot: jax.Array, j: jax.Array,
+                    page_id: jax.Array) -> PagedSIKVCache:
+    return paged._replace(
+        block_table=paged.block_table.at[slot, j].set(page_id))
+
+
+def clear_slot_row(paged: PagedSIKVCache, slot: jax.Array) -> PagedSIKVCache:
+    """Unmap a retired slot's block-table row.  Unlike the dense engine,
+    where a dead row harmlessly absorbs writes until its length passes
+    capacity, a paged slot's row points at pages that retire() RELEASED —
+    the next admission may re-allocate them, so the dead slot's appends
+    must be cut off at the mapping (``page == -1`` drops the write)."""
+    return paged._replace(
+        block_table=paged.block_table.at[slot].set(-1))
+
+
+def _map_paged(fn, tree: Any) -> Any:
+    """Apply ``fn`` to every PagedSIKVCache inside a caches pytree."""
+    return jax.tree_util.tree_map(
+        lambda c: fn(c) if isinstance(c, PagedSIKVCache) else c,
+        tree, is_leaf=lambda x: isinstance(x, PagedSIKVCache))
+
+
+def tree_copy_page(caches: Any, src: jax.Array, dst: jax.Array) -> Any:
+    """Copy-on-write one page id across every layer's paged cache."""
+    return _map_paged(lambda c: copy_pool_page(c, src, dst), caches)
+
+
+def tree_set_block_entry(caches: Any, slot: jax.Array, j: jax.Array,
+                         page_id: jax.Array) -> Any:
+    """Update one block-table entry across every layer's paged cache."""
+    return _map_paged(lambda c: set_block_entry(c, slot, j, page_id), caches)
+
+
+def tree_clear_slot_row(caches: Any, slot: jax.Array) -> Any:
+    """Unmap a slot's block-table row across every layer's paged cache."""
+    return _map_paged(lambda c: clear_slot_row(c, slot), caches)
+
+
+def paged_token_bytes(paged: PagedSIKVCache) -> int:
+    """HBM bytes of the pooled token store (block table included)."""
+    n = paged.block_table.nbytes
+    for f in TOKEN_FIELDS:
+        n += getattr(paged, f).nbytes
+    return n

@@ -1,0 +1,290 @@
+"""Host-side page-pool accounting: free list, refcounts, prefix registry.
+
+The device side (:mod:`repro.paged.cache`) holds every quantized cache field
+as shared ``(num_pages, H, page_size, ...)`` pool arrays addressed through
+per-slot block tables.  THIS module is the bookkeeping that decides which
+physical page holds what — it is deliberately pure Python (no jax), because
+allocation decisions happen between jitted program launches, once per admit
+and at page boundaries during decode (every ``page_size`` steps):
+
+* ``PagePool`` — free-list allocator with per-page refcounts.  A page is
+  freed when its refcount drops to zero; shared pages (prefix cache,
+  not-yet-diverged clones) simply hold extra references.
+* prefix registry — completed prompts register their page list under the
+  full token tuple.  A later *identical* prompt re-uses the pages (and the
+  stored per-slot statistics) without re-running prefill.  Entries hold one
+  reference per page; under allocation pressure the least-recently-used
+  entries are evicted, which frees exactly the pages no live slot still
+  references (PackKV-style footprint accounting).
+
+  Sharing is keyed on the FULL prompt, not a token prefix: SIKV compression
+  statistics (``mu``/``alpha``/centroids, and the sink vote) are computed
+  over the whole prompt, so pages holding the same token prefix of two
+  different prompts are *not* byte-identical.  Whole-prompt granularity is
+  the exact-sharing boundary (see DESIGN.md §3.4).
+* ``SlotPageManager`` — per-slot page lists plus the write-path policy:
+  before a slot appends at position ``pos`` it must own the covering page
+  exclusively, so the manager allocates fresh pages at page boundaries and
+  copy-on-writes shared pages on the first divergent append.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied even after evicting
+    every unreferenced prefix-cache entry."""
+
+
+@dataclass
+class PrefixEntry:
+    """One registered prompt: its pages + the per-slot state a future
+    identical prompt needs to skip prefill entirely."""
+
+    page_ids: List[int]
+    prompt_len: int
+    first_token: int
+    # per-layer dicts of per-slot cache leaves (batch-1 jax arrays:
+    # sink_k/sink_v/res_k/res_v/mu/alpha/centroids) — length-independent,
+    # but FULL PRECISION, so for short prompts it can outweigh the
+    # compressed pages it caches.  state_bytes makes that cost visible and
+    # max_prompts bounds it.
+    slot_state: Any
+    state_bytes: int = 0
+    hits: int = 0
+
+
+class PagePool:
+    """Free-list page allocator with refcounts and an LRU prefix registry."""
+
+    def __init__(self, num_pages: int, page_size: int,
+                 max_prompts: int = 32):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError(f"need positive pool dims, got "
+                             f"{num_pages=} {page_size=}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # cap on registered prompts: each entry pins full-precision
+        # slot_state (sinks+ring+stats per layer), which is NOT in the
+        # page-bytes budget — bound it instead of letting distinct short
+        # prompts accumulate HBM until page pressure finally evicts
+        self.max_prompts = max_prompts
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.refcount: List[int] = [0] * num_pages
+        # insertion-ordered => oldest entry first; hits re-insert (LRU)
+        self.registry: Dict[Tuple[int, ...], PrefixEntry] = {}
+        # pages whose refcount includes the registry's own reference
+        self._registry_pages: set = set()
+        # admission reservations: pages promised to admitted slots that will
+        # be drawn lazily during decode.  Without this, admission control
+        # could promise the same free page to two slots.
+        self.reserved: int = 0
+        self.stats: Dict[str, int] = {
+            "allocated": 0, "freed": 0, "evictions": 0, "prefix_hits": 0,
+        }
+
+    # -- allocation ----------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def live_refs(self, page: int) -> int:
+        """References held by live slots (the prefix registry's own hold is
+        excluded — a registered page's beyond-prompt offsets are don't-care,
+        so a single live writer may append in place; see SlotPageManager)."""
+        return self.refcount[page] - (1 if page in self._registry_pages else 0)
+
+    def reserve(self, n: int) -> None:
+        self.reserved += n
+
+    def unreserve(self, n: int) -> None:
+        self.reserved = max(0, self.reserved - n)
+
+    def available(self, protect: Optional[Tuple[int, ...]] = None) -> int:
+        """Pages obtainable for a NEW admission: free + freeable by evicting
+        registry entries (a registered page frees only if no live slot
+        shares it), minus pages already promised to admitted slots."""
+        n = len(self._free)
+        for key, entry in self.registry.items():
+            if key == protect:
+                continue
+            n += sum(1 for p in entry.page_ids if self.refcount[p] == 1)
+        return max(0, n - self.reserved)
+
+    def allocate(self, n: int,
+                 protect: Optional[Tuple[int, ...]] = None) -> List[int]:
+        """Take ``n`` pages, evicting LRU prefix entries under pressure."""
+        while len(self._free) < n and self._evict_one(protect):
+            pass
+        if len(self._free) < n:
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)} free of "
+                f"{self.num_pages} (and nothing left to evict)")
+        ids = [self._free.pop() for _ in range(n)]
+        for p in ids:
+            self.refcount[p] = 1
+        self.stats["allocated"] += n
+        return ids
+
+    def share(self, page_ids: Sequence[int]) -> None:
+        for p in page_ids:
+            assert self.refcount[p] > 0, f"sharing a free page {p}"
+            self.refcount[p] += 1
+
+    def release(self, page_ids: Sequence[int]) -> None:
+        for p in page_ids:
+            assert self.refcount[p] > 0, f"double free of page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                self.stats["freed"] += 1
+
+    # -- prefix registry -----------------------------------------------
+
+    def register_prefix(self, key: Tuple[int, ...], page_ids: Sequence[int],
+                        *, prompt_len: int, first_token: int,
+                        slot_state: Any, state_bytes: int = 0) -> None:
+        if key in self.registry:
+            return
+        while len(self.registry) >= self.max_prompts \
+                and self._evict_one(protect=None):
+            pass
+        self.share(page_ids)  # the registry's own reference
+        self._registry_pages.update(page_ids)
+        self.registry[key] = PrefixEntry(
+            page_ids=list(page_ids), prompt_len=prompt_len,
+            first_token=first_token, slot_state=slot_state,
+            state_bytes=state_bytes)
+
+    def lookup_prefix(self, key: Tuple[int, ...]) -> Optional[PrefixEntry]:
+        entry = self.registry.get(key)
+        if entry is not None:
+            self.registry[key] = self.registry.pop(key)  # LRU touch
+            entry.hits += 1
+            self.stats["prefix_hits"] += 1
+        return entry
+
+    def _evict_one(self, protect: Optional[Tuple[int, ...]]) -> bool:
+        for key in self.registry:
+            if key != protect:
+                entry = self.registry.pop(key)
+                self._registry_pages.difference_update(entry.page_ids)
+                self.release(entry.page_ids)
+                self.stats["evictions"] += 1
+                return True
+        return False
+
+    def snapshot(self) -> Dict[str, int]:
+        return dict(self.stats, num_pages=self.num_pages,
+                    free=len(self._free), reserved=self.reserved,
+                    in_use=self.num_pages - len(self._free),
+                    registered_prompts=len(self.registry),
+                    registry_state_bytes=sum(
+                        e.state_bytes for e in self.registry.values()))
+
+
+@dataclass
+class _SlotPages:
+    pages: List[int] = field(default_factory=list)
+
+
+class SlotPageManager:
+    """Per-slot page lists + the exclusive-write policy over a PagePool.
+
+    The jitted append writes token ``pos`` of slot ``s`` into the pool page
+    ``block_table[s, pos // page_size]``.  Before each decode step the
+    engine calls :meth:`ensure_writable`; the manager guarantees the
+    covering page exists and is writable, issuing the block-table update
+    (and the page copy, for copy-on-write un-sharing) through the
+    caller-provided device callbacks.
+
+    Copy-on-write triggers when the page has another LIVE sharer
+    (``pool.live_refs > 1``).  The prefix registry's own reference is
+    exempt: a slot appending at ``pos >= prompt_len`` only writes offsets
+    strictly beyond the registered prompt content, and readers never look
+    at offsets at or beyond their own length, so a single live writer may
+    scribble in place — beyond-prompt offsets of a registered page are
+    don't-care bytes.  This saves one page copy per admission.
+
+    Admission *reservations*: each slot may carry a budget of pages it was
+    promised at admit time; lazy decode allocations draw that budget down
+    (``pool.reserved`` global counter), so admission control can never
+    promise the same free page twice.
+
+    Callbacks (kept abstract so a single-cache test and the multi-layer
+    engine share this logic):
+
+    * ``set_block(slot, j, page_id)`` — write one block-table entry;
+    * ``copy_page(src, dst)`` — copy a pool page across every layer.
+    """
+
+    def __init__(self, pool: PagePool, pages_per_seq: int, num_slots: int,
+                 *, set_block: Callable[[int, int, int], None],
+                 copy_page: Callable[[int, int], None]):
+        self.pool = pool
+        self.pages_per_seq = pages_per_seq
+        self._slots: List[Optional[_SlotPages]] = [None] * num_slots
+        self._resv: List[int] = [0] * num_slots
+        self._set_block = set_block
+        self._copy_page = copy_page
+        self.cow_copies = 0
+
+    def slot_pages(self, slot: int) -> Optional[List[int]]:
+        s = self._slots[slot]
+        return None if s is None else list(s.pages)
+
+    def assign(self, slot: int, page_ids: Sequence[int],
+               *, reserved: int = 0) -> None:
+        """Bind an allocated/shared page list to a slot (admission),
+        optionally reserving ``reserved`` future pages for its decode.
+
+        Host-side bookkeeping only: the admission insert
+        (``insert_prefill_pages`` / ``insert_slot_state``) writes the whole
+        device block-table row in the same launch as the cache data, so
+        issuing ``pages_per_seq`` individual ``set_block`` updates here
+        would be dead work on the TTFT path.  ``set_block`` is reserved for
+        the incremental updates of :meth:`ensure_writable`."""
+        self.release_slot(slot)
+        self._slots[slot] = _SlotPages(list(page_ids))
+        self._resv[slot] = reserved
+        self.pool.reserve(reserved)
+
+    def release_slot(self, slot: int) -> None:
+        s = self._slots[slot]
+        if s is not None:
+            self.pool.release(s.pages)
+            self._slots[slot] = None
+        self.pool.unreserve(self._resv[slot])
+        self._resv[slot] = 0
+
+    def _take_page(self, slot: int) -> int:
+        pid = self.pool.allocate(1)[0]
+        if self._resv[slot] > 0:
+            self._resv[slot] -= 1
+            self.pool.unreserve(1)
+        return pid
+
+    def ensure_writable(self, slot: int, pos: int) -> None:
+        """Make ``pos`` of ``slot`` appendable: allocate at page boundaries,
+        copy-on-write pages with another live sharer on first divergence."""
+        s = self._slots[slot]
+        if s is None or pos >= self.pages_per_seq * self.pool.page_size:
+            return  # dead slot / past capacity: the jitted write no-ops
+        j = pos // self.pool.page_size
+        if j == len(s.pages):
+            pid = self._take_page(slot)
+            s.pages.append(pid)
+            self._set_block(slot, j, pid)
+        elif j < len(s.pages) and self.pool.live_refs(s.pages[j]) > 1:
+            new = self._take_page(slot)
+            self._copy_page(s.pages[j], new)
+            self.pool.release([s.pages[j]])
+            s.pages[j] = new
+            self._set_block(slot, j, new)
+            self.cow_copies += 1
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]

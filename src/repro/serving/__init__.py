@@ -1,2 +1,6 @@
 from repro.serving.engine import ServingEngine
+from repro.serving.paged_engine import PagedServingEngine
 from repro.serving.scheduler import Request, RequestScheduler
+
+__all__ = ["ServingEngine", "PagedServingEngine", "Request",
+           "RequestScheduler"]

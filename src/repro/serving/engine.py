@@ -47,12 +47,16 @@ from repro.models.transformer import Params
 from repro.sparse import get_method
 
 
+def row_insert(buf: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write a batch-1 array into row ``slot`` of a batched array."""
+    idx = (slot,) + (0,) * (buf.ndim - 1)
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+
+
 def _insert_slot(batched: Any, single: Any, slot: jax.Array) -> Any:
     """Write a batch-1 cache pytree into row ``slot`` of a batched pytree."""
-    def ins(buf, val):
-        idx = (slot,) + (0,) * (buf.ndim - 1)
-        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
-    return jax.tree_util.tree_map(ins, batched, single)
+    return jax.tree_util.tree_map(
+        lambda buf, val: row_insert(buf, val, slot), batched, single)
 
 
 class ServingEngine:
@@ -75,6 +79,8 @@ class ServingEngine:
             decode_step, cfg=cfg, method=self.method))
         self._insert = jax.jit(_insert_slot)
         self.stats: Dict[str, int] = {"prefills": 0, "steps": 0}
+        # admission metadata of the most recent admit() (schedulers read it)
+        self.last_admit: Dict[str, Any] = {}
         # live slot state (continuous batching)
         self._caches: Any = None
         self._tok = jnp.zeros((batch_size,), jnp.int32)    # next input token
@@ -150,12 +156,38 @@ class ServingEngine:
     # continuous batching: per-slot admit / step / retire
     # ------------------------------------------------------------------
 
-    def admit(self, slot: int, prompt: List[int]) -> int:
+    def validate_prompt(self, prompt: List[int],
+                        max_new_tokens: Optional[int] = None) -> None:
+        """Reject prompts the engine cannot serve, with a clear error,
+        instead of silently truncating / range-guard-dropping tokens.
+        ``max_new_tokens`` lets resource-aware subclasses (page pools) size
+        the worst case to the request instead of the engine maximum."""
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.prompt_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the engine's "
+                f"prompt_len {self.prompt_len} (capacity {self.capacity}); "
+                "build an engine with a larger prompt_len or split the "
+                "request")
+
+    def can_admit(self, prompt: List[int], max_new_tokens: int) -> bool:
+        """Whether a request can be admitted right now (a free slot is the
+        caller's concern; subclasses add resource checks, e.g. free pages)."""
+        return True
+
+    def admit(self, slot: int, prompt: List[int],
+              max_new_tokens: Optional[int] = None) -> int:
         """Prefill ``prompt`` into batch row ``slot``; returns the first
-        generated token.  Compiles nothing new after the first call."""
+        generated token.  Compiles nothing new after the first call.
+        ``max_new_tokens`` sizes resource reservations in paged subclasses;
+        the dense engine's headroom is fixed, so it is ignored here."""
         assert 0 <= slot < self.batch_size
+        self.validate_prompt(prompt, max_new_tokens)
+        self.last_admit = {"prefix_hit": False, "shared_pages": 0}
         Lp = self.prompt_len
-        toks = jnp.asarray(prompt[-Lp:], jnp.int32)
+        # validate_prompt guarantees len(prompt) <= Lp — no truncation here
+        toks = jnp.asarray(prompt, jnp.int32)
         length = int(toks.shape[0])
         row = jnp.zeros((1, Lp), jnp.int32).at[0, :length].set(toks)
         batch = {"tokens": row,
@@ -190,7 +222,8 @@ class ServingEngine:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._tok = tok
         self._pos = self._pos + 1
-        return [int(t) for t in tok]
+        # one bulk device->host transfer, not one blocking read per slot
+        return jax.device_get(tok).tolist()
 
     def retire(self, slot: int) -> None:
         """Free a slot.  Parking the position past capacity keeps RoPE
@@ -203,3 +236,15 @@ class ServingEngine:
     def invocations(self) -> int:
         """Total jitted program launches (prefills + decode steps)."""
         return self.stats["prefills"] + self.stats["steps"]
+
+    def token_store_bytes(self) -> int:
+        """Measured HBM bytes of the token-indexed cache arrays (every leaf
+        whose axis 2 spans the per-slot capacity) — the quantity the paged
+        pool shrinks.  Excludes the per-slot fixed state (sinks/ring/stats),
+        which both layouts pay identically."""
+        assert self._caches is not None, "admit() at least one request first"
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self._caches):
+            if leaf.ndim >= 3 and leaf.shape[2] == self.capacity:
+                total += leaf.nbytes
+        return total

@@ -1,0 +1,330 @@
+"""Slot-based serving engine over the paged compressed-KV pool.
+
+Same programming model as :class:`~repro.serving.engine.ServingEngine`
+(admit / step / retire, all jitted programs static-shaped), but the
+token-indexed cache state lives in shared page pools
+(:mod:`repro.paged.cache`) instead of dense ``(B, H, Lmax, ...)`` rows:
+
+* ``admit`` runs the ordinary batch-1 dense prefill, allocates just the
+  pages covering the prompt (``ceil(len / page_size)``, not
+  ``pages_per_seq``), and scatters the compressed prompt into them; decode
+  pages are allocated lazily, one every ``page_size`` steps.  So HBM scales
+  with *tokens actually cached*, and concurrency with pool size — not with
+  ``batch_size * Lmax``;
+* identical prompts hit the prefix registry: the new slot re-uses the
+  registered pages (refcounted) AND the stored per-slot statistics +
+  first token, skipping the prefill program entirely;
+* on the first append into a shared page the slot copy-on-writes it
+  (host-side policy in :class:`~repro.paged.pool.SlotPageManager`, device
+  copy jitted), so divergent continuations stay bit-exact with the dense
+  engine (tested);
+* ``retire`` releases the slot's page references; pages drop to the free
+  list as their refcount reaches zero.
+
+The prefill program is the dense one (unchanged); only the decode step
+routes through the block table, via the ``sikv_paged`` method.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SIKVConfig
+from repro.core.cache import SIKVCache
+from repro.core.policy import pages_needed
+from repro.paged.cache import (PER_SLOT_FIELDS, PagedSIKVCache,
+                               init_paged_cache, insert_prefill_pages,
+                               insert_slot_state, paged_token_bytes,
+                               tree_clear_slot_row, tree_copy_page,
+                               tree_set_block_entry)
+from repro.paged.pool import PagePool, SlotPageManager
+from repro.serving.engine import ServingEngine, row_insert
+from repro.models.transformer import Params
+
+
+def _tree_insert_prefill(caches: Any, caches_one: Any, slot: jax.Array,
+                         page_ids: jax.Array) -> Any:
+    """Insert a batch-1 prefill into the paged caches (all layers).
+
+    SIKV entries scatter into pool pages + slot rows; any other per-layer
+    state (e.g. Mamba SSM states) stays dense per-slot and is row-inserted
+    as in the dense engine.
+    """
+    def ins(paged, dense):
+        if isinstance(paged, PagedSIKVCache):
+            return insert_prefill_pages(paged, dense, slot, page_ids)
+        return row_insert(paged, dense, slot)
+    return jax.tree_util.tree_map(
+        ins, caches, caches_one,
+        is_leaf=lambda x: isinstance(x, PagedSIKVCache))
+
+
+def _tree_insert_hit(caches: Any, slot_state: Any, slot: jax.Array,
+                     page_ids: jax.Array, length: jax.Array) -> Any:
+    """Bind shared pages + stored per-slot state (prefix-cache hit)."""
+    def ins(paged, state):
+        if isinstance(paged, PagedSIKVCache):
+            return insert_slot_state(paged, state, slot, page_ids, length)
+        return row_insert(paged, state, slot)
+    return jax.tree_util.tree_map(
+        ins, caches, slot_state,
+        is_leaf=lambda x: isinstance(x, PagedSIKVCache))
+
+
+class PagedServingEngine(ServingEngine):
+    """Continuous batching with page-pool admission and prefix caching.
+
+    Args:
+      page_size: tokens per page (the pool's allocation granule).
+      num_pages: pool capacity; default reserves worst case
+        (``batch_size * pages_per_seq``) — pass less to serve more
+        sequences than dense slots would fit in the same HBM.
+      prefix_caching: share full prompt pages between *identical* prompts
+        (SIKV statistics are prompt-global, so whole-prompt identity is the
+        exact-sharing boundary — DESIGN.md §3.4).
+    """
+
+    def __init__(self, params: Params, cfg: ModelConfig,
+                 sikv: SIKVConfig | None = None, *, batch_size: int = 8,
+                 prompt_len: int = 512, max_new_tokens: int = 64,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefix_caching: bool = True, max_cached_prompts: int = 32):
+        # round generation headroom up so capacity is a page multiple —
+        # but only internally: the ADVERTISED max_new_tokens stays the
+        # configured value so paged and dense engines clamp requests
+        # identically (schedulers read engine.max_new_tokens)
+        cap = prompt_len + max_new_tokens
+        max_new_eff = max_new_tokens + (-cap) % page_size
+        super().__init__(params, cfg, sikv, method="sikv_paged",
+                         batch_size=batch_size, prompt_len=prompt_len,
+                         max_new_tokens=max_new_eff)
+        self.max_new_tokens = max_new_tokens
+        self.page_size = page_size
+        self.pages_per_seq = self.capacity // page_size
+        self.num_pages = num_pages or batch_size * self.pages_per_seq
+        self.prefix_caching = prefix_caching
+        self.pool = PagePool(self.num_pages, page_size,
+                             max_prompts=max_cached_prompts)
+        self.slots = SlotPageManager(
+            self.pool, self.pages_per_seq, batch_size,
+            set_block=self._set_block, copy_page=self._copy_page)
+        self._host_pos: List[int] = [self.capacity] * batch_size
+        self._insert_prefill = jax.jit(_tree_insert_prefill)
+        self._insert_hit = jax.jit(_tree_insert_hit)
+        self._copy = jax.jit(tree_copy_page)
+        self._set_blk = jax.jit(tree_set_block_entry)
+        self._clear_row = jax.jit(tree_clear_slot_row)
+        # aux_launches: the paged engine's extra jitted programs (inserts,
+        # block-table updates, CoW copies, retire unmaps) — counted so
+        # invocations() stays an honest apples-to-apples work metric
+        self.stats.update(prefix_hits=0, cow_copies=0, aux_launches=0)
+
+    def invocations(self) -> int:
+        """Total jitted program launches, including the paged memory
+        manager's own (inserts, set_block, CoW copies, clear_row)."""
+        return super().invocations() + self.stats["aux_launches"]
+
+    # -- device callbacks for the host-side page manager ----------------
+
+    def _set_block(self, slot: int, j: int, page_id: int) -> None:
+        self._caches = self._set_blk(self._caches,
+                                     jnp.asarray(slot, jnp.int32),
+                                     jnp.asarray(j, jnp.int32),
+                                     jnp.asarray(page_id, jnp.int32))
+        self.stats["aux_launches"] += 1
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        self._caches = self._copy(self._caches, jnp.asarray(src, jnp.int32),
+                                  jnp.asarray(dst, jnp.int32))
+        self.stats["aux_launches"] += 1
+
+    # -- admission -------------------------------------------------------
+
+    def _clamp_new(self, max_new_tokens: Optional[int]) -> int:
+        """Request cap clamped to the engine headroom.  ``None`` means "not
+        specified" — an explicit 0 must stay 0 (a 0-new-token admission
+        reserves nothing; `or` would silently substitute the engine max
+        and reserve pages can_admit never checked)."""
+        if max_new_tokens is None:
+            return self.max_new_tokens
+        return min(max_new_tokens, self.max_new_tokens)
+
+    def validate_prompt(self, prompt: List[int],
+                        max_new_tokens: Optional[int] = None) -> None:
+        super().validate_prompt(prompt)
+        new = self._clamp_new(max_new_tokens)
+        need = pages_needed(len(prompt), new, self.page_size)
+        if need > self.num_pages:
+            raise ValueError(
+                f"request needs {need} pages worst-case "
+                f"({len(prompt)} prompt + {new} new @ page_size "
+                f"{self.page_size}) but the pool holds only "
+                f"{self.num_pages}; enlarge num_pages or shrink the request")
+
+    def _pages_needed_now(self, prompt: List[int], new: int) -> int:
+        """Worst-case NEW pages for this request, given the pool's CURRENT
+        sharing state.  On a prefix hit whose partial tail page has no live
+        sharer, the slot appends it in place (no allocation) — and any
+        LATER hit on the same prompt sees a live sharer and reserves the
+        copy-on-write page itself, so dropping the charge here stays sound.
+        Without this refinement a pool sized exactly to the request
+        deadlocks: the naive worst case is one page more than `available`
+        can ever report."""
+        key = tuple(prompt)
+        entry = (self.pool.registry.get(key)
+                 if self.prefix_caching else None)
+        if entry is None:
+            return pages_needed(len(prompt), new, self.page_size)
+        need = pages_needed(len(prompt), new, self.page_size,
+                            prefix_hit=True)
+        has_tail = len(prompt) % self.page_size != 0
+        if has_tail and self.pool.live_refs(entry.page_ids[-1]) == 0:
+            need -= 1
+        return need
+
+    def can_admit(self, prompt: List[int], max_new_tokens: int) -> bool:
+        """Admission on free *pages*: reserve the worst case so an admitted
+        request can never exhaust the pool mid-decode."""
+        key = tuple(prompt)
+        hit = self.prefix_caching and key in self.pool.registry
+        need = self._pages_needed_now(
+            prompt, min(max_new_tokens, self.max_new_tokens))
+        return self.pool.available(protect=key if hit else None) >= need
+
+    def _extract_slot_state(self, caches_one: Any) -> Any:
+        """Per-slot leaves of a batch-1 prefill (tiny: sinks, ring,
+        ``mu``/``alpha``/centroids — O(H·(S+R)·D), no token-length arrays),
+        stored per registered prompt so a hit skips prefill entirely.
+        Non-SIKV leaves (e.g. Mamba states) are kept whole."""
+        def ext(c):
+            if isinstance(c, SIKVCache):
+                return {f: getattr(c, f) for f in PER_SLOT_FIELDS}
+            return c
+        return jax.tree_util.tree_map(
+            ext, caches_one, is_leaf=lambda x: isinstance(x, SIKVCache))
+
+    def admit(self, slot: int, prompt: List[int],
+              max_new_tokens: Optional[int] = None) -> int:
+        """Admit a request into ``slot``: a prefix-cache hit binds the
+        registered pages + statistics without launching prefill; a miss
+        prefills dense at batch 1 and scatters into fresh pages.  Either
+        way the slot reserves its worst-case remaining pages so decode can
+        never exhaust the pool mid-flight."""
+        assert 0 <= slot < self.batch_size
+        self.validate_prompt(prompt, max_new_tokens)
+        new = self._clamp_new(max_new_tokens)
+        key = tuple(prompt)
+        n_prompt_pages = math.ceil(len(prompt) / self.page_size)
+        pad = lambda ids: jnp.asarray(
+            list(ids) + [-1] * (self.pages_per_seq - len(ids)), jnp.int32)
+
+        need = self._pages_needed_now(prompt, new)
+        entry = (self.pool.lookup_prefix(key)
+                 if self.prefix_caching and self._caches is not None else None)
+        if entry is not None:
+            self.pool.share(entry.page_ids)
+            self.slots.assign(slot, entry.page_ids, reserved=need)
+            self._caches = self._insert_hit(
+                self._caches, entry.slot_state, jnp.asarray(slot, jnp.int32),
+                pad(entry.page_ids), jnp.asarray(len(prompt), jnp.int32))
+            first = entry.first_token
+            self.stats["aux_launches"] += 1          # _insert_hit
+            self.last_admit = {"prefix_hit": True,
+                               "shared_pages": len(entry.page_ids)}
+        else:
+            Lp = self.prompt_len
+            toks = jnp.asarray(prompt, jnp.int32)
+            row = jnp.zeros((1, Lp), jnp.int32).at[0, : len(prompt)].set(toks)
+            batch = {"tokens": row,
+                     "lengths": jnp.asarray([len(prompt)], jnp.int32)}
+            logits, caches_one = self._prefill_one(self.params, batch=batch)
+            self.stats["prefills"] += 1
+            if self._caches is None:
+                self._caches = self._init_paged(caches_one)
+            page_ids = self.pool.allocate(n_prompt_pages, protect=key)
+            self.slots.assign(slot, page_ids,
+                              reserved=need - n_prompt_pages)
+            self._caches = self._insert_prefill(
+                self._caches, caches_one, jnp.asarray(slot, jnp.int32),
+                pad(page_ids))
+            first = int(jnp.argmax(logits[0]))
+            self.stats["aux_launches"] += 1          # _insert_prefill
+            if self.prefix_caching:
+                state = self._extract_slot_state(caches_one)
+                self.pool.register_prefix(
+                    key, page_ids, prompt_len=len(prompt), first_token=first,
+                    slot_state=state,
+                    state_bytes=sum(x.nbytes for x in
+                                    jax.tree_util.tree_leaves(state)))
+            self.last_admit = {"prefix_hit": False, "shared_pages": 0}
+        self.stats["prefix_hits"] += int(self.last_admit["prefix_hit"])
+        self._host_pos[slot] = len(prompt)
+        self._tok = self._tok.at[slot].set(first)
+        self._pos = self._pos.at[slot].set(len(prompt))
+        return first
+
+    def _init_paged(self, caches_one: Any) -> Any:
+        """First admission: build the per-layer page pools shaped after the
+        dense batch-1 prefill caches."""
+        for entry in caches_one:
+            if isinstance(entry, dict) and "cross" in entry:
+                raise NotImplementedError(
+                    "paged serving covers decoder self-attention caches; "
+                    "encoder-decoder cross caches are static per slot — "
+                    "use the dense ServingEngine for those models")
+
+        def init(c):
+            if isinstance(c, SIKVCache):
+                return init_paged_cache(c, self.num_pages, self.page_size,
+                                        self.batch_size)
+            # e.g. Mamba SSM states: stay dense per-slot rows
+            return jnp.zeros((self.batch_size,) + c.shape[1:], c.dtype)
+        return jax.tree_util.tree_map(
+            init, caches_one, is_leaf=lambda x: isinstance(x, SIKVCache))
+
+    # -- decode ----------------------------------------------------------
+
+    def step(self) -> List[int]:
+        """Advance every slot one token.  Before launching the jitted step,
+        make each live slot's write position appendable (fresh page at page
+        boundaries, copy-on-write if the covering page is shared)."""
+        for s in self.slots.active_slots():
+            self.slots.ensure_writable(s, self._host_pos[s])
+            self._host_pos[s] += 1
+        toks = super().step()
+        self.stats["cow_copies"] = self.slots.cow_copies
+        return toks
+
+    def retire(self, slot: int) -> None:
+        """Release the slot's page references AND unmap its block-table
+        row: the dead slot keeps flowing through the jitted step (static
+        shapes) and its device-side length keeps advancing, so without the
+        unmap its appends would scatter into freed — possibly
+        re-allocated — pages and corrupt live requests."""
+        self.slots.release_slot(slot)
+        if self._caches is not None:
+            self._caches = self._clear_row(self._caches,
+                                           jnp.asarray(slot, jnp.int32))
+            self.stats["aux_launches"] += 1
+        self._host_pos[slot] = self.capacity
+        super().retire(slot)
+
+    # -- accounting ------------------------------------------------------
+
+    def token_store_bytes(self) -> int:
+        """Measured HBM bytes of the pooled token store (all layers)."""
+        assert self._caches is not None, "admit() at least one request first"
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(
+                self._caches,
+                is_leaf=lambda x: isinstance(x, PagedSIKVCache)):
+            if isinstance(leaf, PagedSIKVCache):
+                total += paged_token_bytes(leaf)
+        return total
+
+    def pool_stats(self) -> Dict[str, int]:
+        return dict(self.pool.snapshot(), cow_copies=self.slots.cow_copies,
+                    prefix_hits=self.stats["prefix_hits"])

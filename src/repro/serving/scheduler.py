@@ -36,6 +36,9 @@ class Request:
     t_submit: float = 0.0
     ttft: float = 0.0
     tpot: float = 0.0
+    # paged-engine admission metadata (prefix caching)
+    prefix_hit: bool = False
+    shared_pages: int = 0
 
 
 @dataclass
@@ -52,8 +55,14 @@ class RequestScheduler:
     engine: ServingEngine
     queue: List[Request] = field(default_factory=list)
     completed: Dict[int, Request] = field(default_factory=dict)
+    # highest number of simultaneously active slots seen (concurrency metric)
+    peak_active: int = 0
 
     def submit(self, req: Request) -> None:
+        """Queue a request; rejects infeasible ones immediately (prompt too
+        long for the engine, or needing more pages than the pool holds)
+        with a ValueError instead of letting them degrade silently."""
+        self.engine.validate_prompt(req.prompt, req.max_new_tokens)
         req.t_submit = time.time()
         self.queue.append(req)
 
@@ -63,8 +72,14 @@ class RequestScheduler:
 
     def _admit_next(self, slots: List[_Slot], i: int) -> None:
         req = self.queue.pop(0)
-        first = self.engine.admit(i, req.prompt)
+        first = self.engine.admit(
+            i, req.prompt,
+            max_new_tokens=min(req.max_new_tokens,
+                               self.engine.max_new_tokens))
         now = time.time()
+        info = getattr(self.engine, "last_admit", {})
+        req.prefix_hit = bool(info.get("prefix_hit", False))
+        req.shared_pages = int(info.get("shared_pages", 0))
         req.result = [first]
         req.ttft = now - req.t_submit
         slot = slots[i]
@@ -90,15 +105,32 @@ class RequestScheduler:
 
     def run(self) -> int:
         """Serve the whole queue with continuous batching; returns the
-        number of completed requests."""
+        number of completed requests.
+
+        A request is admitted only when the engine has the resources for it
+        (``engine.can_admit`` — always true for the dense engine; free
+        *pages* for the paged engine).  When the queue head does not fit,
+        it waits for running requests to retire and free pages — admission
+        stays FIFO so a large request cannot starve behind small ones.
+        """
         B = self.engine.batch_size
         slots = [_Slot() for _ in range(B)]
         done0 = len(self.completed)
         while self.queue or any(s.req is not None for s in slots):
             for i in range(B):
-                if slots[i].req is None and self.queue:
+                if slots[i].req is None and self.queue and \
+                        self.engine.can_admit(self.queue[0].prompt,
+                                              self.queue[0].max_new_tokens):
                     self._admit_next(slots, i)
-            if not any(s.req is not None for s in slots):
+            active = sum(s.req is not None for s in slots)
+            self.peak_active = max(self.peak_active, active)
+            if not active:
+                if self.queue and not self.engine.can_admit(
+                        self.queue[0].prompt, self.queue[0].max_new_tokens):
+                    raise RuntimeError(
+                        "queue head inadmissible with an idle engine — the "
+                        "pool cannot ever fit it (submit() validation "
+                        "should have rejected it)")
                 continue  # every admitted request finished at its prefill;
                 # keep draining the queue
             toks = self.engine.step()
@@ -128,13 +160,20 @@ class RequestScheduler:
         tokens, lengths = self.engine.pad_prompts([r.prompt for r in batch])
         n_new = min(max(r.max_new_tokens for r in batch),
                     self.engine.max_new_tokens)
+        t_batch = time.time()
         gen, _ = self.engine.generate(tokens, lengths=lengths,
                                       max_new_tokens=n_new)
         now = time.time()
         for i, req in enumerate(batch):
             req.result = [int(t) for t in gen[i, : req.max_new_tokens]]
+            # in lock-step the first token only surfaces when the whole
+            # batch finishes, so TTFT honestly includes the queue wait...
             req.ttft = now - req.t_submit
-            req.tpot = (now - req.t_submit) / max(1, len(req.result))
+            # ...but TPOT must not: measure this batch's generation wall
+            # time per token (comparable to the continuous scheduler's
+            # decode_time / decode_tokens; still includes the batch's own
+            # prefill, which lock-step cannot separate from decode).
+            req.tpot = (now - t_batch) / max(1, len(req.result))
             self.completed[req.uid] = req
 
     def flush_lockstep(self) -> int:

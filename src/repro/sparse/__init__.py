@@ -9,6 +9,7 @@ from repro.sparse.snapkv import SnapKVAttention
 from repro.sparse.quest import QuestAttention, QuestCache
 from repro.sparse.double_sparse import DoubleSparseAttention, DoubleSparseCache
 from repro.sparse.kivi import KiviAttention, KiviCache
+from repro.sparse.paged import PagedSIKVAttention
 
 
 def _sikv_sp(cfg=None):
@@ -20,6 +21,7 @@ _METHODS = {
     "sikv_sp": _sikv_sp,
     "full": FullAttention,
     "sikv": SIKVAttention,
+    "sikv_paged": PagedSIKVAttention,
     "snapkv": SnapKVAttention,
     "quest": QuestAttention,
     "double_sparse": DoubleSparseAttention,

@@ -91,11 +91,35 @@ class KiviAttention:
         B, H, Lq, _ = cache.k_packed.shape
         D = k_new.shape[-1]
         # append to the full-precision residual ring: once R tokens have
-        # accumulated the oldest slot is overwritten, so the most recent R
-        # decode tokens always stay attended (KIVI's residual window)
+        # accumulated the oldest slot is overwritten — but first that
+        # evicted token is FLUSHED into the quantized prefix (with the
+        # frozen channel-wise K statistics), so attention really does span
+        # all tokens, as KIVI's residual-window scheme requires.  Without
+        # the flush, decode tokens older than R would silently vanish.
+        # Like every cache here, this needs prefill ``capacity`` headroom
+        # for the tokens decode will add (the serving engine provides
+        # prompt_len + max_new_tokens); with a full quantized region the
+        # range guard drops the flush and quant_len stays clamped.
         R = cache.res_k.shape[2]
         slot = cache.res_len % R
+        evict = cache.res_len >= R                        # (B,)
+        old_k = cache.res_k[jnp.arange(B), :, slot][:, :, None, :]
+        old_v = cache.res_v[jnp.arange(B), :, slot][:, :, None, :]
+        levels = (1 << bits) - 1
+        kq_old = jnp.clip(jnp.round(
+            (old_k.astype(jnp.float32) - cache.k_zp) / cache.k_scale),
+            0, levels).astype(jnp.int32)
+        vq_old = quantize_tokenwise(old_v, bits, qg)
+        flush_pos = jnp.where(evict, cache.quant_len, -1)  # -1 => dropped
         cache = cache._replace(
+            k_packed=batched_update_token(cache.k_packed,
+                                          pack_bits(kq_old, bits), flush_pos),
+            v_packed=batched_update_token(cache.v_packed, vq_old.packed,
+                                          flush_pos),
+            v_scale=batched_update_token(cache.v_scale, vq_old.scale,
+                                         flush_pos),
+            v_zp=batched_update_token(cache.v_zp, vq_old.zp, flush_pos),
+            quant_len=jnp.minimum(cache.quant_len + evict, Lq),
             res_k=batched_update_token(cache.res_k, k_new, slot),
             res_v=batched_update_token(cache.res_v, v_new, slot),
             res_len=cache.res_len + 1)

@@ -1,0 +1,31 @@
+"""Paged Self-Indexing KVCache exposed through the common method interface.
+
+``prefill`` builds the ordinary dense batch-1 cache (the serving engine
+scatters it into the page pool); ``decode`` dispatches on the cache type so
+one method object serves both the lock-step dense path (``generate``) and
+the paged continuous-batching path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.config import SIKVConfig
+from repro.paged.attention import paged_sikv_decode_attention
+from repro.paged.cache import PagedSIKVCache
+from repro.sparse.sikv import SIKVAttention
+
+
+class PagedSIKVAttention(SIKVAttention):
+    name = "sikv_paged"
+
+    def __init__(self, cfg: SIKVConfig | None = None):
+        super().__init__(cfg)
+
+    def decode(self, q, k_new, v_new, cache, *, scale=None
+               ) -> Tuple[jax.Array, object]:
+        if isinstance(cache, PagedSIKVCache):
+            return paged_sikv_decode_attention(q, k_new, v_new, cache,
+                                               self.cfg, scale=scale)
+        return super().decode(q, k_new, v_new, cache, scale=scale)

@@ -29,6 +29,28 @@ def _setup(rng, B=2, Hq=8, Hkv=4, L=256, D=64):
     return k, v, cache, q, k_new, v_new
 
 
+def test_full_causal_attention_key_mask(rng):
+    """The (B, Lk) key-validity mask excludes pad keys: masked attention
+    over a padded batch row equals attention over the truncated prefix."""
+    B, Hq, Hkv, L, D = 2, 4, 2, 8, 16
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Hq, L, D))
+    k = jax.random.normal(ks[1], (B, Hkv, L, D))
+    v = jax.random.normal(ks[2], (B, Hkv, L, D))
+    valid = 5
+    mask = jnp.arange(L)[None, :] < jnp.asarray([valid, L])[:, None]
+    out = full_causal_attention(q, k, v, mask=mask)
+    # row 0, queries within the valid prefix: equal to the unpadded run
+    ref = full_causal_attention(q[:1, :, :valid], k[:1, :, :valid],
+                                v[:1, :, :valid])
+    np.testing.assert_allclose(np.asarray(out[0, :, :valid]),
+                               np.asarray(ref[0]), rtol=1e-5, atol=1e-6)
+    # row 1 is fully valid: mask must be a no-op there
+    ref1 = full_causal_attention(q[1:], k[1:], v[1:])
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(ref1[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_decode_close_to_full(rng):
     k, v, cache, q, k_new, v_new = _setup(rng)
     out, _ = sikv_decode_attention(q, k_new, v_new, cache, CFG)

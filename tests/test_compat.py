@@ -1,0 +1,190 @@
+"""Direct coverage of the JAX version-compat shims.
+
+Each shim has a new-API branch and a fallback; the installed JAX provides
+only one natively, so the other is forced by monkeypatching the probed
+attribute in (a recording fake) or out.  Both branches must agree with the
+always-available reference implementation.
+"""
+import contextlib
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compat
+
+
+TREE = {"a": jnp.ones((2,)), "b": [jnp.zeros((1,)), 3.0]}
+
+
+def _paths(flat):
+    return [(jax.tree_util.keystr(path), leaf.shape if hasattr(leaf, "shape")
+             else leaf) for path, leaf in flat]
+
+
+# ---------------------------------------------------------------------------
+# tree_flatten_with_path
+# ---------------------------------------------------------------------------
+
+def test_tree_flatten_with_path_matches_reference():
+    flat, treedef = compat.tree_flatten_with_path(TREE)
+    ref_flat, ref_def = jax.tree_util.tree_flatten_with_path(TREE)
+    assert _paths(flat) == _paths(ref_flat)
+    assert treedef == ref_def
+
+
+def test_tree_flatten_with_path_fallback_branch(monkeypatch):
+    """With the new ``jax.tree`` API hidden, the shim falls back to
+    ``jax.tree_util`` and produces identical output."""
+    monkeypatch.setattr(jax, "tree", types.SimpleNamespace(), raising=False)
+    flat, treedef = compat.tree_flatten_with_path(TREE)
+    ref_flat, ref_def = jax.tree_util.tree_flatten_with_path(TREE)
+    assert _paths(flat) == _paths(ref_flat)
+    assert treedef == ref_def
+
+
+def test_tree_flatten_with_path_new_api_branch(monkeypatch):
+    """When ``jax.tree.flatten_with_path`` exists, the shim must use it."""
+    sentinel = (["leaf"], "treedef")
+    monkeypatch.setattr(
+        jax, "tree",
+        types.SimpleNamespace(flatten_with_path=lambda t: sentinel),
+        raising=False)
+    assert compat.tree_flatten_with_path(TREE) is sentinel
+
+
+# ---------------------------------------------------------------------------
+# make_mesh
+# ---------------------------------------------------------------------------
+
+def test_make_mesh_matches_plain_mesh():
+    mesh = compat.make_mesh((1,), ("x",))
+    ref = jax.make_mesh((1,), ("x",))
+    assert mesh.axis_names == ref.axis_names
+    assert mesh.devices.tolist() == ref.devices.tolist()
+
+
+def test_make_mesh_fallback_without_axis_type(monkeypatch):
+    monkeypatch.setattr(compat, "AxisType", None)
+    mesh = compat.make_mesh((1,), ("x",))
+    assert mesh.axis_names == ("x",)
+
+
+def test_make_mesh_new_api_passes_axis_types(monkeypatch):
+    calls = {}
+
+    def fake_make_mesh(shapes, names, axis_types=None):
+        calls["axis_types"] = axis_types
+        return "mesh"
+
+    monkeypatch.setattr(compat, "AxisType",
+                        types.SimpleNamespace(Auto="auto"))
+    monkeypatch.setattr(jax, "make_mesh", fake_make_mesh)
+    assert compat.make_mesh((2, 2), ("a", "b")) == "mesh"
+    assert calls["axis_types"] == ("auto", "auto")
+
+
+def test_make_mesh_new_api_typeerror_falls_back(monkeypatch):
+    """Some JAX versions expose AxisType but not the ``axis_types=``
+    keyword; the shim must retry without it."""
+    def fake_make_mesh(shapes, names, **kw):
+        if "axis_types" in kw:
+            raise TypeError("unexpected keyword 'axis_types'")
+        return "plain"
+
+    monkeypatch.setattr(compat, "AxisType",
+                        types.SimpleNamespace(Auto="auto"))
+    monkeypatch.setattr(jax, "make_mesh", fake_make_mesh)
+    assert compat.make_mesh((1,), ("x",)) == "plain"
+
+
+# ---------------------------------------------------------------------------
+# use_mesh / abstract_mesh
+# ---------------------------------------------------------------------------
+
+def test_use_mesh_is_a_context_manager_and_activates():
+    mesh = compat.make_mesh((1,), ("x",))
+    with compat.use_mesh(mesh):
+        active = compat.abstract_mesh()
+        assert active is not None and tuple(active.axis_names) == ("x",)
+
+
+def test_use_mesh_new_api_branch(monkeypatch):
+    sentinel = contextlib.nullcontext("set-mesh-ctx")
+    monkeypatch.setattr(jax, "set_mesh", lambda m: sentinel, raising=False)
+    mesh = compat.make_mesh((1,), ("x",))
+    assert compat.use_mesh(mesh) is sentinel
+
+
+def test_use_mesh_fallback_branch(monkeypatch):
+    """Without ``jax.set_mesh`` the Mesh itself is the context manager."""
+    monkeypatch.delattr(jax, "set_mesh", raising=False)
+    mesh = compat.make_mesh((1,), ("x",))
+    cm = compat.use_mesh(mesh)
+    assert cm is mesh or hasattr(cm, "__enter__")
+    with cm:
+        pass
+
+
+def test_abstract_mesh_new_api_branch(monkeypatch):
+    monkeypatch.setattr(jax.sharding, "get_abstract_mesh",
+                        lambda: "abstract-mesh", raising=False)
+    assert compat.abstract_mesh() == "abstract-mesh"
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+P = jax.sharding.PartitionSpec
+
+
+def _run_shard_map():
+    mesh = compat.make_mesh((1,), ("x",))
+    f = compat.shard_map(lambda x: x * 2.0, mesh=mesh, in_specs=P("x"),
+                         out_specs=P("x"))
+    return f(jnp.arange(4.0))
+
+
+def test_shard_map_executes():
+    assert _run_shard_map().tolist() == [0.0, 2.0, 4.0, 6.0]
+
+
+def test_shard_map_experimental_fallback(monkeypatch):
+    """With ``jax.shard_map`` hidden, the experimental import path runs the
+    same computation."""
+    pytest.importorskip("jax.experimental.shard_map")
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    assert _run_shard_map().tolist() == [0.0, 2.0, 4.0, 6.0]
+
+
+def test_shard_map_new_api_check_vma(monkeypatch):
+    calls = {}
+
+    def fake(f, *, mesh, in_specs, out_specs, check_vma):
+        calls["check_vma"] = check_vma
+        return f
+
+    monkeypatch.setattr(jax, "shard_map", fake, raising=False)
+    mesh = compat.make_mesh((1,), ("x",))
+    f = compat.shard_map(lambda x: x + 1, mesh=mesh, in_specs=P(),
+                         out_specs=P())
+    assert f(1) == 2 and calls["check_vma"] is False
+
+
+def test_shard_map_new_api_check_rep_rename(monkeypatch):
+    """Versions with ``jax.shard_map`` but the old ``check_rep`` keyword."""
+    calls = {}
+
+    def fake(f, *, mesh, in_specs, out_specs, **kw):
+        if "check_vma" in kw:
+            raise TypeError("unexpected keyword 'check_vma'")
+        calls.update(kw)
+        return f
+
+    monkeypatch.setattr(jax, "shard_map", fake, raising=False)
+    mesh = compat.make_mesh((1,), ("x",))
+    f = compat.shard_map(lambda x: x + 1, mesh=mesh, in_specs=P(),
+                         out_specs=P())
+    assert f(1) == 2 and calls["check_rep"] is False

@@ -1,0 +1,388 @@
+"""Paged compressed-KV pool: allocator invariants, paged-vs-dense bit-exact
+decode (incl. copy-on-write divergence of prefix-shared pages), engine slot
+lifecycle parity, prefix caching, and page-based admission control."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.core.attention import sikv_decode_attention
+from repro.core.cache import SIKVCache, prefill_compress
+from repro.core.policy import pages_needed
+from repro.data.synthetic import structured_kv
+from repro.models import init_params
+from repro.paged import (PagePool, PoolExhausted, SlotPageManager,
+                         init_paged_cache, insert_prefill_pages,
+                         paged_sikv_decode_attention, paged_token_bytes,
+                         tree_copy_page, tree_set_block_entry)
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine)
+
+CFG = SIKVConfig(num_sink_tokens=4, token_budget=20, recent_window=4,
+                 obs_window=4)
+
+
+# ---------------------------------------------------------------------------
+# host-side pool accounting
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_refcount():
+    pool = PagePool(num_pages=4, page_size=8)
+    a = pool.allocate(2)
+    assert pool.free_pages == 2 and all(pool.refcount[p] == 1 for p in a)
+    pool.share(a)
+    pool.release(a)            # still referenced once
+    assert pool.free_pages == 2
+    pool.release(a)            # drops to zero -> freed
+    assert pool.free_pages == 4
+    with pytest.raises(PoolExhausted):
+        pool.allocate(5)
+
+
+def test_pool_registry_eviction_frees_unreferenced_pages():
+    pool = PagePool(num_pages=4, page_size=8)
+    a = pool.allocate(2)
+    pool.register_prefix(("p1",), a, prompt_len=10, first_token=1,
+                         slot_state=None)
+    pool.release(a)            # the admitting slot retires
+    assert pool.free_pages == 2      # registry still holds its reference
+    assert pool.available() == 4     # ...but those pages are evictable
+    b = pool.allocate(4)             # forces eviction of ("p1",)
+    assert len(b) == 4 and not pool.registry
+    assert pool.stats["evictions"] == 1
+
+
+def test_pool_eviction_spares_pages_shared_with_live_slots():
+    pool = PagePool(num_pages=4, page_size=8)
+    a = pool.allocate(2)
+    pool.register_prefix(("p",), a, prompt_len=10, first_token=1,
+                         slot_state=None)
+    # a live slot still shares the pages: eviction must not free them
+    assert pool.available() == 2
+    with pytest.raises(PoolExhausted):
+        pool.allocate(3)
+    assert not pool.registry         # the useless entry was evicted...
+    assert pool.free_pages == 2      # ...without freeing the live pages
+    assert all(pool.refcount[p] == 1 for p in a)
+
+
+def test_pages_needed_policy():
+    assert pages_needed(28, 8, 8) == 5                      # ceil(36/8)
+    assert pages_needed(28, 8, 8, prefix_hit=True) == 2     # 5 - 28//8
+    # page-aligned prompt: the first append opens a fresh page, no CoW page
+    assert pages_needed(32, 8, 8, prefix_hit=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# cache-level bit-exactness vs the dense path
+# ---------------------------------------------------------------------------
+
+def _paged_setup(dense: SIKVCache, num_pages: int, page_size: int,
+                 slots: int):
+    """Paged cache + a SlotPageManager wired to mutate it in place."""
+    state = {"c": init_paged_cache(dense, num_pages, page_size, slots)}
+    pool = PagePool(num_pages, page_size)
+
+    def set_block(slot, j, pid):
+        state["c"] = tree_set_block_entry(state["c"], slot, j, pid)
+
+    def copy_page(src, dst):
+        state["c"] = tree_copy_page(state["c"], src, dst)
+
+    mgr = SlotPageManager(pool, dense.capacity // page_size, slots,
+                          set_block=set_block, copy_page=copy_page)
+    return state, pool, mgr
+
+
+def _row(cache: SIKVCache, b: int) -> SIKVCache:
+    return SIKVCache(*[x[b:b + 1] for x in cache])
+
+
+def _decode_both(dense, state, mgr, cfg, steps, key, B, Hq, Hkv, D,
+                 per_slot_kv=None):
+    """Run ``steps`` decode tokens through both paths; assert bit-exact."""
+    dc = dense
+    for t in range(steps):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        q = jax.random.normal(k1, (B, Hq, 1, D))
+        kn = jax.random.normal(k2, (B, Hkv, 1, D))
+        vn = jax.random.normal(k3, (B, Hkv, 1, D))
+        if per_slot_kv is not None:  # force per-slot divergence
+            kn, vn = per_slot_kv(t, kn, vn)
+        out_d, dc = sikv_decode_attention(q, kn, vn, dc, cfg)
+        for b in range(B):
+            mgr.ensure_writable(b, int(state["c"].length[b]))
+        out_p, state["c"] = paged_sikv_decode_attention(
+            q, kn, vn, state["c"], cfg)
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_p),
+                                      err_msg=f"step {t}")
+    return dc
+
+
+def test_paged_decode_bitexact_across_page_boundaries(rng):
+    """Same stream through PagedSIKVCache and SIKVCache: decode outputs are
+    bit-identical, across partial-tail and fresh-page appends."""
+    B, Hkv, Hq, Lp, D = 2, 2, 4, 28, 32
+    ps, cap = 8, 48
+    k, v = structured_kv(rng, B, Hkv, Lp, D)
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, 4, D))
+    dense = prefill_compress(k, v, q_obs, CFG, capacity=cap,
+                             scale_dtype=jnp.float32)
+    state, pool, mgr = _paged_setup(dense, 16, ps, B)
+    for b in range(B):
+        ids = pool.allocate(4)
+        mgr.assign(b, ids)
+        pad = jnp.asarray(ids + [-1] * (cap // ps - len(ids)), jnp.int32)
+        state["c"] = insert_prefill_pages(state["c"], _row(dense, b),
+                                          jnp.asarray(b), pad)
+    # 12 steps: crosses the partial tail page AND two fresh page allocations
+    _decode_both(dense, state, mgr, CFG, 12, jax.random.PRNGKey(7),
+                 B, Hq, Hkv, D)
+    assert pool.free_pages < 16 - 8  # fresh decode pages were allocated
+
+
+def test_prefix_shared_pages_diverge_bitexact_via_cow(rng):
+    """Two slots share one prompt's pages; their appends then DIVERGE.  The
+    first divergent append copy-on-writes the shared tail page, and both
+    slots stay bit-exact against an unshared dense reference."""
+    B, Hkv, Hq, Lp, D = 2, 2, 4, 28, 32
+    ps, cap = 8, 48
+    k1, v1 = structured_kv(rng, 1, Hkv, Lp, D)
+    # dense reference: both rows hold the SAME prompt (as sharing implies)
+    k = jnp.concatenate([k1, k1], 0)
+    v = jnp.concatenate([v1, v1], 0)
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (1, Hkv, 4, D))
+    q_obs = jnp.concatenate([q_obs, q_obs], 0)
+    dense = prefill_compress(k, v, q_obs, CFG, capacity=cap,
+                             scale_dtype=jnp.float32)
+    state, pool, mgr = _paged_setup(dense, 16, ps, B)
+    ids = pool.allocate(4)
+    mgr.assign(0, ids)
+    pad = jnp.asarray(ids + [-1] * (cap // ps - len(ids)), jnp.int32)
+    state["c"] = insert_prefill_pages(state["c"], _row(dense, 0),
+                                      jnp.asarray(0), pad)
+    pool.share(ids)                      # slot 1 shares the prompt pages
+    mgr.assign(1, ids)
+    state["c"] = insert_prefill_pages(state["c"], _row(dense, 1),
+                                      jnp.asarray(1), pad)
+
+    def diverge(t, kn, vn):  # row 1 appends different tokens than row 0
+        return kn.at[1].multiply(-1.0), vn.at[1].add(1.0)
+
+    _decode_both(dense, state, mgr, CFG, 10, jax.random.PRNGKey(9),
+                 B, Hq, Hkv, D, per_slot_kv=diverge)
+    # slot 0 copied off the shared tail page; slot 1, then sole live owner,
+    # kept writing it in place — one copy total
+    assert mgr.cow_copies == 1
+    # the shared FULL prompt pages were never copied
+    assert state["c"].block_table[0, :3].tolist() == \
+        state["c"].block_table[1, :3].tolist()
+    assert int(state["c"].block_table[0, 3]) != \
+        int(state["c"].block_table[1, 3])
+
+
+def test_paged_kernel_path_matches_dense_kernel_path(rng):
+    """cfg.use_kernels: page-table gather + the existing fused
+    dequant-attention kernel == the dense kernel path, bit for bit."""
+    cfg = dataclasses.replace(CFG, use_kernels=True)
+    B, Hkv, Hq, Lp, D = 1, 2, 4, 24, 32
+    ps, cap = 8, 32
+    k, v = structured_kv(rng, B, Hkv, Lp, D)
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, 4, D))
+    dense = prefill_compress(k, v, q_obs, cfg, capacity=cap,
+                             scale_dtype=jnp.float32)
+    state, pool, mgr = _paged_setup(dense, 8, ps, B)
+    ids = pool.allocate(3)
+    mgr.assign(0, ids)
+    pad = jnp.asarray(ids + [-1], jnp.int32)
+    state["c"] = insert_prefill_pages(state["c"], dense, jnp.asarray(0), pad)
+    _decode_both(dense, state, mgr, cfg, 3, jax.random.PRNGKey(3),
+                 B, Hq, Hkv, D)
+
+
+# ---------------------------------------------------------------------------
+# engine + scheduler integration
+# ---------------------------------------------------------------------------
+
+ENG_CFG = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
+                     obs_window=8)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(cfg, lens, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (l,), 1, cfg.vocab_size)]
+        for i, l in enumerate(lens)
+    ]
+
+
+def test_paged_engine_matches_dense_engine(engine_setup):
+    """Identical admit/step/retire stream: the paged engine generates
+    exactly the dense engine's tokens (bit-exact logits => equal argmax),
+    through a retire + refill cycle."""
+    params, cfg = engine_setup
+    prompts = _prompts(cfg, [9, 16, 5], seed=5)
+    outs = {}
+    for name in ["dense", "paged"]:
+        if name == "dense":
+            eng = ServingEngine(params, cfg, ENG_CFG, method="sikv",
+                                batch_size=2, prompt_len=16,
+                                max_new_tokens=8)
+        else:
+            eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                                     prompt_len=16, max_new_tokens=8,
+                                     page_size=4)
+        assert eng.capacity == 24
+        # only live slots' outputs are compared: retired slots emit garbage
+        # by contract in both engines (dead rows / released pages)
+        seq = [eng.admit(0, prompts[0]), eng.admit(1, prompts[1])]
+        for _ in range(5):
+            seq.extend(eng.step())
+        eng.retire(0)
+        seq.append(eng.step()[1])
+        eng.admit(0, prompts[2])        # refill mid-decode
+        for _ in range(3):
+            seq.extend(eng.step())
+        outs[name] = seq
+    assert outs["paged"] == outs["dense"]
+
+
+def test_paged_engine_prefix_cache_hit_skips_prefill(engine_setup):
+    """An identical prompt re-uses registered pages + stored statistics:
+    no second prefill launch, same first token, and the continuations stay
+    correct after the shared tail page is un-shared on first append."""
+    params, cfg = engine_setup
+    p = _prompts(cfg, [9], seed=11)[0]
+    # reference: no sharing (prefix_caching off)
+    ref = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                             prompt_len=16, max_new_tokens=8, page_size=4,
+                             prefix_caching=False)
+    r = [ref.admit(0, p), ref.admit(1, p)]
+    for _ in range(4):
+        r.extend(ref.step())
+    assert ref.stats["prefix_hits"] == 0
+
+    eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                             prompt_len=16, max_new_tokens=8, page_size=4)
+    out = [eng.admit(0, p)]
+    prefills = eng.stats["prefills"]
+    out.append(eng.admit(1, p))
+    assert eng.stats["prefills"] == prefills        # hit: no prefill
+    assert eng.last_admit == {"prefix_hit": True, "shared_pages": 3}
+    for _ in range(4):
+        out.extend(eng.step())
+    assert out == r
+    # first appender copied off the shared tail page; the remaining single
+    # live writer appends the registered page in place
+    assert eng.slots.cow_copies == 1
+    # sharing really saved pool pages: 3 prompt pages exist once, not twice
+    assert eng.pool.snapshot()["allocated"] < \
+        ref.pool.snapshot()["allocated"]
+
+
+def test_paged_engine_validates_prompt_and_pool_size(engine_setup):
+    params, cfg = engine_setup
+    eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                             prompt_len=16, max_new_tokens=8, page_size=4,
+                             num_pages=4)
+    with pytest.raises(ValueError, match="exceeds the engine's prompt_len"):
+        eng.admit(0, list(range(1, 40)))
+    with pytest.raises(ValueError, match="pages worst-case"):
+        eng.admit(0, list(range(1, 16)))  # needs 6 pages, pool holds 4
+    with pytest.raises(ValueError):
+        eng.admit(0, [])
+    sched = RequestScheduler(eng)
+    with pytest.raises(ValueError, match="pages worst-case"):
+        sched.submit(Request(uid=0, prompt=list(range(1, 16)),
+                             max_new_tokens=8))
+
+
+def test_prefix_hit_admits_on_exactly_sized_pool(engine_setup):
+    """A pool sized exactly for one request must still serve an identical
+    follow-up request: the hit's partial tail page has no live sharer, so
+    it is appended in place and costs no fresh page — the admission math
+    must not charge for it, or the scheduler deadlocks."""
+    params, cfg = engine_setup
+    # capacity 16+8=24, page_size 8 -> 3 pages; prompt 13 -> partial tail
+    eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                             prompt_len=16, max_new_tokens=8, page_size=8,
+                             num_pages=3)
+    sched = RequestScheduler(eng)
+    p = _prompts(cfg, [13], seed=21)[0]
+    sched.submit(Request(uid=0, prompt=list(p), max_new_tokens=8))
+    sched.submit(Request(uid=1, prompt=list(p), max_new_tokens=8))
+    assert sched.run() == 2              # second request is a prefix hit
+    assert sched.completed[1].prefix_hit
+    assert len(sched.completed[0].result) == 8
+    assert len(sched.completed[1].result) == 8
+    assert sched.completed[0].result == sched.completed[1].result
+
+
+def test_paged_engine_advertises_configured_max_new(engine_setup):
+    """Capacity rounding must stay internal: the engine's public clamp
+    equals the configured max_new_tokens, matching the dense engine."""
+    params, cfg = engine_setup
+    eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                             prompt_len=16, max_new_tokens=5, page_size=8)
+    assert eng.max_new_tokens == 5
+    assert eng.capacity % eng.page_size == 0 and eng.capacity >= 21
+
+
+def test_retired_slot_never_writes_freed_pages(engine_setup):
+    """After retire() the dead slot keeps flowing through the jitted step;
+    its appends must be cut off at the (unmapped) block table — otherwise
+    they would scatter into freed pages that the free list may hand to a
+    live request."""
+    params, cfg = engine_setup
+    eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                             prompt_len=16, max_new_tokens=8, page_size=4,
+                             prefix_caching=False)
+    eng.admit(0, _prompts(cfg, [9], seed=1)[0])
+    eng.admit(1, _prompts(cfg, [10], seed=2)[0])
+    eng.step()
+    freed = eng.slots.slot_pages(0)
+    eng.retire(0)                        # releases pages, unmaps the row
+    layer0 = eng._caches[0]["self"]
+    before = np.asarray(layer0.codes).copy()
+    for _ in range(3):                   # dead slot steps along (length<cap)
+        eng.step()
+    live = set(eng.slots.slot_pages(1) or [])
+    after = np.asarray(eng._caches[0]["self"].codes)
+    for p in freed:
+        if p not in live:                # not legitimately re-allocated
+            np.testing.assert_array_equal(before[p], after[p],
+                                          err_msg=f"freed page {p} written")
+
+
+def test_scheduler_queues_on_page_exhaustion(engine_setup):
+    """A pool far smaller than batch_size * pages_per_seq: the scheduler
+    admits on free pages, queues the rest, completes everything, and never
+    allocates past the pool."""
+    params, cfg = engine_setup
+    eng = PagedServingEngine(params, cfg, ENG_CFG, batch_size=4,
+                             prompt_len=16, max_new_tokens=8, page_size=4,
+                             num_pages=8)   # worst case would need 24 pages
+    sched = RequestScheduler(eng)
+    plens = [16, 8, 4, 12, 6]
+    for i, pl in enumerate(plens):
+        sched.submit(Request(uid=i, prompt=_prompts(cfg, [pl], seed=i)[0],
+                             max_new_tokens=4))
+    assert sched.run() == 5
+    for i in range(5):
+        assert len(sched.completed[i].result) == 4
+    snap = eng.pool.snapshot()
+    assert snap["num_pages"] == 8
+    assert 1 <= sched.peak_active <= 4
+    assert eng.token_store_bytes() > 0

@@ -182,6 +182,29 @@ def test_scheduler_drains_queue_of_prefill_only_requests(engine_setup):
     assert all(len(sched.completed[i].result) == 1 for i in range(5))
 
 
+def test_admit_rejects_invalid_prompts(engine_setup):
+    """admit() raises a clear error for prompts the engine cannot hold,
+    instead of silently left-truncating them into the cache."""
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=4)
+    with pytest.raises(ValueError, match="exceeds the engine's prompt_len"):
+        eng.admit(0, list(range(1, 30)))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.admit(0, [])
+
+
+def test_scheduler_submit_rejects_overlong_prompt(engine_setup):
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=4)
+    sched = RequestScheduler(eng)
+    with pytest.raises(ValueError, match="exceeds the engine's prompt_len"):
+        sched.submit(Request(uid=0, prompt=list(range(1, 30)),
+                             max_new_tokens=2))
+    assert not sched.queue
+
+
 def test_scheduler_clamps_overlong_requests(engine_setup):
     """A request asking for more tokens than the engine's cache headroom is
     clamped instead of silently degrading past capacity."""
