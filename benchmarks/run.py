@@ -25,7 +25,8 @@ def main() -> None:
         suites = [
             ("bench_memory", bench_memory.run),
             ("bench_serving",
-             lambda: bench_serving.run(prompt_len=32, n_requests=4)),
+             lambda: bench_serving.run(prompt_len=32, n_requests=4,
+                                       smoke=True)),
         ]
     else:
         suites = [

@@ -17,10 +17,17 @@ Serving model — slot lifecycle (continuous batching):
   *retires* finished slots mid-decode, refilling them from the queue
   without recompiling anything (all shapes static);
 * per-request service stats land on each ``Request``: ``ttft`` (submit ->
-  first token) and ``tpot`` (mean seconds per subsequent token);
+  first token), ``tpot`` (mean seconds per subsequent token), and
+  ``max_stall`` (worst inter-token gap — what another request's admission
+  stall looks like from a live slot);
   ``RequestScheduler.service_stats()`` aggregates them, and
   ``engine.stats`` counts program launches (compare batching policies with
   ``benchmarks/bench_serving.py``);
+* ``--prefill-chunk N`` admits prompts in N-token chunks interleaved with
+  decode (each scheduler step runs one chunk MERGED with the live batch's
+  decode step, a single launch), killing the head-of-line decode stall a
+  monolithic admission causes — bit-exact with whole-prompt admission
+  (DESIGN.md §4);
 * ``flush_lockstep()`` keeps the seed's fixed-group batching as the
   baseline: each group runs to its longest member — under mixed-length
   traffic it launches strictly more engine programs than ``run()``.
@@ -50,6 +57,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=192)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts in chunks of this many tokens, "
+                         "interleaved with decode (default: whole-prompt "
+                         "admission)")
     args = ap.parse_args()
 
     print("== training a small qwen2.5-family model ==")
@@ -69,7 +80,8 @@ def main() -> None:
     for method in ["full", "sikv", "snapkv", "quest"]:
         eng = ServingEngine(params, cfg, sikv, method=method,
                             batch_size=4, prompt_len=args.prompt_len,
-                            max_new_tokens=args.max_new)
+                            max_new_tokens=args.max_new,
+                            prefill_chunk=args.prefill_chunk)
         sched = RequestScheduler(eng)
         for i in range(args.requests):
             sched.submit(Request(uid=i, prompt=[int(t) for t in prompts[i]],
@@ -84,7 +96,8 @@ def main() -> None:
         print(f"{method:14s} {dt:6.2f}s "
               f"({args.requests * args.max_new / dt:7.1f} tok/s, "
               f"ttft={svc['ttft_mean'] * 1e3:.0f}ms "
-              f"tpot={svc['tpot_mean'] * 1e3:.0f}ms, "
+              f"tpot={svc['tpot_mean'] * 1e3:.0f}ms "
+              f"stall={svc['max_decode_stall'] * 1e3:.0f}ms, "
               f"{eng.invocations()} engine launches)")
 
     full_gen = results["full"][0]

@@ -32,6 +32,7 @@ from repro.core.cache import (SIKVCache, append_token, gather_dequant,
 
 __all__ = [
     "full_causal_attention",
+    "chunk_causal_attention",
     "masked_attention",
     "sikv_decode_attention",
     "group_queries",
@@ -139,6 +140,36 @@ def _streaming_causal_attention(
         step, (m0, l0, acc0), (jnp.arange(nb), kb, vb))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(B, Hq, Lq, v.shape[-1]).astype(q.dtype)
+
+
+def chunk_causal_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    q_offset: jax.Array, full_len: int, scale: float | None = None,
+) -> jax.Array:
+    """Attention of one prefill chunk's queries over the staged K/V buffer.
+
+    Bit-exactness contract with the whole-prompt prefill (DESIGN.md §4):
+
+    * ``k``/``v`` span the FULL padded prompt (``Lk == full_len``), so every
+      per-query softmax/weighted-sum reduction runs over the same key axis
+      length as the monolithic prefill; staged-but-not-yet-written positions
+      are zeros, causally masked, and contribute exactly ``0.0``;
+    * the algorithm branch (materialized logits vs streaming scan) is chosen
+      by the shape the WHOLE-prompt prefill would see — ``(full_len,
+      full_len)`` — not the chunk's own ``(Lq, full_len)``, so both paths
+      reduce in the same order.
+
+    Args:
+      q: ``(B, Hq, Lq, D)`` chunk queries; k/v: ``(B, Hkv, full_len, ·)``.
+      q_offset: absolute position of ``q[:, :, 0]`` (traced — one jitted
+        chunk program serves every chunk index).
+    """
+    D = q.shape[-1]
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    if full_len * full_len > _FLASH_THRESHOLD and full_len % _FLASH_BLOCK == 0:
+        return _streaming_causal_attention(q, k, v, q_offset=q_offset,
+                                           scale=sc)
+    return full_causal_attention(q, k, v, q_offset=q_offset, scale=sc)
 
 
 def masked_attention(

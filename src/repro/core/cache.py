@@ -38,7 +38,20 @@ from repro.core import policy
 __all__ = ["SIKVCache", "init_cache", "prefill_compress", "append_token",
            "gather_dequant", "cache_spec_shapes", "ring_positions",
            "batched_update_token", "quantize_decode_token",
-           "dequantize_gathered"]
+           "dequantize_gathered", "obs_window_positions"]
+
+
+def obs_window_positions(lengths: jax.Array, L: int, W: int) -> jax.Array:
+    """Positions of the last-``W`` *valid* tokens per sequence: ``(B, W)``.
+
+    The single definition of the SnapKV observation window, shared by the
+    whole-prompt prefill (`models.transformer._obs_queries`), the chunked
+    prefill finalization, and the vote's causal mask inside
+    :func:`prefill_compress` — one gather rule is what keeps chunked and
+    monolithic admission bit-exact.  Prompts shorter than ``W`` clip to
+    position 0 (that query is repeated; it votes under its TRUE position).
+    """
+    return jnp.clip(lengths[:, None] - W + jnp.arange(W)[None, :], 0, L - 1)
 
 
 class SIKVCache(NamedTuple):
@@ -201,11 +214,10 @@ def prefill_compress(
     if causal_offset is None:
         offset = jnp.maximum(lengths - W, 0)
         # the observation window is gathered with clipping (see
-        # models.transformer._obs_queries): prompts shorter than W repeat
-        # the position-0 query, so each slot votes under its query's TRUE
+        # obs_window_positions): prompts shorter than W repeat the
+        # position-0 query, so each slot votes under its query's TRUE
         # position — slot-index positions would let it vote acausally
-        qpos = jnp.clip(lengths[:, None] - W + jnp.arange(W)[None, :],
-                        0, L - 1)
+        qpos = obs_window_positions(lengths, L, W)
     else:
         offset = jnp.asarray(causal_offset)
         if offset.ndim == 0:

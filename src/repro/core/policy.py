@@ -17,7 +17,23 @@ import jax.numpy as jnp
 
 from repro.config import SIKVConfig
 
-__all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k", "pages_needed"]
+__all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k", "pages_needed",
+           "step_token_budget"]
+
+
+def step_token_budget(prefill_chunk: int | None, prompt_len: int,
+                      batch_size: int) -> int:
+    """Tokens one scheduler step processes under CHUNKED admission: at most
+    one prefill chunk (one prompt admits at a time) merged with one decode
+    token per live slot — a hard per-step bound the scheduler enforces by
+    construction.  With monolithic admission (``prefill_chunk=None``) it is
+    the cost of a single admission step, NOT a bound: each whole-prompt
+    prefill processes ``prompt_len`` rows and several can complete in one
+    scheduler step — which is exactly the head-of-line burst
+    ``bench_serving.py`` makes visible by reporting the realized
+    ``max_step_tokens`` next to this budget."""
+    return (prefill_chunk if prefill_chunk is not None else prompt_len) \
+        + batch_size
 
 
 def snapkv_votes(

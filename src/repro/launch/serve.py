@@ -24,7 +24,8 @@ from repro.sparse import method_names
 def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           prompt_len: int = 128, max_new: int = 32, n_requests: int = 8,
           reduced: bool = True, seed: int = 0, verbose: bool = True,
-          paged: bool = False, page_size: int = 16):
+          paged: bool = False, page_size: int = 16,
+          prefill_chunk: int | None = None):
     cfg = get_model_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -42,11 +43,13 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
         engine = PagedServingEngine(params, cfg, sikv, batch_size=batch,
                                     prompt_len=prompt_len,
                                     max_new_tokens=max_new,
-                                    page_size=page_size)
+                                    page_size=page_size,
+                                    prefill_chunk=prefill_chunk)
     else:
         engine = ServingEngine(params, cfg, sikv, method=method,
                                batch_size=batch, prompt_len=prompt_len,
-                               max_new_tokens=max_new)
+                               max_new_tokens=max_new,
+                               prefill_chunk=prefill_chunk)
     sched = RequestScheduler(engine)
     prompts = lm_sequence_batch(jax.random.PRNGKey(seed + 1), n_requests,
                                 prompt_len, cfg.vocab_size)
@@ -78,11 +81,16 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged compressed-KV pool")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admit prompts in chunks of this many tokens, "
+                         "interleaving decode steps (kills head-of-line "
+                         "decode stall; bit-exact with whole-prompt "
+                         "admission)")
     args = ap.parse_args()
     serve(args.arch, method=args.method, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new,
           n_requests=args.requests, paged=args.paged,
-          page_size=args.page_size)
+          page_size=args.page_size, prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

@@ -2,9 +2,13 @@
 hybrid, VLM-backbone, and audio enc-dec families."""
 from repro.models.transformer import (
     decode_step,
+    finalize_chunked_prefill,
     forward_train,
     init_decode_state,
     init_params,
+    init_prefill_stage,
     loss_fn,
     prefill,
+    prefill_chunk_step,
+    supports_chunked_prefill,
 )

@@ -29,7 +29,9 @@ from repro.models.layers import (cross_entropy_loss, dense_init,
 from repro.models.mamba2 import (MambaState, mamba_decode_step, mamba_forward,
                                  mamba_init, mamba_init_state)
 from repro.models.moe import moe_forward, moe_init
-from repro.core.attention import full_causal_attention, group_queries
+from repro.core.attention import (chunk_causal_attention,
+                                  full_causal_attention, group_queries)
+from repro.core.cache import obs_window_positions
 
 Params = Dict[str, Any]
 
@@ -228,7 +230,7 @@ def _obs_queries(q: jax.Array, lengths: Optional[jax.Array], L: int, W: int
     """
     if lengths is None:
         return q[:, :, L - W:, :]
-    idx = jnp.clip(lengths[:, None] - W + jnp.arange(W)[None, :], 0, L - 1)
+    idx = obs_window_positions(lengths, L, W)
     return jnp.take_along_axis(q, idx[:, None, :, None], axis=2)
 
 
@@ -319,6 +321,209 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         x = x[:, -1:, :]
     x = rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
     return _lm_head(params, cfg, x)[:, 0, :], caches
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: incremental admission, bit-exact with whole-prompt prefill
+# ---------------------------------------------------------------------------
+#
+# A prompt of true length ``n`` (right-padded to ``prompt_len``) is processed
+# in fixed-size chunks: chunk ``c`` projects q/k/v for its own rows only,
+# writes k/v into a full-precision *staging* buffer spanning the whole padded
+# prompt, and attends over that buffer with a causal mask — exactly over the
+# request's chunks ``0..c``.  Compression statistics (``mu``/``alpha``),
+# codebook encoding, the sink vote, and the ring gather run ONCE at the final
+# chunk (``finalize_chunked_prefill``), over the same staged K/V and the same
+# observation-window queries the monolithic prefill sees — preserving the
+# paper's prompt-global statistics (§3.4) and making chunked admission
+# bit-exact with ``prefill`` (see DESIGN.md §4 for the argument and caveats).
+#
+# The staging buffers are bounded by ONE prompt (one request prefills at a
+# time): per attention layer, k/v/grouped-q at model precision; per MLA
+# layer, the (head-shared) latent + rope key.  Mamba/SSM and encoder-decoder
+# stacks are not chunkable (cross-chunk recurrent state / cross-attention
+# observation windows) — the serving engines gate them to whole-prompt
+# admission.
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Whether ``cfg``'s stack can prefill in chunks bit-exactly.
+
+    Excluded: Mamba2 (recurrent state crosses chunks), encoder-decoder
+    (the cross-attention observation window spans the whole prompt), and
+    MoE FFNs (routing/dispatch — capacity drops, sort-based grouping — is a
+    function of the token SET, so per-chunk dispatch is not row-equivalent
+    to whole-prompt dispatch)."""
+    return (not cfg.num_encoder_layers and not cfg.embedding_inputs
+            and cfg.moe is None
+            and all(k in (ATTN, MLA, SHARED_ATTN)
+                    for k in cfg.resolved_layer_pattern))
+
+
+def init_prefill_stage(cfg: ModelConfig, prompt_len: int) -> List[Dict[str, jax.Array]]:
+    """Zeroed staging buffers for one chunked admission (reusable: every
+    region a later read touches is overwritten by the chunks, and stale
+    bytes beyond ``length`` are causally masked / statistics-masked exactly
+    like the monolithic prefill's pad rows)."""
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            "chunked prefill covers attention-only decoder stacks "
+            "(GQA / MLA / shared-attention); Mamba2 recurrent state and "
+            "encoder-decoder cross attention need whole-prompt prefill")
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    Hkv = cfg.num_kv_heads
+    stage: List[Dict[str, jax.Array]] = []
+    H = cfg.num_heads
+    for kind in cfg.resolved_layer_pattern:
+        if kind == MLA:
+            m = cfg.mla
+            r = m.kv_lora_rank + m.qk_rope_head_dim
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            stage.append({
+                # the latent key — what finalize compresses into the cache
+                "c": jnp.zeros((1, prompt_len, m.kv_lora_rank), dt),
+                "kr": jnp.zeros((1, prompt_len, m.qk_rope_head_dim), dt),
+                # the expanded (non-absorbed) K/V — what chunk attention
+                # reads; staged per chunk so the up-projection runs once
+                # per row, not once per row PER CHUNK
+                "k": jnp.zeros((1, H, prompt_len, qk), dt),
+                "v": jnp.zeros((1, H, prompt_len, m.v_head_dim), dt),
+                # absorbed queries are float32 (mla_absorbed_queries)
+                "qg": jnp.zeros((1, 1, prompt_len, r), jnp.float32),
+            })
+        else:  # ATTN / SHARED_ATTN
+            stage.append({
+                "k": jnp.zeros((1, Hkv, prompt_len, hd), dt),
+                "v": jnp.zeros((1, Hkv, prompt_len, hd), dt),
+                "qg": jnp.zeros((1, Hkv, prompt_len, hd), dt),
+            })
+    return stage
+
+
+def _stage_write(buf: jax.Array, val: jax.Array, start: jax.Array,
+                 axis: int) -> jax.Array:
+    """Write a chunk's rows into a staging buffer at ``start`` (token axis)."""
+    idx = [jnp.asarray(0, jnp.int32)] * buf.ndim
+    idx[axis] = start
+    return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype), idx)
+
+
+def prefill_chunk_step(
+    params: Params, cfg: ModelConfig, tokens_row: jax.Array,
+    start: jax.Array, length: jax.Array,
+    stage: List[Dict[str, jax.Array]], *, chunk: int,
+) -> Tuple[jax.Array, List[Dict[str, jax.Array]]]:
+    """Process one prefill chunk; returns ``(last-valid-row logits, stage)``.
+
+    Args:
+      tokens_row: ``(1, prompt_len)`` right-padded prompt row.
+      start: traced int32 — the chunk's first absolute position (one jitted
+        program serves every chunk; the engine may overlap the final chunk
+        backwards so a partial tail never indexes past the buffer).
+      length: traced int32 true prompt length; the returned logits are read
+        from row ``length - 1 - start`` and are only meaningful on the chunk
+        that contains it (the final one).
+    """
+    Lp = tokens_row.shape[1]
+    start = jnp.asarray(start, jnp.int32)
+    toks = jax.lax.dynamic_slice(tokens_row, (jnp.asarray(0, jnp.int32),
+                                              start), (1, chunk))
+    x = embed_inputs(params, cfg, {"tokens": toks})
+    positions = start + jnp.arange(chunk)
+    pattern = cfg.resolved_layer_pattern
+    new_stage: List[Dict[str, jax.Array]] = []
+    for i, layer in enumerate(params["layers"]):
+        kind = pattern[i]
+        st = stage[i]
+        h = rms_norm(x, layer["norm1"], cfg.rms_norm_eps)
+        if kind == MLA:
+            mp = layer["mla"]
+            m = cfg.mla
+            qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+            H = cfg.num_heads
+            q_nope, q_rope = mla_mod.mla_queries(mp, cfg, h, positions)
+            c, k_rope = mla_mod.mla_latent(mp, cfg, h, positions)
+            q_eff = mla_mod.mla_effective_query(mp, cfg, q_nope, q_rope)
+            # up-project THIS chunk's rows to non-absorbed K/V (row-wise —
+            # bit-identical per row to mla_forward's own projections) and
+            # stage them, so each row is expanded once, not once per chunk
+            k_nope = (c @ mp["w_uk"]).reshape(
+                1, chunk, H, m.qk_nope_head_dim).transpose(0, 2, 1, 3)
+            v_c = (c @ mp["w_uv"]).reshape(
+                1, chunk, H, m.v_head_dim).transpose(0, 2, 1, 3)
+            k_c = jnp.concatenate(
+                [k_nope,
+                 jnp.broadcast_to(k_rope[:, None],
+                                  (1, H, chunk, m.qk_rope_head_dim))],
+                axis=-1)
+            st = {
+                "c": _stage_write(st["c"], c, start, axis=1),
+                "kr": _stage_write(st["kr"], k_rope, start, axis=1),
+                "k": _stage_write(st["k"], k_c, start, axis=2),
+                "v": _stage_write(st["v"], v_c, start, axis=2),
+                "qg": _stage_write(st["qg"], group_queries(q_eff, 1),
+                                   start, axis=2),
+            }
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            o = chunk_causal_attention(q, st["k"], st["v"], q_offset=start,
+                                       full_len=Lp,
+                                       scale=1.0 / float(qk_dim) ** 0.5)
+            o = o.transpose(0, 2, 1, 3).reshape(1, chunk, H * m.v_head_dim)
+            x = x + (o @ mp["wo"]).astype(x.dtype)
+        else:  # ATTN / SHARED_ATTN
+            ap = _attn_params(params, layer, kind)
+            q, k, v = attn_project(ap, cfg, h, positions)
+            st = {
+                "k": _stage_write(st["k"], k, start, axis=2),
+                "v": _stage_write(st["v"], v, start, axis=2),
+                "qg": _stage_write(st["qg"],
+                                   group_queries(q, cfg.num_kv_heads),
+                                   start, axis=2),
+            }
+            o = chunk_causal_attention(q, st["k"], st["v"], q_offset=start,
+                                       full_len=Lp)
+            x = x + attn_output(ap, cfg, o)
+        new_stage.append(st)
+        h = rms_norm(x, layer["norm2"], cfg.rms_norm_eps)
+        f, _ = _ffn(layer, cfg, h)
+        x = x + f
+
+    row = jnp.clip(length - 1 - start, 0, chunk - 1)
+    x_last = jax.lax.dynamic_slice_in_dim(x, row, 1, axis=1)   # (1, 1, d)
+    x_last = rms_norm(x_last, params["final_norm"], cfg.rms_norm_eps)
+    return _lm_head(params, cfg, x_last)[:, 0, :], new_stage
+
+
+def finalize_chunked_prefill(
+    cfg: ModelConfig, stage: List[Dict[str, jax.Array]], length: jax.Array,
+    method, *, capacity: Optional[int] = None, obs_window: int = 32,
+) -> List[Any]:
+    """Build every layer's decode cache from the staged chunk K/V.
+
+    This is the prompt-global statistics pass of §3.4 — normalization
+    (``mu``/``alpha``), codebook, sink vote, ring gather — deferred to the
+    final chunk so it sees exactly the arrays the whole-prompt ``prefill``
+    hands to ``method.prefill``: staged K/V spanning the padded prompt and
+    the last-``obs_window`` valid grouped queries (``obs_window_positions``).
+    """
+    lengths = jnp.reshape(jnp.asarray(length, jnp.int32), (1,))
+    pattern = cfg.resolved_layer_pattern
+    caches: List[Any] = []
+    for i, kind in enumerate(pattern):
+        st = stage[i]
+        Lp = st["qg"].shape[2]
+        W = min(obs_window, Lp)
+        q_obs = _obs_queries(st["qg"], lengths, Lp, W)
+        if kind == MLA:
+            latent_k = mla_mod.mla_latent_key(st["c"], st["kr"])
+            caches.append({"self": method.prefill(
+                latent_k.astype(jnp.float32), latent_k.astype(jnp.float32),
+                q_obs, capacity=capacity, lengths=lengths)})
+        else:
+            caches.append({"self": method.prefill(
+                st["k"].astype(jnp.float32), st["v"].astype(jnp.float32),
+                q_obs, capacity=capacity, lengths=lengths)})
+    return caches
 
 
 # ---------------------------------------------------------------------------

@@ -146,6 +146,12 @@ def insert_prefill_pages(paged: PagedSIKVCache, dense: SIKVCache,
       page_ids: ``(pages_per_seq,)`` int32 — physical page per logical page;
         ``-1`` entries (pages beyond the prompt, allocated lazily during
         decode) are dropped by the scatter's out-of-bounds mode.
+
+    With chunked admission (DESIGN.md §4.3) this scatter runs only at the
+    FINAL chunk, but ``page_ids`` were allocated at ``admit_start`` — the
+    prompt's pages and its worst-case decode-tail reservation are held for
+    the whole admission window, so the decode steps interleaved between
+    chunks can never draw down pages the staged prompt still needs.
     """
     P = paged.num_pages
     ids = jnp.where(page_ids >= 0, page_ids, P)  # OOB => dropped

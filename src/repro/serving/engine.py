@@ -1,7 +1,7 @@
 """Slot-based serving engine: prefill -> compress -> sparse decode.
 
-The engine owns three jitted programs, all with static shapes so each
-compiles exactly once per configuration:
+The engine owns a small set of jitted programs, all with static shapes so
+each compiles exactly once per configuration:
 
 * ``_prefill``      — lock-step batched prefill (exact full attention over
   the prompts, then one-pass cache compression per layer — the paper's TT2T
@@ -12,14 +12,30 @@ compiles exactly once per configuration:
 * ``_step``         — one decode token through the compressed caches for the
   whole batch; ``pos`` is a ``(B,)`` vector so every slot decodes at its own
   sequence position (LUT-GEMV scoring + top-k + fused dequant attention when
-  ``sikv.use_kernels``).
+  ``sikv.use_kernels``);
+* with ``prefill_chunk`` set, three more: ``_chunk`` (one prefill chunk over
+  the staging buffers), ``_chunk_dec`` (the same chunk MERGED with the live
+  batch's decode step — one launch, so decode slots keep emitting tokens
+  while a long prompt admits), and ``_finalize`` (the prompt-global
+  statistics pass of §3.4, run once at the final chunk).  Chunked admission
+  is bit-exact with ``_prefill_one`` (DESIGN.md §4, tested).
+
+Admission is a two-phase state machine so schedulers can interleave decode:
+
+1. ``admit_start(slot, prompt)`` validates and stages the request (a paged
+   engine also acquires its prompt pages and reserves the decode tail here,
+   so interleaved decode allocations can never starve the admission);
+2. ``admit_step()`` advances it — the whole prompt at once (monolithic
+   mode), or one ``prefill_chunk``-token chunk per call; pass
+   ``with_decode=True`` to merge the chunk with a decode step of the live
+   batch.  Returns the first generated token when the admission completes
+   (the TTFT point);
+3. ``admit(slot, prompt)`` is the blocking wrapper (start + drain).
 
 Slot lifecycle (continuous batching):
 
-1. ``admit(slot, prompt)`` prefills the request at batch 1, inserts the
-   resulting caches into the slot's batch row (a jitted
-   ``dynamic_update_slice`` over every cache leaf), and returns the first
-   generated token (TTFT point);
+1. ``admit(...)`` inserts the resulting caches into the slot's batch row (a
+   jitted ``dynamic_update_slice`` over every cache leaf);
 2. ``step()`` advances *all* slots one token; retired/free slots still flow
    through the program (static shapes) but their outputs are ignored and
    their cache rows are dead — the next ``admit`` fully overwrites them,
@@ -28,10 +44,13 @@ Slot lifecycle (continuous batching):
 3. ``retire(slot)`` frees the slot; the next ``admit`` overwrites it without
    recompiling anything.
 
-Per-request service stats (TTFT/TPOT) are collected by the scheduler from
-the admit/step timestamps; the engine counts program invocations
-(``stats["prefills"]``, ``stats["steps"]``) so batching policies can be
-compared by work actually launched.
+Per-request service stats (TTFT/TPOT/stall) are collected by the scheduler
+from the admit/step timestamps; the engine counts program invocations
+(``stats["prefills"]`` whole-prompt prefills, ``stats["prefill_chunks"]``
+chunk launches, ``stats["finalizes"]`` chunked-admission statistics passes,
+``stats["steps"]`` decode steps — a merged chunk+decode launch counts once
+as a chunk and once as a step) so batching policies can be compared by work
+actually launched.
 """
 from __future__ import annotations
 
@@ -42,7 +61,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, SIKVConfig
-from repro.models import decode_step, prefill
+from repro.models import (decode_step, finalize_chunked_prefill,
+                          init_prefill_stage, prefill, prefill_chunk_step,
+                          supports_chunked_prefill)
 from repro.models.transformer import Params
 from repro.sparse import get_method
 
@@ -59,11 +80,28 @@ def _insert_slot(batched: Any, single: Any, slot: jax.Array) -> Any:
         lambda buf, val: row_insert(buf, val, slot), batched, single)
 
 
+def _chunk_and_decode(params, tokens_row, start, length, stage, tokens, pos,
+                      caches, *, cfg, method, chunk):
+    """One prefill chunk + one decode step of the live batch, one launch.
+
+    The two halves touch disjoint state (staging buffers vs live caches), so
+    merging them is semantically identical to two launches — it exists to
+    keep the decode cadence at one token per scheduler step without paying
+    a second dispatch on the admission's critical (TTFT) path.
+    """
+    logits_c, stage = prefill_chunk_step(params, cfg, tokens_row, start,
+                                         length, stage, chunk=chunk)
+    logits_d, caches = decode_step(params, cfg, {"tokens": tokens}, pos,
+                                   caches, method=method)
+    return logits_c, stage, logits_d, caches
+
+
 class ServingEngine:
     def __init__(self, params: Params, cfg: ModelConfig,
                  sikv: SIKVConfig | None = None, *, method: str = "sikv",
                  batch_size: int = 8, prompt_len: int = 512,
-                 max_new_tokens: int = 64):
+                 max_new_tokens: int = 64,
+                 prefill_chunk: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.sikv = sikv or SIKVConfig()
@@ -78,7 +116,30 @@ class ServingEngine:
         self._step = jax.jit(functools.partial(
             decode_step, cfg=cfg, method=self.method))
         self._insert = jax.jit(_insert_slot)
-        self.stats: Dict[str, int] = {"prefills": 0, "steps": 0}
+        if prefill_chunk is not None:
+            if prefill_chunk <= 0:
+                raise ValueError(f"prefill_chunk must be positive, got "
+                                 f"{prefill_chunk}")
+            if not supports_chunked_prefill(cfg):
+                raise ValueError(
+                    "chunked prefill needs an attention-only decoder stack "
+                    "with dense FFNs (Mamba2 state, encoder-decoder cross "
+                    "attention, and MoE dispatch are not chunkable "
+                    "bit-exactly) — drop prefill_chunk for this config")
+            prefill_chunk = min(prefill_chunk, prompt_len)
+            self._chunk = jax.jit(functools.partial(
+                prefill_chunk_step, cfg=cfg, chunk=prefill_chunk))
+            self._chunk_dec = jax.jit(functools.partial(
+                _chunk_and_decode, cfg=cfg, method=self.method,
+                chunk=prefill_chunk))
+            self._finalize = jax.jit(functools.partial(
+                finalize_chunked_prefill, cfg, method=self.method,
+                capacity=self.capacity))
+        self.prefill_chunk = prefill_chunk
+        self._stage0: Any = None        # zeroed staging template (lazy)
+        self._pending: Optional[Dict[str, Any]] = None
+        self.stats: Dict[str, int] = {"prefills": 0, "steps": 0,
+                                      "prefill_chunks": 0, "finalizes": 0}
         # admission metadata of the most recent admit() (schedulers read it)
         self.last_admit: Dict[str, Any] = {}
         # live slot state (continuous batching)
@@ -176,12 +237,28 @@ class ServingEngine:
         caller's concern; subclasses add resource checks, e.g. free pages)."""
         return True
 
-    def admit(self, slot: int, prompt: List[int],
-              max_new_tokens: Optional[int] = None) -> int:
-        """Prefill ``prompt`` into batch row ``slot``; returns the first
-        generated token.  Compiles nothing new after the first call.
-        ``max_new_tokens`` sizes resource reservations in paged subclasses;
-        the dense engine's headroom is fixed, so it is ignored here."""
+    # -- two-phase admission -------------------------------------------
+
+    @property
+    def has_pending_admission(self) -> bool:
+        return self._pending is not None
+
+    @property
+    def pending_instant(self) -> bool:
+        """Whether the pending admission completes in ONE ``admit_step``
+        (monolithic prefill, or a paged prefix-cache hit) — i.e. there is
+        no chunk sequence for a scheduler to interleave decode with."""
+        return self._pending is not None and self._pending["mode"] != "chunked"
+
+    def admit_start(self, slot: int, prompt: List[int],
+                    max_new_tokens: Optional[int] = None) -> None:
+        """Validate and stage an admission into ``slot`` (no launch yet).
+
+        One admission is in flight at a time — the full-precision staging
+        buffers are sized for one prompt.  Subclasses acquire admission
+        resources here (pages + decode-tail reservation), BEFORE any decode
+        step can interleave."""
+        assert self._pending is None, "one admission at a time"
         assert 0 <= slot < self.batch_size
         self.validate_prompt(prompt, max_new_tokens)
         self.last_admit = {"prefix_hit": False, "shared_pages": 0}
@@ -190,10 +267,96 @@ class ServingEngine:
         toks = jnp.asarray(prompt, jnp.int32)
         length = int(toks.shape[0])
         row = jnp.zeros((1, Lp), jnp.int32).at[0, :length].set(toks)
-        batch = {"tokens": row,
-                 "lengths": jnp.asarray([length], jnp.int32)}
-        logits, caches_one = self._prefill_one(self.params, batch=batch)
-        self.stats["prefills"] += 1
+        pending: Dict[str, Any] = {
+            "slot": slot, "prompt": list(prompt), "length": length,
+            "row": row, "max_new": max_new_tokens, "next": 0,
+            "mode": "whole" if self.prefill_chunk is None else "chunked",
+        }
+        if pending["mode"] == "chunked":
+            pending["n_chunks"] = -(-length // self.prefill_chunk)
+            if self._stage0 is None:
+                self._stage0 = init_prefill_stage(self.cfg, Lp)
+            pending["stage"] = self._stage0
+        self._pending = pending
+        try:
+            self._acquire_admission(pending)
+        except Exception:
+            self._pending = None
+            raise
+
+    def _acquire_admission(self, pending: Dict[str, Any]) -> None:
+        """Subclass hook: grab admission resources at ``admit_start`` time
+        (the dense engine's headroom is fixed — nothing to acquire)."""
+
+    def cancel_admission(self) -> None:
+        """Drop the pending admission (nothing was inserted yet); subclasses
+        release any resources ``_acquire_admission`` took."""
+        self._pending = None
+
+    def admit_step(self, *, with_decode: bool = False
+                   ) -> Tuple[Optional[int], Optional[List[int]]]:
+        """Advance the pending admission by one program.
+
+        Returns ``(first_token, decode_tokens)``: ``first_token`` is not
+        ``None`` exactly when the admission completed; ``decode_tokens`` is
+        the live batch's decode output when this call merged a chunk with a
+        decode step (chunked mode with ``with_decode=True`` and live
+        caches), else ``None`` — the caller runs ``step()`` itself.  Merged
+        decode runs against the pre-insertion caches, so its row for the
+        admitting slot is dead (the slot is parked past capacity).
+        """
+        p = self._pending
+        assert p is not None, "admit_start() first"
+        if p["mode"] == "whole":
+            batch = {"tokens": p["row"],
+                     "lengths": jnp.asarray([p["length"]], jnp.int32)}
+            logits, caches_one = self._prefill_one(self.params, batch=batch)
+            self.stats["prefills"] += 1
+            return self._finish_admission(p, logits, caches_one), None
+        C = self.prefill_chunk
+        # the final chunk of a non-multiple prompt overlaps backwards so the
+        # static-size program never writes past the staging buffer (the
+        # rewritten rows are idempotent)
+        start = min(p["next"] * C, self.prompt_len - C)
+        dec: Optional[List[int]] = None
+        new_caches = logits_d = None
+        if with_decode and self._caches is not None:
+            self._decode_prep()
+            logits_c, stage, logits_d, new_caches = self._chunk_dec(
+                self.params, tokens_row=p["row"], start=start,
+                length=p["length"], stage=p["stage"],
+                tokens=self._tok[:, None], pos=self._pos,
+                caches=self._caches)
+        else:
+            logits_c, stage = self._chunk(
+                self.params, tokens_row=p["row"], start=start,
+                length=p["length"], stage=p["stage"])
+        self.stats["prefill_chunks"] += 1
+        p["stage"] = stage
+        p["next"] += 1
+        final = p["next"] >= p["n_chunks"]
+        caches_one = None
+        if final:
+            # finalize BEFORE committing the merged decode: if it raises,
+            # no decode state has been committed (paging prep is
+            # idempotent), so the caller can discard the whole launch
+            # without live requests losing a token their caches already
+            # consumed
+            caches_one = self._finalize(p["stage"], p["length"])
+            self.stats["finalizes"] += 1
+        if new_caches is not None:
+            self._caches = new_caches
+            self.stats["steps"] += 1
+            dec = self._apply_decode(logits_d)
+        if not final:
+            return None, dec
+        return self._finish_admission(p, logits_c, caches_one), dec
+
+    def _finish_admission(self, p: Dict[str, Any], logits: jax.Array,
+                          caches_one: Any) -> int:
+        """Insert the admitted caches into the slot row; returns the first
+        generated token."""
+        slot = p["slot"]
         if self._caches is None:
             self._caches = jax.tree_util.tree_map(
                 lambda x: jnp.zeros((self.batch_size,) + x.shape[1:],
@@ -202,8 +365,39 @@ class ServingEngine:
                                     jnp.asarray(slot, jnp.int32))
         first = int(jnp.argmax(logits[0]))
         self._tok = self._tok.at[slot].set(first)
-        self._pos = self._pos.at[slot].set(length)
+        self._pos = self._pos.at[slot].set(p["length"])
+        self._pending = None
         return first
+
+    def admit(self, slot: int, prompt: List[int],
+              max_new_tokens: Optional[int] = None) -> int:
+        """Blocking admission: prefill ``prompt`` into batch row ``slot``
+        (all chunks back-to-back when ``prefill_chunk`` is set); returns the
+        first generated token.  Compiles nothing new after the first call.
+        ``max_new_tokens`` sizes resource reservations in paged subclasses;
+        the dense engine's headroom is fixed, so it is ignored here."""
+        self.admit_start(slot, prompt, max_new_tokens)
+        try:
+            first = None
+            while first is None:
+                first, _ = self.admit_step()
+        except Exception:
+            self.cancel_admission()
+            raise
+        return first
+
+    # -- decode ---------------------------------------------------------
+
+    def _decode_prep(self) -> None:
+        """Subclass hook run before every decode launch (the paged engine
+        makes each live slot's write position appendable here)."""
+
+    def _apply_decode(self, logits: jax.Array) -> List[int]:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._tok = tok
+        self._pos = self._pos + 1
+        # one bulk device->host transfer, not one blocking read per slot
+        return jax.device_get(tok).tolist()
 
     def step(self) -> List[int]:
         """Advance every slot one token; returns the new token per slot.
@@ -215,15 +409,12 @@ class ServingEngine:
         harmless, because ``admit`` rebuilds the whole row.
         """
         assert self._caches is not None, "admit() at least one request first"
+        self._decode_prep()
         logits, self._caches = self._step(
             self.params, inputs={"tokens": self._tok[:, None]},
             pos=self._pos, caches=self._caches)
         self.stats["steps"] += 1
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._tok = tok
-        self._pos = self._pos + 1
-        # one bulk device->host transfer, not one blocking read per slot
-        return jax.device_get(tok).tolist()
+        return self._apply_decode(logits)
 
     def retire(self, slot: int) -> None:
         """Free a slot.  Parking the position past capacity keeps RoPE
@@ -234,8 +425,11 @@ class ServingEngine:
         self._tok = self._tok.at[slot].set(0)
 
     def invocations(self) -> int:
-        """Total jitted program launches (prefills + decode steps)."""
-        return self.stats["prefills"] + self.stats["steps"]
+        """Total jitted program launches (prefills, chunks, finalizes, and
+        decode steps; a merged chunk+decode counts as one chunk + one step
+        even though it is a single launch — work, not dispatches)."""
+        return (self.stats["prefills"] + self.stats["prefill_chunks"]
+                + self.stats["finalizes"] + self.stats["steps"])
 
     def token_store_bytes(self) -> int:
         """Measured HBM bytes of the token-indexed cache arrays (every leaf

@@ -5,12 +5,17 @@ Same programming model as :class:`~repro.serving.engine.ServingEngine`
 token-indexed cache state lives in shared page pools
 (:mod:`repro.paged.cache`) instead of dense ``(B, H, Lmax, ...)`` rows:
 
-* ``admit`` runs the ordinary batch-1 dense prefill, allocates just the
-  pages covering the prompt (``ceil(len / page_size)``, not
+* ``admit`` runs the ordinary batch-1 dense prefill (monolithic, or in
+  ``prefill_chunk``-token chunks interleaved with decode — the staging
+  buffers are dense and bounded by one prompt either way), allocates just
+  the pages covering the prompt (``ceil(len / page_size)``, not
   ``pages_per_seq``), and scatters the compressed prompt into them; decode
   pages are allocated lazily, one every ``page_size`` steps.  So HBM scales
   with *tokens actually cached*, and concurrency with pool size — not with
-  ``batch_size * Lmax``;
+  ``batch_size * Lmax``.  With chunked admission the prompt pages AND the
+  worst-case decode-tail reservation are acquired at ``admit_start`` —
+  before the first chunk runs — so the decode steps interleaved during the
+  admission can never draw down the pages the staged prompt still needs;
 * identical prompts hit the prefix registry: the new slot re-uses the
   registered pages (refcounted) AND the stored per-slot statistics +
   first token, skipping the prefill program entirely;
@@ -85,13 +90,17 @@ class PagedServingEngine(ServingEngine):
       prefix_caching: share full prompt pages between *identical* prompts
         (SIKV statistics are prompt-global, so whole-prompt identity is the
         exact-sharing boundary — DESIGN.md §3.4).
+      prefill_chunk: admit prompts in chunks (DESIGN.md §4) so live slots
+        keep decoding during long admissions; bit-exact with monolithic
+        admission.
     """
 
     def __init__(self, params: Params, cfg: ModelConfig,
                  sikv: SIKVConfig | None = None, *, batch_size: int = 8,
                  prompt_len: int = 512, max_new_tokens: int = 64,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_caching: bool = True, max_cached_prompts: int = 32):
+                 prefix_caching: bool = True, max_cached_prompts: int = 32,
+                 prefill_chunk: Optional[int] = None):
         # round generation headroom up so capacity is a page multiple —
         # but only internally: the ADVERTISED max_new_tokens stays the
         # configured value so paged and dense engines clamp requests
@@ -100,7 +109,8 @@ class PagedServingEngine(ServingEngine):
         max_new_eff = max_new_tokens + (-cap) % page_size
         super().__init__(params, cfg, sikv, method="sikv_paged",
                          batch_size=batch_size, prompt_len=prompt_len,
-                         max_new_tokens=max_new_eff)
+                         max_new_tokens=max_new_eff,
+                         prefill_chunk=prefill_chunk)
         self.max_new_tokens = max_new_tokens
         self.page_size = page_size
         self.pages_per_seq = self.capacity // page_size
@@ -206,27 +216,57 @@ class PagedServingEngine(ServingEngine):
         return jax.tree_util.tree_map(
             ext, caches_one, is_leaf=lambda x: isinstance(x, SIKVCache))
 
-    def admit(self, slot: int, prompt: List[int],
-              max_new_tokens: Optional[int] = None) -> int:
-        """Admit a request into ``slot``: a prefix-cache hit binds the
-        registered pages + statistics without launching prefill; a miss
-        prefills dense at batch 1 and scatters into fresh pages.  Either
-        way the slot reserves its worst-case remaining pages so decode can
-        never exhaust the pool mid-flight."""
-        assert 0 <= slot < self.batch_size
-        self.validate_prompt(prompt, max_new_tokens)
-        new = self._clamp_new(max_new_tokens)
+    def _acquire_admission(self, pending: Dict[str, Any]) -> None:
+        """Bind the admission's pool resources at ``admit_start`` time.
+
+        A prefix-cache hit completes in the immediately-following
+        ``admit_step`` (``pending_instant``), so it binds at finish; a miss
+        allocates its prompt pages and reserves the worst-case decode tail
+        NOW — with chunked admission, interleaved decode steps allocate
+        pages between the chunks, and only this up-front reservation keeps
+        the staged prompt's pages from being promised twice."""
+        prompt, slot = pending["prompt"], pending["slot"]
+        new = self._clamp_new(pending["max_new"])
         key = tuple(prompt)
+        pending["key"] = key
+        pending["need"] = need = self._pages_needed_now(prompt, new)
+        entry = (self.pool.lookup_prefix(key)
+                 if self.prefix_caching and self._caches is not None
+                 else None)
+        if entry is not None:
+            pending["mode"] = "hit"
+            pending["entry"] = entry
+            return
         n_prompt_pages = math.ceil(len(prompt) / self.page_size)
+        page_ids = self.pool.allocate(n_prompt_pages, protect=key)
+        self.slots.assign(slot, page_ids, reserved=need - n_prompt_pages)
+        pending["pages"] = page_ids
+
+    def cancel_admission(self) -> None:
+        p = self._pending
+        if p is not None and p.get("pages") is not None:
+            # releases the prompt pages AND the decode-tail reservation
+            self.slots.release_slot(p["slot"])
+        super().cancel_admission()
+
+    def admit_step(self, *, with_decode: bool = False):
+        p = self._pending
+        assert p is not None, "admit_start() first"
+        if p["mode"] == "hit":
+            return self._finish_admission(p, None, None), None
+        return super().admit_step(with_decode=with_decode)
+
+    def _finish_admission(self, p: Dict[str, Any], logits: Any,
+                          caches_one: Any) -> int:
+        """Scatter the admitted prompt into its pages (miss) or bind the
+        registered pages + statistics (hit); returns the first token."""
+        slot, prompt = p["slot"], p["prompt"]
         pad = lambda ids: jnp.asarray(
             list(ids) + [-1] * (self.pages_per_seq - len(ids)), jnp.int32)
-
-        need = self._pages_needed_now(prompt, new)
-        entry = (self.pool.lookup_prefix(key)
-                 if self.prefix_caching and self._caches is not None else None)
-        if entry is not None:
+        if p["mode"] == "hit":
+            entry = p["entry"]
             self.pool.share(entry.page_ids)
-            self.slots.assign(slot, entry.page_ids, reserved=need)
+            self.slots.assign(slot, entry.page_ids, reserved=p["need"])
             self._caches = self._insert_hit(
                 self._caches, entry.slot_state, jnp.asarray(slot, jnp.int32),
                 pad(entry.page_ids), jnp.asarray(len(prompt), jnp.int32))
@@ -235,18 +275,9 @@ class PagedServingEngine(ServingEngine):
             self.last_admit = {"prefix_hit": True,
                                "shared_pages": len(entry.page_ids)}
         else:
-            Lp = self.prompt_len
-            toks = jnp.asarray(prompt, jnp.int32)
-            row = jnp.zeros((1, Lp), jnp.int32).at[0, : len(prompt)].set(toks)
-            batch = {"tokens": row,
-                     "lengths": jnp.asarray([len(prompt)], jnp.int32)}
-            logits, caches_one = self._prefill_one(self.params, batch=batch)
-            self.stats["prefills"] += 1
             if self._caches is None:
                 self._caches = self._init_paged(caches_one)
-            page_ids = self.pool.allocate(n_prompt_pages, protect=key)
-            self.slots.assign(slot, page_ids,
-                              reserved=need - n_prompt_pages)
+            page_ids = p["pages"]
             self._caches = self._insert_prefill(
                 self._caches, caches_one, jnp.asarray(slot, jnp.int32),
                 pad(page_ids))
@@ -255,8 +286,8 @@ class PagedServingEngine(ServingEngine):
             if self.prefix_caching:
                 state = self._extract_slot_state(caches_one)
                 self.pool.register_prefix(
-                    key, page_ids, prompt_len=len(prompt), first_token=first,
-                    slot_state=state,
+                    p["key"], page_ids, prompt_len=len(prompt),
+                    first_token=first, slot_state=state,
                     state_bytes=sum(x.nbytes for x in
                                     jax.tree_util.tree_leaves(state)))
             self.last_admit = {"prefix_hit": False, "shared_pages": 0}
@@ -264,6 +295,7 @@ class PagedServingEngine(ServingEngine):
         self._host_pos[slot] = len(prompt)
         self._tok = self._tok.at[slot].set(first)
         self._pos = self._pos.at[slot].set(len(prompt))
+        self._pending = None
         return first
 
     def _init_paged(self, caches_one: Any) -> Any:
@@ -287,16 +319,28 @@ class PagedServingEngine(ServingEngine):
 
     # -- decode ----------------------------------------------------------
 
-    def step(self) -> List[int]:
-        """Advance every slot one token.  Before launching the jitted step,
-        make each live slot's write position appendable (fresh page at page
-        boundaries, copy-on-write if the covering page is shared)."""
+    def _decode_prep(self) -> None:
+        """Before any decode launch (standalone or merged with a prefill
+        chunk), make each live slot's write position appendable (fresh page
+        at page boundaries, copy-on-write if the covering page is shared).
+        A slot whose admission is still staging sits parked past capacity
+        (``_host_pos == capacity``) and is skipped by ``ensure_writable``.
+
+        ``_host_pos`` only advances at the decode COMMIT (``_apply_decode``)
+        — a launch that fails after this prep (e.g. a merged chunk whose
+        finalize raises, then retries) must leave the host write cursor on
+        the position the device will actually append next, or a later
+        ``ensure_writable`` would run one page ahead and skip a
+        copy-on-write the real write position still needs.  Re-running this
+        prep for the same position is idempotent."""
         for s in self.slots.active_slots():
             self.slots.ensure_writable(s, self._host_pos[s])
-            self._host_pos[s] += 1
-        toks = super().step()
         self.stats["cow_copies"] = self.slots.cow_copies
-        return toks
+
+    def _apply_decode(self, logits):
+        for s in self.slots.active_slots():
+            self._host_pos[s] += 1
+        return super()._apply_decode(logits)
 
     def retire(self, slot: int) -> None:
         """Release the slot's page references AND unmap its block-table

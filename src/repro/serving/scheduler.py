@@ -1,10 +1,32 @@
-"""Request scheduler: continuous batching over engine slots.
+"""Request scheduler: continuous batching over engine slots, with
+chunk-interleaved admission.
 
 Requests of different prompt/generation lengths occupy independent batch
 slots.  A slot is admitted (batch-1 prefill inserted into the live batch),
 decoded in lock-step with whichever other slots happen to be active, and
 retired the moment its request completes — the freed slot is refilled from
 the queue *mid-decode*, without recompiling (all shapes static).
+
+Head-of-line blocking: a monolithic admission stalls every live decode slot
+for the full prompt length.  When the engine was built with
+``prefill_chunk``, the scheduler instead interleaves — each scheduler step
+runs at most ONE prefill chunk, merged with the live batch's decode step
+(one launch), so live slots keep emitting a token per step while a long
+prompt admits.  The per-step token budget is therefore bounded by
+``policy.step_token_budget`` (chunk + one decode token per slot);
+``service_stats()`` reports the realized ``max_step_tokens`` next to it,
+and per-request stall accounting (``max_stall``: the longest wall-clock gap
+between a request's consecutive tokens, ``admit_decode_steps``: decode
+steps the engine ran while the request itself was admitting) makes the
+head-of-line effect measurable (``benchmarks/bench_serving.py``).
+
+Admission bookkeeping is failure-safe: the queue head is popped only after
+``engine.admit_start`` succeeded, and a failure in a later admission
+program re-queues the request at the head (FIFO preserved) after
+``engine.cancel_admission`` releases whatever the admission had acquired.
+Retries are bounded (``max_admit_retries``): a transient failure costs a
+retry, a deterministic one re-raises after the cap instead of spinning
+``run()`` forever.
 
 Compare with lock-step batching (``flush_lockstep``): there, a batch of B
 requests runs until the *longest* request finishes and the queue only
@@ -14,7 +36,10 @@ scheduler launches strictly fewer engine programs (measured by
 
 Per-request service stats: ``ttft`` (submit -> first token, which arrives
 with the admitting prefill) and ``tpot`` (mean seconds per subsequent
-token).
+token).  ``service_stats()`` excludes prefill-only requests (no decode
+tokens) from ``tpot_mean`` — a request that finishes at its prefill has no
+time-per-output-token to report, and folding in its 0.0 would deflate the
+headline metric.
 """
 from __future__ import annotations
 
@@ -22,6 +47,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.core.policy import step_token_budget
 from repro.serving.engine import ServingEngine
 
 
@@ -36,6 +62,14 @@ class Request:
     t_submit: float = 0.0
     ttft: float = 0.0
     tpot: float = 0.0
+    decode_tokens: int = 0
+    # longest wall-clock gap between this request's consecutive tokens
+    # (what another request's admission stall looks like from here)
+    max_stall: float = 0.0
+    # decode steps the engine ran while THIS request was admitting
+    # (chunk-interleaved admission keeps the live batch moving: ~n_chunks;
+    # monolithic admission blocks: 0)
+    admit_decode_steps: int = 0
     # paged-engine admission metadata (prefix caching)
     prefix_hit: bool = False
     shared_pages: int = 0
@@ -48,6 +82,14 @@ class _Slot:
     t_last: float = 0.0
     decode_time: float = 0.0
     decode_tokens: int = 0
+    max_gap: float = 0.0
+
+
+@dataclass
+class _Admission:
+    req: Request
+    slot: int
+    decode_steps: int = 0
 
 
 @dataclass
@@ -55,14 +97,40 @@ class RequestScheduler:
     engine: ServingEngine
     queue: List[Request] = field(default_factory=list)
     completed: Dict[int, Request] = field(default_factory=dict)
-    # highest number of simultaneously active slots seen (concurrency metric)
+    # highest number of simultaneously active slots seen (concurrency
+    # metric; an in-flight chunked admission counts — it holds a slot and,
+    # on the paged engine, its reserved pages)
     peak_active: int = 0
+    # most tokens (decode + prefill) processed in one scheduler step
+    max_step_tokens: int = 0
+    # admission failures tolerated per request before re-raising: transient
+    # errors retry (the request is re-queued at the head, never lost), a
+    # deterministic failure must surface instead of spinning run() forever
+    max_admit_retries: int = 2
+    _admit_failures: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def step_token_budget(self) -> int:
+        """Per-step token bound under CHUNKED admission (one chunk + one
+        decode token per slot).  Under monolithic admission it is the cost
+        of a single whole-prompt admission, NOT a bound — several can
+        complete inline in one step, the head-of-line burst the realized
+        ``max_step_tokens`` makes visible (``policy.step_token_budget``)."""
+        return step_token_budget(self.engine.prefill_chunk,
+                                 self.engine.prompt_len,
+                                 self.engine.batch_size)
+
+    def _clamped_new(self, req: Request) -> int:
+        return min(req.max_new_tokens, self.engine.max_new_tokens)
 
     def submit(self, req: Request) -> None:
         """Queue a request; rejects infeasible ones immediately (prompt too
         long for the engine, or needing more pages than the pool holds)
-        with a ValueError instead of letting them degrade silently."""
-        self.engine.validate_prompt(req.prompt, req.max_new_tokens)
+        with a ValueError instead of letting them degrade silently.
+        Validation sees the CLAMPED generation cap — admission clamps to
+        the engine's headroom, so a huge ``max_new_tokens`` that fits after
+        clamping must not be rejected by the worst-case page count."""
+        self.engine.validate_prompt(req.prompt, self._clamped_new(req))
         req.t_submit = time.time()
         self.queue.append(req)
 
@@ -70,38 +138,89 @@ class RequestScheduler:
     # continuous batching
     # ------------------------------------------------------------------
 
-    def _admit_next(self, slots: List[_Slot], i: int) -> None:
-        req = self.queue.pop(0)
-        first = self.engine.admit(
-            i, req.prompt,
-            max_new_tokens=min(req.max_new_tokens,
-                               self.engine.max_new_tokens))
+    def _complete_admission(self, slots: List[_Slot], adm: _Admission,
+                            first: int) -> None:
+        req = adm.req
         now = time.time()
         info = getattr(self.engine, "last_admit", {})
         req.prefix_hit = bool(info.get("prefix_hit", False))
         req.shared_pages = int(info.get("shared_pages", 0))
         req.result = [first]
         req.ttft = now - req.t_submit
-        slot = slots[i]
+        req.admit_decode_steps = adm.decode_steps
+        slot = slots[adm.slot]
         slot.req = req
         # clamp to the engine's cache headroom: past it, appends would
         # no-op and tokens would degrade silently
-        slot.remaining = min(req.max_new_tokens,
-                             self.engine.max_new_tokens) - 1
+        slot.remaining = self._clamped_new(req) - 1
         slot.t_last = now
         slot.decode_time = 0.0
         slot.decode_tokens = 0
+        slot.max_gap = 0.0
         if slot.remaining <= 0:
-            self._retire(slots, i)
+            self._retire(slots, adm.slot)
 
     def _retire(self, slots: List[_Slot], i: int) -> None:
         req = slots[i].req
         assert req is not None
         req.tpot = (slots[i].decode_time / slots[i].decode_tokens
                     if slots[i].decode_tokens else 0.0)
+        req.decode_tokens = slots[i].decode_tokens
+        req.max_stall = slots[i].max_gap
         self.completed[req.uid] = req
         slots[i].req = None
         self.engine.retire(i)
+
+    def _admission_failed(self, req: Request) -> None:
+        """Cancel the failed admission and re-queue the request at the head
+        (FIFO preserved, nothing lost); past ``max_admit_retries`` the
+        active exception re-raises — a deterministic failure must surface,
+        not spin the loop forever.  Call only from an ``except`` block."""
+        self.engine.cancel_admission()
+        n = self._admit_failures.get(req.uid, 0) + 1
+        self._admit_failures[req.uid] = n
+        if n > self.max_admit_retries:
+            raise
+        self.queue.insert(0, req)
+
+    def _begin_admissions(self, slots: List[_Slot]
+                          ) -> tuple:
+        """Start queued admissions into free slots.  Instant admissions
+        (monolithic prefill, prefix-cache hits) complete inline — several
+        per step, as before chunking; the first CHUNKED admission is
+        returned still in flight so the main loop can interleave its chunks
+        with decode steps (one prompt prefills at a time).
+
+        Returns ``(admission_in_flight, tokens)`` — ``tokens`` counts the
+        prompt rows the inline (monolithic) prefills processed, so the
+        step-token accounting sees the head-of-line cost chunking removes
+        (prefix hits run no prefill and count 0)."""
+        B = self.engine.batch_size
+        tokens = 0
+        while self.queue:
+            i = next((j for j in range(B) if slots[j].req is None), None)
+            head = self.queue[0]
+            if i is None or not self.engine.can_admit(
+                    head.prompt, self._clamped_new(head)):
+                return None, tokens
+            self.engine.admit_start(i, head.prompt,
+                                    max_new_tokens=self._clamped_new(head))
+            # pop only after admit_start succeeded — a raising admission
+            # leaves the request queued for a later retry instead of
+            # silently vanishing
+            self.queue.pop(0)
+            adm = _Admission(req=head, slot=i)
+            if not self.engine.pending_instant:
+                return adm, tokens
+            try:
+                first, _ = self.engine.admit_step()
+            except Exception:
+                self._admission_failed(head)
+                return None, tokens
+            self._complete_admission(slots, adm, first)
+            if not head.prefix_hit:     # a monolithic prefill: Lp rows
+                tokens += self.engine.prompt_len
+        return None, tokens
 
     def run(self) -> int:
         """Serve the whole queue with continuous batching; returns the
@@ -116,36 +235,70 @@ class RequestScheduler:
         B = self.engine.batch_size
         slots = [_Slot() for _ in range(B)]
         done0 = len(self.completed)
-        while self.queue or any(s.req is not None for s in slots):
-            for i in range(B):
-                if slots[i].req is None and self.queue and \
-                        self.engine.can_admit(self.queue[0].prompt,
-                                              self.queue[0].max_new_tokens):
-                    self._admit_next(slots, i)
-            active = sum(s.req is not None for s in slots)
-            self.peak_active = max(self.peak_active, active)
-            if not active:
-                if self.queue and not self.engine.can_admit(
-                        self.queue[0].prompt, self.queue[0].max_new_tokens):
-                    raise RuntimeError(
-                        "queue head inadmissible with an idle engine — the "
-                        "pool cannot ever fit it (submit() validation "
-                        "should have rejected it)")
-                continue  # every admitted request finished at its prefill;
-                # keep draining the queue
-            toks = self.engine.step()
-            now = time.time()
-            for i in range(B):
-                slot = slots[i]
-                if slot.req is None:
-                    continue
-                slot.req.result.append(toks[i])
-                slot.decode_time += now - slot.t_last
-                slot.decode_tokens += 1
-                slot.t_last = now
-                slot.remaining -= 1
-                if slot.remaining <= 0:
-                    self._retire(slots, i)
+        admitting: Optional[_Admission] = None
+        while self.queue or admitting is not None \
+                or any(s.req is not None for s in slots):
+            step_tokens = 0
+            if admitting is None:
+                admitting, step_tokens = self._begin_admissions(slots)
+            active = [j for j in range(B) if slots[j].req is not None]
+            self.peak_active = max(
+                self.peak_active, len(active) + (admitting is not None))
+
+            dec_tokens: Optional[List[int]] = None
+            stepped: List[int] = []
+            if admitting is not None:
+                # one prefill chunk, merged with the live batch's decode
+                # step (a single launch) — live slots keep emitting tokens
+                try:
+                    first, dec_tokens = self.engine.admit_step(
+                        with_decode=bool(active))
+                except Exception:
+                    self._admission_failed(admitting.req)
+                    admitting, first = None, None
+                else:
+                    step_tokens += self.engine.prefill_chunk
+                if dec_tokens is not None:
+                    stepped = list(active)
+                    admitting.decode_steps += 1
+                if first is not None:
+                    self._complete_admission(slots, admitting, first)
+                    admitting = None
+            if dec_tokens is None:
+                # no merged decode ran: step the live batch (including a
+                # slot admitted this very iteration, as before chunking)
+                active_now = [j for j in range(B)
+                              if slots[j].req is not None]
+                if active_now:
+                    dec_tokens = self.engine.step()
+                    stepped = active_now
+                    if admitting is not None:
+                        admitting.decode_steps += 1
+                elif admitting is None:
+                    if self.queue and not self.engine.can_admit(
+                            self.queue[0].prompt,
+                            self._clamped_new(self.queue[0])):
+                        raise RuntimeError(
+                            "queue head inadmissible with an idle engine — "
+                            "the pool cannot ever fit it (submit() "
+                            "validation should have rejected it)")
+                    continue  # every admitted request finished at its
+                    # prefill; keep draining the queue
+            step_tokens += len(stepped)
+            self.max_step_tokens = max(self.max_step_tokens, step_tokens)
+            if dec_tokens is not None:
+                now = time.time()
+                for i in stepped:
+                    slot = slots[i]
+                    gap = now - slot.t_last
+                    slot.req.result.append(dec_tokens[i])
+                    slot.max_gap = max(slot.max_gap, gap)
+                    slot.decode_time += gap
+                    slot.decode_tokens += 1
+                    slot.t_last = now
+                    slot.remaining -= 1
+                    if slot.remaining <= 0:
+                        self._retire(slots, i)
         return len(self.completed) - done0
 
     def flush(self) -> int:
@@ -165,7 +318,12 @@ class RequestScheduler:
                                       max_new_tokens=n_new)
         now = time.time()
         for i, req in enumerate(batch):
-            req.result = [int(t) for t in gen[i, : req.max_new_tokens]]
+            # deliver exactly what the continuous path promises:
+            # min(requested, engine headroom) tokens — the batch max must
+            # never clamp an individual request below that
+            promised = min(req.max_new_tokens, self.engine.max_new_tokens)
+            req.result = [int(t) for t in gen[i, :promised]]
+            req.decode_tokens = max(0, len(req.result) - 1)
             # in lock-step the first token only surfaces when the whole
             # batch finishes, so TTFT honestly includes the queue wait...
             req.ttft = now - req.t_submit
@@ -191,11 +349,24 @@ class RequestScheduler:
     # ------------------------------------------------------------------
 
     def service_stats(self) -> Dict[str, float]:
-        """Aggregate TTFT/TPOT over completed requests (seconds)."""
+        """Aggregate service stats over completed requests (seconds).
+
+        ``tpot_mean`` averages only requests that actually decoded
+        (``decode_tokens > 0``) — prefill-only requests have no
+        time-per-output-token and would deflate the mean with 0.0 entries.
+        ``max_decode_stall`` is the worst inter-token gap any request saw
+        (the head-of-line metric chunked admission shrinks).
+        """
         if not self.completed:
-            return {"ttft_mean": 0.0, "tpot_mean": 0.0}
+            return {"ttft_mean": 0.0, "tpot_mean": 0.0,
+                    "max_decode_stall": 0.0, "decode_requests": 0.0}
         reqs = list(self.completed.values())
+        dec = [r for r in reqs if r.decode_tokens > 0]
         return {
             "ttft_mean": sum(r.ttft for r in reqs) / len(reqs),
-            "tpot_mean": sum(r.tpot for r in reqs) / len(reqs),
+            "tpot_mean": (sum(r.tpot for r in dec) / len(dec)
+                          if dec else 0.0),
+            "max_decode_stall": max((r.max_stall for r in reqs),
+                                    default=0.0),
+            "decode_requests": float(len(dec)),
         }

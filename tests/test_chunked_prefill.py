@@ -1,0 +1,239 @@
+"""Chunked prefill: bit-exactness with whole-prompt admission (model level,
+dense engine, paged engine), gating, and scheduler interleaving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.models import (finalize_chunked_prefill, init_params,
+                          init_prefill_stage, prefill, prefill_chunk_step,
+                          supports_chunked_prefill)
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine)
+from repro.sparse import get_method
+
+CFG = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
+                 obs_window=8)
+
+# token-indexed cache fields: compared only on the valid region — the pad
+# tail holds garbage in BOTH paths (whole-prompt prefill compresses pad-row
+# keys, chunked staging leaves zeros/stale bytes) and is unreachable by
+# construction (length masks, top-k valid mask, sink vote key_valid)
+_TOKEN_FIELDS = ("codes", "kmag", "k_scale", "k_zp", "v_q", "v_scale",
+                 "v_zp", "sink_mask")
+
+
+def _model_setup(arch, **over):
+    cfg = reduced_config(get_model_config(arch))
+    cfg = dataclasses.replace(cfg, dtype="float32", **over)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _run_chunked(params, cfg, method, row, n, chunk, cap):
+    Lp = row.shape[1]
+    C = min(chunk, Lp)
+    stage = init_prefill_stage(cfg, Lp)
+    step = jax.jit(lambda p, r, s, st: prefill_chunk_step(
+        p, cfg, r, s, n, st, chunk=C))
+    for c in range(-(-n // C)):
+        start = min(c * C, Lp - C)
+        logits, stage = step(params, row, jnp.asarray(start), stage)
+    caches = jax.jit(lambda st: finalize_chunked_prefill(
+        cfg, st, n, method, capacity=cap))(stage)
+    return logits, caches
+
+
+def _assert_caches_bitexact(caches_w, caches_c, n):
+    for li, (ew, ec) in enumerate(zip(caches_w, caches_c)):
+        cw, cc = ew["self"], ec["self"]
+        for f in cw._fields:
+            aw = np.asarray(getattr(cw, f))
+            ac = np.asarray(getattr(cc, f))
+            if f in _TOKEN_FIELDS:
+                aw, ac = aw[:, :, :n], ac[:, :, :n]
+            np.testing.assert_array_equal(aw, ac,
+                                          err_msg=f"layer {li} field {f}")
+
+
+@pytest.mark.parametrize("arch,over", [
+    ("llama3.1-8b", {}),                  # GQA
+    ("qwen2.5-3b", {}),                   # GQA + qkv_bias/qk_norm
+    ("deepseek-v2-236b", {"moe": None}),  # MLA latent cache (MoE gated out)
+])
+@pytest.mark.parametrize("n,chunk", [
+    (48, 16),   # prompt a chunk multiple
+    (37, 16),   # not divisible: final chunk overlaps backwards
+    (5, 16),    # prompt shorter than the chunk
+    (48, 48),   # prompt == chunk (single chunk)
+    (48, 7),    # chunk does not divide the padded row either
+])
+def test_chunked_prefill_bitexact_model_level(arch, over, n, chunk):
+    """Chunked admission == whole-prompt prefill, to the BIT: last-position
+    logits and every cache field (token-indexed ones on the valid region)."""
+    params, cfg = _model_setup(arch, **over)
+    method = get_method("sikv", CFG)
+    Lp, cap = 48, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (n,), 1, cfg.vocab_size)
+    row = jnp.zeros((1, Lp), jnp.int32).at[0, :n].set(toks)
+    batch = {"tokens": row, "lengths": jnp.asarray([n], jnp.int32)}
+    logits_w, caches_w = jax.jit(
+        lambda p, b: prefill(p, cfg, b, method, capacity=cap))(params, batch)
+    logits_c, caches_c = _run_chunked(params, cfg, method, row, n, chunk, cap)
+    np.testing.assert_array_equal(np.asarray(logits_w), np.asarray(logits_c))
+    _assert_caches_bitexact(caches_w, caches_c, n)
+
+
+def test_supports_chunked_prefill_gating():
+    """Recurrent state, encoder-decoder windows, and token-set-dependent
+    MoE dispatch cannot chunk bit-exactly — engines must refuse."""
+    for arch, ok in [("llama3.1-8b", True), ("qwen2.5-3b", True),
+                     ("mamba2-130m", False), ("zamba2-2.7b", False),
+                     ("whisper-medium", False), ("olmoe-1b-7b", False),
+                     ("deepseek-v2-236b", False)]:
+        cfg = reduced_config(get_model_config(arch))
+        assert supports_chunked_prefill(cfg) == ok, arch
+    params, cfg = _model_setup("mamba2-130m")
+    with pytest.raises(ValueError, match="chunked prefill"):
+        ServingEngine(params, cfg, CFG, prefill_chunk=8)
+
+
+# ---------------------------------------------------------------------------
+# engine level
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    params, cfg = _model_setup("llama3.1-8b")
+    return params, cfg
+
+
+def _prompts(cfg, lens, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (l,), 1, cfg.vocab_size)]
+        for i, l in enumerate(lens)
+    ]
+
+
+def _generate(eng, prompts, n_steps):
+    outs = [[eng.admit(slot, p)] for slot, p in enumerate(prompts)]
+    for _ in range(n_steps):
+        toks = eng.step()
+        for s in range(len(prompts)):
+            outs[s].append(toks[s])
+    return outs
+
+
+def test_dense_engine_chunked_matches_whole(engine_setup):
+    params, cfg = engine_setup
+    prompts = _prompts(cfg, [16, 9])
+    mk = lambda pc: ServingEngine(params, cfg, CFG, batch_size=2,
+                                  prompt_len=16, max_new_tokens=6,
+                                  prefill_chunk=pc)
+    ref = _generate(mk(None), prompts, 5)
+    for pc in [4, 5, 16, 64]:   # 64 > prompt_len: clamped to one chunk
+        assert _generate(mk(pc), prompts, 5) == ref, pc
+
+
+def test_paged_engine_chunked_matches_whole(engine_setup):
+    params, cfg = engine_setup
+    prompts = _prompts(cfg, [16, 9], seed=11)
+    ref = _generate(
+        ServingEngine(params, cfg, CFG, batch_size=2, prompt_len=16,
+                      max_new_tokens=6), prompts, 5)
+    for pc in [4, 6]:
+        eng = PagedServingEngine(params, cfg, CFG, batch_size=2,
+                                 prompt_len=16, max_new_tokens=6,
+                                 page_size=4, prefill_chunk=pc)
+        assert _generate(eng, prompts, 5) == ref, pc
+        assert eng.stats["prefill_chunks"] > 0
+
+
+def test_paged_chunked_prefix_hit_skips_chunks(engine_setup):
+    """A prefix-cache hit completes instantly even on a chunked engine —
+    no chunk programs run, and the bound slot decodes identically."""
+    params, cfg = engine_setup
+    p = _prompts(cfg, [13], seed=7)[0]
+    eng = PagedServingEngine(params, cfg, CFG, batch_size=2, prompt_len=16,
+                             max_new_tokens=6, page_size=4, prefill_chunk=4)
+    first0 = eng.admit(0, p)
+    chunks_before = eng.stats["prefill_chunks"]
+    first1 = eng.admit(1, p)
+    assert first1 == first0
+    assert eng.stats["prefill_chunks"] == chunks_before  # hit: no chunks
+    assert eng.stats["prefix_hits"] == 1
+    toks = eng.step()
+    assert toks[0] == toks[1]
+
+
+def test_paged_merged_failure_keeps_decode_consistent(engine_setup):
+    """A merged chunk launch whose finalize raises (then retries) must not
+    commit the decode half or desync the host write cursor from the device
+    append position — every request's token stream matches an undisturbed
+    run, page-boundary crossings included."""
+    params, cfg = engine_setup
+    prompts = _prompts(cfg, [5, 16], seed=21)
+
+    def run_sched(eng_cls):
+        eng = eng_cls(params, cfg, CFG, batch_size=2, prompt_len=16,
+                      max_new_tokens=8, page_size=4, prefill_chunk=4)
+        sched = RequestScheduler(eng)
+        sched.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=8))
+        sched.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=4))
+        assert sched.run() == 2
+        return {u: list(sched.completed[u].result) for u in (0, 1)}
+
+    ref = run_sched(PagedServingEngine)
+
+    class FlakyFinalize(PagedServingEngine):
+        failures = 1
+
+        def __init__(self, *a, **k):
+            super().__init__(*a, **k)
+            inner = self._finalize
+
+            def flaky(stage, length):
+                if FlakyFinalize.failures:
+                    FlakyFinalize.failures -= 1
+                    raise RuntimeError("transient finalize failure")
+                return inner(stage, length)
+            self._finalize = flaky
+
+    assert run_sched(FlakyFinalize) == ref
+    assert FlakyFinalize.failures == 0  # the failure path actually ran
+
+
+def test_chunked_admission_interleaves_decode(engine_setup):
+    """Live slots keep producing tokens during a long chunked admission —
+    one decode step per chunk (merged launch), zero with monolithic
+    admission — and every result is identical between the two policies."""
+    params, cfg = engine_setup
+    prompts = _prompts(cfg, [5, 16], seed=9)
+
+    results = {}
+    for pc in [None, 4]:
+        eng = ServingEngine(params, cfg, CFG, batch_size=2, prompt_len=16,
+                            max_new_tokens=8, prefill_chunk=pc)
+        sched = RequestScheduler(eng)
+        sched.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=8))
+        sched.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=4))
+        assert sched.run() == 2
+        results[pc] = {u: list(sched.completed[u].result) for u in (0, 1)}
+        long_req = sched.completed[1]
+        if pc is None:
+            assert long_req.admit_decode_steps == 0
+            # monolithic admissions burst past the chunked budget — the
+            # head-of-line cost the accounting must make visible
+            assert sched.max_step_tokens >= eng.prompt_len
+        else:
+            # 16-token prompt / 4-token chunks = 4 chunks; the live slot
+            # got a merged decode step with every chunk
+            assert long_req.admit_decode_steps >= 4 - 1
+            # chunked admission: the budget is a hard per-step bound
+            assert sched.max_step_tokens <= sched.step_token_budget
+    assert results[4] == results[None]

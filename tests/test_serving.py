@@ -13,7 +13,8 @@ from repro.core.cache import prefill_compress, ring_positions
 from repro.core import retrieval as rtr
 from repro.data.synthetic import structured_kv
 from repro.models import init_params
-from repro.serving import Request, RequestScheduler, ServingEngine
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine)
 
 CFG = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
                  obs_window=8)
@@ -215,6 +216,112 @@ def test_scheduler_clamps_overlong_requests(engine_setup):
     sched.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=50))
     assert sched.run() == 1
     assert len(sched.completed[0].result) == 4
+
+
+def test_admission_failure_requeues_request(engine_setup):
+    """A request whose admission raises must not vanish: the scheduler pops
+    the queue only after the admission started cleanly and re-queues at the
+    head on a mid-admission failure, so a transient error costs a retry,
+    not a lost (never-completed) request."""
+    params, cfg = engine_setup
+
+    class FlakyEngine(ServingEngine):
+        failures = 1
+
+        def admit_step(self, **kw):
+            if FlakyEngine.failures:
+                FlakyEngine.failures -= 1
+                raise RuntimeError("transient admission failure")
+            return super().admit_step(**kw)
+
+    eng = FlakyEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                      prompt_len=16, max_new_tokens=4)
+    sched = RequestScheduler(eng)
+    for i in range(3):
+        sched.submit(Request(uid=i, prompt=_prompts(cfg, [6], seed=i)[0],
+                             max_new_tokens=3))
+    assert sched.run() == 3
+    assert sorted(sched.completed) == [0, 1, 2]
+    assert all(len(sched.completed[i].result) == 3 for i in range(3))
+    assert not eng.has_pending_admission
+
+
+def test_admission_failure_bounded_retries(engine_setup):
+    """A deterministically-failing admission must surface after the retry
+    cap instead of spinning run() in a silent retry loop forever."""
+    params, cfg = engine_setup
+
+    class BrokenEngine(ServingEngine):
+        attempts = 0
+
+        def admit_step(self, **kw):
+            BrokenEngine.attempts += 1
+            raise RuntimeError("deterministic admission failure")
+
+    eng = BrokenEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                       prompt_len=16, max_new_tokens=4)
+    sched = RequestScheduler(eng)
+    sched.submit(Request(uid=0, prompt=_prompts(cfg, [6], seed=0)[0],
+                         max_new_tokens=3))
+    with pytest.raises(RuntimeError, match="deterministic admission"):
+        sched.run()
+    assert BrokenEngine.attempts == sched.max_admit_retries + 1
+
+
+def test_submit_validates_with_clamped_max_new(engine_setup):
+    """A request asking for a huge max_new_tokens that FITS after clamping
+    to the engine headroom must pass submit() validation — the paged
+    worst-case page count must see the clamped value, not the raw one."""
+    params, cfg = engine_setup
+    # pool sized EXACTLY to one worst-case request at the engine's own cap
+    eng = PagedServingEngine(params, cfg, CFG, batch_size=1, prompt_len=16,
+                             max_new_tokens=4, page_size=4, num_pages=5)
+    sched = RequestScheduler(eng)
+    sched.submit(Request(uid=0, prompt=_prompts(cfg, [16], seed=2)[0],
+                         max_new_tokens=10**6))
+    assert sched.run() == 1
+    assert len(sched.completed[0].result) == 4  # clamped to the headroom
+
+
+def test_tpot_excludes_prefill_only_requests(engine_setup):
+    """Requests that finish at their prefill (no decode tokens) must not
+    drag tpot_mean toward zero."""
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=8)
+    sched = RequestScheduler(eng)
+    sched.submit(Request(uid=0, prompt=_prompts(cfg, [6], seed=0)[0],
+                         max_new_tokens=1))   # prefill-only
+    sched.submit(Request(uid=1, prompt=_prompts(cfg, [8], seed=1)[0],
+                         max_new_tokens=5))
+    assert sched.run() == 2
+    stats = sched.service_stats()
+    assert sched.completed[0].decode_tokens == 0
+    assert sched.completed[1].decode_tokens == 4
+    assert stats["decode_requests"] == 1.0
+    # the mean is exactly the decoding request's tpot — no 0.0 folded in
+    assert stats["tpot_mean"] == pytest.approx(sched.completed[1].tpot)
+    assert stats["tpot_mean"] > 0.0
+
+
+def test_lockstep_result_length_matches_continuous(engine_setup):
+    """Both batching policies deliver min(requested, engine headroom)
+    tokens — the lock-step batch maximum must not clamp an individual
+    request below (or above) what the continuous path returns."""
+    params, cfg = engine_setup
+    news = [50, 2, 1]
+    for policy in ["lockstep", "continuous"]:
+        eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                            prompt_len=16, max_new_tokens=4)
+        sched = RequestScheduler(eng)
+        for i, nn in enumerate(news):
+            sched.submit(Request(uid=i, prompt=_prompts(cfg, [6], seed=i)[0],
+                                 max_new_tokens=nn))
+        done = (sched.flush_lockstep() if policy == "lockstep"
+                else sched.run())
+        assert done == 3
+        for i, nn in enumerate(news):
+            assert len(sched.completed[i].result) == min(nn, 4), (policy, i)
 
 
 def test_scheduler_continuous_mixed_lengths(engine_setup):
