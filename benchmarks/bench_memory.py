@@ -82,6 +82,7 @@ def run() -> None:
              f"ratio={full / ours:.2f}x")
 
     paged_vs_dense()
+    tiered_vs_paged()
 
 
 def _dense_token_bytes(cache) -> int:
@@ -131,3 +132,53 @@ def paged_vs_dense(*, Lmax: int = 2048, page_size: int = 64,
     emit("memory/paged_vs_dense/shared-prompts", 0.0,
          f"lengths={[Lmax] * B};pages={num_pages};paged_bytes={pb};"
          f"dense_bytes={dense_bytes};ratio={dense_bytes / pb:.2f}x")
+
+
+def tiered_vs_paged(*, Lmax: int = 2048, page_size: int = 64,
+                    B: int = 4, H: int = 2, D: int = 128,
+                    staging_pages: int = 6, prefetch_depth: int = 4) -> None:
+    """MEASURED device bytes of the tiered store vs the single-tier pool at
+    the SAME indexable token capacity, plus the inverse view: tokens a
+    fixed device budget can index under each layout.
+
+    The tiered layout keeps only the sign-code index (+ tier map) on device
+    per page; the payload lives host-side and rotates through the
+    ``staging_pages`` device slots — so per-page device cost collapses from
+    index+payload to index, and capacity per device byte expands by nearly
+    the payload/index ratio once the fixed staging cost is amortized.
+    """
+    header("bench_memory: tiered store vs single-tier pool (measured)")
+    from repro.core.cache import init_cache
+    from repro.core.policy import tiered_pool_split
+    from repro.paged.cache import init_paged_cache, paged_token_bytes
+    from repro.tiered.cache import (init_tiered_cache, page_byte_split,
+                                    tiered_device_bytes)
+
+    cfg = SIKVConfig()
+    template = init_cache(cfg, 1, H, Lmax, D)
+    ib, pb_page = page_byte_split(template, page_size)
+    num_pages = B * (Lmax // page_size)
+
+    paged = init_paged_cache(template, num_pages, page_size, B)
+    single = paged_token_bytes(paged)
+    tiered = init_tiered_cache(template, num_pages, page_size,
+                               staging_pages, prefetch_depth, B, 0)
+    dev = tiered_device_bytes(tiered)
+    host = num_pages * pb_page
+    emit("memory/tiered_vs_paged/same-capacity", 0.0,
+         f"pages={num_pages};index_bytes_page={ib};"
+         f"payload_bytes_page={pb_page};single_tier_bytes={single};"
+         f"tiered_device_bytes={dev};tiered_host_bytes={host};"
+         f"device_shrink={single / dev:.2f}x")
+
+    # inverse: tokens indexable under the single-tier pool's byte budget
+    budget = single
+    p2 = tiered_pool_split(budget, ib, pb_page,
+                           staging_pages=staging_pages,
+                           prefetch_depth=prefetch_depth)
+    emit("memory/tiered_vs_paged/same-budget", 0.0,
+         f"budget_bytes={budget};single_tier_tokens={num_pages * page_size};"
+         f"tiered_tokens={p2 * page_size};"
+         f"expansion={p2 / num_pages:.2f}x")
+    assert dev < single
+    assert p2 > num_pages

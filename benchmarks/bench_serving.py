@@ -33,13 +33,17 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, header
 from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.core.cache import init_cache
+from repro.core.policy import staging_pages_needed, tiered_pool_split
 from repro.data.synthetic import lm_sequence_batch
 from repro.models import init_params
 from repro.serving import (PagedServingEngine, Request, RequestScheduler,
-                           ServingEngine)
+                           ServingEngine, TieredServingEngine)
+from repro.tiered.cache import page_byte_split
 
 
 def _mixed_requests(cfg, n: int, prompt_len: int):
@@ -101,6 +105,16 @@ def run(*, batch: int = 2, prompt_len: int = 64, n_requests: int = 6,
 
     results["paged"] = paged_concurrency(params, cfg, sikv,
                                          prompt_len=prompt_len)
+    if smoke:
+        results["tiered"] = tiered_concurrency(
+            params, cfg, sikv, prompt_len=32, page_size=4, max_new=8,
+            n_requests=6, assert_ratio=1.0)
+        results["prefetch"] = tiered_prefetch_sweep(
+            params, cfg, sikv, prompt_len=32, page_size=4, max_new=8,
+            depths=(0, 2))
+    else:
+        results["tiered"] = tiered_concurrency(params, cfg, sikv)
+        results["prefetch"] = tiered_prefetch_sweep(params, cfg, sikv)
     if smoke:
         # exercise the chunked-admission path + emit the stall metrics at
         # CI-friendly shapes; at toy sizes launch overhead dominates the
@@ -201,6 +215,157 @@ def paged_concurrency(params, cfg, sikv, *, prompt_len: int = 64,
         sched_p.peak_active, sched_d.peak_active)
     return {"dense_peak": sched_d.peak_active,
             "paged_peak": sched_p.peak_active}
+
+
+def _distinct_requests(cfg, n: int, prompt_len: int, max_new: int):
+    toks = lm_sequence_batch(jax.random.PRNGKey(33), n, prompt_len,
+                             cfg.vocab_size)
+    return [Request(uid=i, prompt=[int(t) for t in toks[i]],
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def tiered_concurrency(params, cfg, sikv, *, prompt_len: int = 256,
+                       page_size: int = 8, max_new: int = 8,
+                       dense_slots: int = 4, n_requests: int = 14,
+                       assert_ratio: float = 3.0):
+    """Headline: concurrent sequences under a FIXED device byte budget.
+
+    The budget is what a single-tier paged pool holding ``dense_slots``
+    sequences' worth of pages costs on device.  The tiered store spends the
+    SAME budget on a staging pool + prefetch lane + sign-code index pages
+    (``policy.tiered_pool_split``): index pages are a small fraction of a
+    full page, so the same bytes index several times more tokens — and
+    admission, which is per-page, sustains >= ``assert_ratio`` x the
+    concurrent sequences (measured ``peak_active``; asserted at full
+    shapes, relaxed at smoke shapes).  Prompts are all DISTINCT, so prefix
+    sharing contributes nothing — the win is pure payload offload.
+    """
+    header("bench_serving: tiered vs single-tier pool @ fixed device bytes")
+    cap = prompt_len + max_new
+    cap += (-cap) % page_size
+    pps = cap // page_size
+    reqs = _distinct_requests(cfg, n_requests, prompt_len, max_new)
+    batch = 4 * dense_slots
+
+    # single-tier baseline: the pool whose device bytes define the budget
+    eng_p = PagedServingEngine(params, cfg, sikv, batch_size=batch,
+                               prompt_len=prompt_len, max_new_tokens=max_new,
+                               page_size=page_size,
+                               num_pages=dense_slots * pps)
+    sched_p = RequestScheduler(eng_p)
+    for r in reqs:
+        sched_p.submit(Request(uid=r.uid, prompt=list(r.prompt),
+                               max_new_tokens=r.max_new_tokens))
+    t0 = time.time()
+    done_p = sched_p.run()
+    dt_p = time.time() - t0
+    paged_bytes = eng_p.token_store_bytes()
+    stats_p = sched_p.service_stats()
+    emit("serving/tiered/paged_baseline", dt_p * 1e6,
+         f"requests={done_p};pages={dense_slots * pps};"
+         f"peak_concurrent={sched_p.peak_active};"
+         f"device_bytes={paged_bytes};"
+         f"tpot_ms={stats_p['tpot_mean'] * 1e3:.2f}")
+
+    # tiered: the identical device budget, split by policy math
+    n_layers = sum(1 for leaf in jax.tree_util.tree_leaves(
+        eng_p._caches, is_leaf=lambda x: hasattr(x, "block_table"))
+        if hasattr(leaf, "block_table"))
+    H = eng_p._caches[0]["self"].codes.shape[1]
+    D = eng_p._caches[0]["self"].head_dim
+    template = init_cache(sikv, 1, H, cap, D, scale_dtype=jnp.bfloat16)
+    ib, pb = page_byte_split(template, page_size)
+    target = int(dense_slots * assert_ratio) + 1
+    staging = staging_pages_needed(target)
+    prefetch = 2
+    per_layer = paged_bytes // n_layers
+    bt_bytes = batch * pps * 4                 # block table, both pools pay
+    budget = per_layer - bt_bytes - prefetch * 4 - 4
+    num_pages = tiered_pool_split(budget, ib, pb, staging_pages=staging,
+                                  prefetch_depth=prefetch)
+    eng_t = TieredServingEngine(params, cfg, sikv, batch_size=batch,
+                                prompt_len=prompt_len,
+                                max_new_tokens=max_new,
+                                page_size=page_size, num_pages=num_pages,
+                                staging_pages=staging,
+                                prefetch_depth=prefetch)
+    sched_t = RequestScheduler(eng_t)
+    for r in reqs:
+        sched_t.submit(r)
+    t0 = time.time()
+    done_t = sched_t.run()
+    dt_t = time.time() - t0
+    tiered_bytes = eng_t.token_store_bytes()
+    tstats = eng_t.tier_stats()
+    stats_t = sched_t.service_stats()
+    emit("serving/tiered/tiered", dt_t * 1e6,
+         f"requests={done_t};index_pages={num_pages};"
+         f"staging_pages={staging};prefetch_depth={prefetch};"
+         f"peak_concurrent={sched_t.peak_active};"
+         f"device_bytes={tiered_bytes};"
+         f"host_bytes={eng_t.host_store_bytes()};"
+         f"staging_hit_rate={tstats['staging_hit_rate']:.3f};"
+         f"h2d_bytes_per_step={tstats['h2d_bytes_per_step']:.0f};"
+         f"d2h_bytes_per_step={tstats['d2h_bytes_per_step']:.0f};"
+         f"tpot_ms={stats_t['tpot_mean'] * 1e3:.2f}")
+
+    ratio = sched_t.peak_active / max(1, sched_p.peak_active)
+    tpot_pen = (stats_t["tpot_mean"] / stats_p["tpot_mean"]
+                if stats_p["tpot_mean"] else 0.0)
+    emit("serving/tiered/concurrency", 0.0,
+         f"paged_peak={sched_p.peak_active};"
+         f"tiered_peak={sched_t.peak_active};ratio={ratio:.2f}x;"
+         f"device_bytes_over_budget={tiered_bytes / paged_bytes:.3f};"
+         f"tpot_penalty={tpot_pen:.2f}x")
+    assert done_t == done_p, (done_t, done_p)
+    assert tiered_bytes <= paged_bytes, (
+        f"tiered device bytes {tiered_bytes} exceed the "
+        f"budget {paged_bytes}")
+    assert ratio >= assert_ratio, (
+        f"tiered store should sustain >= {assert_ratio}x the concurrency "
+        f"of the single-tier pool at equal device bytes, measured "
+        f"{ratio:.2f}x")
+    return {"paged_peak": sched_p.peak_active,
+            "tiered_peak": sched_t.peak_active, "ratio": ratio,
+            "tpot_penalty": tpot_pen}
+
+
+def tiered_prefetch_sweep(params, cfg, sikv, *, prompt_len: int = 128,
+                          page_size: int = 8, max_new: int = 32,
+                          staging_pages: int = 6,
+                          depths=(0, 2, 4)):
+    """Miss/hit/prefetch-depth sweep: a deliberately tight staging cache
+    (long prompts, few device payload slots) forces the top-k winners onto
+    host-tier pages; deeper prefetch turns synchronous ``io_callback``
+    misses into lane hits at the cost of speculative transfer bytes."""
+    header("bench_serving: tiered staging hit rate vs prefetch depth")
+    reqs = _distinct_requests(cfg, 4, prompt_len, max_new)
+    out = {}
+    for depth in depths:
+        eng = TieredServingEngine(params, cfg, sikv, batch_size=4,
+                                  prompt_len=prompt_len,
+                                  max_new_tokens=max_new,
+                                  page_size=page_size,
+                                  staging_pages=staging_pages,
+                                  prefetch_depth=depth)
+        sched = RequestScheduler(eng)
+        for r in reqs:
+            sched.submit(Request(uid=r.uid, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens))
+        t0 = time.time()
+        sched.run()
+        dt = time.time() - t0
+        t = eng.tier_stats()
+        out[depth] = t["staging_hit_rate"]
+        emit(f"serving/tiered/prefetch_depth/{depth}", dt * 1e6,
+             f"staging_hit_rate={t['staging_hit_rate']:.3f};"
+             f"miss_tokens={t['miss_tokens']};"
+             f"prefetch_hit_tokens={t['prefetch_hit_tokens']};"
+             f"prefetched_pages={t['prefetched_pages']};"
+             f"h2d_bytes_per_step={t['h2d_bytes_per_step']:.0f};"
+             f"d2h_bytes_per_step={t['d2h_bytes_per_step']:.0f};"
+             f"tpot_ms={sched.service_stats()['tpot_mean'] * 1e3:.2f}")
+    return out
 
 
 def chunked_admission_stall(arch: str = "llama3.1-8b", *,

@@ -2,17 +2,39 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Any, Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
 
 ROWS: List[str] = []
+# structured mirror of ROWS for --emit-json (benchmarks/run.py): the
+# ``derived`` k=v;k=v string parsed into a dict, numbers as numbers
+RESULTS: List[Dict[str, Any]] = []
+
+
+def _parse_derived(derived: str) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for part in filter(None, derived.split(";")):
+        if "=" not in part:
+            out.setdefault("notes", []).append(part)
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v.rstrip("x%"))
+            except ValueError:
+                out[k] = v
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                    "derived": _parse_derived(derived)})
     print(row)
 
 

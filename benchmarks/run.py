@@ -1,11 +1,17 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
-stdout).  ``python -m benchmarks.run [--only <name>]``.
+stdout).  ``python -m benchmarks.run [--only <name>] [--emit-json F]`` —
+``--emit-json`` additionally writes every row as structured JSON (derived
+``k=v`` pairs parsed into a dict), the machine-readable result file the CI
+smoke job uploads as an artifact so the perf trajectory is diffable across
+commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 
 
@@ -15,7 +21,11 @@ def main() -> None:
                     help="substring filter of benchmark module names")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: the fast suites at tiny shapes "
-                         "(memory accounting + serving/paged concurrency)")
+                         "(memory accounting + serving/paged/tiered "
+                         "concurrency)")
+    ap.add_argument("--emit-json", default=None, metavar="FILE",
+                    help="write all emitted rows as structured JSON "
+                         "(serving + memory + every other suite run)")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_longbench_proxy,
@@ -40,15 +50,34 @@ def main() -> None:
             ("bench_roofline", bench_roofline.run),      # dry-run roofline
         ]
     failures = []
+    ran = []
     for name, fn in suites:
         if args.only and args.only not in name:
             continue
+        ran.append(name)
         try:
             fn()
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"{name},FAILED,{e!r}")
     print("\nname,us_per_call,derived  (all rows above)")
+    if args.emit_json:
+        import jax
+
+        from benchmarks.common import RESULTS
+        payload = {
+            "schema": 1,
+            "smoke": bool(args.smoke),
+            "suites": ran,
+            "platform": platform.platform(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "failures": [{"suite": n, "error": e} for n, e in failures],
+            "rows": RESULTS,
+        }
+        with open(args.emit_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {len(RESULTS)} rows -> {args.emit_json}")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
 

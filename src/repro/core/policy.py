@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.config import SIKVConfig
 
 __all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k", "pages_needed",
-           "step_token_budget"]
+           "step_token_budget", "tiered_pool_split", "staging_pages_needed"]
 
 
 def step_token_budget(prefill_chunk: int | None, prompt_len: int,
@@ -142,6 +142,47 @@ def pages_needed(prompt_len: int, max_new: int, page_size: int,
     if prefix_hit:
         return total - prompt_len // page_size
     return total
+
+
+def staging_pages_needed(concurrency: int, *, headroom: int = 2) -> int:
+    """Device staging slots a tiered pool needs for a target concurrency.
+
+    Decode appends write device-first, so every live slot PINS exactly one
+    staging slot (its current write page); ``headroom`` slots beyond that
+    hold hot read pages (prefetch commits, re-opened prefix tails) so
+    admissions don't thrash the write set.
+    """
+    return concurrency + headroom
+
+
+def tiered_pool_split(device_budget_bytes: int, index_page_bytes: int,
+                      payload_page_bytes: int, *, staging_pages: int,
+                      prefetch_depth: int = 0,
+                      map_entry_bytes: int = 4) -> int:
+    """Index pages a device byte budget affords next to a staging pool.
+
+    The tiered layout spends the budget three ways: ``staging_pages`` full
+    payload pages (the hot set + one pinned write page per live slot), the
+    ``prefetch_depth`` in-flight lane pages, and — with everything left —
+    sign-code index pages at ``index_page_bytes + map_entry_bytes`` each
+    (every pool page also carries its ``payload_map`` entry).  Because
+    ``index_page_bytes`` is a small fraction of a full page, the same
+    budget indexes several times more tokens than a single-tier pool holds
+    — the concurrency headline ``bench_serving.tiered_concurrency``
+    measures.
+
+    Returns the pool page count; raises if the budget cannot even cover
+    the staging pool plus one index page.
+    """
+    fixed = (staging_pages + prefetch_depth) * payload_page_bytes
+    left = device_budget_bytes - fixed
+    per_page = index_page_bytes + map_entry_bytes
+    if left < per_page:
+        raise ValueError(
+            f"device budget {device_budget_bytes}B cannot hold "
+            f"{staging_pages} staging + {prefetch_depth} prefetch payload "
+            f"pages ({fixed}B) plus one index page ({per_page}B)")
+    return left // per_page
 
 
 def dynamic_k(cfg: SIKVConfig, seq_len: int) -> int:

@@ -2,7 +2,11 @@
 
 ``--method`` switches between SIKV and the baselines for head-to-head runs;
 ``--paged`` serves through the paged compressed-KV pool (block tables +
-prefix caching, see DESIGN.md §3) instead of dense per-slot caches.
+prefix caching, see DESIGN.md §3) instead of dense per-slot caches;
+``--host-pages`` additionally offloads the quantized payload pages to host
+memory, keeping only the sign-code index device-resident (the tiered store
+of DESIGN.md §5 — requires ``--paged``; ``--staging-pages`` and
+``--prefetch-depth`` size its device staging cache and prefetch lane).
 """
 from __future__ import annotations
 
@@ -17,15 +21,43 @@ from repro.config import SIKVConfig, get_model_config, list_archs, \
 from repro.data.synthetic import lm_sequence_batch
 from repro.models import init_params
 from repro.serving import (PagedServingEngine, Request, RequestScheduler,
-                           ServingEngine)
+                           ServingEngine, TieredServingEngine)
 from repro.sparse import method_names
+
+
+def validate_serve_flags(*, paged: bool, method: str,
+                         host_pages: bool, staging_pages: int | None,
+                         prefetch_depth: int | None) -> None:
+    """Reject contradictory flag combinations with a clear error instead of
+    silently ignoring one of them (mirrors the --paged/--method guard)."""
+    if paged and method != "sikv":
+        raise ValueError(
+            f"--paged serves through the sikv_paged cache; it cannot "
+            f"run method {method!r} — drop --paged for baseline runs")
+    if host_pages and not paged:
+        raise ValueError(
+            "--host-pages offloads PAGED payload pages; it needs the page "
+            "pool — add --paged (the dense engine has no pages to offload)")
+    if not host_pages:
+        for flag, val in [("--staging-pages", staging_pages),
+                          ("--prefetch-depth", prefetch_depth)]:
+            if val is not None:
+                raise ValueError(
+                    f"{flag} sizes the tiered store's device staging "
+                    f"cache; without --host-pages there is nothing to "
+                    f"stage — add --host-pages or drop {flag}")
 
 
 def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           prompt_len: int = 128, max_new: int = 32, n_requests: int = 8,
           reduced: bool = True, seed: int = 0, verbose: bool = True,
           paged: bool = False, page_size: int = 16,
+          host_pages: bool = False, staging_pages: int | None = None,
+          prefetch_depth: int | None = None,
           prefill_chunk: int | None = None):
+    validate_serve_flags(paged=paged, method=method, host_pages=host_pages,
+                         staging_pages=staging_pages,
+                         prefetch_depth=prefetch_depth)
     cfg = get_model_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -35,11 +67,14 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
                       token_budget=max(32, prompt_len // 4),
                       recent_window=16, obs_window=16)
     params = init_params(jax.random.PRNGKey(seed), cfg)
-    if paged:
-        if method != "sikv":
-            raise ValueError(
-                f"--paged serves through the sikv_paged cache; it cannot "
-                f"run method {method!r} — drop --paged for baseline runs")
+    if host_pages:
+        engine = TieredServingEngine(
+            params, cfg, sikv, batch_size=batch, prompt_len=prompt_len,
+            max_new_tokens=max_new, page_size=page_size,
+            staging_pages=staging_pages,
+            prefetch_depth=4 if prefetch_depth is None else prefetch_depth,
+            prefill_chunk=prefill_chunk)
+    elif paged:
         engine = PagedServingEngine(params, cfg, sikv, batch_size=batch,
                                     prompt_len=prompt_len,
                                     max_new_tokens=max_new,
@@ -61,12 +96,21 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
     dt = time.time() - t0
     tput = done * max_new / dt
     if verbose:
-        tag = f"paged(page_size={page_size})" if paged else f"method={method}"
+        if host_pages:
+            tag = f"tiered(page_size={page_size})"
+        elif paged:
+            tag = f"paged(page_size={page_size})"
+        else:
+            tag = f"method={method}"
         print(f"[serve] {arch} {tag}: {done} requests, "
               f"{max_new} new tokens each, {dt:.2f}s "
               f"({tput:.1f} tok/s aggregate)")
         if paged:
             print(f"[serve] pool: {engine.pool_stats()}")
+        if host_pages:
+            print(f"[serve] tiers: device {engine.token_store_bytes()} B, "
+                  f"host {engine.host_store_bytes()} B")
+            print(f"[serve] transfers: {engine.tier_stats()}")
     return sched, tput
 
 
@@ -81,6 +125,17 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged compressed-KV pool")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--host-pages", action="store_true",
+                    help="tiered store: offload quantized payload pages to "
+                         "host, keep the sign-code index device-resident "
+                         "(needs --paged; bit-exact with the single-tier "
+                         "pool)")
+    ap.add_argument("--staging-pages", type=int, default=None,
+                    help="device payload slots of the tiered staging cache "
+                         "(default: batch + headroom; needs --host-pages)")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="payload pages prefetched per decode step in the "
+                         "tiered store (default 4; needs --host-pages)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="admit prompts in chunks of this many tokens, "
                          "interleaving decode steps (kills head-of-line "
@@ -90,7 +145,10 @@ def main() -> None:
     serve(args.arch, method=args.method, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new,
           n_requests=args.requests, paged=args.paged,
-          page_size=args.page_size, prefill_chunk=args.prefill_chunk)
+          page_size=args.page_size, host_pages=args.host_pages,
+          staging_pages=args.staging_pages,
+          prefetch_depth=args.prefetch_depth,
+          prefill_chunk=args.prefill_chunk)
 
 
 if __name__ == "__main__":

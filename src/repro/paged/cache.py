@@ -269,6 +269,16 @@ def clear_slot_row(paged: PagedSIKVCache, slot: jax.Array) -> PagedSIKVCache:
         block_table=paged.block_table.at[slot].set(-1))
 
 
+def is_block_mapped_cache(x: Any) -> bool:
+    """Any pool cache addressed through a per-slot block table — the
+    single-tier :class:`PagedSIKVCache` or the tiered
+    :class:`~repro.tiered.cache.TieredSIKVCache` (duck-typed to avoid a
+    paged -> tiered import cycle).  The block-table ops and the per-slot
+    state insert are layout-agnostic over both."""
+    return isinstance(x, PagedSIKVCache) or (
+        hasattr(x, "block_table") and hasattr(x, "payload_map"))
+
+
 def _map_paged(fn, tree: Any) -> Any:
     """Apply ``fn`` to every PagedSIKVCache inside a caches pytree."""
     return jax.tree_util.tree_map(
@@ -276,20 +286,30 @@ def _map_paged(fn, tree: Any) -> Any:
         tree, is_leaf=lambda x: isinstance(x, PagedSIKVCache))
 
 
+def _map_block_mapped(fn, tree: Any) -> Any:
+    """Apply ``fn`` to every block-mapped cache (paged OR tiered)."""
+    return jax.tree_util.tree_map(
+        lambda c: fn(c) if is_block_mapped_cache(c) else c,
+        tree, is_leaf=is_block_mapped_cache)
+
+
 def tree_copy_page(caches: Any, src: jax.Array, dst: jax.Array) -> Any:
-    """Copy-on-write one page id across every layer's paged cache."""
+    """Copy-on-write one page id across every layer's paged cache (paged
+    only: the tiered CoW must route the payload half through its staging
+    pool — :class:`repro.serving.tiered_engine.TieredServingEngine`)."""
     return _map_paged(lambda c: copy_pool_page(c, src, dst), caches)
 
 
 def tree_set_block_entry(caches: Any, slot: jax.Array, j: jax.Array,
                          page_id: jax.Array) -> Any:
-    """Update one block-table entry across every layer's paged cache."""
-    return _map_paged(lambda c: set_block_entry(c, slot, j, page_id), caches)
+    """Update one block-table entry across every layer's cache."""
+    return _map_block_mapped(
+        lambda c: set_block_entry(c, slot, j, page_id), caches)
 
 
 def tree_clear_slot_row(caches: Any, slot: jax.Array) -> Any:
-    """Unmap a slot's block-table row across every layer's paged cache."""
-    return _map_paged(lambda c: clear_slot_row(c, slot), caches)
+    """Unmap a slot's block-table row across every layer's cache."""
+    return _map_block_mapped(lambda c: clear_slot_row(c, slot), caches)
 
 
 def paged_token_bytes(paged: PagedSIKVCache) -> int:

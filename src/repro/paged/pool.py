@@ -73,6 +73,15 @@ class PagePool:
         self.max_prompts = max_prompts
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self.refcount: List[int] = [0] * num_pages
+        # per-page payload tier (tiered pools only): "device" while the
+        # page's payload occupies a staging slot, "host" once demoted,
+        # None for free pages / single-tier pools.  Maintained by the
+        # tiered serving engine; kept here so allocator snapshots (and
+        # PoolExhausted messages) show where every page's payload lives.
+        self.tier: List[Optional[str]] = [None] * num_pages
+        # observer for freed pages (refcount hit zero): the tiered engine
+        # releases the page's staging slot and host copy through this
+        self.on_free: Optional[Callable[[List[int]], None]] = None
         # insertion-ordered => oldest entry first; hits re-insert (LRU)
         self.registry: Dict[Tuple[int, ...], PrefixEntry] = {}
         # pages whose refcount includes the registry's own reference
@@ -122,7 +131,8 @@ class PagePool:
         if len(self._free) < n:
             raise PoolExhausted(
                 f"need {n} pages, {len(self._free)} free of "
-                f"{self.num_pages} (and nothing left to evict)")
+                f"{self.num_pages} (and nothing left to evict); "
+                f"pool snapshot: {self.snapshot()}")
         ids = [self._free.pop() for _ in range(n)]
         for p in ids:
             self.refcount[p] = 1
@@ -134,13 +144,30 @@ class PagePool:
             assert self.refcount[p] > 0, f"sharing a free page {p}"
             self.refcount[p] += 1
 
+    def set_tier(self, page_ids: Sequence[int], tier: Optional[str]) -> None:
+        """Record where the pages' payload lives ("device" / "host")."""
+        for p in page_ids:
+            self.tier[p] = tier
+
+    def tier_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for t in self.tier:
+            if t is not None:
+                out[t] = out.get(t, 0) + 1
+        return out
+
     def release(self, page_ids: Sequence[int]) -> None:
+        freed: List[int] = []
         for p in page_ids:
             assert self.refcount[p] > 0, f"double free of page {p}"
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
                 self._free.append(p)
+                self.tier[p] = None
                 self.stats["freed"] += 1
+                freed.append(p)
+        if freed and self.on_free is not None:
+            self.on_free(freed)
 
     # -- prefix registry -----------------------------------------------
 
@@ -178,12 +205,15 @@ class PagePool:
         return False
 
     def snapshot(self) -> Dict[str, int]:
-        return dict(self.stats, num_pages=self.num_pages,
+        snap = dict(self.stats, num_pages=self.num_pages,
                     free=len(self._free), reserved=self.reserved,
                     in_use=self.num_pages - len(self._free),
                     registered_prompts=len(self.registry),
                     registry_state_bytes=sum(
                         e.state_bytes for e in self.registry.values()))
+        for tier, n in self.tier_counts().items():
+            snap[f"{tier}_payload_pages"] = n
+        return snap
 
 
 @dataclass
@@ -223,13 +253,20 @@ class SlotPageManager:
 
     def __init__(self, pool: PagePool, pages_per_seq: int, num_slots: int,
                  *, set_block: Callable[[int, int, int], None],
-                 copy_page: Callable[[int, int], None]):
+                 copy_page: Callable[[int, int], None],
+                 on_alloc: Optional[Callable[[int, int], None]] = None):
         self.pool = pool
         self.pages_per_seq = pages_per_seq
         self._slots: List[Optional[_SlotPages]] = [None] * num_slots
         self._resv: List[int] = [0] * num_slots
         self._set_block = set_block
         self._copy_page = copy_page
+        # notified with (slot, page) for every page allocated fresh during
+        # decode (boundary appends and copy-on-write targets): the tiered
+        # engine binds a staging slot to the new write page here — fresh
+        # pages have no host copy to fetch, so this is the one lifecycle
+        # point that distinguishes them from re-opened host-tier pages
+        self.on_alloc = on_alloc
         self.cow_copies = 0
 
     def slot_pages(self, slot: int) -> Optional[List[int]]:
@@ -265,6 +302,8 @@ class SlotPageManager:
         if self._resv[slot] > 0:
             self._resv[slot] -= 1
             self.pool.unreserve(1)
+        if self.on_alloc is not None:
+            self.on_alloc(slot, pid)
         return pid
 
     def ensure_writable(self, slot: int, pos: int) -> None:

@@ -1,6 +1,7 @@
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_engine import PagedServingEngine
 from repro.serving.scheduler import Request, RequestScheduler
+from repro.serving.tiered_engine import TieredServingEngine
 
-__all__ = ["ServingEngine", "PagedServingEngine", "Request",
-           "RequestScheduler"]
+__all__ = ["ServingEngine", "PagedServingEngine", "TieredServingEngine",
+           "Request", "RequestScheduler"]

@@ -98,14 +98,18 @@ def _chunk_and_decode(params, tokens_row, start, length, stage, tokens, pos,
 
 class ServingEngine:
     def __init__(self, params: Params, cfg: ModelConfig,
-                 sikv: SIKVConfig | None = None, *, method: str = "sikv",
+                 sikv: SIKVConfig | None = None, *, method: Any = "sikv",
                  batch_size: int = 8, prompt_len: int = 512,
                  max_new_tokens: int = 64,
                  prefill_chunk: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.sikv = sikv or SIKVConfig()
-        self.method = get_method(method, self.sikv)
+        # a method may be passed pre-built when it carries engine-owned
+        # state (the tiered engine's transfer engine) that get_method()
+        # cannot construct from a name alone
+        self.method = (get_method(method, self.sikv)
+                       if isinstance(method, str) else method)
         self.batch_size = batch_size
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
@@ -236,6 +240,15 @@ class ServingEngine:
         """Whether a request can be admitted right now (a free slot is the
         caller's concern; subclasses add resource checks, e.g. free pages)."""
         return True
+
+    def on_pressure(self, prompt: List[int], max_new_tokens: int) -> bool:
+        """Scheduler hook: the queue head did not fit (``can_admit`` was
+        False).  Engines with tiered state use the wait — the tiered
+        engine writes back dirty cold payload pages so the eventual
+        admission demotes them without writeback latency.  Returns whether
+        anything was done (stats only; admission is re-tried on the next
+        scheduler step either way)."""
+        return False
 
     # -- two-phase admission -------------------------------------------
 

@@ -42,9 +42,9 @@ from repro.core.cache import SIKVCache
 from repro.core.policy import pages_needed
 from repro.paged.cache import (PER_SLOT_FIELDS, PagedSIKVCache,
                                init_paged_cache, insert_prefill_pages,
-                               insert_slot_state, paged_token_bytes,
-                               tree_clear_slot_row, tree_copy_page,
-                               tree_set_block_entry)
+                               insert_slot_state, is_block_mapped_cache,
+                               paged_token_bytes, tree_clear_slot_row,
+                               tree_copy_page, tree_set_block_entry)
 from repro.paged.pool import PagePool, SlotPageManager
 from repro.serving.engine import ServingEngine, row_insert
 from repro.models.transformer import Params
@@ -69,14 +69,15 @@ def _tree_insert_prefill(caches: Any, caches_one: Any, slot: jax.Array,
 
 def _tree_insert_hit(caches: Any, slot_state: Any, slot: jax.Array,
                      page_ids: jax.Array, length: jax.Array) -> Any:
-    """Bind shared pages + stored per-slot state (prefix-cache hit)."""
+    """Bind shared pages + stored per-slot state (prefix-cache hit).
+    ``insert_slot_state`` touches only block table / length / per-slot
+    fields, so one program serves the paged AND tiered layouts."""
     def ins(paged, state):
-        if isinstance(paged, PagedSIKVCache):
+        if is_block_mapped_cache(paged):
             return insert_slot_state(paged, state, slot, page_ids, length)
         return row_insert(paged, state, slot)
     return jax.tree_util.tree_map(
-        ins, caches, slot_state,
-        is_leaf=lambda x: isinstance(x, PagedSIKVCache))
+        ins, caches, slot_state, is_leaf=is_block_mapped_cache)
 
 
 class PagedServingEngine(ServingEngine):
@@ -100,14 +101,15 @@ class PagedServingEngine(ServingEngine):
                  prompt_len: int = 512, max_new_tokens: int = 64,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_caching: bool = True, max_cached_prompts: int = 32,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 method: Any = "sikv_paged"):
         # round generation headroom up so capacity is a page multiple —
         # but only internally: the ADVERTISED max_new_tokens stays the
         # configured value so paged and dense engines clamp requests
         # identically (schedulers read engine.max_new_tokens)
         cap = prompt_len + max_new_tokens
         max_new_eff = max_new_tokens + (-cap) % page_size
-        super().__init__(params, cfg, sikv, method="sikv_paged",
+        super().__init__(params, cfg, sikv, method=method,
                          batch_size=batch_size, prompt_len=prompt_len,
                          max_new_tokens=max_new_eff,
                          prefill_chunk=prefill_chunk)
@@ -256,13 +258,26 @@ class PagedServingEngine(ServingEngine):
             return self._finish_admission(p, None, None), None
         return super().admit_step(with_decode=with_decode)
 
+    def _pad_pages(self, ids) -> jnp.ndarray:
+        return jnp.asarray(
+            list(ids) + [-1] * (self.pages_per_seq - len(ids)), jnp.int32)
+
+    def _do_insert_miss(self, slot: int, caches_one: Any,
+                        page_ids: List[int]) -> None:
+        """Scatter a completed batch-1 prefill into its allocated pages
+        (tier placement hook: the tiered engine stages the tail page and
+        offloads the rest of the payload host-side here)."""
+        self._caches = self._insert_prefill(
+            self._caches, caches_one, jnp.asarray(slot, jnp.int32),
+            self._pad_pages(page_ids))
+        self.stats["aux_launches"] += 1          # _insert_prefill
+
     def _finish_admission(self, p: Dict[str, Any], logits: Any,
                           caches_one: Any) -> int:
         """Scatter the admitted prompt into its pages (miss) or bind the
         registered pages + statistics (hit); returns the first token."""
         slot, prompt = p["slot"], p["prompt"]
-        pad = lambda ids: jnp.asarray(
-            list(ids) + [-1] * (self.pages_per_seq - len(ids)), jnp.int32)
+        pad = self._pad_pages
         if p["mode"] == "hit":
             entry = p["entry"]
             self.pool.share(entry.page_ids)
@@ -278,11 +293,8 @@ class PagedServingEngine(ServingEngine):
             if self._caches is None:
                 self._caches = self._init_paged(caches_one)
             page_ids = p["pages"]
-            self._caches = self._insert_prefill(
-                self._caches, caches_one, jnp.asarray(slot, jnp.int32),
-                pad(page_ids))
+            self._do_insert_miss(slot, caches_one, page_ids)
             first = int(jnp.argmax(logits[0]))
-            self.stats["aux_launches"] += 1          # _insert_prefill
             if self.prefix_caching:
                 state = self._extract_slot_state(caches_one)
                 self.pool.register_prefix(

@@ -202,6 +202,14 @@ class RequestScheduler:
             head = self.queue[0]
             if i is None or not self.engine.can_admit(
                     head.prompt, self._clamped_new(head)):
+                if i is not None:
+                    # the head waits on engine resources, not slots: let
+                    # the engine spend the wait usefully (the tiered
+                    # engine writes back dirty cold payload pages here,
+                    # so the eventual admission demotes them for free
+                    # instead of paying writebacks on its critical path)
+                    self.engine.on_pressure(head.prompt,
+                                            self._clamped_new(head))
                 return None, tokens
             self.engine.admit_start(i, head.prompt,
                                     max_new_tokens=self._clamped_new(head))

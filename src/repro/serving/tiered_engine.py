@@ -1,0 +1,566 @@
+"""Serving engine over the tiered (device index / host payload) page store.
+
+Extends :class:`~repro.serving.paged_engine.PagedServingEngine` — same
+admission math, prefix caching, copy-on-write and chunked-prefill
+integration — but the per-page payload lives in a host store and rotates
+through a small device staging cache:
+
+* **admission** runs the ordinary dense prefill, scatters the sign-code
+  index into the device pool, stages the tail page's payload (the slot's
+  first write target), and OFFLOADS the rest of the prompt payload to the
+  host store in one bulk transfer.  Device cost per admitted token is the
+  index, not the payload — the same device byte budget indexes several
+  times more tokens (``policy.tiered_pool_split``), which is the
+  concurrency headline ``bench_serving`` measures;
+* **decode** appends write device-first: every live slot pins its current
+  write page in the staging cache (``StagingCache``); crossing a page
+  boundary unpins the finished page, which demotes to host on eviction
+  (writeback of dirty pages precedes slot reuse).  Payload for top-k
+  winners resolves staging -> prefetch lane -> exact host miss
+  (``io_callback``), bit-exact with the single-tier pool (tested);
+* **prefetch**: before each decode launch the transfer engine dispatches
+  ``jax.device_put`` for the pages last step's top-k missed; the launch
+  consumes them after top-k (the copy overlaps scoring) and they are
+  committed into the staging pool afterwards;
+* **pressure**: when the scheduler's queue head does not fit
+  (``on_pressure``), cold staged payload pages are written back and
+  demoted instead of holding device memory while requests queue.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SIKVConfig
+from repro.core.cache import SIKVCache
+from repro.core.policy import staging_pages_needed
+from repro.models.transformer import Params
+from repro.paged.cache import _paged_view
+from repro.serving.engine import row_insert
+from repro.serving.paged_engine import PagedServingEngine
+from repro.sparse.tiered import TieredSIKVAttention
+from repro.tiered.cache import (TieredSIKVCache, clear_prefetch_lane,
+                                commit_prefetch, copy_index_page,
+                                copy_staging_slot, init_tiered_cache,
+                                insert_prefill_tiered, payload_field_specs,
+                                set_prefetch_lane, stage_payload_pages,
+                                tiered_device_bytes, tree_map_tiered,
+                                update_payload_map)
+from repro.tiered.host_store import PAYLOAD_FIELDS, HostPageStore
+from repro.tiered.staging import Eviction, StagingCache, TransferEngine
+
+
+def _tree_insert_prefill_t(caches: Any, caches_one: Any, slot: jax.Array,
+                           page_ids: jax.Array, tail_logical: jax.Array,
+                           tail_page: jax.Array,
+                           tail_slot: jax.Array) -> Any:
+    def ins(t, dense):
+        if isinstance(t, TieredSIKVCache):
+            return insert_prefill_tiered(t, dense, slot, page_ids,
+                                         tail_logical, tail_page, tail_slot)
+        return row_insert(t, dense, slot)
+    return jax.tree_util.tree_map(
+        ins, caches, caches_one,
+        is_leaf=lambda x: isinstance(x, TieredSIKVCache))
+
+
+def _tree_map_update(caches: Any, pages: jax.Array,
+                     slots: jax.Array) -> Any:
+    return tree_map_tiered(lambda c: update_payload_map(c, pages, slots),
+                           caches)
+
+
+def _tree_cow_staged(caches: Any, src: jax.Array, dst: jax.Array,
+                     src_slot: jax.Array, dst_slot: jax.Array) -> Any:
+    """CoW where the source payload is staged: copy the index page AND the
+    staged payload page in one launch."""
+    def cp(c):
+        return copy_staging_slot(copy_index_page(c, src, dst),
+                                 src_slot, dst_slot)
+    return tree_map_tiered(cp, caches)
+
+
+def _tree_copy_index(caches: Any, src: jax.Array, dst: jax.Array) -> Any:
+    return tree_map_tiered(lambda c: copy_index_page(c, src, dst), caches)
+
+
+def _tree_commit(caches: Any, lane_slots: jax.Array) -> Any:
+    return tree_map_tiered(lambda c: commit_prefetch(c, lane_slots), caches)
+
+
+def _tree_clear_lane(caches: Any) -> Any:
+    return tree_map_tiered(clear_prefetch_lane, caches)
+
+
+def _tree_stage_fill(caches: Any, slots: jax.Array,
+                     fields_list: Any) -> Any:
+    """Fill staging slots with uploaded payload pages, per layer
+    (``fields_list`` is aligned with the caches list; ``None`` for layers
+    without a tiered cache)."""
+    out = []
+    for entry, fields in zip(caches, fields_list):
+        new = {}
+        for k, c in entry.items():
+            if isinstance(c, TieredSIKVCache) and fields is not None:
+                new[k] = stage_payload_pages(c, slots, fields)
+            else:
+                new[k] = c
+        out.append(new)
+    return out
+
+
+class TieredServingEngine(PagedServingEngine):
+    """Continuous batching over the two-tier page store.
+
+    Args:
+      staging_pages: device payload slots.  Each live slot pins one (its
+        write page); the default leaves ``policy.staging_pages_needed``
+        headroom for hot read pages.  Concurrency is bounded by
+        ``min(batch_size, staging_pages)``.
+      prefetch_depth: payload pages speculatively uploaded per decode step
+        (0 disables prefetch; misses then always pay the synchronous
+        ``io_callback`` fetch).
+      num_pages: sign-code index pool size.  Index pages are a small
+        fraction of a full page, so this can be several times what a
+        single-tier pool affords in the same device bytes
+        (``policy.tiered_pool_split`` does the budget math).
+    """
+
+    def __init__(self, params: Params, cfg: ModelConfig,
+                 sikv: SIKVConfig | None = None, *, batch_size: int = 8,
+                 prompt_len: int = 512, max_new_tokens: int = 64,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 staging_pages: Optional[int] = None,
+                 prefetch_depth: int = 4,
+                 prefix_caching: bool = True, max_cached_prompts: int = 32,
+                 prefill_chunk: Optional[int] = None):
+        sikv = sikv or SIKVConfig()
+        cap = prompt_len + max_new_tokens
+        capacity = cap + (-cap) % page_size
+        n_pages = num_pages or batch_size * (capacity // page_size)
+        if prefetch_depth < 0:
+            raise ValueError(f"prefetch_depth must be >= 0, "
+                             f"got {prefetch_depth}")
+        if staging_pages is not None and staging_pages <= 0:
+            raise ValueError(
+                f"staging_pages must be positive (every live slot pins "
+                f"one write page), got {staging_pages}")
+        self.staging_pages = (staging_pages_needed(batch_size)
+                              if staging_pages is None else staging_pages)
+        self.prefetch_depth = prefetch_depth
+        self.host = HostPageStore(n_pages)
+        self.xfer = TransferEngine(self.host)
+        super().__init__(params, cfg, sikv, batch_size=batch_size,
+                         prompt_len=prompt_len,
+                         max_new_tokens=max_new_tokens, page_size=page_size,
+                         num_pages=n_pages, prefix_caching=prefix_caching,
+                         max_cached_prompts=max_cached_prompts,
+                         prefill_chunk=prefill_chunk,
+                         method=TieredSIKVAttention(sikv, self.xfer))
+        assert self.num_pages == n_pages and self.capacity == capacity
+        self.staging = StagingCache(self.staging_pages)
+        self.slots.on_alloc = self._on_fresh_page
+        self.pool.on_free = self._on_pages_freed
+        # the slot's current (pinned) write page
+        self._write_page: List[Optional[int]] = [None] * batch_size
+        # pages sitting in the device prefetch lane (set at dispatch,
+        # cleared at commit — or force-cleared if one of them is freed)
+        self._lane_live: List[int] = []
+        # _insert_hit / _set_blk / _clear_row are inherited: the paged
+        # engine's programs are block-table-generic over both layouts
+        self._insert_prefill_t = jax.jit(_tree_insert_prefill_t)
+        self._map_upd = jax.jit(_tree_map_update)
+        self._cow_staged = jax.jit(_tree_cow_staged)
+        self._copy_idx = jax.jit(_tree_copy_index)
+        self._commit = jax.jit(_tree_commit)
+        self._clear_lane = jax.jit(_tree_clear_lane)
+        self._stage_fill = jax.jit(_tree_stage_fill)
+        self.stats.update(demotions=0, pressure_writebacks=0)
+
+    # -- tier bookkeeping ------------------------------------------------
+
+    def _flush_map(self, pages: List[int], slots: List[int]) -> None:
+        if not pages or self._caches is None:
+            return
+        self._caches = self._map_upd(self._caches,
+                                     jnp.asarray(pages, jnp.int32),
+                                     jnp.asarray(slots, jnp.int32))
+        self.stats["aux_launches"] += 1
+
+    def _writeback(self, page: int, slot: int) -> None:
+        """One device->host payload page copy (demotion writeback)."""
+        rows = {
+            i: {f: getattr(self._caches[i]["self"], f)[slot]
+                for f in PAYLOAD_FIELDS}
+            for i in self.host.layers
+        }
+        self.xfer.writeback(jax.device_get(rows), page)
+
+    def _process_evictions(self, evs: List[Eviction]) -> None:
+        """Demotions out of the staging cache: write back dirty pages
+        BEFORE their slot can be refilled, then drop the tier mapping
+        (one batched map update for the lot)."""
+        if not evs:
+            return
+        for ev in evs:
+            if ev.dirty:
+                self._writeback(ev.page, ev.slot)
+            self.pool.set_tier([ev.page], "host")
+            self.stats["demotions"] += 1
+        self._flush_map([ev.page for ev in evs], [-1] * len(evs))
+
+    def _stage_page(self, page: int, *, fetch: bool) -> int:
+        """Bind a staging slot to ``page``; upload its host payload when
+        ``fetch`` (a re-opened host-tier page), else leave the slot to be
+        filled by the caller (fresh page / CoW copy)."""
+        slot, evs = self.staging.acquire(page, pin=False)
+        self._process_evictions(evs)
+        self.pool.set_tier([page], "device")
+        self._flush_map([page], [slot])
+        if fetch:
+            assert page in self.host.valid, \
+                f"page {page} has no valid host copy to fetch"
+            fields = self.xfer.upload([page])
+            fields_list = [fields.get(i) for i in range(len(self._caches))]
+            self._caches = self._stage_fill(
+                self._caches, jnp.asarray([slot], jnp.int32), fields_list)
+            self.stats["aux_launches"] += 1
+        return slot
+
+    def _set_write_page(self, slot: int, page: int) -> None:
+        """Pin ``page`` as the slot's write target (decode appends write
+        device-first); unpin the previous one — crossing a page boundary
+        is the demotion point: the finished page goes cold and is written
+        back to host when the LRU evicts it."""
+        cur = self._write_page[slot]
+        if cur != page:
+            if cur is not None:
+                self.staging.unpin(cur)
+            self.staging.pin(page)
+            self._write_page[slot] = page
+        # this step's append lands in the page: host copy goes stale
+        self.staging.mark_dirty(page)
+
+    # -- SlotPageManager callbacks ---------------------------------------
+
+    def _on_fresh_page(self, slot: int, page: int) -> None:
+        """A page allocated fresh during decode (boundary append or CoW
+        target): stage it without a host fetch — it has no host copy, and
+        only offsets the slot subsequently appends are ever read.  The
+        slot's write target is moving to ``page``, so its previous pin is
+        dropped FIRST — otherwise a fully-pinned staging cache (one write
+        page per live slot) would deadlock on the transient extra slot."""
+        if self._write_page[slot] is not None:
+            self.staging.unpin(self._write_page[slot])
+            self._write_page[slot] = None
+        self._stage_page(page, fetch=False)
+        self.staging.mark_dirty(page)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write across tiers.  ``dst`` was just allocated (and
+        staged by ``_on_fresh_page``); the source payload comes from its
+        staging slot when device-resident, else from its host copy."""
+        dst_slot = self.staging.slot_of(dst)
+        assert dst_slot is not None, "CoW target must be staged"
+        src_slot = self.staging.slot_of(src)
+        if src_slot is not None:
+            self._caches = self._cow_staged(
+                self._caches, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
+                jnp.asarray(src_slot, jnp.int32),
+                jnp.asarray(dst_slot, jnp.int32))
+            self.staging.touch(src)
+            self.stats["aux_launches"] += 1
+        else:
+            assert src in self.host.valid, \
+                f"CoW source page {src} neither staged nor host-valid"
+            self._caches = self._copy_idx(self._caches,
+                                          jnp.asarray(src, jnp.int32),
+                                          jnp.asarray(dst, jnp.int32))
+            fields = self.xfer.upload([src])
+            fields_list = [fields.get(i) for i in range(len(self._caches))]
+            self._caches = self._stage_fill(
+                self._caches, jnp.asarray([dst_slot], jnp.int32),
+                fields_list)
+            self.stats["aux_launches"] += 2
+
+    def _on_pages_freed(self, pages: List[int]) -> None:
+        """Pool refcounts hit zero (retire / registry eviction / CoW): drop
+        staging residency and host copies without writeback — the content
+        is dead.  A freed page sitting in the prefetch lane would alias a
+        future reallocation, so the lane is force-cleared."""
+        stale_map: List[int] = []
+        for p in pages:
+            if self.staging.slot_of(p) is not None:
+                self.staging.release_page(p)
+                stale_map.append(p)
+            w = self._write_page
+            for s, wp in enumerate(w):
+                if wp == p:
+                    w[s] = None
+        self.host.drop_pages(pages)
+        self._flush_map(stale_map, [-1] * len(stale_map))
+        if self._lane_live and set(pages) & set(self._lane_live):
+            self._caches = self._clear_lane(self._caches)
+            self._lane_live = []
+            self.stats["aux_launches"] += 1
+
+    # -- admission -------------------------------------------------------
+
+    def can_admit(self, prompt: List[int], max_new_tokens: int) -> bool:
+        """Page admission as in the single-tier pool, plus a staging slot
+        for the request's write page.  The bound is on pin OBLIGATIONS —
+        every live slot pins one write page, though a prefix hit only
+        takes its pin at its first decode step — so current pin counts
+        under-state demand.  Cold resident pages do NOT block admission:
+        they demote to host under pressure instead of queueing the
+        request."""
+        if not super().can_admit(prompt, max_new_tokens):
+            return False
+        return len(self.slots.active_slots()) < self.staging.num_slots
+
+    def on_pressure(self, prompt: List[int], max_new_tokens: int) -> bool:
+        """The scheduler's queue head did not fit: spend the wait writing
+        back every DIRTY cold payload page in place (host copy refreshed,
+        page stays resident and keeps serving reads), so when the next
+        retire makes admission possible its staging acquire demotes clean
+        pages for free instead of paying writebacks on the admission's
+        critical path.  Evicting here would be counterproductive — the
+        prefetcher would re-promote still-hot pages next step, looping
+        transfers without freeing any admission resource."""
+        n = 0
+        for page in self.staging.cold_pages():
+            if self.staging.is_dirty(page):
+                self._writeback(page, self.staging.slot_of(page))
+                self.staging.clear_dirty(page)
+                n += 1
+        self.stats["pressure_writebacks"] += n
+        return n > 0
+
+    def _init_paged(self, caches_one: Any) -> Any:
+        for entry in caches_one:
+            if isinstance(entry, dict) and "cross" in entry:
+                raise NotImplementedError(
+                    "tiered serving covers decoder self-attention caches; "
+                    "encoder-decoder cross caches are static per slot — "
+                    "use the dense ServingEngine for those models")
+        out = []
+        for i, entry in enumerate(caches_one):
+            new = {}
+            for k, c in entry.items():
+                if isinstance(c, SIKVCache):
+                    self.host.ensure_layer(
+                        i, payload_field_specs(c, self.page_size))
+                    new[k] = init_tiered_cache(
+                        c, self.num_pages, self.page_size,
+                        self.staging_pages, self.prefetch_depth,
+                        self.batch_size, i)
+                else:
+                    # e.g. Mamba SSM states (NamedTuples of arrays): stay
+                    # dense per-slot rows, zeroed leaf by leaf as the
+                    # paged engine does
+                    new[k] = jax.tree_util.tree_map(
+                        lambda x: jnp.zeros(
+                            (self.batch_size,) + x.shape[1:], x.dtype), c)
+            out.append(new)
+        return out
+
+    def _do_insert_miss(self, slot: int, caches_one: Any,
+                        page_ids: List[int]) -> None:
+        """Tier placement at admission: index pages to the device pool, the
+        tail page's payload to a pinned staging slot (it is the slot's
+        first write target), everything else offloaded host-side."""
+        tail_page = page_ids[-1]
+        tail_slot, evs = self.staging.acquire(tail_page, pin=True)
+        self._process_evictions(evs)
+        self.pool.set_tier(page_ids, "host")
+        self.pool.set_tier([tail_page], "device")
+        self._write_page[slot] = tail_page
+        n = len(page_ids)
+        self._caches = self._insert_prefill_t(
+            self._caches, caches_one, jnp.asarray(slot, jnp.int32),
+            self._pad_pages(page_ids), jnp.asarray(n - 1, jnp.int32),
+            jnp.asarray(tail_page, jnp.int32),
+            jnp.asarray(tail_slot, jnp.int32))
+        self.stats["aux_launches"] += 1
+        self._offload_prompt(caches_one, page_ids)
+
+    def _offload_prompt(self, caches_one: Any, page_ids: List[int]) -> None:
+        """One bulk device->host transfer of the admitted prompt's payload
+        pages — the offload that makes an admitted token cost index bytes,
+        not payload bytes, on device."""
+        pps, ps = self.pages_per_seq, self.page_size
+        n = len(page_ids)
+        views = {}
+        for i, entry in enumerate(caches_one):
+            for c in entry.values():
+                if isinstance(c, SIKVCache):
+                    views[i] = {
+                        f: _paged_view(getattr(c, f)[0], pps, ps)[:n]
+                        for f in PAYLOAD_FIELDS
+                    }
+        host_data = jax.device_get(views)
+        for i, fields in host_data.items():
+            self.xfer.stats["d2h_bytes"] += self.host.write_pages(
+                i, page_ids, fields)
+        self.xfer.stats["d2h_pages"] += n
+        self.host.mark_valid(page_ids)
+
+    def retire(self, slot: int) -> None:
+        if self._write_page[slot] is not None:
+            self.staging.unpin(self._write_page[slot])
+            self._write_page[slot] = None
+        super().retire(slot)
+
+    # -- decode ----------------------------------------------------------
+
+    def _dispatch_prefetch(self) -> None:
+        """Score-time dispatch: start uploads of the pages last step's
+        top-k missed; the launch consumes them after top-k through the
+        prefetch lane (the transfer overlaps the scoring phase)."""
+        if self._caches is None:
+            return
+        pages = []
+        if self.prefetch_depth:
+            exclude = set(self.staging.cold_pages()) \
+                | {p for p in self._write_page if p is not None}
+            # ...and each live slot's IMMINENT write page: the write-page
+            # loop below stages it with a dedicated fetch, so prefetching
+            # it into the lane would upload the same page twice
+            for s in self.slots.active_slots():
+                pos = self._host_pos[s]
+                spages = self.slots.slot_pages(s)
+                j = pos // self.page_size
+                if pos < self.capacity and spages and j < len(spages):
+                    exclude.add(spages[j])
+            pages = [p for p in self.xfer.predict(
+                self.prefetch_depth, exclude=exclude)
+                if self.staging.slot_of(p) is None]
+        self.xfer.step_begin()
+        if not pages:
+            if self._lane_live:
+                self._caches = self._clear_lane(self._caches)
+                self._lane_live = []
+                self.stats["aux_launches"] += 1
+            return
+        fields = self.xfer.dispatch(pages, self.prefetch_depth)
+        lane = jnp.asarray(
+            pages + [-1] * (self.prefetch_depth - len(pages)), jnp.int32)
+        new_caches = []
+        for i, entry in enumerate(self._caches):
+            new = dict(entry)
+            if i in fields:
+                for k, c in entry.items():
+                    if isinstance(c, TieredSIKVCache):
+                        new[k] = set_prefetch_lane(c, lane, fields[i])
+            new_caches.append(new)
+        self._caches = new_caches
+        self._lane_live = list(pages)
+
+    def _decode_prep(self) -> None:
+        """Before any decode launch: dispatch the prefetch, then make every
+        live slot's write position appendable AND device-resident (fresh
+        pages staged, CoW across tiers, re-opened host-tier tail pages
+        fetched back, the covering page pinned + marked dirty)."""
+        self._dispatch_prefetch()
+        for s in self.slots.active_slots():
+            pos = self._host_pos[s]
+            if pos >= self.capacity:
+                continue
+            j = pos // self.page_size
+            cur = self._write_page[s]
+            pages = self.slots.slot_pages(s)
+            if cur is not None and (pages is None or j >= len(pages)
+                                    or pages[j] != cur):
+                # page boundary: the finished page goes cold BEFORE the
+                # new write page is staged, so a fully-pinned cache frees
+                # the slot it is about to need
+                self.staging.unpin(cur)
+                self._write_page[s] = None
+            self.slots.ensure_writable(s, pos)
+            pages = self.slots.slot_pages(s)
+            if pages is None or j >= len(pages):
+                continue
+            page = pages[j]
+            if self.staging.slot_of(page) is None:
+                # a re-opened host-tier page: a prefix-cache hit appending
+                # its registered tail in place, or a tail demoted while
+                # the slot sat at a boundary
+                self._stage_page(page, fetch=True)
+            self._set_write_page(s, page)
+        self.stats["cow_copies"] = self.slots.cow_copies
+
+    def _apply_decode(self, logits):
+        if self._lane_live:
+            # consume point passed: promote prefetched pages into the
+            # staging pool (free/cold slots only — never a pinned writer,
+            # and never by evicting a page committed in this very loop:
+            # that would leave two lane pages mapped to one slot)
+            lane_slots = []
+            committed_now: set = set()
+            for p in self._lane_live:
+                if (self.staging.slot_of(p) is not None
+                        or self.staging.pinnable() <= 0):
+                    lane_slots.append(-1)
+                    continue
+                if self.staging.free_slots == 0 \
+                        and self.staging.lru_head() in committed_now:
+                    lane_slots.append(-1)
+                    continue
+                slot, evs = self.staging.acquire(p, pin=False)
+                self._process_evictions(evs)
+                self.pool.set_tier([p], "device")
+                lane_slots.append(slot)
+                committed_now.add(p)
+            lane_slots += [-1] * (self.prefetch_depth - len(lane_slots))
+            self._caches = self._commit(self._caches,
+                                        jnp.asarray(lane_slots, jnp.int32))
+            self._lane_live = []
+            self.stats["aux_launches"] += 1
+        return super()._apply_decode(logits)
+
+    # -- accounting ------------------------------------------------------
+
+    def token_store_bytes(self) -> int:
+        """Measured DEVICE bytes of the token store (index pool + staging
+        pool + prefetch lane + tier maps) — the budget the tier shrinks.
+        Host bytes are reported separately (:meth:`host_store_bytes`)."""
+        assert self._caches is not None, "admit() at least one request first"
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(
+                self._caches,
+                is_leaf=lambda x: isinstance(x, TieredSIKVCache)):
+            if isinstance(leaf, TieredSIKVCache):
+                total += tiered_device_bytes(leaf)
+        return total
+
+    def host_store_bytes(self) -> int:
+        return self.host.total_bytes()
+
+    def tier_stats(self) -> Dict[str, float]:
+        """Transfer + staging counters, including the headline rates: the
+        fraction of selected payload tokens served on-device
+        (``staging_hit_rate``) and the average host->device bytes each
+        decode step moved (``h2d_bytes_per_step``)."""
+        x = dict(self.xfer.stats)
+        served = x["hit_tokens"] + x["prefetch_hit_tokens"] \
+            + x["miss_tokens"]
+        steps = max(1, self.stats["steps"])
+        return dict(
+            x, staging_evictions=self.staging.stats["evictions"],
+            staging_writebacks=self.staging.stats["writebacks"],
+            demotions=self.stats["demotions"],
+            pressure_writebacks=self.stats["pressure_writebacks"],
+            staging_hit_rate=(
+                (x["hit_tokens"] + x["prefetch_hit_tokens"]) / served
+                if served else 1.0),
+            h2d_bytes_per_step=x["h2d_bytes"] / steps,
+            d2h_bytes_per_step=x["d2h_bytes"] / steps,
+        )
+
+    def pool_stats(self) -> Dict[str, int]:
+        return dict(super().pool_stats(),
+                    staging_resident=self.staging.resident_pages,
+                    staging_pinned=self.staging.pinned_pages)

@@ -10,6 +10,7 @@ from repro.sparse.quest import QuestAttention, QuestCache
 from repro.sparse.double_sparse import DoubleSparseAttention, DoubleSparseCache
 from repro.sparse.kivi import KiviAttention, KiviCache
 from repro.sparse.paged import PagedSIKVAttention
+from repro.sparse.tiered import TieredSIKVAttention
 
 
 def _sikv_sp(cfg=None):
@@ -22,6 +23,7 @@ _METHODS = {
     "full": FullAttention,
     "sikv": SIKVAttention,
     "sikv_paged": PagedSIKVAttention,
+    "sikv_tiered": TieredSIKVAttention,
     "snapkv": SnapKVAttention,
     "quest": QuestAttention,
     "double_sparse": DoubleSparseAttention,
@@ -37,6 +39,8 @@ def get_method(name: str, cfg: SIKVConfig | None = None) -> AttentionMethod:
 
 
 def method_names() -> list[str]:
-    """Single-device method ids ("sikv_sp" needs a sequence-sharded mesh —
-    reach it via get_method/dryrun explicitly)."""
-    return sorted(m for m in _METHODS if m != "sikv_sp")
+    """Single-device method ids ("sikv_sp" needs a sequence-sharded mesh;
+    "sikv_tiered" needs the serving engine's host store + transfer engine —
+    reach them via get_method/the engines explicitly)."""
+    return sorted(m for m in _METHODS
+                  if m not in ("sikv_sp", "sikv_tiered"))

@@ -1,0 +1,42 @@
+"""Tiered Self-Indexing KVCache exposed through the common method interface.
+
+``prefill`` builds the ordinary dense batch-1 cache (the serving engine
+splits it across tiers at insertion); ``decode`` dispatches on the cache
+type, so one method object serves the lock-step dense path and the tiered
+continuous-batching path.  The method holds the engine's
+:class:`~repro.tiered.staging.TransferEngine` — its ``host_gather`` is the
+``io_callback`` target that serves exact payload misses mid-launch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.config import SIKVConfig
+from repro.sparse.sikv import SIKVAttention
+from repro.tiered.attention import tiered_sikv_decode_attention
+from repro.tiered.cache import TieredSIKVCache
+from repro.tiered.staging import TransferEngine
+
+
+class TieredSIKVAttention(SIKVAttention):
+    name = "sikv_tiered"
+
+    def __init__(self, cfg: SIKVConfig | None = None,
+                 transfer: TransferEngine | None = None):
+        super().__init__(cfg)
+        if transfer is None:
+            raise ValueError(
+                "sikv_tiered needs a TransferEngine (host store + staging "
+                "bookkeeping) — build it through TieredServingEngine rather "
+                "than get_method()")
+        self.transfer = transfer
+
+    def decode(self, q, k_new, v_new, cache, *, scale=None
+               ) -> Tuple[jax.Array, object]:
+        if isinstance(cache, TieredSIKVCache):
+            return tiered_sikv_decode_attention(
+                q, k_new, v_new, cache, self.cfg,
+                self.transfer.host_gather, scale=scale)
+        return super().decode(q, k_new, v_new, cache, scale=scale)

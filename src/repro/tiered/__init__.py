@@ -1,0 +1,42 @@
+"""Tiered KV page store: device sign-code index, host-offloaded payload.
+
+The self-indexing property makes the split exact — scoring never reads the
+quantized payload — so only the tiny sign-code index must stay in device
+memory per cached token, and the payload moves to host, rotating through a
+small device staging cache driven by what top-k retrieval actually selects.
+
+* :mod:`repro.tiered.cache` — the device arrays (index pool, staging pool,
+  prefetch lane, tier map) and their jitted maintenance programs;
+* :mod:`repro.tiered.attention` — tiered decode, bit-exact vs. the dense
+  and single-tier paged paths;
+* :mod:`repro.tiered.host_store` — the host (pinned) payload page store;
+* :mod:`repro.tiered.staging` — LRU staging bookkeeping, writeback
+  obligations, and the async transfer engine (prefetch dispatch + the
+  ``io_callback`` miss path).
+
+Serving integration lives in :class:`repro.serving.TieredServingEngine`.
+"""
+from repro.tiered.attention import tiered_sikv_decode_attention
+from repro.tiered.cache import (INDEX_FIELDS, TieredSIKVCache,
+                                append_token_tiered, clear_prefetch_lane,
+                                commit_prefetch, copy_index_page,
+                                copy_staging_slot, gather_payload_tiered,
+                                init_tiered_cache, insert_prefill_tiered,
+                                page_byte_split, payload_field_specs,
+                                set_prefetch_lane, stage_payload_pages,
+                                tiered_device_bytes, tree_map_tiered,
+                                update_payload_map)
+from repro.tiered.host_store import PAYLOAD_FIELDS, HostPageStore
+from repro.tiered.staging import (Eviction, StagingCache, StagingExhausted,
+                                  TransferEngine)
+
+__all__ = [
+    "INDEX_FIELDS", "PAYLOAD_FIELDS", "Eviction", "HostPageStore",
+    "StagingCache", "StagingExhausted", "TieredSIKVCache", "TransferEngine",
+    "append_token_tiered", "clear_prefetch_lane", "commit_prefetch",
+    "copy_index_page", "copy_staging_slot", "gather_payload_tiered",
+    "init_tiered_cache", "insert_prefill_tiered", "page_byte_split",
+    "payload_field_specs", "set_prefetch_lane", "stage_payload_pages",
+    "tiered_device_bytes", "tiered_sikv_decode_attention",
+    "tree_map_tiered", "update_payload_map",
+]

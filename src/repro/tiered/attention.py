@@ -1,0 +1,132 @@
+"""Sparse decode attention over the tiered (index/payload split) cache.
+
+Mirrors :func:`repro.paged.attention.paged_sikv_decode_attention` step for
+step — append, compressed-domain LUT scoring, top-k, gather+dequant of the
+selected tokens, exact merge with the full-precision [sinks ; ring] — with
+the payload gather routed through the tier map:
+
+* scoring touches ONLY the device-resident sign-code index pool (the
+  paper's self-indexing property is what makes the payload offload exact:
+  no score ever needs a payload byte);
+* the winners' codes come from the index pool; their payload comes from
+  the staging pool, the prefetch lane, or — exactly, token-wise — the host
+  store (:func:`~repro.tiered.cache.gather_payload_tiered`);
+* the gathered fields feed the SAME fused dequant-attention kernel / jnp
+  dequant path as the dense and paged routes (gather outside, fuse inside
+  — DESIGN.md §2-3, unchanged), which is why tiered decode is bit-exact
+  against both (tested).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SIKVConfig
+from repro.core import policy
+from repro.core import retrieval as rtr
+from repro.core.attention import (group_queries, masked_attention,
+                                  quant_valid_mask_parts, ring_segment_parts,
+                                  sink_flash_state_parts)
+from repro.core.cache import dequantize_gathered
+from repro.tiered.cache import (TieredSIKVCache, append_token_tiered,
+                                gather_payload_tiered)
+
+__all__ = ["tiered_sikv_decode_attention"]
+
+
+def tiered_sikv_decode_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    tiered: TieredSIKVCache,
+    cfg: SIKVConfig,
+    host_gather: Callable,
+    *,
+    topk: int | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, TieredSIKVCache]:
+    """One decode step of Self-Indexing sparse attention, tiered.
+
+    Args:
+      q: ``(B, Hq, 1, D)`` current query (RoPE applied).
+      k_new, v_new: ``(B, Hkv, 1, D)`` current token's key/value.
+      host_gather: the transfer engine's exact miss path
+        (:meth:`~repro.tiered.staging.TransferEngine.host_gather`).
+    Returns:
+      ``(attn_out (B, Hq, 1, Dv), updated tiered cache)``.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_new.shape[1]
+    tiered = append_token_tiered(tiered, k_new, v_new, cfg)
+    Lmax = tiered.capacity
+
+    k_dyn = topk if topk is not None else policy.dynamic_k(cfg, Lmax)
+    k_dyn = min(k_dyn, Lmax)
+
+    # ---- compressed-domain scoring: the device-resident index only --------
+    codes = rtr.gather_page_view(tiered.codes, tiered.block_table)
+    sink_mask = rtr.gather_page_view(tiered.sink_mask, tiered.block_table)
+    q_sum = group_queries(q[:, :, 0, :], Hkv)                # (B, Hkv, D)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        scores = kops.lut_gemv(
+            codes, q_sum.astype(jnp.float32),
+            tiered.centroids.astype(jnp.float32), cfg.group_size)
+    else:
+        lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                            tiered.centroids.astype(jnp.float32),
+                            cfg.group_size)
+        scores = rtr.lut_scores(codes, lut)                  # (B, Hkv, Lmax)
+
+    valid = quant_valid_mask_parts(sink_mask, tiered.length,
+                                   tiered.recent_window)
+    idx, vals = rtr.select_topk(
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+
+    # ---- payload gather: staging pool / prefetch lane / host miss path ----
+    codes_sel = rtr.gather_selected_paged(tiered.codes, tiered.block_table,
+                                          idx, tiered.page_size)
+    payload = gather_payload_tiered(tiered, idx, sel_valid, host_gather)
+
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        acc, m, l = kops.sparse_attention_decode(
+            q.astype(jnp.float32), codes_sel, payload["kmag"],
+            payload["k_scale"], payload["k_zp"], payload["v_q"],
+            payload["v_scale"], payload["v_zp"],
+            tiered.alpha, tiered.mu, sel_valid,
+            quant_group=cfg.quant_group, group_size=cfg.group_size,
+            scale=scale)
+        acc_s, m_s, l_s = sink_flash_state_parts(
+            q, tiered.sink_k, tiered.sink_v, tiered.res_k, tiered.res_v,
+            sink_mask, tiered.length, scale)
+        m_all = jnp.maximum(m, m_s)
+        a1 = jnp.exp(m - m_all)[..., None]
+        a2 = jnp.exp(m_s - m_all)[..., None]
+        num = acc * a1 + acc_s * a2
+        den = l[..., None] * a1 + l_s[..., None] * a2
+        out = (num / jnp.maximum(den, 1e-30))[:, :, None, :].astype(q.dtype)
+        return out, tiered
+
+    # ---- gather + dequantize only the selected tokens ---------------------
+    k_sel, v_sel = dequantize_gathered(
+        codes_sel, payload["kmag"], payload["k_scale"], payload["k_zp"],
+        payload["v_q"], payload["v_scale"], payload["v_zp"],
+        tiered.mu, tiered.alpha, cfg)
+
+    # ---- exact attention over [sinks ; ring ; selected] -------------------
+    ring_k, ring_v, ring_valid = ring_segment_parts(
+        tiered.res_k, tiered.res_v, sink_mask, tiered.length)
+    S = tiered.num_sinks
+    sink_valid = jnp.ones((B, Hkv, S), bool)
+    k_all = jnp.concatenate(
+        [tiered.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [tiered.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
+    valid_all = jnp.concatenate([sink_valid, ring_valid, sel_valid], axis=2)
+    out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
+    return out, tiered

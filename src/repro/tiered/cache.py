@@ -1,0 +1,448 @@
+"""Tiered paged Self-Indexing cache: device sign-code index, staged payload.
+
+The paper's self-indexing property — candidate scoring reads ONLY the 1-bit
+sign codes, never the quantized K/V payload — makes an exact index/payload
+split possible: the tiny index must be resident for every cached token
+(every decode step scores all of them), but the fat payload is touched only
+for the ``top-k`` winners, so it can live off-device and be fetched
+on selection.  Layout per pool page:
+
+* **index tier** (device, always): ``codes`` + ``sink_mask``, shaped
+  ``(num_pages, H, page_size, ...)`` exactly like the single-tier pool —
+  scoring code is shared verbatim with :mod:`repro.paged`;
+* **payload tier**: ``kmag``/``k_scale``/``k_zp``/``v_q``/``v_scale``/
+  ``v_zp`` live host-side (:class:`~repro.tiered.host_store.HostPageStore`)
+  and rotate through a small device staging pool shaped
+  ``(staging_pages, H, page_size, ...)``.  ``payload_map (num_pages,)``
+  maps pool page -> staging slot (``-1`` = host tier);
+* **prefetch lane**: ``pf_pages (prefetch_depth,)`` + per-field
+  ``pf_* (prefetch_depth, H, page_size, ...)`` buffers carry in-flight
+  host->device transfers INTO the decode launch — dispatched with
+  ``jax.device_put`` before the launch, consumed after top-k, committed to
+  the staging pool afterwards;
+* selected tokens on pages in neither place are fetched exactly,
+  token-wise, through an ``io_callback`` into the host store — the miss
+  path that keeps tiered decode bit-exact with the single-tier pool.
+
+Per-slot state (sinks, ring, statistics, block table) is identical to
+:class:`~repro.paged.cache.PagedSIKVCache`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SIKVConfig
+from repro.core.cache import (SIKVCache, batched_update_token,
+                              quantize_decode_token)
+from repro.paged.cache import PER_SLOT_FIELDS, _paged_view
+from repro.tiered.host_store import PAYLOAD_FIELDS
+
+__all__ = [
+    "TieredSIKVCache", "INDEX_FIELDS", "init_tiered_cache",
+    "payload_field_specs", "insert_prefill_tiered", "append_token_tiered",
+    "gather_payload_tiered", "stage_payload_pages", "update_payload_map",
+    "copy_index_page", "copy_staging_slot", "commit_prefetch",
+    "set_prefetch_lane", "clear_prefetch_lane", "tree_map_tiered",
+    "tiered_device_bytes", "tiered_host_bytes_per_page", "page_byte_split",
+]
+
+# pool-resident, always-device index fields (scoring reads these)
+INDEX_FIELDS = ("codes", "sink_mask")
+
+
+class TieredSIKVCache(NamedTuple):
+    # ---- device index pool, page-major: (P, H, ps, ...) ----
+    codes: jax.Array        # (P, H, ps, G)            int8
+    sink_mask: jax.Array    # (P, H, ps)               bool
+    # ---- device staging pool for payload pages: (S, H, ps, ...) ----
+    kmag: jax.Array         # (S, H, ps, D*kbits//8)   int8 (packed)
+    k_scale: jax.Array      # (S, H, ps, D//qg)
+    k_zp: jax.Array         # (S, H, ps, D//qg)
+    v_q: jax.Array          # (S, H, ps, vw)           int8 (packed)
+    v_scale: jax.Array      # (S, H, ps, vs)
+    v_zp: jax.Array         # (S, H, ps, vs)
+    # ---- tier map + prefetch lane ----
+    payload_map: jax.Array  # (P,) int32: staging slot or -1 (host tier)
+    pf_pages: jax.Array     # (F,) int32 pool page ids in the lane, -1 empty
+    pf_kmag: jax.Array      # (F, H, ps, ...) in-flight payload pages
+    pf_k_scale: jax.Array
+    pf_k_zp: jax.Array
+    pf_v_q: jax.Array
+    pf_v_scale: jax.Array
+    pf_v_zp: jax.Array
+    # ---- per-slot ----
+    block_table: jax.Array  # (B, pages_per_seq)       int32, -1 = unmapped
+    sink_k: jax.Array
+    sink_v: jax.Array
+    res_k: jax.Array
+    res_v: jax.Array
+    mu: jax.Array
+    alpha: jax.Array
+    centroids: jax.Array
+    length: jax.Array       # (B,) int32
+    layer_id: jax.Array     # () int32 — host-store key for the miss callback
+
+    @property
+    def num_pages(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def staging_pages(self) -> int:
+        return self.kmag.shape[0]
+
+    @property
+    def prefetch_depth(self) -> int:
+        return self.pf_pages.shape[0]
+
+    @property
+    def page_size(self) -> int:
+        return self.codes.shape[2]
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.block_table.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.pages_per_seq * self.page_size
+
+    @property
+    def head_dim(self) -> int:
+        return self.mu.shape[-1]
+
+    @property
+    def num_sinks(self) -> int:
+        return self.sink_k.shape[2]
+
+    @property
+    def recent_window(self) -> int:
+        return self.res_k.shape[2]
+
+
+def payload_field_specs(dense: SIKVCache,
+                        page_size: int) -> Dict[str, tuple]:
+    """Host-store layout per payload field: ``{f: ((H, ps, X), dtype)}``."""
+    out = {}
+    for f in PAYLOAD_FIELDS:
+        arr = getattr(dense, f)
+        out[f] = ((arr.shape[1], page_size) + tuple(arr.shape[3:]),
+                  np.dtype(arr.dtype))
+    return out
+
+
+def init_tiered_cache(dense: SIKVCache, num_pages: int, page_size: int,
+                      staging_pages: int, prefetch_depth: int,
+                      num_slots: int, layer_id: int) -> TieredSIKVCache:
+    """Empty tiered cache shaped after a dense template (any batch)."""
+    if dense.capacity % page_size:
+        raise ValueError(f"dense capacity {dense.capacity} not divisible "
+                         f"by page_size {page_size}")
+    pages_per_seq = dense.capacity // page_size
+
+    def pool(f: str, lead: int) -> jax.Array:
+        arr = getattr(dense, f)
+        return jnp.zeros((lead, arr.shape[1], page_size) + arr.shape[3:],
+                         arr.dtype)
+
+    slot = {
+        f: jnp.zeros((num_slots,) + getattr(dense, f).shape[1:],
+                     getattr(dense, f).dtype)
+        for f in PER_SLOT_FIELDS
+    }
+    return TieredSIKVCache(
+        **{f: pool(f, num_pages) for f in INDEX_FIELDS},
+        **{f: pool(f, staging_pages) for f in PAYLOAD_FIELDS},
+        **{"pf_" + f: pool(f, prefetch_depth) for f in PAYLOAD_FIELDS},
+        payload_map=jnp.full((num_pages,), -1, jnp.int32),
+        pf_pages=jnp.full((prefetch_depth,), -1, jnp.int32),
+        block_table=jnp.full((num_slots, pages_per_seq), -1, jnp.int32),
+        length=jnp.zeros((num_slots,), jnp.int32),
+        layer_id=jnp.asarray(layer_id, jnp.int32),
+        **slot)
+
+
+def insert_prefill_tiered(tiered: TieredSIKVCache, dense: SIKVCache,
+                          slot: jax.Array, page_ids: jax.Array,
+                          tail_logical: jax.Array, tail_page: jax.Array,
+                          tail_slot: jax.Array) -> TieredSIKVCache:
+    """Scatter a batch-1 dense prefill: index pages to the device pool,
+    the TAIL page's payload to its pinned staging slot.
+
+    The rest of the prompt's payload goes host-side (the engine offloads it
+    from the same ``caches_one`` arrays in one bulk transfer) — only the
+    tail page is a write target (decode appends write device-first), so
+    only it needs device payload residency at admission.
+
+    Args:
+      page_ids: ``(pages_per_seq,)`` physical page per logical page
+        (``-1`` beyond the prompt — dropped by the scatter).
+      tail_logical: logical index of the prompt's last page.
+      tail_page / tail_slot: its physical page id and staging slot.
+    """
+    P = tiered.num_pages
+    pps, ps = tiered.pages_per_seq, tiered.page_size
+    ids = jnp.where(page_ids >= 0, page_ids, P)  # OOB => dropped
+    upd: dict[str, jax.Array] = {}
+    for f in INDEX_FIELDS:
+        buf = getattr(tiered, f)
+        src = _paged_view(getattr(dense, f)[0], pps, ps)
+        upd[f] = buf.at[ids].set(src.astype(buf.dtype))
+    for f in PAYLOAD_FIELDS:
+        buf = getattr(tiered, f)
+        src = _paged_view(getattr(dense, f)[0], pps, ps)
+        upd[f] = buf.at[tail_slot].set(src[tail_logical].astype(buf.dtype))
+    for f in PER_SLOT_FIELDS:
+        buf = getattr(tiered, f)
+        upd[f] = buf.at[slot].set(getattr(dense, f)[0].astype(buf.dtype))
+    upd["payload_map"] = tiered.payload_map.at[tail_page].set(
+        tail_slot.astype(jnp.int32))
+    upd["block_table"] = tiered.block_table.at[slot].set(page_ids)
+    upd["length"] = tiered.length.at[slot].set(dense.length[0])
+    return tiered._replace(**upd)
+
+
+def append_token_tiered(tiered: TieredSIKVCache, k_new: jax.Array,
+                        v_new: jax.Array,
+                        cfg: SIKVConfig) -> TieredSIKVCache:
+    """Append one decode token per slot: index to the pool page, payload to
+    the page's staging slot (device-first writes — the serving engine pins
+    every live slot's current write page in the staging cache).
+
+    Guards mirror the paged append: positions past capacity, unmapped
+    pages, and unstaged pages (dead slots) write nothing.
+    """
+    codes, kq, vq, v_ring = quantize_decode_token(
+        k_new, v_new, tiered.mu, tiered.alpha, cfg)
+
+    ps, P, S = tiered.page_size, tiered.num_pages, tiered.staging_pages
+    pos = tiered.length                                       # (B,)
+    page_l = jnp.clip(pos // ps, 0, tiered.pages_per_seq - 1)
+    pg = jnp.take_along_axis(tiered.block_table, page_l[:, None],
+                             axis=1)[:, 0]
+    ok = (pos >= 0) & (pos < tiered.capacity) & (pg >= 0)
+    dslot = tiered.payload_map[jnp.clip(pg, 0, P - 1)]
+    pgi = jnp.where(ok, pg, P)                                # OOB => drop
+    ds = jnp.where(ok & (dslot >= 0), dslot, S)               # OOB => drop
+    off = pos % ps
+
+    def idx_upd(buf, val):
+        return buf.at[pgi, :, off].set(val[:, :, 0].astype(buf.dtype))
+
+    def pay_upd(buf, val):
+        return buf.at[ds, :, off].set(val[:, :, 0].astype(buf.dtype))
+
+    R = tiered.recent_window
+    return tiered._replace(
+        codes=idx_upd(tiered.codes, codes),
+        sink_mask=tiered.sink_mask.at[pgi, :, off].set(False),
+        kmag=pay_upd(tiered.kmag, kq.packed),
+        k_scale=pay_upd(tiered.k_scale, kq.scale),
+        k_zp=pay_upd(tiered.k_zp, kq.zp),
+        v_q=pay_upd(tiered.v_q, vq.packed),
+        v_scale=pay_upd(tiered.v_scale, vq.scale),
+        v_zp=pay_upd(tiered.v_zp, vq.zp),
+        res_k=batched_update_token(tiered.res_k, k_new, pos % R),
+        res_v=batched_update_token(tiered.res_v, v_ring, pos % R),
+        length=tiered.length + 1,
+    )
+
+
+def gather_payload_tiered(tiered: TieredSIKVCache, idx: jax.Array,
+                          sel_valid: jax.Array,
+                          host_gather: Callable) -> Dict[str, jax.Array]:
+    """Gather the top-k winners' payload from whichever tier holds it.
+
+    Resolution order per selected token (page ``pg``):
+
+    1. staging pool (``payload_map[pg] >= 0``) — the device hit path;
+    2. prefetch lane (``pg`` among ``pf_pages``) — an in-flight transfer
+       dispatched before the launch, consumed here, after top-k;
+    3. host store, token-wise, through ``host_gather`` (an ``io_callback``
+       into :meth:`~repro.tiered.staging.TransferEngine.host_gather`) —
+       the exact miss path, and the demand signal for the next prefetch.
+
+    Args:
+      idx: ``(B, H, T)`` selected logical positions.
+      sel_valid: ``(B, H, T)`` top-k selection validity (invalid lanes are
+        masked downstream and must not trigger host fetches).
+    Returns:
+      ``{field: (B, H, T, X)}`` gathered payload, bit-identical to what the
+      single-tier pool gather would return.
+    """
+    from jax.experimental import io_callback
+
+    B, H, T = idx.shape
+    ps, P, S = tiered.page_size, tiered.num_pages, tiered.staging_pages
+    page_l = jnp.clip(idx // ps, 0, tiered.pages_per_seq - 1)
+    off = idx % ps
+    bt = jnp.broadcast_to(tiered.block_table[:, None, :],
+                          (B, H, tiered.pages_per_seq))
+    pg = jnp.take_along_axis(bt, page_l, axis=2)              # (B, H, T)
+    pgc = jnp.clip(pg, 0, P - 1)
+    mapped = pg >= 0
+    dslot = tiered.payload_map[pgc]
+    staged = mapped & (dslot >= 0)
+
+    F = tiered.prefetch_depth
+    if F:
+        lane = tiered.pf_pages
+        eq = ((pgc[..., None] == lane[None, None, None, :])
+              & mapped[..., None] & (lane >= 0)[None, None, None, :])
+        pf_hit = eq.any(-1) & ~staged
+        pf_slot = jnp.argmax(eq, axis=-1)
+    else:
+        pf_hit = jnp.zeros_like(staged)
+        pf_slot = None
+
+    valid = sel_valid & mapped
+    need = valid & ~staged & ~pf_hit
+
+    h = jnp.arange(H)[None, :, None]
+    ds = jnp.clip(dslot, 0, S - 1)
+    out: Dict[str, jax.Array] = {}
+    for f in PAYLOAD_FIELDS:
+        g = getattr(tiered, f)[ds, h, off]                    # (B, H, T, X)
+        if F:
+            pf = getattr(tiered, "pf_" + f)[pf_slot, h, off]
+            g = jnp.where(pf_hit[..., None], pf, g)
+        out[f] = g
+
+    shapes = tuple(jax.ShapeDtypeStruct(out[f].shape, out[f].dtype)
+                   for f in PAYLOAD_FIELDS)
+    host_vals = io_callback(host_gather, shapes, tiered.layer_id, pg, off,
+                            need, staged & valid, pf_hit & valid)
+    for f, hv in zip(PAYLOAD_FIELDS, host_vals):
+        out[f] = jnp.where(need[..., None], hv, out[f])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# staging-pool maintenance programs (issued host-side between launches)
+# ---------------------------------------------------------------------------
+
+
+def stage_payload_pages(tiered: TieredSIKVCache, slots: jax.Array,
+                        fields: Dict[str, jax.Array]) -> TieredSIKVCache:
+    """Fill staging slots with whole payload pages (a host->device upload
+    or a CoW source copy): ``slots (n,)`` (-1 = skip),
+    ``fields[f] (n, H, ps, X)``."""
+    S = tiered.staging_pages
+    sl = jnp.where(slots >= 0, slots, S)                      # OOB => drop
+    return tiered._replace(**{
+        f: getattr(tiered, f).at[sl].set(
+            fields[f].astype(getattr(tiered, f).dtype))
+        for f in PAYLOAD_FIELDS
+    })
+
+
+def update_payload_map(tiered: TieredSIKVCache, pages: jax.Array,
+                       slots: jax.Array) -> TieredSIKVCache:
+    """Point pool pages at staging slots (or -1 = demoted to host);
+    ``pages`` entries < 0 are skipped."""
+    P = tiered.num_pages
+    pgi = jnp.where(pages >= 0, pages, P)                     # OOB => drop
+    return tiered._replace(
+        payload_map=tiered.payload_map.at[pgi].set(
+            slots.astype(jnp.int32)))
+
+
+def copy_index_page(tiered: TieredSIKVCache, src: jax.Array,
+                    dst: jax.Array) -> TieredSIKVCache:
+    """Copy one index-pool page (the CoW step's device-index half)."""
+    return tiered._replace(**{
+        f: getattr(tiered, f).at[dst].set(getattr(tiered, f)[src])
+        for f in INDEX_FIELDS
+    })
+
+
+def copy_staging_slot(tiered: TieredSIKVCache, src_slot: jax.Array,
+                      dst_slot: jax.Array) -> TieredSIKVCache:
+    """Copy a staged payload page between staging slots (CoW where the
+    source page is device-resident)."""
+    return tiered._replace(**{
+        f: getattr(tiered, f).at[dst_slot].set(getattr(tiered, f)[src_slot])
+        for f in PAYLOAD_FIELDS
+    })
+
+
+def set_prefetch_lane(tiered: TieredSIKVCache, pages: jax.Array,
+                      fields: Dict[str, jax.Array]) -> TieredSIKVCache:
+    """Thread in-flight ``jax.device_put`` payload pages into the lane
+    (host-side ``_replace`` — no device compute; the arrays may still be
+    transferring when the launch starts)."""
+    return tiered._replace(
+        pf_pages=pages,
+        **{"pf_" + f: fields[f] for f in PAYLOAD_FIELDS})
+
+
+def clear_prefetch_lane(tiered: TieredSIKVCache) -> TieredSIKVCache:
+    F = tiered.prefetch_depth
+    return tiered._replace(pf_pages=jnp.full((F,), -1, jnp.int32))
+
+
+def commit_prefetch(tiered: TieredSIKVCache,
+                    lane_slots: jax.Array) -> TieredSIKVCache:
+    """Move consumed prefetch-lane pages into the staging pool (so later
+    steps hit without re-transferring) and clear the lane.
+
+    ``lane_slots (F,)`` assigns a staging slot per lane entry (-1 = not
+    committed: the page stays host-tier and may be re-prefetched).
+    """
+    S, F = tiered.staging_pages, tiered.prefetch_depth
+    sl = jnp.where(lane_slots >= 0, lane_slots, S)            # OOB => drop
+    upd = {
+        f: getattr(tiered, f).at[sl].set(
+            getattr(tiered, "pf_" + f).astype(getattr(tiered, f).dtype))
+        for f in PAYLOAD_FIELDS
+    }
+    committed = (lane_slots >= 0) & (tiered.pf_pages >= 0)
+    pgi = jnp.where(committed, tiered.pf_pages, tiered.num_pages)
+    upd["payload_map"] = tiered.payload_map.at[pgi].set(
+        lane_slots.astype(jnp.int32))
+    upd["pf_pages"] = jnp.full((F,), -1, jnp.int32)
+    return tiered._replace(**upd)
+
+
+def tree_map_tiered(fn: Callable, tree: Any) -> Any:
+    """Apply ``fn`` to every TieredSIKVCache inside a caches pytree."""
+    return jax.tree_util.tree_map(
+        lambda c: fn(c) if isinstance(c, TieredSIKVCache) else c,
+        tree, is_leaf=lambda x: isinstance(x, TieredSIKVCache))
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+
+def tiered_device_bytes(tiered: TieredSIKVCache) -> int:
+    """DEVICE bytes of the token store: index pool + staging pool +
+    prefetch lane + tier map + block table.  The host-tier payload is
+    deliberately excluded — it is the quantity this layout evicts from
+    device memory."""
+    n = tiered.block_table.nbytes + tiered.payload_map.nbytes \
+        + tiered.pf_pages.nbytes
+    for f in INDEX_FIELDS + PAYLOAD_FIELDS:
+        n += getattr(tiered, f).nbytes
+    for f in PAYLOAD_FIELDS:
+        n += getattr(tiered, "pf_" + f).nbytes
+    return n
+
+
+def tiered_host_bytes_per_page(tiered: TieredSIKVCache) -> int:
+    """Host bytes one pool page's payload occupies (per layer)."""
+    return sum(int(getattr(tiered, f)[0].nbytes) for f in PAYLOAD_FIELDS)
+
+
+def page_byte_split(dense: SIKVCache, page_size: int) -> tuple[int, int]:
+    """``(index_bytes, payload_bytes)`` of ONE page, derived from a dense
+    template — the inputs to :func:`repro.core.policy.tiered_pool_split`.
+    """
+    per_tok = lambda f: getattr(dense, f)[0, :, :1].nbytes
+    index = sum(per_tok(f) for f in INDEX_FIELDS)
+    payload = sum(per_tok(f) for f in PAYLOAD_FIELDS)
+    return index * page_size, payload * page_size

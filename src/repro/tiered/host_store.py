@@ -1,0 +1,145 @@
+"""Host-resident payload page store (the cold tier).
+
+The tiered layout keeps only the sign-code *index* (``codes`` +
+``sink_mask``) device-resident per pool page; the fat quantized payload —
+``kmag``, ``k_scale``/``k_zp``, ``v_q``, ``v_scale``/``v_zp`` — lives here,
+in host memory, one array set per attention layer.  On real hardware these
+buffers would be allocated pinned (page-locked) so ``jax.device_put`` DMAs
+straight from them; numpy arrays stand in for that on the CPU backend (the
+transfer topology is identical, see DESIGN.md §5.1).
+
+Pages are addressed by their POOL page id — the host store mirrors the
+device index pool one-to-one, so no second translation table is needed: a
+pool page's payload is either in the device staging cache
+(``payload_map[page] >= 0``) or at ``host[layer][field][page]``.
+
+The store also serves the exact-retrieval miss path: when top-k selects a
+token whose payload page is host-resident and not prefetched, the decode
+program fetches it token-wise through :meth:`gather` (an
+``io_callback`` target — see :mod:`repro.tiered.attention`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["HostPageStore", "PAYLOAD_FIELDS"]
+
+# pool-page payload fields offloaded to host (everything token-indexed that
+# top-k scoring never reads; the index fields codes/sink_mask stay device)
+PAYLOAD_FIELDS = ("kmag", "k_scale", "k_zp", "v_q", "v_scale", "v_zp")
+
+
+class HostPageStore:
+    """Per-layer host arrays of payload pages, pool-page addressed.
+
+    Layout per layer and field: ``(num_pages, H, page_size, X)`` matching
+    the device staging pool's trailing dims exactly, so page moves in either
+    direction are plain row copies.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError(f"need a positive page count, got {num_pages}")
+        self.num_pages = num_pages
+        self._layers: Dict[int, Dict[str, np.ndarray]] = {}
+        # pages whose host copy is current (written at prefill offload or by
+        # a staging writeback); a freshly allocated decode page has no valid
+        # host copy until its first writeback
+        self.valid: set = set()
+        self.stats: Dict[str, int] = {"page_writes": 0, "page_reads": 0,
+                                      "gather_tokens": 0}
+
+    # -- layout ---------------------------------------------------------
+
+    def ensure_layer(self, layer: int,
+                     field_specs: Dict[str, Tuple[tuple, np.dtype]]) -> None:
+        """Allocate the layer's page arrays: ``{field: ((H, ps, X), dtype)}``
+        (per-page trailing shape, i.e. the staging pool shape minus its
+        leading slot axis)."""
+        if layer in self._layers:
+            return
+        self._layers[layer] = {
+            f: np.zeros((self.num_pages,) + tuple(shape), dtype)
+            for f, (shape, dtype) in field_specs.items()
+        }
+
+    @property
+    def layers(self) -> Sequence[int]:
+        return tuple(self._layers)
+
+    # -- page moves -----------------------------------------------------
+
+    def write_pages(self, layer: int, page_ids: Sequence[int],
+                    fields: Dict[str, np.ndarray]) -> int:
+        """Store payload pages (``fields[f]`` is ``(n, H, ps, X)``);
+        returns bytes written.  Marks the pages host-valid only once every
+        layer has written them (callers write layer-by-layer from one bulk
+        device transfer; validity is a pool-page property, so it is flipped
+        by :meth:`mark_valid` after the last layer)."""
+        arrs = self._layers[layer]
+        n = 0
+        ids = np.asarray(page_ids, np.int64)
+        for f, buf in arrs.items():
+            src = fields[f]
+            buf[ids] = src
+            n += src.nbytes
+        self.stats["page_writes"] += len(ids)
+        return n
+
+    def mark_valid(self, page_ids: Sequence[int]) -> None:
+        self.valid.update(int(p) for p in page_ids)
+
+    def drop_pages(self, page_ids: Sequence[int]) -> None:
+        """Forget freed pool pages (content stays as garbage rows; the ids
+        may be re-allocated and re-written)."""
+        self.valid.difference_update(int(p) for p in page_ids)
+
+    def read_pages(self, layer: int,
+                   page_ids: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Fetch payload pages ``(n, H, ps, X)`` for an upload (prefetch or
+        staging fill).  Every page must be host-valid."""
+        ids = np.asarray(page_ids, np.int64)
+        self.stats["page_reads"] += len(ids)
+        return {f: buf[ids] for f, buf in self._layers[layer].items()}
+
+    # -- exact-retrieval miss path --------------------------------------
+
+    def gather(self, layer: int, pg: np.ndarray, off: np.ndarray,
+               need: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """Token-wise gather for the decode miss path.
+
+        Args:
+          pg:   ``(B, H, T)`` pool page per selected token.
+          off:  ``(B, H, T)`` in-page offset.
+          need: ``(B, H, T)`` True where the token must come from host
+                (page neither staged nor in the prefetch lane).
+        Returns:
+          One ``(B, H, T, X)`` array per payload field (zeros where
+          ``~need`` — those lanes are overwritten by the device-side
+          gather before use).
+        """
+        arrs = self._layers[int(layer)]
+        B, H, T = pg.shape
+        pgc = np.where(need, pg, 0).astype(np.int64)
+        offc = np.where(need, off, 0).astype(np.int64)
+        h = np.arange(H, dtype=np.int64)[None, :, None]
+        self.stats["gather_tokens"] += int(need.sum())
+        out = []
+        for f in PAYLOAD_FIELDS:
+            buf = arrs[f]
+            g = buf[pgc, h, offc]
+            g[~need] = 0
+            out.append(g)
+        return tuple(out)
+
+    # -- accounting -----------------------------------------------------
+
+    def page_bytes(self, layer: int) -> int:
+        """Host bytes of ONE page of this layer's payload."""
+        return sum(int(buf[0].nbytes) for buf in self._layers[layer].values())
+
+    def total_bytes(self) -> int:
+        return sum(int(buf.nbytes) for arrs in self._layers.values()
+                   for buf in arrs.values())

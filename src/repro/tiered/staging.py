@@ -1,0 +1,287 @@
+"""Device staging cache bookkeeping + the host<->device transfer engine.
+
+Pure host-side policy, like :mod:`repro.paged.pool`: WHICH payload page
+occupies which device staging slot is decided here, between jitted
+launches; the device arrays themselves live in
+:class:`~repro.tiered.cache.TieredSIKVCache` and are mutated by small
+jitted programs the serving engine issues from these decisions.
+
+* :class:`StagingCache` — LRU over the ``staging_pages`` device payload
+  slots.  A page is *pinned* while it is some live slot's current write
+  page (decode appends write device-first); pinned pages are never
+  evicted.  A page is *dirty* from its first staged write until written
+  back; eviction of a dirty page returns a writeback obligation the engine
+  fulfils with one device->host copy before the slot is reused.
+* :class:`TransferEngine` — the async host<->device mover.  ``dispatch``
+  issues ``jax.device_put`` for predicted-hot pages right before the
+  decode launch (transfers overlap the scoring phase of the launch, and
+  the launch consumes them after top-k through the prefetch lane);
+  ``host_gather`` is the ``io_callback`` target that serves exact-retrieval
+  misses mid-launch and records the page-demand histogram that drives the
+  next dispatch.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.tiered.host_store import HostPageStore
+
+__all__ = ["StagingCache", "StagingExhausted", "TransferEngine", "Eviction"]
+
+
+class StagingExhausted(RuntimeError):
+    """Raised when a staging slot is needed but every slot is pinned by a
+    live writer."""
+
+
+class Eviction(NamedTuple):
+    """A page demoted out of the staging cache.  ``dirty`` obliges the
+    caller to write the slot's device rows back to host BEFORE reusing
+    the slot."""
+
+    page: int
+    slot: int
+    dirty: bool
+
+
+class StagingCache:
+    """LRU slot map: pool page id -> device staging slot."""
+
+    def __init__(self, num_slots: int):
+        if num_slots <= 0:
+            raise ValueError(f"need positive staging slots, got {num_slots}")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._slot: Dict[int, int] = {}      # page -> slot
+        self._pinned: Dict[int, int] = {}    # page -> pin refcount
+        self._dirty: set = set()
+        self._lru: Dict[int, None] = {}      # unpinned pages, oldest first
+        self.stats: Dict[str, int] = {"evictions": 0, "writebacks": 0}
+
+    # -- queries --------------------------------------------------------
+
+    def slot_of(self, page: int) -> Optional[int]:
+        return self._slot.get(page)
+
+    def is_dirty(self, page: int) -> bool:
+        return page in self._dirty
+
+    @property
+    def pinned_pages(self) -> int:
+        return len(self._pinned)
+
+    @property
+    def resident_pages(self) -> int:
+        return len(self._slot)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def lru_head(self) -> Optional[int]:
+        """The page :meth:`evict_one` would demote next (None if every
+        resident page is pinned)."""
+        return next(iter(self._lru), None)
+
+    def pinnable(self) -> int:
+        """Slots obtainable for a NEW pinned write page: free slots plus
+        unpinned residents (those demote to host under pressure — pool
+        pressure evicts cold payload pages instead of queueing requests)."""
+        return len(self._free) + len(self._lru)
+
+    def cold_pages(self) -> List[int]:
+        """Unpinned resident pages, LRU-first."""
+        return list(self._lru)
+
+    # -- residency ------------------------------------------------------
+
+    def acquire(self, page: int, *, pin: bool) -> Tuple[int, List[Eviction]]:
+        """Return a staging slot holding ``page``, evicting the LRU
+        unpinned page if no slot is free.  The caller is responsible for
+        filling the slot (host fetch / CoW copy / fresh write) and for
+        performing the writeback of any dirty eviction BEFORE the slot's
+        device rows are overwritten."""
+        evicted: List[Eviction] = []
+        if page in self._slot:
+            self.touch(page)
+        else:
+            if not self._free:
+                ev = self.evict_one()
+                if ev is None:
+                    raise StagingExhausted(
+                        f"all {self.num_slots} staging slots pinned by live "
+                        f"writers; admit fewer sequences or enlarge "
+                        f"staging_pages")
+                evicted.append(ev)
+            slot = self._free.pop()
+            self._slot[page] = slot
+            self._lru[page] = None
+        if pin:
+            self.pin(page)
+        return self._slot[page], evicted
+
+    def evict_one(self) -> Optional[Eviction]:
+        """Demote the least-recently-used unpinned page; ``None`` if every
+        resident page is pinned."""
+        for page in self._lru:
+            del self._lru[page]
+            slot = self._slot.pop(page)
+            dirty = page in self._dirty
+            self._dirty.discard(page)
+            self._free.append(slot)
+            self.stats["evictions"] += 1
+            if dirty:
+                self.stats["writebacks"] += 1
+            return Eviction(page, slot, dirty)
+        return None
+
+    def touch(self, page: int) -> None:
+        if page in self._lru:
+            self._lru[page] = self._lru.pop(page)
+
+    def pin(self, page: int) -> None:
+        assert page in self._slot, f"pinning unstaged page {page}"
+        self._pinned[page] = self._pinned.get(page, 0) + 1
+        self._lru.pop(page, None)
+
+    def unpin(self, page: int) -> None:
+        n = self._pinned.get(page, 0) - 1
+        if n <= 0:
+            self._pinned.pop(page, None)
+            if page in self._slot:
+                self._lru[page] = None
+        else:
+            self._pinned[page] = n
+
+    def mark_dirty(self, page: int) -> None:
+        assert page in self._slot, f"dirtying unstaged page {page}"
+        self._dirty.add(page)
+
+    def clear_dirty(self, page: int) -> None:
+        self._dirty.discard(page)
+
+    def release_page(self, page: int) -> Optional[int]:
+        """The pool freed ``page``: drop its staging residency without a
+        writeback (the content is dead).  Returns the freed slot."""
+        if page not in self._slot:
+            return None
+        slot = self._slot.pop(page)
+        self._free.append(slot)
+        self._lru.pop(page, None)
+        self._pinned.pop(page, None)
+        self._dirty.discard(page)
+        return slot
+
+
+class TransferEngine:
+    """Asynchronous page mover + the decode launch's host-side gather.
+
+    One instance per serving engine, shared by every layer: page residency
+    is a pool property (all layers stage the same page set), so demand is
+    aggregated across layers and one ``dispatch`` covers them all.
+    """
+
+    def __init__(self, host: HostPageStore):
+        self.host = host
+        # pool pages selected by top-k last step but served from host —
+        # the prefetch predictor's input, newest demand last
+        self.last_misses: Dict[int, int] = {}
+        self.stats: Dict[str, int] = {
+            "h2d_bytes": 0, "d2h_bytes": 0, "h2d_pages": 0, "d2h_pages": 0,
+            "hit_tokens": 0, "miss_tokens": 0, "prefetch_hit_tokens": 0,
+            "prefetched_pages": 0, "callbacks": 0,
+        }
+
+    # -- miss path (io_callback target; runs mid-launch, after top-k) ----
+
+    def host_gather(self, layer, pg, off, need, on_device, pf_hit
+                    ) -> Tuple[np.ndarray, ...]:
+        """Serve host-tier selected tokens exactly + record demand.
+
+        ``need``/``on_device``/``pf_hit`` partition the validly selected
+        tokens (host miss / staged hit / prefetch-lane hit); the miss pages
+        feed :meth:`predict` for the next step's dispatch.
+        """
+        layer = int(layer)
+        pg = np.asarray(pg)
+        need = np.asarray(need, bool)
+        self.stats["callbacks"] += 1
+        self.stats["hit_tokens"] += int(np.asarray(on_device, bool).sum())
+        self.stats["prefetch_hit_tokens"] += int(np.asarray(pf_hit,
+                                                            bool).sum())
+        self.stats["miss_tokens"] += int(need.sum())
+        for p in np.unique(pg[need]):
+            p = int(p)
+            self.last_misses[p] = self.last_misses.get(p, 0) + 1
+        out = self.host.gather(layer, pg, np.asarray(off), need)
+        # the miss path IS host->device traffic: account the fetched
+        # tokens' payload bytes so the prefetch sweep compares real totals
+        self.stats["h2d_bytes"] += sum(int(a[need].nbytes) for a in out)
+        return out
+
+    # -- prefetch (dispatch before the launch, consume after top-k) ------
+
+    def predict(self, depth: int, *, exclude=()) -> List[int]:
+        """Pages to prefetch for the NEXT step: last step's host-miss pages
+        (temporal locality of top-k retrieval), most-demanded first."""
+        ranked = sorted(self.last_misses, key=self.last_misses.get,
+                        reverse=True)
+        out = [p for p in ranked
+               if p not in exclude and p in self.host.valid][:depth]
+        return out
+
+    def step_begin(self) -> None:
+        """Reset the per-step demand window (called before each launch)."""
+        self.last_misses = {}
+
+    def upload(self, pages: Sequence[int], pad_to: Optional[int] = None
+               ) -> Dict[int, Dict[str, "np.ndarray"]]:
+        """Start host->device transfers of whole payload pages, per layer.
+
+        ``jax.device_put`` returns immediately with the transfer in flight.
+        ``pad_to`` zero-pads the page axis to a static length (the prefetch
+        lane's depth) so the consuming launch never retraces.
+        """
+        import jax
+
+        out: Dict[int, Dict[str, np.ndarray]] = {}
+        if not pages:
+            return out
+        for layer in self.host.layers:
+            fields = self.host.read_pages(layer, pages)
+            if pad_to is not None and len(pages) < pad_to:
+                fields = {
+                    f: np.concatenate(
+                        [v, np.zeros((pad_to - len(pages),) + v.shape[1:],
+                                     v.dtype)])
+                    for f, v in fields.items()
+                }
+            # count what device_put actually moves — padding included
+            self.stats["h2d_bytes"] += sum(int(v.nbytes)
+                                           for v in fields.values())
+            out[layer] = {f: jax.device_put(v) for f, v in fields.items()}
+        self.stats["h2d_pages"] += len(pages) * max(1, len(self.host.layers))
+        return out
+
+    def dispatch(self, pages: Sequence[int], depth: int
+                 ) -> Dict[int, Dict[str, "np.ndarray"]]:
+        """Prefetch dispatch: upload predicted-hot pages, padded to the
+        lane depth; the decode launch consumes them after top-k, so the
+        copies overlap its scoring phase."""
+        out = self.upload(pages, pad_to=depth)
+        self.stats["prefetched_pages"] += len(pages)
+        return out
+
+    # -- writeback (device -> host, demotion) ----------------------------
+
+    def writeback(self, layer_rows: Dict[int, Dict[str, np.ndarray]],
+                  page: int) -> None:
+        """Store one page's payload rows (already device_get'ed, one per
+        layer) back to the host tier and mark the host copy current."""
+        for layer, fields in layer_rows.items():
+            self.stats["d2h_bytes"] += self.host.write_pages(
+                layer, [page], {f: v[None] for f, v in fields.items()})
+        self.stats["d2h_pages"] += 1
+        self.host.mark_valid([page])

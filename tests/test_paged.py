@@ -69,6 +69,86 @@ def test_pool_eviction_spares_pages_shared_with_live_slots():
     assert all(pool.refcount[p] == 1 for p in a)
 
 
+def test_pool_exhausted_error_carries_snapshot():
+    """Admission failures must be debuggable from the message alone: the
+    PoolExhausted text embeds the allocator snapshot (free/reserved/
+    registry counts)."""
+    pool = PagePool(num_pages=4, page_size=8)
+    a = pool.allocate(2)
+    pool.register_prefix(("p",), a, prompt_len=10, first_token=1,
+                         slot_state=None)
+    pool.reserve(1)
+    with pytest.raises(PoolExhausted) as exc:
+        pool.allocate(3, protect=("p",))
+    msg = str(exc.value)
+    for key in ["'free': 2", "'reserved': 1", "'num_pages': 4",
+                "'registered_prompts': 1", "'in_use': 2"]:
+        assert key in msg, (key, msg)
+
+
+def test_registry_eviction_is_lru_with_hit_reordering():
+    """Eviction order is least-recently-USED, not insertion: a lookup hit
+    re-inserts the entry, so the oldest untouched prompt evicts first, and
+    eviction frees exactly its (unshared) pages."""
+    pool = PagePool(num_pages=6, page_size=8)
+    ids = {}
+    for name in ["p1", "p2", "p3"]:
+        pg = pool.allocate(2)
+        pool.register_prefix((name,), pg, prompt_len=8, first_token=0,
+                             slot_state=None)
+        pool.release(pg)            # no live slot holds them
+        ids[name] = pg
+    assert pool.lookup_prefix(("p1",)) is not None      # LRU touch
+    pool.allocate(2)                # pressure: must evict p2 (oldest)
+    assert ("p2",) not in pool.registry
+    assert ("p1",) in pool.registry and ("p3",) in pool.registry
+    pool.allocate(2)                # next: p3, never the re-used p1
+    assert ("p3",) not in pool.registry and ("p1",) in pool.registry
+    # p1's pages still hold exactly the registry's reference
+    assert all(pool.refcount[p] == 1 for p in ids["p1"])
+
+
+def test_available_never_counts_protected_entry():
+    """available(protect=key) must exclude the protected registry entry's
+    pages even when nothing else is evictable, and allocate(protect=key)
+    must exhaust rather than evict it."""
+    pool = PagePool(num_pages=4, page_size=8)
+    a = pool.allocate(2)
+    pool.register_prefix(("keep",), a, prompt_len=8, first_token=0,
+                         slot_state=None)
+    pool.release(a)                 # only the registry holds the pages
+    b = pool.allocate(2)
+    pool.register_prefix(("other",), b, prompt_len=8, first_token=0,
+                         slot_state=None)
+    pool.release(b)
+    assert pool.available() == 4
+    assert pool.available(protect=("keep",)) == 2
+    with pytest.raises(PoolExhausted):
+        pool.allocate(3, protect=("keep",))
+    # the unprotected entry was sacrificed in the attempt; never "keep"
+    assert ("keep",) in pool.registry and ("other",) not in pool.registry
+    # shared pages: a live reference makes a registered page uncountable
+    pool.share(a)                   # live slot shares keep's pages
+    assert pool.available() == 2    # keep's pages no longer freeable
+
+
+def test_eviction_frees_exactly_unreferenced_pages():
+    """A registry entry whose pages are PARTIALLY shared with a live slot:
+    eviction drops the registry reference everywhere, but only the
+    unshared pages reach the free list."""
+    pool = PagePool(num_pages=4, page_size=8)
+    pg = pool.allocate(2)
+    pool.register_prefix(("p",), pg, prompt_len=8, first_token=0,
+                         slot_state=None)
+    pool.share([pg[0]])             # a live slot shares only page 0
+    pool.release(pg)                # the admitting slot retires
+    assert pool.available() == 3    # page 1 evictable, page 0 live
+    got = pool.allocate(3)          # forces the eviction
+    assert len(got) == 3 and not pool.registry
+    assert pool.refcount[pg[0]] == 1        # live slot's reference intact
+    assert pg[1] in got or pool.refcount[pg[1]] == 1
+
+
 def test_pages_needed_policy():
     assert pages_needed(28, 8, 8) == 5                      # ceil(36/8)
     assert pages_needed(28, 8, 8, prefix_hit=True) == 2     # 5 - 28//8

@@ -1,0 +1,563 @@
+"""Tiered KV store: staging/host bookkeeping invariants, tiered-vs-dense
+bit-exact decode through every payload tier (staged / prefetch lane / host
+miss, across demotion writebacks), engine parity with the single-tier
+paged engine (incl. CoW divergence, prefix hits, chunked admission, the
+prefetch-commit eviction regression), and the serve-flag guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.core.attention import sikv_decode_attention
+from repro.core.cache import SIKVCache, prefill_compress
+from repro.core.policy import staging_pages_needed, tiered_pool_split
+from repro.data.synthetic import structured_kv
+from repro.launch.serve import validate_serve_flags
+from repro.paged.cache import _paged_view
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           TieredServingEngine)
+from repro.tiered import (PAYLOAD_FIELDS, HostPageStore, StagingCache,
+                          StagingExhausted, TransferEngine,
+                          init_tiered_cache, insert_prefill_tiered,
+                          payload_field_specs, set_prefetch_lane,
+                          tiered_sikv_decode_attention, update_payload_map)
+
+CFG = SIKVConfig(num_sink_tokens=4, token_budget=20, recent_window=4,
+                 obs_window=4)
+
+
+# ---------------------------------------------------------------------------
+# host-side bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_staging_lru_pin_dirty_invariants():
+    st = StagingCache(3)
+    s0, ev = st.acquire(10, pin=True)
+    assert ev == [] and st.pinned_pages == 1
+    s1, _ = st.acquire(11, pin=False)
+    s2, _ = st.acquire(12, pin=False)
+    st.mark_dirty(11)
+    st.touch(11)                       # 12 is now the LRU unpinned page
+    assert st.lru_head() == 12 and st.free_slots == 0
+    _, ev = st.acquire(13, pin=False)  # evicts 12 (clean), never pinned 10
+    assert [e.page for e in ev] == [12] and not ev[0].dirty
+    _, ev = st.acquire(14, pin=False)  # evicts 11 -> dirty writeback owed
+    assert [(e.page, e.dirty) for e in ev] == [(11, True)]
+    assert st.slot_of(10) == s0        # pinned page survived all pressure
+    # all-but-pinned occupied by 13/14; pinning them exhausts eviction
+    st.pin(13), st.pin(14)
+    with pytest.raises(StagingExhausted):
+        st.acquire(15, pin=False)
+    st.unpin(13)
+    st.release_page(13)                # freed page: slot back, no writeback
+    assert st.free_slots == 1
+
+
+def test_host_store_roundtrip_and_gather():
+    host = HostPageStore(4)
+    host.ensure_layer(0, {"kmag": ((2, 4, 8), np.dtype(np.int8)),
+                          "k_scale": ((2, 4, 1), np.dtype(np.float32))})
+    rng = np.random.default_rng(0)
+    fields = {"kmag": rng.integers(-8, 8, (2, 2, 4, 8), dtype=np.int8),
+              "k_scale": rng.normal(size=(2, 2, 4, 1)).astype(np.float32)}
+    host.write_pages(0, [1, 3], fields)
+    host.mark_valid([1, 3])
+    back = host.read_pages(0, [3, 1])
+    np.testing.assert_array_equal(back["kmag"], fields["kmag"][[1, 0]])
+    # token gather: zeros where ~need, host rows where need
+    pg = np.array([[[1, 3, 0]]])
+    off = np.array([[[2, 0, 1]]])
+    need = np.array([[[True, True, False]]])
+    host2 = HostPageStore(4)
+    host2.ensure_layer(0, {f: ((1, 4, 2), np.dtype(np.float32))
+                           for f in PAYLOAD_FIELDS})
+    data = {f: rng.normal(size=(4, 1, 4, 2)).astype(np.float32)
+            for f in PAYLOAD_FIELDS}
+    for f in PAYLOAD_FIELDS:
+        host2._layers[0][f][:] = data[f]
+    host2.mark_valid([0, 1, 2, 3])
+    out = host2.gather(0, pg, off, need)
+    for f, arr in zip(PAYLOAD_FIELDS, out):
+        np.testing.assert_array_equal(arr[0, 0, 0], data[f][1, 0, 2])
+        np.testing.assert_array_equal(arr[0, 0, 2], 0.0)
+
+
+def test_transfer_engine_demand_prediction():
+    host = HostPageStore(8)
+    host.ensure_layer(0, {f: ((1, 2, 1), np.dtype(np.float32))
+                          for f in PAYLOAD_FIELDS})
+    host.mark_valid([2, 5])
+    xfer = TransferEngine(host)
+    pg = np.array([[[2, 2, 5, 7]]])
+    off = np.zeros_like(pg)
+    need = np.array([[[True, True, True, True]]])
+    none = np.zeros_like(need)
+    xfer.host_gather(0, pg, off, need, none, none)
+    # page 2 demanded twice -> ranked first; page 7 has no valid host copy
+    assert xfer.predict(4) == [2, 5]
+    assert xfer.predict(4, exclude={2}) == [5]
+    xfer.step_begin()
+    assert xfer.predict(4) == []
+
+
+def test_tiered_pool_split_budget_math():
+    # budget = staging+lane payload + N index pages (incl. map entries)
+    n = tiered_pool_split(10_000, 96, 400, staging_pages=4,
+                          prefetch_depth=2)
+    assert n == (10_000 - 6 * 400) // 100
+    with pytest.raises(ValueError, match="cannot hold"):
+        tiered_pool_split(2_450, 96, 400, staging_pages=4,
+                          prefetch_depth=2)
+    assert staging_pages_needed(4) > 4
+
+
+# ---------------------------------------------------------------------------
+# cache-level bit-exactness vs the dense path, tier by tier
+# ---------------------------------------------------------------------------
+
+def _tiered_setup(dense: SIKVCache, B, num_pages, ps, staging, depth):
+    """Tiered cache + host store populated with the prompt payload; every
+    slot's pages fully mapped in the block table; only each prompt's tail
+    page staged (slot b -> staging slot b)."""
+    cap = dense.capacity
+    pps = cap // ps
+    t = init_tiered_cache(dense, num_pages, ps, staging, depth, B, 0)
+    host = HostPageStore(num_pages)
+    host.ensure_layer(0, payload_field_specs(dense, ps))
+    xfer = TransferEngine(host)
+    pages = {}
+    next_page = 0
+    for b in range(B):
+        ids = list(range(next_page, next_page + pps))
+        next_page += pps
+        pages[b] = ids
+        n_prompt = (int(dense.length[b]) + ps - 1) // ps
+        row = SIKVCache(*[x[b:b + 1] for x in dense])
+        # the whole page list is pre-mapped (the engine maps decode pages
+        # incrementally via ensure_writable; this harness owns them all)
+        t = insert_prefill_tiered(
+            t, row, jnp.asarray(b), jnp.asarray(ids, jnp.int32),
+            jnp.asarray(n_prompt - 1), jnp.asarray(ids[n_prompt - 1]),
+            jnp.asarray(b))
+        views = {f: np.asarray(_paged_view(getattr(row, f)[0], pps, ps))
+                 for f in PAYLOAD_FIELDS}
+        host.write_pages(0, ids[:n_prompt],
+                         {f: v[:n_prompt] for f, v in views.items()})
+        host.mark_valid(ids[:n_prompt])
+    # demote everything but the tails: the staged tail stays slot b
+    t = update_payload_map(
+        t, jnp.arange(num_pages, dtype=jnp.int32),
+        jnp.full((num_pages,), -1, jnp.int32))
+    tails, tslots = [], []
+    for b in range(B):
+        n_prompt = (int(dense.length[b]) + ps - 1) // ps
+        tails.append(pages[b][n_prompt - 1])
+        tslots.append(b)
+    t = update_payload_map(t, jnp.asarray(tails, jnp.int32),
+                           jnp.asarray(tslots, jnp.int32))
+    return t, host, xfer, pages
+
+
+def _writeback_page(t, host, page, slot):
+    rows = {f: np.asarray(getattr(t, f)[slot])[None]
+            for f in PAYLOAD_FIELDS}
+    host.write_pages(0, [page], rows)
+    host.mark_valid([page])
+
+
+def _assert_all_fields_match(t, host, dense, pages, ps):
+    """EVERY cache field of the tiered store equals the dense cache's,
+    wherever the data lives (index pool / staging / host tier), over each
+    sequence's valid token range; per-slot state must be bit-identical."""
+    B = dense.length.shape[0]
+    np.testing.assert_array_equal(np.asarray(t.length),
+                                  np.asarray(dense.length))
+    for f in ("sink_k", "sink_v", "res_k", "res_v", "mu", "alpha",
+              "centroids"):
+        np.testing.assert_array_equal(np.asarray(getattr(t, f)),
+                                      np.asarray(getattr(dense, f)),
+                                      err_msg=f)
+    pmap = np.asarray(t.payload_map)
+    for b in range(B):
+        L = int(dense.length[b])
+        for f in ("codes", "sink_mask") + PAYLOAD_FIELDS:
+            dense_view = np.asarray(getattr(dense, f)[b])     # (H, L, ...)
+            if f in ("codes", "sink_mask"):
+                pool = np.asarray(getattr(t, f))
+                rows = np.stack([pool[pages[b][i]]
+                                 for i in range(len(pages[b]))])
+            else:
+                stg = np.asarray(getattr(t, f))
+                rows = []
+                for pg in pages[b]:
+                    if pmap[pg] >= 0:
+                        rows.append(stg[pmap[pg]])
+                    elif pg in host.valid:
+                        rows.append(host.read_pages(0, [pg])[f][0])
+                    else:  # never-written decode page: only pads beyond L
+                        rows.append(np.zeros_like(stg[0]))
+                rows = np.stack(rows)
+            # (n_pages, H, ps, ...) -> (H, n_pages * ps, ...)
+            logical = np.moveaxis(rows, 0, 1).reshape(
+                rows.shape[1], -1, *rows.shape[3:])
+            np.testing.assert_array_equal(
+                logical[:, :L], dense_view[:, :L],
+                err_msg=f"slot {b} field {f}")
+
+
+def test_tiered_decode_bitexact_with_demotion_writeback(rng):
+    """Decode through the tiered cache with the prompt payload HOST-tier
+    (exact io_callback misses) and write pages demoted at every boundary
+    (writeback, slot reuse): bit-identical to the dense cache, step for
+    step, across page boundaries and re-reads of demoted decode pages."""
+    B, Hkv, Hq, Lp, D = 2, 2, 4, 28, 32
+    ps, cap = 8, 48
+    k, v = structured_kv(rng, B, Hkv, Lp, D)
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, 4, D))
+    dense = prefill_compress(k, v, q_obs, CFG, capacity=cap,
+                             scale_dtype=jnp.float32)
+    t, host, xfer, pages = _tiered_setup(dense, B, 16, ps, B + 1, 0)
+    dc = dense
+    key = jax.random.PRNGKey(7)
+    cur_page = {b: pages[b][(Lp - 1) // ps] for b in range(B)}
+    for step in range(14):  # crosses two page boundaries per slot
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        q = jax.random.normal(k1, (B, Hq, 1, D))
+        kn = jax.random.normal(k2, (B, Hkv, 1, D))
+        vn = jax.random.normal(k3, (B, Hkv, 1, D))
+        # host-side write-page maintenance (what the engine's prep does):
+        # demote the finished page (writeback to host), stage the new one
+        for b in range(B):
+            pos = int(t.length[b])
+            pg = pages[b][pos // ps]
+            if pg != cur_page[b]:
+                _writeback_page(t, host, cur_page[b], b)
+                t = update_payload_map(t, jnp.asarray([cur_page[b], pg]),
+                                       jnp.asarray([-1, b]))
+                cur_page[b] = pg
+        out_d, dc = sikv_decode_attention(q, kn, vn, dc, CFG)
+        out_t, t = tiered_sikv_decode_attention(q, kn, vn, t, CFG,
+                                                xfer.host_gather)
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_t),
+                                      err_msg=f"step {step}")
+    assert xfer.stats["miss_tokens"] > 0      # host tier really served reads
+    assert host.stats["page_writes"] > 2 * B  # demotion writebacks happened
+    # before the final comparison the open write pages are still staged
+    # only — flush them so the logical view is reconstructable everywhere
+    for b in range(B):
+        _writeback_page(t, host, cur_page[b], b)
+    _assert_all_fields_match(t, host, dc, pages, ps)
+
+
+def test_tiered_decode_prefetch_lane_is_consumed_exactly(rng):
+    """Pages moved into the prefetch lane (as in-flight device_put arrays)
+    serve top-k winners bit-exactly, and lane hits are not counted (or
+    fetched) as host misses."""
+    B, Hkv, Hq, Lp, D = 1, 2, 4, 24, 32
+    ps, cap = 8, 32
+    k, v = structured_kv(rng, B, Hkv, Lp, D)
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, 4, D))
+    dense = prefill_compress(k, v, q_obs, CFG, capacity=cap,
+                             scale_dtype=jnp.float32)
+    t0, host, xfer, pages = _tiered_setup(dense, B, 8, ps, 2, 2)
+    key = jax.random.PRNGKey(3)
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    q = jax.random.normal(k1, (B, Hq, 1, D))
+    kn = jax.random.normal(k2, (B, Hkv, 1, D))
+    vn = jax.random.normal(k3, (B, Hkv, 1, D))
+
+    out_ref, _ = tiered_sikv_decode_attention(q, kn, vn, t0, CFG,
+                                              xfer.host_gather)
+    misses_without_lane = xfer.stats["miss_tokens"]
+    assert misses_without_lane > 0
+
+    lane_pages = pages[0][:2]                 # host-tier prompt pages
+    fields = xfer.upload(lane_pages, pad_to=2)[0]
+    t1 = set_prefetch_lane(t0, jnp.asarray(lane_pages, jnp.int32), fields)
+    xfer.stats["miss_tokens"] = 0
+    out_lane, _ = tiered_sikv_decode_attention(q, kn, vn, t1, CFG,
+                                               xfer.host_gather)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(out_lane))
+    assert xfer.stats["prefetch_hit_tokens"] > 0
+    assert xfer.stats["miss_tokens"] < misses_without_lane
+
+
+def test_tiered_kernel_path_matches_dense_kernel_path(rng):
+    """cfg.use_kernels: tiered gather (incl. host misses) feeds the fused
+    dequant-attention kernel bit-identically to the dense kernel path."""
+    cfg = dataclasses.replace(CFG, use_kernels=True)
+    B, Hkv, Hq, Lp, D = 1, 2, 4, 24, 32
+    ps, cap = 8, 32
+    k, v = structured_kv(rng, B, Hkv, Lp, D)
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, 4, D))
+    dense = prefill_compress(k, v, q_obs, cfg, capacity=cap,
+                             scale_dtype=jnp.float32)
+    t, host, xfer, pages = _tiered_setup(dense, B, 8, ps, 2, 0)
+    dc = dense
+    key = jax.random.PRNGKey(5)
+    for step in range(3):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        q = jax.random.normal(k1, (B, Hq, 1, D))
+        kn = jax.random.normal(k2, (B, Hkv, 1, D))
+        vn = jax.random.normal(k3, (B, Hkv, 1, D))
+        out_d, dc = sikv_decode_attention(q, kn, vn, dc, cfg)
+        out_t, t = tiered_sikv_decode_attention(q, kn, vn, t, cfg,
+                                                xfer.host_gather)
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_t),
+                                      err_msg=f"step {step}")
+    assert xfer.stats["miss_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# engine + scheduler integration
+# ---------------------------------------------------------------------------
+
+ENG_CFG = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
+                     obs_window=8)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(cfg, lens, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (l,), 1, cfg.vocab_size)]
+        for i, l in enumerate(lens)
+    ]
+
+
+def _engines(params, cfg, tiered_kw=None, **kw):
+    paged = PagedServingEngine(params, cfg, ENG_CFG, **kw)
+    tiered = TieredServingEngine(params, cfg, ENG_CFG, **kw,
+                                 **(tiered_kw or {}))
+    return paged, tiered
+
+
+def test_tiered_engine_matches_paged_engine(engine_setup):
+    """Identical admit/step/retire stream through both engines: bit-exact
+    logits => identical tokens, through a retire + refill cycle."""
+    params, cfg = engine_setup
+    prompts = _prompts(cfg, [9, 16, 5], seed=5)
+    outs = {}
+    for name in ["paged", "tiered"]:
+        kw = dict(batch_size=2, prompt_len=16, max_new_tokens=8,
+                  page_size=4)
+        eng = (PagedServingEngine(params, cfg, ENG_CFG, **kw)
+               if name == "paged" else
+               TieredServingEngine(params, cfg, ENG_CFG, staging_pages=3,
+                                   prefetch_depth=2, **kw))
+        seq = [eng.admit(0, prompts[0]), eng.admit(1, prompts[1])]
+        for _ in range(5):
+            seq.extend(eng.step())
+        eng.retire(0)
+        seq.append(eng.step()[1])
+        eng.admit(0, prompts[2])        # refill mid-decode
+        for _ in range(3):
+            seq.extend(eng.step())
+        outs[name] = seq
+        if name == "tiered":
+            t = eng.tier_stats()
+            assert t["miss_tokens"] > 0 or t["hit_tokens"] > 0
+            assert eng.host_store_bytes() > 0
+            assert eng.token_store_bytes() > 0
+    assert outs["tiered"] == outs["paged"]
+
+
+def test_tiered_scheduler_parity_under_demotion_pressure(engine_setup):
+    """The regression config for the prefetch-commit eviction bug: a tight
+    staging cache (one floating slot), prefetch on, retire+refill churn —
+    every request's tokens must match the single-tier engine."""
+    params, cfg = engine_setup
+    prompt_len, max_new, ps = 48, 8, 4
+    prompts = _prompts(cfg, [48, 40, 48, 44, 48, 36], seed=17)
+    res = {}
+    for name in ["paged", "tiered"]:
+        kw = dict(batch_size=2, prompt_len=prompt_len,
+                  max_new_tokens=max_new, page_size=ps)
+        eng = (PagedServingEngine(params, cfg, ENG_CFG, **kw)
+               if name == "paged" else
+               TieredServingEngine(params, cfg, ENG_CFG, staging_pages=3,
+                                   prefetch_depth=2, **kw))
+        sched = RequestScheduler(eng)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(uid=i, prompt=list(p),
+                                 max_new_tokens=max_new))
+        assert sched.run() == len(prompts)
+        res[name] = {u: sched.completed[u].result
+                     for u in sorted(sched.completed)}
+        if name == "tiered":
+            t = eng.tier_stats()
+            # the tiers were genuinely exercised
+            assert eng.stats["demotions"] > 0
+            assert t["prefetched_pages"] > 0
+            assert 0.0 <= t["staging_hit_rate"] <= 1.0
+    assert res["tiered"] == res["paged"]
+
+
+def test_tiered_prefix_hit_skips_prefill_and_reopens_host_tail(
+        engine_setup):
+    """An identical prompt re-uses registered pages + statistics without a
+    prefill; its first append re-opens the registered tail page from the
+    HOST tier (or CoWs it when shared), staying bit-exact with the paged
+    engine through the divergence."""
+    params, cfg = engine_setup
+    p = _prompts(cfg, [9], seed=11)[0]
+    outs = {}
+    for name in ["paged", "tiered"]:
+        kw = dict(batch_size=2, prompt_len=16, max_new_tokens=8,
+                  page_size=4)
+        eng = (PagedServingEngine(params, cfg, ENG_CFG, **kw)
+               if name == "paged" else
+               TieredServingEngine(params, cfg, ENG_CFG, staging_pages=3,
+                                   prefetch_depth=0, **kw))
+        out = [eng.admit(0, p)]
+        prefills = eng.stats["prefills"]
+        out.append(eng.admit(1, p))
+        assert eng.stats["prefills"] == prefills        # hit: no prefill
+        assert eng.last_admit["prefix_hit"] is True
+        for _ in range(4):
+            out.extend(eng.step())
+        outs[name] = out
+        if name == "tiered":
+            assert eng.slots.cow_copies >= 1
+    assert outs["tiered"] == outs["paged"]
+
+
+def test_tiered_chunked_admission_parity(engine_setup):
+    params, cfg = engine_setup
+    res = {}
+    for name in ["paged", "tiered"]:
+        kw = dict(batch_size=2, prompt_len=16, max_new_tokens=8,
+                  page_size=4, prefill_chunk=5)
+        eng = (PagedServingEngine(params, cfg, ENG_CFG, **kw)
+               if name == "paged" else
+               TieredServingEngine(params, cfg, ENG_CFG, staging_pages=3,
+                                   prefetch_depth=2, **kw))
+        sched = RequestScheduler(eng)
+        for i, pl in enumerate([4, 16, 9]):
+            sched.submit(Request(uid=i,
+                                 prompt=_prompts(cfg, [pl], seed=20 + i)[0],
+                                 max_new_tokens=6))
+        assert sched.run() == 3
+        res[name] = {u: sched.completed[u].result
+                     for u in sorted(sched.completed)}
+    assert res["tiered"] == res["paged"]
+
+
+def test_staging_capacity_bounds_concurrency_not_completion(engine_setup):
+    """staging_pages below batch_size: every live slot pins a write page,
+    so peak concurrency is capped at the staging size — but the scheduler
+    queues and completes everything (demote-don't-deadlock)."""
+    params, cfg = engine_setup
+    eng = TieredServingEngine(params, cfg, ENG_CFG, batch_size=4,
+                              prompt_len=16, max_new_tokens=8, page_size=4,
+                              staging_pages=2, prefetch_depth=0)
+    sched = RequestScheduler(eng)
+    for i, pl in enumerate([16, 8, 4, 12, 6]):
+        sched.submit(Request(uid=i, prompt=_prompts(cfg, [pl], seed=i)[0],
+                             max_new_tokens=4))
+    assert sched.run() == 5
+    assert sched.peak_active <= 2
+    assert all(len(sched.completed[i].result) == 4 for i in range(5))
+
+
+def test_tiered_engine_handles_hybrid_mamba_arch():
+    """Hybrid (attention + Mamba2) stacks: SIKV layers tier their pages,
+    Mamba state layers stay dense per-slot rows — parity with the paged
+    engine, which already supports them (regression: the tiered init once
+    zeroed a MambaState NamedTuple as if it were one array)."""
+    cfg = reduced_config(get_model_config("zamba2-2.7b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    assert "mamba2" in cfg.resolved_layer_pattern
+    from repro.models import init_params
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    p = _prompts(cfg, [9, 5], seed=7)
+    outs = {}
+    for name in ["paged", "tiered"]:
+        kw = dict(batch_size=2, prompt_len=16, max_new_tokens=8,
+                  page_size=4)
+        eng = (PagedServingEngine(params, cfg, ENG_CFG, **kw)
+               if name == "paged" else
+               TieredServingEngine(params, cfg, ENG_CFG, staging_pages=3,
+                                   prefetch_depth=2, **kw))
+        seq = [eng.admit(0, p[0]), eng.admit(1, p[1])]
+        for _ in range(4):
+            seq.extend(eng.step())
+        outs[name] = seq
+    assert outs["tiered"] == outs["paged"]
+
+
+def test_tiered_engine_rejects_nonpositive_staging(engine_setup):
+    params, cfg = engine_setup
+    with pytest.raises(ValueError, match="staging_pages must be positive"):
+        TieredServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                            prompt_len=16, max_new_tokens=8, page_size=4,
+                            staging_pages=0)
+
+
+def test_retire_drops_staging_and_host_state(engine_setup):
+    params, cfg = engine_setup
+    eng = TieredServingEngine(params, cfg, ENG_CFG, batch_size=2,
+                              prompt_len=16, max_new_tokens=8, page_size=4,
+                              staging_pages=3, prefetch_depth=0,
+                              prefix_caching=False)
+    eng.admit(0, _prompts(cfg, [9], seed=1)[0])
+    eng.step()
+    pages = set(eng.slots.slot_pages(0))
+    assert eng.staging.pinned_pages == 1
+    assert pages & eng.host.valid
+    eng.retire(0)
+    assert eng.staging.pinned_pages == 0
+    assert eng.staging.resident_pages == 0
+    assert not (pages & eng.host.valid)     # host copies dropped with refs
+
+
+def test_device_bytes_shrink_vs_paged(engine_setup):
+    """Same pool geometry: the tiered engine's device token store must be
+    a small fraction of the single-tier pool's (payload evicted), with the
+    payload accounted host-side instead."""
+    params, cfg = engine_setup
+    kw = dict(batch_size=2, prompt_len=16, max_new_tokens=8, page_size=4)
+    paged = PagedServingEngine(params, cfg, ENG_CFG, **kw)
+    tiered = TieredServingEngine(params, cfg, ENG_CFG, staging_pages=2,
+                                 prefetch_depth=0, **kw)
+    p = _prompts(cfg, [9], seed=2)[0]
+    paged.admit(0, list(p))
+    tiered.admit(0, list(p))
+    assert tiered.token_store_bytes() < paged.token_store_bytes()
+    assert tiered.host_store_bytes() > 0
+
+
+# ---------------------------------------------------------------------------
+# serve-flag guards
+# ---------------------------------------------------------------------------
+
+def test_serve_flag_guards():
+    ok = dict(paged=True, method="sikv", host_pages=True, staging_pages=4,
+              prefetch_depth=2)
+    validate_serve_flags(**ok)
+    validate_serve_flags(paged=False, method="quest", host_pages=False,
+                         staging_pages=None, prefetch_depth=None)
+    with pytest.raises(ValueError, match="needs the page pool"):
+        validate_serve_flags(paged=False, method="sikv", host_pages=True,
+                             staging_pages=None, prefetch_depth=None)
+    with pytest.raises(ValueError, match="--staging-pages"):
+        validate_serve_flags(paged=True, method="sikv", host_pages=False,
+                             staging_pages=4, prefetch_depth=None)
+    with pytest.raises(ValueError, match="--prefetch-depth"):
+        validate_serve_flags(paged=False, method="sikv", host_pages=False,
+                             staging_pages=None, prefetch_depth=2)
+    with pytest.raises(ValueError, match="drop --paged"):
+        validate_serve_flags(paged=True, method="quest", host_pages=False,
+                             staging_pages=None, prefetch_depth=None)
