@@ -35,7 +35,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, header
+from benchmarks.common import assert_ratio, emit, header
 from repro.config import SIKVConfig, get_model_config, reduced_config
 from repro.core.cache import init_cache
 from repro.core.policy import staging_pages_needed, tiered_pool_split
@@ -104,26 +104,28 @@ def run(*, batch: int = 2, prompt_len: int = 64, n_requests: int = 6,
     assert results["continuous"] < results["lockstep"], results
 
     results["paged"] = paged_concurrency(params, cfg, sikv,
-                                         prompt_len=prompt_len)
+                                         prompt_len=prompt_len, smoke=smoke)
     if smoke:
         results["tiered"] = tiered_concurrency(
             params, cfg, sikv, prompt_len=32, page_size=4, max_new=8,
-            n_requests=6, assert_ratio=1.0)
+            n_requests=6, ratio_floor=1.0, smoke=True)
         results["prefetch"] = tiered_prefetch_sweep(
             params, cfg, sikv, prompt_len=32, page_size=4, max_new=8,
             depths=(0, 2))
-    else:
-        results["tiered"] = tiered_concurrency(params, cfg, sikv)
-        results["prefetch"] = tiered_prefetch_sweep(params, cfg, sikv)
-    if smoke:
         # exercise the chunked-admission path + emit the stall metrics at
         # CI-friendly shapes; at toy sizes launch overhead dominates the
         # stall, so the 4x/10% acceptance bars only apply to the full run
         results["stall"] = chunked_admission_stall(
             arch, prompt_len=64, chunk=16, d_model=256, num_layers=2,
-            live_new=8, assert_ratio=1.0, max_ttft_regression=float("inf"))
+            live_new=8, smoke=True)
+        results["spec"] = spec_decode_section(
+            arch, prompt_len=32, max_new=12, n_requests=4, train_steps=60,
+            smoke=True)
     else:
+        results["tiered"] = tiered_concurrency(params, cfg, sikv)
+        results["prefetch"] = tiered_prefetch_sweep(params, cfg, sikv)
         results["stall"] = chunked_admission_stall(arch)
+        results["spec"] = spec_decode_section(arch)
     return results
 
 
@@ -143,7 +145,8 @@ def _repeat_prompts(cfg, prompt_len: int, repeats: int = 3):
 
 
 def paged_concurrency(params, cfg, sikv, *, prompt_len: int = 64,
-                      page_size: int = 16, dense_slots: int = 2):
+                      page_size: int = 16, dense_slots: int = 2,
+                      smoke: bool = False):
     """Max concurrent sequences under a FIXED token-store budget.
 
     The budget is what ``dense_slots`` dense slots allocate; the paged
@@ -211,8 +214,10 @@ def paged_concurrency(params, cfg, sikv, *, prompt_len: int = 64,
          f"ratio={ratio:.2f}x;"
          f"paged_bytes_over_dense={paged_bytes / dense_bytes:.3f}")
     assert done_p == done_d, (done_p, done_d)
-    assert sched_p.peak_active >= 2 * sched_d.peak_active, (
-        sched_p.peak_active, sched_d.peak_active)
+    # the paged pool's page admission + prefix sharing hold at smoke shapes
+    # too (no launch-overhead dependence), so the 2x bar is NOT relaxed
+    assert_ratio("paged concurrency vs dense @ equal HBM", ratio, 2.0,
+                 smoke=smoke, smoke_relaxed=2.0)
     return {"dense_peak": sched_d.peak_active,
             "paged_peak": sched_p.peak_active}
 
@@ -227,7 +232,7 @@ def _distinct_requests(cfg, n: int, prompt_len: int, max_new: int):
 def tiered_concurrency(params, cfg, sikv, *, prompt_len: int = 256,
                        page_size: int = 8, max_new: int = 8,
                        dense_slots: int = 4, n_requests: int = 14,
-                       assert_ratio: float = 3.0):
+                       ratio_floor: float = 3.0, smoke: bool = False):
     """Headline: concurrent sequences under a FIXED device byte budget.
 
     The budget is what a single-tier paged pool holding ``dense_slots``
@@ -235,7 +240,7 @@ def tiered_concurrency(params, cfg, sikv, *, prompt_len: int = 256,
     SAME budget on a staging pool + prefetch lane + sign-code index pages
     (``policy.tiered_pool_split``): index pages are a small fraction of a
     full page, so the same bytes index several times more tokens — and
-    admission, which is per-page, sustains >= ``assert_ratio`` x the
+    admission, which is per-page, sustains >= ``ratio_floor`` x the
     concurrent sequences (measured ``peak_active``; asserted at full
     shapes, relaxed at smoke shapes).  Prompts are all DISTINCT, so prefix
     sharing contributes nothing — the win is pure payload offload.
@@ -275,7 +280,7 @@ def tiered_concurrency(params, cfg, sikv, *, prompt_len: int = 256,
     D = eng_p._caches[0]["self"].head_dim
     template = init_cache(sikv, 1, H, cap, D, scale_dtype=jnp.bfloat16)
     ib, pb = page_byte_split(template, page_size)
-    target = int(dense_slots * assert_ratio) + 1
+    target = int(dense_slots * ratio_floor) + 1
     staging = staging_pages_needed(target)
     prefetch = 2
     per_layer = paged_bytes // n_layers
@@ -321,10 +326,8 @@ def tiered_concurrency(params, cfg, sikv, *, prompt_len: int = 256,
     assert tiered_bytes <= paged_bytes, (
         f"tiered device bytes {tiered_bytes} exceed the "
         f"budget {paged_bytes}")
-    assert ratio >= assert_ratio, (
-        f"tiered store should sustain >= {assert_ratio}x the concurrency "
-        f"of the single-tier pool at equal device bytes, measured "
-        f"{ratio:.2f}x")
+    assert_ratio("tiered concurrency vs single-tier @ equal device bytes",
+                 ratio, ratio_floor, smoke=smoke, smoke_relaxed=1.0)
     return {"paged_peak": sched_p.peak_active,
             "tiered_peak": sched_t.peak_active, "ratio": ratio,
             "tpot_penalty": tpot_pen}
@@ -371,8 +374,9 @@ def tiered_prefetch_sweep(params, cfg, sikv, *, prompt_len: int = 128,
 def chunked_admission_stall(arch: str = "llama3.1-8b", *,
                             prompt_len: int = 1024, chunk: int = 96,
                             d_model: int = 512, num_layers: int = 4,
-                            live_new: int = 32, assert_ratio: float = 4.0,
-                            max_ttft_regression: float = 1.10):
+                            live_new: int = 32, ratio_floor: float = 4.0,
+                            max_ttft_regression: float = 1.10,
+                            smoke: bool = False):
     """Head-of-line blocking: a live decode slot vs a long-prompt admission.
 
     One short request decodes ``live_new`` tokens; mid-stream a
@@ -380,7 +384,7 @@ def chunked_admission_stall(arch: str = "llama3.1-8b", *,
     live request's worst inter-token gap (``max_decode_stall``), the long
     request's TTFT, and the decode steps the engine ran during the long
     admission.  Acceptance: chunked admission cuts the stall by
-    ``assert_ratio`` (default 4x) with TTFT within
+    ``ratio_floor`` (default 4x) with TTFT within
     ``max_ttft_regression`` (default 10%; in practice chunking IMPROVES
     TTFT here, because chunks cover only ``ceil(len/chunk)`` of the padded
     prompt row while the monolithic program always pays all ``prompt_len``
@@ -441,13 +445,109 @@ def chunked_admission_stall(arch: str = "llama3.1-8b", *,
     emit("serving/stall/summary", 0.0,
          f"stall_reduction={ratio:.2f}x;ttft_regression={ttft_reg:.3f};"
          f"chunks={-(-prompt_len // chunk)}")
-    assert ratio >= assert_ratio, (
-        f"chunked admission should cut max decode stall >= "
-        f"{assert_ratio}x, measured {ratio:.2f}x", out)
-    assert ttft_reg <= max_ttft_regression, (
-        f"chunked admission TTFT regression {ttft_reg:.3f} > "
-        f"{max_ttft_regression}", out)
+    assert_ratio("chunked admission stall reduction", ratio, ratio_floor,
+                 smoke=smoke, smoke_relaxed=1.0, detail=str(out))
+    assert_ratio("chunked admission TTFT regression", ttft_reg,
+                 max_ttft_regression, ceiling=True, smoke=smoke,
+                 smoke_relaxed=None, detail=str(out))
     return {"stall_reduction": ratio, "ttft_regression": ttft_reg}
+
+
+def spec_decode_section(arch: str = "llama3.1-8b", *, prompt_len: int = 64,
+                        max_new: int = 24, n_requests: int = 6,
+                        spec_depth: int = 4, spec_draft_k: int = 4,
+                        train_steps: int = 120, ratio_floor: float = 1.5,
+                        smoke: bool = False):
+    """Self-speculative decoding: engine launches per generated token.
+
+    Spec decode replaces one decode launch PER TOKEN with two launches PER
+    WINDOW (draft at ``spec_draft_k``, exact verify of ``spec_depth + 1``
+    positions), so the launch rate drops by ``(accepted + 1) / 2`` — the
+    headline TPOT lever on hardware where decode is dispatch/latency-bound.
+    Acceptance is a property of the MODEL: on random weights greedy argmax
+    is a coin flip under any perturbation (near-uniform logits), which
+    measures nothing, so this section first trains the tiny model for
+    ``train_steps`` (~20 s) on the Markov synthetic task — sharp
+    conditionals give the draft a fair chance, exactly as on a real
+    checkpoint.  Emitted per engine: accept rate, launches per generated
+    token, and the spec/baseline launch ratio (asserted >=
+    ``ratio_floor`` for the dense engine at full shapes; the paged and
+    tiered rows additionally exercise page-release and staged-payload
+    rollback under real traffic).  Outputs are asserted IDENTICAL to plain
+    greedy decode — speculation changes the launch count, never a token.
+    """
+    header("bench_serving: self-speculative decoding (1-bit-index drafts)")
+    import dataclasses
+
+    from repro.launch.train import train
+    params, _ = train(arch, steps=train_steps, batch=8,
+                      seq_len=2 * prompt_len, d_model=128, num_layers=2,
+                      lr=1e-3, log_every=max(train_steps // 2, 1))
+    cfg = reduced_config(get_model_config(arch), num_layers=2, d_model=128)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    sikv = SIKVConfig(num_sink_tokens=8, token_budget=40, recent_window=8,
+                      obs_window=8)
+    toks = lm_sequence_batch(jax.random.PRNGKey(11), n_requests, prompt_len,
+                             cfg.vocab_size)
+    plens = [prompt_len, prompt_len // 2, 3 * prompt_len // 4]
+    reqs = [Request(uid=i,
+                    prompt=[int(t) for t in toks[i, : plens[i % 3]]],
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+    page_size = 8
+    spec = dict(spec_depth=spec_depth, spec_draft_k=spec_draft_k)
+    engines = {
+        "baseline": lambda: ServingEngine(
+            params, cfg, sikv, method="sikv", batch_size=2,
+            prompt_len=prompt_len, max_new_tokens=max_new),
+        "dense": lambda: ServingEngine(
+            params, cfg, sikv, method="sikv", batch_size=2,
+            prompt_len=prompt_len, max_new_tokens=max_new, **spec),
+        "paged": lambda: PagedServingEngine(
+            params, cfg, sikv, batch_size=2, prompt_len=prompt_len,
+            max_new_tokens=max_new, page_size=page_size, **spec),
+        "tiered": lambda: TieredServingEngine(
+            params, cfg, sikv, batch_size=2, prompt_len=prompt_len,
+            max_new_tokens=max_new, page_size=page_size, prefetch_depth=2,
+            **spec),
+    }
+    out = {}
+    results = {}
+    for name, mk in engines.items():
+        eng = mk()
+        sched = RequestScheduler(eng)
+        for r in reqs:
+            sched.submit(Request(uid=r.uid, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens))
+        t0 = time.time()
+        sched.run()
+        dt = time.time() - t0
+        stats = sched.service_stats()
+        dec_toks = sum(r.decode_tokens for r in sched.completed.values())
+        lpt = eng.decode_launches() / max(1, dec_toks)
+        out[name] = {"lpt": lpt, "accept": stats["spec_accept_rate"]}
+        results[name] = {u: sched.completed[u].result
+                         for u in sched.completed}
+        emit(f"serving/spec/{name}", dt * 1e6,
+             f"spec_depth={eng.spec_depth};spec_draft_k={spec_draft_k};"
+             f"decode_tokens={dec_toks};"
+             f"decode_launches={eng.decode_launches()};"
+             f"launches_per_token={lpt:.3f};"
+             f"accept_rate={stats['spec_accept_rate']:.3f};"
+             f"spec_steps={eng.stats.get('spec_steps', 0)};"
+             f"tpot_ms={stats['tpot_mean'] * 1e3:.2f}")
+        # distribution identity: speculation must never change a token
+        assert results[name] == results["baseline"], (
+            f"{name} spec output diverged from plain greedy decode")
+    ratio = out["baseline"]["lpt"] / max(out["dense"]["lpt"], 1e-9)
+    emit("serving/spec/summary", 0.0,
+         f"launch_reduction={ratio:.2f}x;"
+         f"accept_rate={out['dense']['accept']:.3f};"
+         f"spec_depth={spec_depth};train_steps={train_steps}")
+    assert_ratio("spec decode launch reduction", ratio, ratio_floor,
+                 smoke=smoke, smoke_relaxed=1.0, detail=str(out))
+    return {"launch_reduction": ratio,
+            "accept_rate": out["dense"]["accept"]}
 
 
 if __name__ == "__main__":

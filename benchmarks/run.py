@@ -1,11 +1,12 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus section headers on
-stdout).  ``python -m benchmarks.run [--only <name>] [--emit-json F]`` —
+stdout).  ``python -m benchmarks.run [--only <name>] [--emit-json [F]]`` —
 ``--emit-json`` additionally writes every row as structured JSON (derived
-``k=v`` pairs parsed into a dict), the machine-readable result file the CI
-smoke job uploads as an artifact so the perf trajectory is diffable across
-commits.
+``k=v`` pairs parsed into a dict); without an argument it writes
+``BENCH_serving.json`` at the repo root — the committed trajectory file the
+next PR diffs against (CI-artifact-only results are invisible to it) and
+the artifact the CI smoke job uploads.
 """
 from __future__ import annotations
 
@@ -24,8 +25,11 @@ def main() -> None:
                          "(memory accounting + serving/paged/tiered "
                          "concurrency)")
     ap.add_argument("--emit-json", default=None, metavar="FILE",
+                    nargs="?", const="BENCH_serving.json",
                     help="write all emitted rows as structured JSON "
-                         "(serving + memory + every other suite run)")
+                         "(serving + memory + every other suite run); "
+                         "FILE defaults to BENCH_serving.json at the "
+                         "repo root, the committed perf-trajectory file")
     args = ap.parse_args()
 
     from benchmarks import (bench_ablation, bench_longbench_proxy,

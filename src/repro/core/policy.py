@@ -18,11 +18,12 @@ import jax.numpy as jnp
 from repro.config import SIKVConfig
 
 __all__ = ["snapkv_votes", "select_sink_tokens", "dynamic_k", "pages_needed",
-           "step_token_budget", "tiered_pool_split", "staging_pages_needed"]
+           "step_token_budget", "tiered_pool_split", "staging_pages_needed",
+           "spec_tail_pages", "spec_window_pages"]
 
 
 def step_token_budget(prefill_chunk: int | None, prompt_len: int,
-                      batch_size: int) -> int:
+                      batch_size: int, spec_depth: int | None = None) -> int:
     """Tokens one scheduler step processes under CHUNKED admission: at most
     one prefill chunk (one prompt admits at a time) merged with one decode
     token per live slot — a hard per-step bound the scheduler enforces by
@@ -31,9 +32,15 @@ def step_token_budget(prefill_chunk: int | None, prompt_len: int,
     prefill processes ``prompt_len`` rows and several can complete in one
     scheduler step — which is exactly the head-of-line burst
     ``bench_serving.py`` makes visible by reporting the realized
-    ``max_step_tokens`` next to this budget."""
+    ``max_step_tokens`` next to this budget.
+
+    With speculative decoding a pure-decode step processes up to
+    ``2 * spec_depth + 1`` token positions per live slot (``spec_depth``
+    drafted + ``spec_depth + 1`` verified); drafted-but-rejected positions
+    are real work and count."""
+    per_slot = 1 if spec_depth is None else 2 * spec_depth + 1
     return (prefill_chunk if prefill_chunk is not None else prompt_len) \
-        + batch_size
+        + batch_size * per_slot
 
 
 def snapkv_votes(
@@ -142,6 +149,37 @@ def pages_needed(prompt_len: int, max_new: int, page_size: int,
     if prefix_hit:
         return total - prompt_len // page_size
     return total
+
+
+def spec_tail_pages(prompt_len: int, max_new: int, page_size: int,
+                    spec_depth: int, *, pages_per_seq: int | None = None
+                    ) -> int:
+    """Transient EXTRA pages a verify window can touch past a request's
+    committed worst case.
+
+    A spec step verifies ``spec_depth + 1`` positions but may commit as few
+    as one, so the write frontier transiently reaches ``spec_depth`` tokens
+    past the committed stream (worst position:
+    ``prompt_len + max_new - 1 + spec_depth``).  The rejected tail's pages
+    are released at rollback, but admission must reserve them up front — a
+    mid-flight allocation that hits ``PoolExhausted`` would abort a decode
+    step, not an admission.  ``pages_per_seq`` caps the frontier at the
+    slot's logical capacity (appends past it are range-guarded no-ops)."""
+    base = -(-(prompt_len + max_new) // page_size)
+    ext = -(-(prompt_len + max_new + spec_depth) // page_size)
+    if pages_per_seq is not None:
+        base = min(base, pages_per_seq)
+        ext = min(ext, pages_per_seq)
+    return ext - base
+
+
+def spec_window_pages(spec_depth: int, page_size: int) -> int:
+    """Distinct pages one slot's verify window ``[pos, pos + spec_depth]``
+    can span (worst case: ``pos`` on the last offset of its page).  The
+    tiered engine pins this many staging slots per live slot during a
+    verify launch — every window page is a write target and payload writes
+    land only on staged pages."""
+    return 1 + -(-spec_depth // page_size)
 
 
 def staging_pages_needed(concurrency: int, *, headroom: int = 2) -> int:

@@ -27,7 +27,9 @@ from repro.sparse import method_names
 
 def validate_serve_flags(*, paged: bool, method: str,
                          host_pages: bool, staging_pages: int | None,
-                         prefetch_depth: int | None) -> None:
+                         prefetch_depth: int | None,
+                         spec_depth: int | None = None,
+                         spec_draft_k: int | None = None) -> None:
     """Reject contradictory flag combinations with a clear error instead of
     silently ignoring one of them (mirrors the --paged/--method guard)."""
     if paged and method != "sikv":
@@ -46,6 +48,16 @@ def validate_serve_flags(*, paged: bool, method: str,
                     f"{flag} sizes the tiered store's device staging "
                     f"cache; without --host-pages there is nothing to "
                     f"stage — add --host-pages or drop {flag}")
+    if spec_depth is not None and method != "sikv":
+        raise ValueError(
+            f"--spec-depth drafts on the SIKV sign-code index; baseline "
+            f"method {method!r} has no draft policy — drop --spec-depth "
+            f"or use the default method")
+    if spec_draft_k is not None and spec_depth is None:
+        raise ValueError(
+            "--spec-draft-k sets the DRAFT retrieval budget of "
+            "speculative decoding; without --spec-depth there is no "
+            "draft pass — add --spec-depth or drop --spec-draft-k")
 
 
 def serve(arch: str, *, method: str = "sikv", batch: int = 4,
@@ -54,10 +66,12 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           paged: bool = False, page_size: int = 16,
           host_pages: bool = False, staging_pages: int | None = None,
           prefetch_depth: int | None = None,
-          prefill_chunk: int | None = None):
+          prefill_chunk: int | None = None,
+          spec_depth: int | None = None, spec_draft_k: int | None = None):
     validate_serve_flags(paged=paged, method=method, host_pages=host_pages,
                          staging_pages=staging_pages,
-                         prefetch_depth=prefetch_depth)
+                         prefetch_depth=prefetch_depth,
+                         spec_depth=spec_depth, spec_draft_k=spec_draft_k)
     cfg = get_model_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -67,24 +81,26 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
                       token_budget=max(32, prompt_len // 4),
                       recent_window=16, obs_window=16)
     params = init_params(jax.random.PRNGKey(seed), cfg)
+    spec = dict(spec_depth=spec_depth,
+                spec_draft_k=4 if spec_draft_k is None else spec_draft_k)
     if host_pages:
         engine = TieredServingEngine(
             params, cfg, sikv, batch_size=batch, prompt_len=prompt_len,
             max_new_tokens=max_new, page_size=page_size,
             staging_pages=staging_pages,
             prefetch_depth=4 if prefetch_depth is None else prefetch_depth,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, **spec)
     elif paged:
         engine = PagedServingEngine(params, cfg, sikv, batch_size=batch,
                                     prompt_len=prompt_len,
                                     max_new_tokens=max_new,
                                     page_size=page_size,
-                                    prefill_chunk=prefill_chunk)
+                                    prefill_chunk=prefill_chunk, **spec)
     else:
         engine = ServingEngine(params, cfg, sikv, method=method,
                                batch_size=batch, prompt_len=prompt_len,
                                max_new_tokens=max_new,
-                               prefill_chunk=prefill_chunk)
+                               prefill_chunk=prefill_chunk, **spec)
     sched = RequestScheduler(engine)
     prompts = lm_sequence_batch(jax.random.PRNGKey(seed + 1), n_requests,
                                 prompt_len, cfg.vocab_size)
@@ -105,6 +121,14 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
         print(f"[serve] {arch} {tag}: {done} requests, "
               f"{max_new} new tokens each, {dt:.2f}s "
               f"({tput:.1f} tok/s aggregate)")
+        if spec_depth is not None:
+            st = sched.service_stats()
+            toks = sum(r.decode_tokens for r in sched.completed.values())
+            lpt = engine.decode_launches() / max(1, toks)
+            print(f"[serve] spec: depth={spec_depth} "
+                  f"draft_k={spec['spec_draft_k']} "
+                  f"accept_rate={st['spec_accept_rate']:.3f} "
+                  f"launches_per_token={lpt:.3f}")
         if paged:
             print(f"[serve] pool: {engine.pool_stats()}")
         if host_pages:
@@ -141,6 +165,15 @@ def main() -> None:
                          "interleaving decode steps (kills head-of-line "
                          "decode stall; bit-exact with whole-prompt "
                          "admission)")
+    ap.add_argument("--spec-depth", type=int, default=None,
+                    help="self-speculative decoding: draft this many "
+                         "tokens per step at a reduced budget, verify the "
+                         "window exactly in one launch, roll back the "
+                         "rejected tail (output bit-exact with plain "
+                         "greedy decode; works on all three engines)")
+    ap.add_argument("--spec-draft-k", type=int, default=None,
+                    help="retrieval top-k of the DRAFT pass (default 4; "
+                         "needs --spec-depth)")
     args = ap.parse_args()
     serve(args.arch, method=args.method, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new,
@@ -148,7 +181,8 @@ def main() -> None:
           page_size=args.page_size, host_pages=args.host_pages,
           staging_pages=args.staging_pages,
           prefetch_depth=args.prefetch_depth,
-          prefill_chunk=args.prefill_chunk)
+          prefill_chunk=args.prefill_chunk,
+          spec_depth=args.spec_depth, spec_draft_k=args.spec_draft_k)
 
 
 if __name__ == "__main__":

@@ -10,5 +10,8 @@ from repro.models.transformer import (
     loss_fn,
     prefill,
     prefill_chunk_step,
+    spec_draft_steps,
+    spec_verify_steps,
     supports_chunked_prefill,
+    supports_spec_decode,
 )

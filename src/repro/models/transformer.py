@@ -532,7 +532,8 @@ def finalize_chunked_prefill(
 
 def decode_step(params: Params, cfg: ModelConfig,
                 inputs: Dict[str, jax.Array], pos: jax.Array, caches: List[Any],
-                method) -> Tuple[jax.Array, List[Any]]:
+                method, *, draft_topk: Optional[int] = None
+                ) -> Tuple[jax.Array, List[Any]]:
     """One decode step.
 
     Args:
@@ -540,6 +541,10 @@ def decode_step(params: Params, cfg: ModelConfig,
       pos: int32 absolute position of this token — scalar (lock-step batch)
         or ``(B,)`` (continuous batching: each slot decodes at its own
         position; RoPE rotates per sequence).
+      draft_topk: when set, attention runs the method's DRAFT policy — the
+        reduced retrieval budget (``spec_draft_k``) of speculative decoding,
+        with sinks and the recent ring kept exact.  ``None`` (default) is
+        the ordinary full-budget step.
     Returns:
       ``(logits (B, V), updated caches)``.
     """
@@ -551,6 +556,12 @@ def decode_step(params: Params, cfg: ModelConfig,
     if cfg.mla is not None:
         mla_scale = 1.0 / float(
             cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** 0.5
+
+    def attend(q, k_new, v_new, cache, scale=None):
+        if draft_topk is None:
+            return method.decode(q, k_new, v_new, cache, scale=scale)
+        return method.draft_decode(q, k_new, v_new, cache,
+                                   topk=draft_topk, scale=scale)
 
     new_caches: List[Any] = []
     pattern = cfg.resolved_layer_pattern
@@ -571,7 +582,7 @@ def decode_step(params: Params, cfg: ModelConfig,
             c, k_rope = mla_mod.mla_latent(mp, cfg, h, positions)
             latent_k = mla_mod.mla_latent_key(c, k_rope)
             q_eff = mla_mod.mla_effective_query(mp, cfg, q_nope, q_rope)
-            o, new_entry["self"] = method.decode(
+            o, new_entry["self"] = attend(
                 q_eff.astype(jnp.float32), latent_k.astype(jnp.float32),
                 latent_k.astype(jnp.float32), entry["self"], scale=mla_scale)
             o_latent = o[..., : cfg.mla.kv_lora_rank]
@@ -579,7 +590,7 @@ def decode_step(params: Params, cfg: ModelConfig,
         else:
             ap = _attn_params(params, layer, kind)
             q, k, v = attn_project(ap, cfg, h, positions)
-            o, new_entry["self"] = method.decode(
+            o, new_entry["self"] = attend(
                 q.astype(jnp.float32), k.astype(jnp.float32),
                 v.astype(jnp.float32), entry["self"])
             x = x + attn_output(ap, cfg, o.astype(x.dtype))
@@ -617,6 +628,94 @@ def _attend_static(method, q: jax.Array, cache) -> Tuple[jax.Array, Any]:
     raise NotImplementedError(
         f"cross-attention not supported for cache {type(cache).__name__}; "
         "use method 'sikv' or 'full' for encoder-decoder models")
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding: draft window + exact multi-token verify
+# ---------------------------------------------------------------------------
+#
+# Both programs advance a whole token WINDOW in ONE jitted launch by scanning
+# ``decode_step`` — each scan iteration runs the exact single-token program
+# (same ``(B, 1, d)`` shapes, same reduction orders), which is the
+# bit-exactness argument for the verify pass: a batched multi-query
+# formulation would reshape the per-row matmul/softmax reductions and could
+# round differently, so the window is sequential INSIDE the launch and only
+# the dispatches are amortized (DESIGN.md §6).  The draft pass feeds its own
+# greedy argmax forward under the reduced ``spec_draft_k`` retrieval budget;
+# its returned caches are DISCARDED by callers (its appended K/V were
+# computed under the draft budget and must never be committed).  The verify
+# pass teacher-forces the draft tokens at the full budget, so every appended
+# K/V is exactly what token-by-token decode would have appended; acceptance
+# and rollback happen in the engine (:mod:`repro.spec`).
+
+def supports_spec_decode(cfg: ModelConfig) -> bool:
+    """Whether ``cfg``'s stack supports draft/verify/rollback spec decode.
+
+    Excluded: Mamba2 / hybrid stacks (rolling back a rejected draft tail
+    would need every intermediate recurrent state saved) and
+    encoder-decoder stacks (their static cross caches have no
+    position-indexed length to roll back).  MoE is FINE here — unlike
+    chunked prefill, the verify scan routes exactly the batch rows a
+    token-by-token decode step routes, so dispatch is row-identical."""
+    return (not cfg.num_encoder_layers and not cfg.embedding_inputs
+            and all(k in (ATTN, MLA, SHARED_ATTN)
+                    for k in cfg.resolved_layer_pattern))
+
+
+def spec_draft_steps(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                     pos: jax.Array, caches: List[Any], method, *,
+                     depth: int, draft_topk: int
+                     ) -> Tuple[jax.Array, List[Any]]:
+    """Draft ``depth`` greedy tokens in one launch at the draft budget.
+
+    Args:
+      tokens: ``(B,)`` the last committed token per slot.
+      pos: ``(B,)`` its append position (== per-slot cache length).
+    Returns:
+      ``(draft_tokens (B, depth), caches)`` — callers must DISCARD the
+      returned caches: the draft's appends are speculation polluted by the
+      reduced budget.  In the tiered engine the draft's payload gather is
+      device-only (``method.draft_decode``), so a draft step moves zero
+      host payload bytes.
+    """
+    def step(carry, _):
+        tok, p, cs = carry
+        logits, cs = decode_step(params, cfg, {"tokens": tok[:, None]}, p,
+                                 cs, method=method, draft_topk=draft_topk)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, p + 1, cs), nxt
+
+    (_, _, caches), toks = jax.lax.scan(
+        step, (tokens, jnp.asarray(pos), caches), None, length=depth)
+    return jnp.swapaxes(toks, 0, 1), caches
+
+
+def spec_verify_steps(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                      pos: jax.Array, caches: List[Any],
+                      draft_tokens: jax.Array, method, *, depth: int
+                      ) -> Tuple[jax.Array, List[Any]]:
+    """Exact multi-token verify: score ``depth + 1`` positions in one launch.
+
+    Teacher-forces ``[tokens ; draft_tokens]`` through full-budget
+    ``decode_step``s, appending each position's exact K/V.  Row ``j`` of the
+    result is the full-budget greedy token AFTER consuming input ``j`` —
+    bit-identical to what ``depth + 1`` separate decode launches produce
+    (tested).  The returned caches hold ALL ``depth + 1`` appends; the
+    engine rolls the rejected tail back (:mod:`repro.spec.rollback`).
+
+    Returns ``(verify_tokens (B, depth + 1), caches)``.
+    """
+    inputs = jnp.concatenate(
+        [tokens[None, :], jnp.swapaxes(draft_tokens, 0, 1)], axis=0)
+
+    def step(carry, tok):
+        p, cs = carry
+        logits, cs = decode_step(params, cfg, {"tokens": tok[:, None]}, p,
+                                 cs, method=method)
+        return (p + 1, cs), jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    (_, caches), toks = jax.lax.scan(step, (jnp.asarray(pos), caches), inputs)
+    return jnp.swapaxes(toks, 0, 1), caches
 
 
 def init_decode_state(params: Params, cfg: ModelConfig, batch: int

@@ -306,6 +306,33 @@ class SlotPageManager:
             self.on_alloc(slot, pid)
         return pid
 
+    def truncate(self, slot: int, n_keep: int) -> List[int]:
+        """Release the slot's pages beyond its first ``n_keep`` (rollback of
+        a rejected speculation tail).  Each released page's block-table
+        entry is unmapped FIRST, so the dead mapping can never absorb a
+        write after the page is re-allocated, and the release is re-added
+        to the slot's admission reservation BEFORE the pool sees the free
+        page — the slot will draw the page again at its next boundary, and
+        without the re-credit ``pool.available`` could promise it to a
+        competing admission in between (the reservation invariant:
+        ``reserved`` always covers the slot's remaining worst-case draws).
+
+        Returns the released page ids (refcount 1 by construction — decode
+        tail pages are never shared; freeing triggers ``pool.on_free``, so
+        a tiered store drops their staged/host payload and force-clears a
+        stale prefetch lane through the existing observer chain)."""
+        s = self._slots[slot]
+        if s is None or n_keep >= len(s.pages):
+            return []
+        released = s.pages[n_keep:]
+        del s.pages[n_keep:]
+        for j in range(n_keep, n_keep + len(released)):
+            self._set_block(slot, j, -1)
+        self._resv[slot] += len(released)
+        self.pool.reserve(len(released))
+        self.pool.release(released)
+        return released
+
     def ensure_writable(self, slot: int, pos: int) -> None:
         """Make ``pos`` of ``slot`` appendable: allocate at page boundaries,
         copy-on-write pages with another live sharer on first divergence."""

@@ -63,9 +63,11 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, SIKVConfig
 from repro.models import (decode_step, finalize_chunked_prefill,
                           init_prefill_stage, prefill, prefill_chunk_step,
-                          supports_chunked_prefill)
+                          spec_draft_steps, spec_verify_steps,
+                          supports_chunked_prefill, supports_spec_decode)
 from repro.models.transformer import Params
 from repro.sparse import get_method
+from repro.spec import accept_counts, emit_counts, tree_rollback
 
 
 def row_insert(buf: jax.Array, val: jax.Array, slot: jax.Array) -> jax.Array:
@@ -101,7 +103,9 @@ class ServingEngine:
                  sikv: SIKVConfig | None = None, *, method: Any = "sikv",
                  batch_size: int = 8, prompt_len: int = 512,
                  max_new_tokens: int = 64,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 spec_depth: Optional[int] = None,
+                 spec_draft_k: int = 4):
         self.params = params
         self.cfg = cfg
         self.sikv = sikv or SIKVConfig()
@@ -144,6 +148,47 @@ class ServingEngine:
         self._pending: Optional[Dict[str, Any]] = None
         self.stats: Dict[str, int] = {"prefills": 0, "steps": 0,
                                       "prefill_chunks": 0, "finalizes": 0}
+        # per-slot draft-verification counts of the most recent spec_step
+        self.last_spec_accepts: List[int] = []
+        self.spec_depth = spec_depth
+        self.spec_draft_k = spec_draft_k
+        if spec_depth is not None:
+            if spec_depth < 1:
+                raise ValueError(f"spec_depth must be >= 1, got {spec_depth}")
+            if spec_draft_k < 1:
+                raise ValueError(
+                    f"spec_draft_k must be >= 1, got {spec_draft_k}")
+            if not supports_spec_decode(cfg):
+                raise ValueError(
+                    "speculative decoding needs an attention-only decoder "
+                    "stack (GQA / MLA / shared-attention; MoE FFNs are "
+                    "fine) — Mamba2 recurrent state cannot be rolled back "
+                    "without saving every intermediate state, and "
+                    "encoder-decoder cross caches have no per-position "
+                    "length to truncate; drop spec_depth for this config")
+            if spec_depth >= self.sikv.recent_window:
+                raise ValueError(
+                    f"spec_depth {spec_depth} must stay below "
+                    f"recent_window {self.sikv.recent_window}: rollback "
+                    f"rebuilds the ring from the pre-verify cache, which "
+                    f"is exact only while the verify window cannot wrap "
+                    f"the ring (a second write to a kept slot would "
+                    f"destroy the value rollback keeps)")
+            if not hasattr(self.method, "draft_decode"):
+                raise ValueError(
+                    f"speculative decoding needs a SIKV-family method with "
+                    f"a draft policy; {self.method.name!r} has none")
+            self._draft = jax.jit(functools.partial(
+                spec_draft_steps, cfg=cfg, method=self.method,
+                depth=spec_depth, draft_topk=spec_draft_k))
+            self._verify = jax.jit(functools.partial(
+                spec_verify_steps, cfg=cfg, method=self.method,
+                depth=spec_depth))
+            self._rollback_op = jax.jit(tree_rollback)
+            self.stats.update(spec_steps=0, draft_launches=0,
+                              verify_launches=0, spec_rollbacks=0,
+                              spec_drafted=0, spec_accepted=0,
+                              spec_emitted=0)
         # admission metadata of the most recent admit() (schedulers read it)
         self.last_admit: Dict[str, Any] = {}
         # live slot state (continuous batching)
@@ -429,6 +474,95 @@ class ServingEngine:
         self.stats["steps"] += 1
         return self._apply_decode(logits)
 
+    # -- speculative decoding -------------------------------------------
+
+    def spec_step(self, limits: Optional[List[int]] = None
+                  ) -> List[List[int]]:
+        """One self-speculative step: draft + verify + rollback.
+
+        Two program launches advance every live slot by a VARIABLE number
+        of tokens (1 to ``spec_depth + 1``): the draft launch runs
+        ``spec_depth`` reduced-budget decode steps and is DISCARDED (its
+        caches never touch ``self._caches``, so draft rollback is free);
+        the verify launch teacher-forces the draft at the full budget,
+        bit-exact with token-by-token decode; acceptance is greedy
+        host-side, and one rollback launch truncates each slot to its
+        committed prefix (ring rewind + per-slot length — the paged/tiered
+        subclasses additionally release the rejected tail's pages via
+        ``_spec_commit``).
+
+        Args:
+          limits: optional per-slot cap on emitted tokens (the scheduler
+            passes each request's remaining budget; ``0`` skips the slot).
+        Returns:
+          committed tokens per slot (empty list for slots that emitted
+          nothing — dead, parked, or zero-limit).
+        """
+        assert self._caches is not None, "admit() at least one request first"
+        assert self.spec_depth is not None, "engine built without spec_depth"
+        assert self._pending is None, \
+            "finish the pending admission before a spec step"
+        depth = self.spec_depth
+        self._decode_prep()
+        draft, _ = self._draft(self.params, tokens=self._tok, pos=self._pos,
+                               caches=self._caches)
+        self.stats["draft_launches"] += 1
+        self._spec_prep()
+        verify, appended = self._verify(
+            self.params, tokens=self._tok, pos=self._pos,
+            caches=self._caches, draft_tokens=draft)
+        self.stats["verify_launches"] += 1
+        # one batched device->host sync for everything acceptance needs
+        d, v, pos = jax.device_get((draft, verify, self._pos))
+        pos_h = [int(p) for p in pos]
+        B = self.batch_size
+        accepted = accept_counts(d, v)
+        room = [self.capacity - p for p in pos_h]
+        emit = emit_counts(accepted, room, limits)
+        out: List[List[int]] = []
+        for s in range(B):
+            out.append([int(t) for t in v[s, : emit[s]]])
+            if emit[s]:
+                # accept rate measures DRAFTING quality: count drafts that
+                # VERIFIED, not drafts that committed — a window clamped by
+                # the request budget (emit < accepted + 1) would otherwise
+                # deflate the rate even under perfect drafting
+                self.stats["spec_drafted"] += depth
+                self.stats["spec_accepted"] += accepted[s]
+                self.stats["spec_emitted"] += emit[s]
+        # per-slot verification outcomes of this step (schedulers fold them
+        # into per-request accept stats, like last_admit)
+        self.last_spec_accepts = list(accepted)
+        emit_dev = jnp.asarray(emit, jnp.int32)
+        self._caches = self._rollback_op(self._caches, appended, emit_dev)
+        self.stats["spec_rollbacks"] += 1
+        self.stats["spec_steps"] += 1
+        self._spec_commit(emit)
+        last = [out[s][-1] if out[s] else 0 for s in range(B)]
+        self._tok = jnp.where(emit_dev > 0, jnp.asarray(last, jnp.int32),
+                              self._tok)
+        self._pos = self._pos + emit_dev
+        self._spec_finish()
+        return out
+
+    def _spec_prep(self) -> None:
+        """Hook before the verify launch: make the whole window
+        ``[pos, pos + spec_depth]`` writable per live slot.  The dense
+        cache is pre-allocated to capacity (appends past it are
+        range-guarded and clamped away by ``emit_counts``), so nothing to
+        do; the paged engine allocates window pages, the tiered engine
+        additionally stages and pins them."""
+
+    def _spec_commit(self, emit: List[int]) -> None:
+        """Hook after rollback committed ``emit`` tokens per slot: release
+        host-side resources of the rejected tail (paged: pages beyond the
+        committed frontier; tiered: their staged payload + pins)."""
+
+    def _spec_finish(self) -> None:
+        """Hook at the end of a spec step (the tiered engine commits its
+        consumed prefetch lane here, as ``_apply_decode`` does on the
+        plain decode path)."""
+
     def retire(self, slot: int) -> None:
         """Free a slot.  Parking the position past capacity keeps RoPE
         rotations finite; the row's cache contents are simply dead until
@@ -437,12 +571,24 @@ class ServingEngine:
         self._pos = self._pos.at[slot].set(self.capacity)
         self._tok = self._tok.at[slot].set(0)
 
+    def decode_launches(self) -> int:
+        """Main decode program launches — the per-token dispatch count the
+        speculative path amortizes (plain decode: one per token; spec: one
+        draft + one verify per window).  Excludes admission programs and
+        the small aux/rollback launches, which ``invocations`` counts."""
+        return (self.stats["steps"] + self.stats.get("draft_launches", 0)
+                + self.stats.get("verify_launches", 0))
+
     def invocations(self) -> int:
         """Total jitted program launches (prefills, chunks, finalizes, and
         decode steps; a merged chunk+decode counts as one chunk + one step
-        even though it is a single launch — work, not dispatches)."""
+        even though it is a single launch — work, not dispatches).  With
+        spec decode: plus draft, verify and rollback launches."""
         return (self.stats["prefills"] + self.stats["prefill_chunks"]
-                + self.stats["finalizes"] + self.stats["steps"])
+                + self.stats["finalizes"] + self.stats["steps"]
+                + self.stats.get("draft_launches", 0)
+                + self.stats.get("verify_launches", 0)
+                + self.stats.get("spec_rollbacks", 0))
 
     def token_store_bytes(self) -> int:
         """Measured HBM bytes of the token-indexed cache arrays (every leaf

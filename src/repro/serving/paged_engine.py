@@ -39,7 +39,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, SIKVConfig
 from repro.core.cache import SIKVCache
-from repro.core.policy import pages_needed
+from repro.core.policy import pages_needed, spec_tail_pages
 from repro.paged.cache import (PER_SLOT_FIELDS, PagedSIKVCache,
                                init_paged_cache, insert_prefill_pages,
                                insert_slot_state, is_block_mapped_cache,
@@ -102,6 +102,7 @@ class PagedServingEngine(ServingEngine):
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_caching: bool = True, max_cached_prompts: int = 32,
                  prefill_chunk: Optional[int] = None,
+                 spec_depth: Optional[int] = None, spec_draft_k: int = 4,
                  method: Any = "sikv_paged"):
         # round generation headroom up so capacity is a page multiple —
         # but only internally: the ADVERTISED max_new_tokens stays the
@@ -112,7 +113,8 @@ class PagedServingEngine(ServingEngine):
         super().__init__(params, cfg, sikv, method=method,
                          batch_size=batch_size, prompt_len=prompt_len,
                          max_new_tokens=max_new_eff,
-                         prefill_chunk=prefill_chunk)
+                         prefill_chunk=prefill_chunk,
+                         spec_depth=spec_depth, spec_draft_k=spec_draft_k)
         self.max_new_tokens = max_new_tokens
         self.page_size = page_size
         self.pages_per_seq = self.capacity // page_size
@@ -164,11 +166,21 @@ class PagedServingEngine(ServingEngine):
             return self.max_new_tokens
         return min(max_new_tokens, self.max_new_tokens)
 
+    def _spec_tail(self, prompt_len: int, new: int) -> int:
+        """Extra pages a verify window can transiently allocate past this
+        request's committed worst case (0 without spec decode)."""
+        if self.spec_depth is None:
+            return 0
+        return spec_tail_pages(prompt_len, new, self.page_size,
+                               self.spec_depth,
+                               pages_per_seq=self.pages_per_seq)
+
     def validate_prompt(self, prompt: List[int],
                         max_new_tokens: Optional[int] = None) -> None:
         super().validate_prompt(prompt)
         new = self._clamp_new(max_new_tokens)
-        need = pages_needed(len(prompt), new, self.page_size)
+        need = pages_needed(len(prompt), new, self.page_size) \
+            + self._spec_tail(len(prompt), new)
         if need > self.num_pages:
             raise ValueError(
                 f"request needs {need} pages worst-case "
@@ -186,16 +198,17 @@ class PagedServingEngine(ServingEngine):
         deadlocks: the naive worst case is one page more than `available`
         can ever report."""
         key = tuple(prompt)
+        tail = self._spec_tail(len(prompt), new)
         entry = (self.pool.registry.get(key)
                  if self.prefix_caching else None)
         if entry is None:
-            return pages_needed(len(prompt), new, self.page_size)
+            return pages_needed(len(prompt), new, self.page_size) + tail
         need = pages_needed(len(prompt), new, self.page_size,
                             prefix_hit=True)
         has_tail = len(prompt) % self.page_size != 0
         if has_tail and self.pool.live_refs(entry.page_ids[-1]) == 0:
             need -= 1
-        return need
+        return need + tail
 
     def can_admit(self, prompt: List[int], max_new_tokens: int) -> bool:
         """Admission on free *pages*: reserve the worst case so an admitted
@@ -353,6 +366,38 @@ class PagedServingEngine(ServingEngine):
         for s in self.slots.active_slots():
             self._host_pos[s] += 1
         return super()._apply_decode(logits)
+
+    # -- speculative decoding --------------------------------------------
+
+    def _spec_prep(self) -> None:
+        """Make the whole verify window ``[pos, pos + spec_depth]`` of each
+        live slot writable BEFORE the single verify launch — fresh pages at
+        every boundary the window crosses, copy-on-write for a shared
+        covering page.  The allocations draw on the admission reservation
+        (which includes the ``_spec_tail`` worst case), so they cannot
+        exhaust the pool mid-step."""
+        for s in self.slots.active_slots():
+            pos = self._host_pos[s]
+            if pos >= self.capacity:
+                continue
+            for p in range(pos, min(pos + self.spec_depth + 1,
+                                    self.capacity)):
+                self.slots.ensure_writable(s, p)
+        self.stats["cow_copies"] = self.slots.cow_copies
+
+    def _spec_commit(self, emit: List[int]) -> None:
+        """Advance each slot's host write cursor by its COMMITTED tokens and
+        release the pages only the rejected tail touched (the page covering
+        the committed frontier stays; a boundary-exact frontier re-draws
+        its next page lazily at the following ``_decode_prep``)."""
+        ps = self.page_size
+        for s in self.slots.active_slots():
+            pos = self._host_pos[s]
+            if pos >= self.capacity:
+                continue
+            self._host_pos[s] = pos + emit[s]
+            keep = -(-self._host_pos[s] // ps)
+            self.slots.truncate(s, keep)
 
     def retire(self, slot: int) -> None:
         """Release the slot's page references AND unmap its block-table

@@ -73,6 +73,19 @@ class Request:
     # paged-engine admission metadata (prefix caching)
     prefix_hit: bool = False
     shared_pages: int = 0
+    # speculative decoding (spec_depth engines): per-request accept stats
+    spec_steps: int = 0
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Drafted tokens that VERIFIED / drafted tokens (0.0 before any
+        spec step; 1.0 = every draft window verified fully).  Measures
+        drafting quality: a window whose commit was clamped by the request
+        budget still counts its verified drafts."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
 
 
 @dataclass
@@ -115,10 +128,13 @@ class RequestScheduler:
         decode token per slot).  Under monolithic admission it is the cost
         of a single whole-prompt admission, NOT a bound — several can
         complete inline in one step, the head-of-line burst the realized
-        ``max_step_tokens`` makes visible (``policy.step_token_budget``)."""
+        ``max_step_tokens`` makes visible (``policy.step_token_budget``).
+        With spec decode the per-slot decode term counts drafted AND
+        verified positions (``2 * spec_depth + 1``)."""
         return step_token_budget(self.engine.prefill_chunk,
                                  self.engine.prompt_len,
-                                 self.engine.batch_size)
+                                 self.engine.batch_size,
+                                 self.engine.spec_depth)
 
     def _clamped_new(self, req: Request) -> int:
         return min(req.max_new_tokens, self.engine.max_new_tokens)
@@ -230,6 +246,41 @@ class RequestScheduler:
                 tokens += self.engine.prompt_len
         return None, tokens
 
+    def _run_spec_step(self, slots: List[_Slot], active: List[int]) -> int:
+        """One speculative decode step: every live slot advances by a
+        variable number of tokens (1 to ``spec_depth + 1``).  Returns the
+        token-position WORK of the step — drafted plus verified rows, the
+        quantity the spec-aware ``step_token_budget`` bounds — and folds
+        the emitted tokens into the per-request stats (one wall-clock gap
+        per window: a spec step is a single inter-token stall from each
+        live request's point of view)."""
+        B = self.engine.batch_size
+        depth = self.engine.spec_depth
+        limits = [slots[j].remaining if slots[j].req is not None else 0
+                  for j in range(B)]
+        tok_lists = self.engine.spec_step(limits)
+        now = time.time()
+        for i in active:
+            toks = tok_lists[i]
+            slot = slots[i]
+            if not toks:
+                continue
+            gap = now - slot.t_last
+            slot.req.result.extend(toks)
+            slot.max_gap = max(slot.max_gap, gap)
+            slot.decode_time += gap
+            slot.decode_tokens += len(toks)
+            slot.t_last = now
+            slot.remaining -= len(toks)
+            slot.req.spec_steps += 1
+            slot.req.spec_drafted += depth
+            # verification outcome, not commit count: a budget-clamped
+            # window must not read as a drafting failure
+            slot.req.spec_accepted += self.engine.last_spec_accepts[i]
+            if slot.remaining <= 0:
+                self._retire(slots, i)
+        return len(active) * (2 * depth + 1)
+
     def run(self) -> int:
         """Serve the whole queue with continuous batching; returns the
         number of completed requests.
@@ -277,6 +328,16 @@ class RequestScheduler:
                 # slot admitted this very iteration, as before chunking)
                 active_now = [j for j in range(B)
                               if slots[j].req is not None]
+                if active_now and admitting is None \
+                        and self.engine.spec_depth is not None:
+                    # speculative step: 2 launches, up to spec_depth + 1
+                    # tokens per live slot (decode interleaved with a
+                    # chunked admission keeps the plain merged path above —
+                    # one prompt chunk + one token per slot per launch)
+                    step_tokens += self._run_spec_step(slots, active_now)
+                    self.max_step_tokens = max(self.max_step_tokens,
+                                               step_tokens)
+                    continue
                 if active_now:
                     dec_tokens = self.engine.step()
                     stepped = active_now
@@ -364,12 +425,16 @@ class RequestScheduler:
         time-per-output-token and would deflate the mean with 0.0 entries.
         ``max_decode_stall`` is the worst inter-token gap any request saw
         (the head-of-line metric chunked admission shrinks).
+        ``spec_accept_rate`` aggregates accepted/drafted tokens across all
+        completed requests (0.0 when the engine ran without spec decode).
         """
         if not self.completed:
             return {"ttft_mean": 0.0, "tpot_mean": 0.0,
-                    "max_decode_stall": 0.0, "decode_requests": 0.0}
+                    "max_decode_stall": 0.0, "decode_requests": 0.0,
+                    "spec_accept_rate": 0.0}
         reqs = list(self.completed.values())
         dec = [r for r in reqs if r.decode_tokens > 0]
+        drafted = sum(r.spec_drafted for r in reqs)
         return {
             "ttft_mean": sum(r.ttft for r in reqs) / len(reqs),
             "tpot_mean": (sum(r.tpot for r in dec) / len(dec)
@@ -377,4 +442,6 @@ class RequestScheduler:
             "max_decode_stall": max((r.max_stall for r in reqs),
                                     default=0.0),
             "decode_requests": float(len(dec)),
+            "spec_accept_rate": (sum(r.spec_accepted for r in reqs) / drafted
+                                 if drafted else 0.0),
         }

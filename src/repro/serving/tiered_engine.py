@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, SIKVConfig
 from repro.core.cache import SIKVCache
-from repro.core.policy import staging_pages_needed
+from repro.core.policy import spec_window_pages, staging_pages_needed
 from repro.models.transformer import Params
 from repro.paged.cache import _paged_view
 from repro.serving.engine import row_insert
@@ -135,7 +135,8 @@ class TieredServingEngine(PagedServingEngine):
                  staging_pages: Optional[int] = None,
                  prefetch_depth: int = 4,
                  prefix_caching: bool = True, max_cached_prompts: int = 32,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 spec_depth: Optional[int] = None, spec_draft_k: int = 4):
         sikv = sikv or SIKVConfig()
         cap = prompt_len + max_new_tokens
         capacity = cap + (-cap) % page_size
@@ -147,8 +148,15 @@ class TieredServingEngine(PagedServingEngine):
             raise ValueError(
                 f"staging_pages must be positive (every live slot pins "
                 f"one write page), got {staging_pages}")
-        self.staging_pages = (staging_pages_needed(batch_size)
-                              if staging_pages is None else staging_pages)
+        if staging_pages is None:
+            # with spec decode every live slot transiently pins its whole
+            # verify WINDOW (every window page is a write target), not just
+            # one write page — size the default so a full batch can verify
+            per_slot = (1 if spec_depth is None
+                        else spec_window_pages(spec_depth, page_size))
+            self.staging_pages = staging_pages_needed(batch_size * per_slot)
+        else:
+            self.staging_pages = staging_pages
         self.prefetch_depth = prefetch_depth
         self.host = HostPageStore(n_pages)
         self.xfer = TransferEngine(self.host)
@@ -158,6 +166,7 @@ class TieredServingEngine(PagedServingEngine):
                          num_pages=n_pages, prefix_caching=prefix_caching,
                          max_cached_prompts=max_cached_prompts,
                          prefill_chunk=prefill_chunk,
+                         spec_depth=spec_depth, spec_draft_k=spec_draft_k,
                          method=TieredSIKVAttention(sikv, self.xfer))
         assert self.num_pages == n_pages and self.capacity == capacity
         self.staging = StagingCache(self.staging_pages)
@@ -168,6 +177,8 @@ class TieredServingEngine(PagedServingEngine):
         # pages sitting in the device prefetch lane (set at dispatch,
         # cleared at commit — or force-cleared if one of them is freed)
         self._lane_live: List[int] = []
+        # verify-window pages pinned for the current spec step, per slot
+        self._spec_pins: Dict[int, List[int]] = {}
         # _insert_hit / _set_blk / _clear_row are inherited: the paged
         # engine's programs are block-table-generic over both layouts
         self._insert_prefill_t = jax.jit(_tree_insert_prefill_t)
@@ -310,16 +321,19 @@ class TieredServingEngine(PagedServingEngine):
     # -- admission -------------------------------------------------------
 
     def can_admit(self, prompt: List[int], max_new_tokens: int) -> bool:
-        """Page admission as in the single-tier pool, plus a staging slot
-        for the request's write page.  The bound is on pin OBLIGATIONS —
-        every live slot pins one write page, though a prefix hit only
-        takes its pin at its first decode step — so current pin counts
-        under-state demand.  Cold resident pages do NOT block admission:
-        they demote to host under pressure instead of queueing the
-        request."""
+        """Page admission as in the single-tier pool, plus staging slots
+        for the request's pin OBLIGATIONS — every live slot pins one write
+        page (a whole verify window of pages under spec decode, every one
+        of them a write target), though a prefix hit only takes its pin at
+        its first decode step — so current pin counts under-state demand.
+        Cold resident pages do NOT block admission: they demote to host
+        under pressure instead of queueing the request."""
         if not super().can_admit(prompt, max_new_tokens):
             return False
-        return len(self.slots.active_slots()) < self.staging.num_slots
+        per_slot = (1 if self.spec_depth is None
+                    else spec_window_pages(self.spec_depth, self.page_size))
+        active = len(self.slots.active_slots())
+        return (active + 1) * per_slot <= self.staging.num_slots
 
     def on_pressure(self, prompt: List[int], max_new_tokens: int) -> bool:
         """The scheduler's queue head did not fit: spend the wait writing
@@ -492,34 +506,91 @@ class TieredServingEngine(PagedServingEngine):
             self._set_write_page(s, page)
         self.stats["cow_copies"] = self.slots.cow_copies
 
+    def _commit_lane(self) -> None:
+        """Consume point passed: promote prefetched pages into the staging
+        pool (free/cold slots only — never a pinned writer, and never by
+        evicting a page committed in this very loop: that would leave two
+        lane pages mapped to one slot)."""
+        if not self._lane_live:
+            return
+        lane_slots = []
+        committed_now: set = set()
+        for p in self._lane_live:
+            if (self.staging.slot_of(p) is not None
+                    or self.staging.pinnable() <= 0):
+                lane_slots.append(-1)
+                continue
+            if self.staging.free_slots == 0 \
+                    and self.staging.lru_head() in committed_now:
+                lane_slots.append(-1)
+                continue
+            slot, evs = self.staging.acquire(p, pin=False)
+            self._process_evictions(evs)
+            self.pool.set_tier([p], "device")
+            lane_slots.append(slot)
+            committed_now.add(p)
+        lane_slots += [-1] * (self.prefetch_depth - len(lane_slots))
+        self._caches = self._commit(self._caches,
+                                    jnp.asarray(lane_slots, jnp.int32))
+        self._lane_live = []
+        self.stats["aux_launches"] += 1
+
     def _apply_decode(self, logits):
-        if self._lane_live:
-            # consume point passed: promote prefetched pages into the
-            # staging pool (free/cold slots only — never a pinned writer,
-            # and never by evicting a page committed in this very loop:
-            # that would leave two lane pages mapped to one slot)
-            lane_slots = []
-            committed_now: set = set()
-            for p in self._lane_live:
-                if (self.staging.slot_of(p) is not None
-                        or self.staging.pinnable() <= 0):
-                    lane_slots.append(-1)
-                    continue
-                if self.staging.free_slots == 0 \
-                        and self.staging.lru_head() in committed_now:
-                    lane_slots.append(-1)
-                    continue
-                slot, evs = self.staging.acquire(p, pin=False)
-                self._process_evictions(evs)
-                self.pool.set_tier([p], "device")
-                lane_slots.append(slot)
-                committed_now.add(p)
-            lane_slots += [-1] * (self.prefetch_depth - len(lane_slots))
-            self._caches = self._commit(self._caches,
-                                        jnp.asarray(lane_slots, jnp.int32))
-            self._lane_live = []
-            self.stats["aux_launches"] += 1
+        self._commit_lane()
         return super()._apply_decode(logits)
+
+    # -- speculative decoding --------------------------------------------
+
+    def _spec_prep(self) -> None:
+        """Window prep across tiers: every page of each live slot's verify
+        window ``[pos, pos + spec_depth]`` is allocated (fresh/CoW, as in
+        the paged engine), STAGED (payload appends land only on staged
+        pages — a dropped write would lose an accepted token) and PINNED
+        for the whole launch (an unpinned window page could be evicted by
+        a later slot's staging acquire mid-prep).  Pages are pinned the
+        moment they are ensured, page by page, so no acquire in this loop
+        can victimize an earlier window page."""
+        self._spec_pins = {}
+        for s in self.slots.active_slots():
+            pos = self._host_pos[s]
+            if pos >= self.capacity:
+                continue
+            pins: List[int] = []
+            for p in range(pos, min(pos + self.spec_depth + 1,
+                                    self.capacity)):
+                self.slots.ensure_writable(s, p)
+                pages = self.slots.slot_pages(s)
+                j = p // self.page_size
+                if pages is None or j >= len(pages):
+                    continue
+                pg = pages[j]
+                if pg in pins:
+                    continue
+                if self.staging.slot_of(pg) is None:
+                    # a re-opened host-tier page (prefix-hit tail, or a
+                    # write page demoted while the slot sat at a boundary)
+                    self._stage_page(pg, fetch=True)
+                self.staging.pin(pg)
+                self.staging.mark_dirty(pg)
+                pins.append(pg)
+            self._spec_pins[s] = pins
+        self.stats["cow_copies"] = self.slots.cow_copies
+
+    def _spec_commit(self, emit: List[int]) -> None:
+        """Paged release of the rejected tail first (freed pages drop their
+        staging slot, host copy and pin through ``pool.on_free`` — a dirty
+        rolled-back page is DISCARDED, never written back), then unpin the
+        surviving window pages.  The committed write page is left for the
+        next ``_decode_prep`` to re-pin — it is still staged, so that is
+        pure bookkeeping."""
+        super()._spec_commit(emit)
+        for pins in self._spec_pins.values():
+            for pg in pins:
+                self.staging.unpin(pg)
+        self._spec_pins = {}
+
+    def _spec_finish(self) -> None:
+        self._commit_lane()
 
     # -- accounting ------------------------------------------------------
 

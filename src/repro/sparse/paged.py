@@ -23,9 +23,10 @@ class PagedSIKVAttention(SIKVAttention):
     def __init__(self, cfg: SIKVConfig | None = None):
         super().__init__(cfg)
 
-    def decode(self, q, k_new, v_new, cache, *, scale=None
+    def decode(self, q, k_new, v_new, cache, *, scale=None, topk=None
                ) -> Tuple[jax.Array, object]:
         if isinstance(cache, PagedSIKVCache):
             return paged_sikv_decode_attention(q, k_new, v_new, cache,
-                                               self.cfg, scale=scale)
-        return super().decode(q, k_new, v_new, cache, scale=scale)
+                                               self.cfg, scale=scale,
+                                               topk=topk)
+        return super().decode(q, k_new, v_new, cache, scale=scale, topk=topk)

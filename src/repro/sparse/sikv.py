@@ -21,7 +21,15 @@ class SIKVAttention:
         return prefill_compress(k, v, q_obs, self.cfg, capacity=capacity,
                                 lengths=lengths)
 
-    def decode(self, q, k_new, v_new, cache: SIKVCache, *, scale=None
-               ) -> Tuple[jax.Array, SIKVCache]:
+    def decode(self, q, k_new, v_new, cache: SIKVCache, *, scale=None,
+               topk=None) -> Tuple[jax.Array, SIKVCache]:
         return sikv_decode_attention(q, k_new, v_new, cache, self.cfg,
-                                     scale=scale)
+                                     scale=scale, topk=topk)
+
+    def draft_decode(self, q, k_new, v_new, cache, *, topk, scale=None
+                     ) -> Tuple[jax.Array, object]:
+        """Speculative DRAFT step: the same decode with a reduced top-k
+        budget (``spec_draft_k``); sinks and the recent ring are still
+        attended exactly.  Tiered caches additionally restrict the payload
+        gather to device-resident pages (overridden there)."""
+        return self.decode(q, k_new, v_new, cache, scale=scale, topk=topk)

@@ -33,10 +33,25 @@ class TieredSIKVAttention(SIKVAttention):
                 "than get_method()")
         self.transfer = transfer
 
-    def decode(self, q, k_new, v_new, cache, *, scale=None
+    def decode(self, q, k_new, v_new, cache, *, scale=None, topk=None
                ) -> Tuple[jax.Array, object]:
         if isinstance(cache, TieredSIKVCache):
             return tiered_sikv_decode_attention(
                 q, k_new, v_new, cache, self.cfg,
-                self.transfer.host_gather, scale=scale)
-        return super().decode(q, k_new, v_new, cache, scale=scale)
+                self.transfer.host_gather, scale=scale, topk=topk)
+        return super().decode(q, k_new, v_new, cache, scale=scale, topk=topk)
+
+    def draft_decode(self, q, k_new, v_new, cache, *, topk, scale=None
+                     ) -> Tuple[jax.Array, object]:
+        """Draft step with ZERO host payload traffic: scoring reads only the
+        device-resident sign codes (as always), and the payload gather of
+        the few draft winners is restricted to the staging pool + prefetch
+        lane — host-tier winners are masked out instead of fetched, so the
+        draft program contains no ``io_callback`` at all.  Approximate by
+        design; the full-budget verify keeps the output exact."""
+        if isinstance(cache, TieredSIKVCache):
+            return tiered_sikv_decode_attention(
+                q, k_new, v_new, cache, self.cfg, None, scale=scale,
+                topk=topk, device_only=True)
+        return super().draft_decode(q, k_new, v_new, cache, topk=topk,
+                                    scale=scale)

@@ -1,0 +1,25 @@
+"""Self-speculative decoding: draft on the 1-bit index, verify exactly, roll
+back the rejected tail.
+
+The subsystem has four parts, split by where the state lives:
+
+* **draft / verify programs** — :func:`repro.models.spec_draft_steps` /
+  :func:`repro.models.spec_verify_steps` (model-level, one jitted launch
+  each; the verify scan is bit-exact with token-by-token decode);
+* **acceptance** (:mod:`repro.spec.accept`) — host-side greedy accept
+  policy between the two launches;
+* **cache rollback** (:mod:`repro.spec.rollback`) — functional truncation
+  of the rejected tail across all three cache layouts (ring rewind +
+  per-slot length);
+* **engine integration** — ``spec_depth``/``spec_draft_k`` flags on
+  :class:`~repro.serving.engine.ServingEngine` and its paged/tiered
+  subclasses (window page allocation, staging pins, page release on
+  rollback), plus the scheduler's multi-token consumption.
+
+See DESIGN.md §6 for the protocol and the exactness argument.
+"""
+from repro.spec.accept import accept_counts, emit_counts
+from repro.spec.rollback import rollback_cache, tree_rollback
+
+__all__ = ["accept_counts", "emit_counts", "rollback_cache",
+           "tree_rollback"]

@@ -1,0 +1,60 @@
+"""Greedy acceptance for self-speculative decoding.
+
+The verify pass teacher-forces ``[last_token ; draft_0 .. draft_{n-1}]``
+through full-budget decode steps; ``verify[j]`` is therefore the TRUE greedy
+continuation after consuming input ``j``.  Draft token ``j`` is accepted iff
+it equals ``verify[j]`` — i.e. iff the verify pass consumed exactly the
+token a token-by-token decode would have consumed — so the committed stream
+``verify[:a+1]`` (the accepted prefix plus the correction/bonus token) is
+identical to what token-by-token greedy decode emits, by induction on the
+first mismatch.  This is the distribution-identity argument for greedy
+decoding (DESIGN.md §6); nothing probabilistic is involved.
+
+Pure host-side policy (numpy, between launches), like the page pool.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["accept_counts", "emit_counts"]
+
+
+def accept_counts(draft: np.ndarray, verify: np.ndarray) -> List[int]:
+    """Leading-match count per slot.
+
+    Args:
+      draft: ``(B, depth)`` drafted tokens.
+      verify: ``(B, depth + 1)`` full-budget greedy tokens.
+    Returns:
+      per-slot ``a`` in ``[0, depth]`` — the number of draft tokens whose
+      full-budget verification agreed.
+    """
+    d = np.asarray(draft)
+    v = np.asarray(verify)
+    B, depth = d.shape
+    out = []
+    for b in range(B):
+        a = 0
+        while a < depth and int(d[b, a]) == int(v[b, a]):
+            a += 1
+        out.append(a)
+    return out
+
+
+def emit_counts(accepted: Sequence[int], room: Sequence[int],
+                limits: Optional[Sequence[int]] = None) -> List[int]:
+    """Tokens to COMMIT per slot: the accepted prefix plus the verify pass's
+    own next token (``a + 1``), clamped to the slot's cache headroom and the
+    caller's per-request budget.  Slots with no room (dead/parked) or a
+    zero limit emit nothing and must be rolled back wholesale.
+    """
+    out = []
+    for b, a in enumerate(accepted):
+        n = a + 1
+        n = min(n, room[b])
+        if limits is not None:
+            n = min(n, limits[b])
+        out.append(max(n, 0))
+    return out

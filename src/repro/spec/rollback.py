@@ -1,0 +1,88 @@
+"""Rollback: truncate a cache to its committed prefix after a verify window.
+
+Speculative decoding appends a whole window of ``spec_depth + 1`` tokens in
+one verify launch and only then learns how many were accepted.  Rollback is
+the cache-level half of undoing the rejected tail; it is a first-class
+functional cache operation shared by all three cache layouts
+(:class:`~repro.core.cache.SIKVCache`,
+:class:`~repro.paged.cache.PagedSIKVCache`,
+:class:`~repro.tiered.cache.TieredSIKVCache`), because all three keep the
+same three pieces of per-slot speculation-visible state:
+
+* ``length`` — truncated to ``old.length + emit`` (per slot);
+* the quantized token store — needs NO rollback: positions at or beyond the
+  truncated length are invisible to every mask (``quant_valid_mask`` admits
+  only ``pos < length - recent_window``) and are overwritten position-by-
+  position before they can ever become visible again (appends write at
+  ``length``);
+* the full-precision recent ring — the ONE store the window clobbers
+  destructively: appending position ``p`` overwrites ring slot ``p % R``,
+  which the rolled-back state may still need for position ``p - R``.  The
+  rewind reconstructs each slot from the two cache states the engine
+  already holds: positions appended during the verify window (``>=
+  old.length``) keep the NEW (exactly appended) value, earlier positions
+  take the OLD (pre-window) ring value.
+
+The reconstruction is exact iff no kept ring slot was written twice inside
+the window, i.e. the window never wraps the ring — engines enforce
+``spec_depth < recent_window`` at construction (DESIGN.md §6).
+
+Host-side rollback (releasing pages appended for rejected tokens, dropping
+their staged/host payload, force-clearing stale prefetch-lane entries) lives
+with the owners of that state: :meth:`SlotPageManager.truncate
+<repro.paged.pool.SlotPageManager.truncate>` and the pool's ``on_free``
+observer chain.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import SIKVCache, ring_positions
+from repro.paged.cache import PagedSIKVCache
+from repro.tiered.cache import TieredSIKVCache
+
+__all__ = ["rollback_cache", "tree_rollback"]
+
+_CACHE_TYPES = (SIKVCache, PagedSIKVCache, TieredSIKVCache)
+
+
+def _is_cache(x: Any) -> bool:
+    return isinstance(x, _CACHE_TYPES)
+
+
+def rollback_cache(old, new, emit: jax.Array):
+    """Truncate ``new`` (post-verify-window) to ``old.length + emit`` tokens.
+
+    Args:
+      old: the cache BEFORE the verify launch (the engine still holds it —
+        functional updates make the pre-window state free).
+      new: the cache AFTER the window's ``depth + 1`` appends.
+      emit: ``(B,)`` int32 committed tokens per slot (``0`` for slots that
+        did not participate: their length and ring stay exactly ``old``'s,
+        because every target position then predates the window).
+    """
+    R = new.recent_window
+    new_length = old.length + emit
+    target = ring_positions(new_length, R)                   # (B, R)
+    keep_new = target >= old.length[:, None]                 # window appends
+    m = keep_new[:, None, :, None]
+    return new._replace(
+        res_k=jnp.where(m, new.res_k, old.res_k),
+        res_v=jnp.where(m, new.res_v, old.res_v),
+        length=new_length,
+    )
+
+
+def tree_rollback(old_caches: Any, new_caches: Any, emit: jax.Array) -> Any:
+    """Apply :func:`rollback_cache` across every layer's cache pytree.
+
+    Leaves that are not SIKV-family caches are taken from ``new`` verbatim —
+    spec decode is gated to stacks where no such per-layer decode state
+    exists (``models.supports_spec_decode``).
+    """
+    return jax.tree_util.tree_map(
+        lambda o, n: rollback_cache(o, n, emit) if _is_cache(o) else n,
+        old_caches, new_caches, is_leaf=_is_cache)

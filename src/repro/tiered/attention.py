@@ -42,10 +42,11 @@ def tiered_sikv_decode_attention(
     v_new: jax.Array,
     tiered: TieredSIKVCache,
     cfg: SIKVConfig,
-    host_gather: Callable,
+    host_gather: Callable | None,
     *,
     topk: int | None = None,
     scale: float | None = None,
+    device_only: bool = False,
 ) -> tuple[jax.Array, TieredSIKVCache]:
     """One decode step of Self-Indexing sparse attention, tiered.
 
@@ -53,7 +54,13 @@ def tiered_sikv_decode_attention(
       q: ``(B, Hq, 1, D)`` current query (RoPE applied).
       k_new, v_new: ``(B, Hkv, 1, D)`` current token's key/value.
       host_gather: the transfer engine's exact miss path
-        (:meth:`~repro.tiered.staging.TransferEngine.host_gather`).
+        (:meth:`~repro.tiered.staging.TransferEngine.host_gather`);
+        may be ``None`` with ``device_only``.
+      device_only: speculative-draft policy — winners whose payload page is
+        neither staged nor in the prefetch lane are MASKED instead of
+        host-fetched, so the traced program contains no ``io_callback``
+        and a draft step moves zero host payload bytes (approximate; the
+        full-budget verify restores exactness).
     Returns:
       ``(attn_out (B, Hq, 1, Dv), updated tiered cache)``.
     """
@@ -90,7 +97,8 @@ def tiered_sikv_decode_attention(
     # ---- payload gather: staging pool / prefetch lane / host miss path ----
     codes_sel = rtr.gather_selected_paged(tiered.codes, tiered.block_table,
                                           idx, tiered.page_size)
-    payload = gather_payload_tiered(tiered, idx, sel_valid, host_gather)
+    payload, sel_valid = gather_payload_tiered(
+        tiered, idx, sel_valid, host_gather, device_only=device_only)
 
     if cfg.use_kernels:
         from repro.kernels import ops as kops

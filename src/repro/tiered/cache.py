@@ -29,7 +29,7 @@ Per-slot state (sinks, ring, statistics, block table) is identical to
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -253,7 +253,9 @@ def append_token_tiered(tiered: TieredSIKVCache, k_new: jax.Array,
 
 def gather_payload_tiered(tiered: TieredSIKVCache, idx: jax.Array,
                           sel_valid: jax.Array,
-                          host_gather: Callable) -> Dict[str, jax.Array]:
+                          host_gather: Optional[Callable], *,
+                          device_only: bool = False,
+                          ) -> Tuple[Dict[str, jax.Array], jax.Array]:
     """Gather the top-k winners' payload from whichever tier holds it.
 
     Resolution order per selected token (page ``pg``):
@@ -269,9 +271,14 @@ def gather_payload_tiered(tiered: TieredSIKVCache, idx: jax.Array,
       idx: ``(B, H, T)`` selected logical positions.
       sel_valid: ``(B, H, T)`` top-k selection validity (invalid lanes are
         masked downstream and must not trigger host fetches).
+      device_only: the speculative DRAFT policy — step 3 is dropped
+        entirely (no ``io_callback`` in the traced program; a draft step
+        moves zero host payload bytes) and host-tier winners are masked
+        out of the returned validity instead of fetched.
     Returns:
-      ``{field: (B, H, T, X)}`` gathered payload, bit-identical to what the
-      single-tier pool gather would return.
+      ``(payload {field: (B, H, T, X)}, sel_valid)`` — the payload is
+      bit-identical to the single-tier pool gather for every token the
+      returned validity keeps (all of them unless ``device_only``).
     """
     from jax.experimental import io_callback
 
@@ -311,13 +318,16 @@ def gather_payload_tiered(tiered: TieredSIKVCache, idx: jax.Array,
             g = jnp.where(pf_hit[..., None], pf, g)
         out[f] = g
 
+    if device_only:
+        return out, valid & (staged | pf_hit)
+
     shapes = tuple(jax.ShapeDtypeStruct(out[f].shape, out[f].dtype)
                    for f in PAYLOAD_FIELDS)
     host_vals = io_callback(host_gather, shapes, tiered.layer_id, pg, off,
                             need, staged & valid, pf_hit & valid)
     for f, hv in zip(PAYLOAD_FIELDS, host_vals):
         out[f] = jnp.where(need[..., None], hv, out[f])
-    return out
+    return out, sel_valid
 
 
 # ---------------------------------------------------------------------------

@@ -129,6 +129,7 @@ def _generate(eng, prompts, n_steps):
     return outs
 
 
+@pytest.mark.slow
 def test_dense_engine_chunked_matches_whole(engine_setup):
     params, cfg = engine_setup
     prompts = _prompts(cfg, [16, 9])
@@ -140,6 +141,7 @@ def test_dense_engine_chunked_matches_whole(engine_setup):
         assert _generate(mk(pc), prompts, 5) == ref, pc
 
 
+@pytest.mark.slow
 def test_paged_engine_chunked_matches_whole(engine_setup):
     params, cfg = engine_setup
     prompts = _prompts(cfg, [16, 9], seed=11)
@@ -171,6 +173,7 @@ def test_paged_chunked_prefix_hit_skips_chunks(engine_setup):
     assert toks[0] == toks[1]
 
 
+@pytest.mark.slow
 def test_paged_merged_failure_keeps_decode_consistent(engine_setup):
     """A merged chunk launch whose finalize raises (then retries) must not
     commit the decode half or desync the host write cursor from the device
@@ -208,6 +211,7 @@ def test_paged_merged_failure_keeps_decode_consistent(engine_setup):
     assert FlakyFinalize.failures == 0  # the failure path actually ran
 
 
+@pytest.mark.slow
 def test_chunked_admission_interleaves_decode(engine_setup):
     """Live slots keep producing tokens during a long chunked admission —
     one decode step per chunk (merged launch), zero with monolithic

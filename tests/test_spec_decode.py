@@ -1,0 +1,312 @@
+"""Self-speculative decoding: BIT-exactness vs token-by-token greedy decode.
+
+The acceptance contract: speculation changes the launch count, never a
+token.  Covered here: the verify scan's appends are bitwise identical to
+sequential decode steps (cache-level), and end-to-end served outputs match
+a never-speculating engine on all three engines (dense, paged, tiered),
+GQA + MLA, across chunked-prefill admissions, prefix-cache hits, page
+boundaries, and under an adversarial draft that is ALWAYS wrong (every
+window fully rejected and rolled back).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.models import (decode_step, init_params, prefill,
+                          spec_verify_steps, supports_spec_decode)
+from repro.serving import (PagedServingEngine, Request, RequestScheduler,
+                           ServingEngine, TieredServingEngine)
+from repro.sparse import get_method
+
+CFG_SIKV = SIKVConfig(num_sink_tokens=8, token_budget=40, recent_window=8,
+                      obs_window=8)
+
+
+@pytest.fixture(scope="module")
+def gqa_setup():
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    cfg = reduced_config(get_model_config("deepseek-v2-236b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(cfg, lens, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (l,), 1, cfg.vocab_size)]
+        for i, l in enumerate(lens)
+    ]
+
+
+def _serve(engine, prompts, news):
+    sched = RequestScheduler(engine)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=list(p), max_new_tokens=news[i]))
+    sched.run()
+    return {u: sched.completed[u].result for u in sched.completed}, sched
+
+
+# ---------------------------------------------------------------------------
+# cache level: the verify scan IS sequential decode, to the bit
+# ---------------------------------------------------------------------------
+
+def test_verify_scan_bitwise_equals_sequential_decode(gqa_setup):
+    """spec_verify_steps (one launch) vs depth+1 separate decode_step
+    launches: identical greedy tokens AND bitwise-identical caches (every
+    appended code/magnitude/scale/ring byte)."""
+    params, cfg = gqa_setup
+    method = get_method("sikv", CFG_SIKV)
+    depth = 3
+    B, Lp = 2, 32
+    toks = jnp.stack([jnp.asarray(p + [0] * (Lp - len(p)), jnp.int32)
+                      for p in _prompts(cfg, [Lp, 19])])
+    lengths = jnp.asarray([Lp, 19], jnp.int32)
+    logits, caches = jax.jit(lambda b: prefill(
+        params, cfg, b, method, capacity=Lp + depth + 4))(
+        {"tokens": toks, "lengths": lengths})
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    draft = jnp.stack([jnp.asarray(p[:depth], jnp.int32)
+                       for p in _prompts(cfg, [depth, depth], seed=9)])
+
+    verify_fn = jax.jit(lambda t, p, c, d: spec_verify_steps(
+        params, cfg, t, p, c, d, method, depth=depth))
+    v_toks, v_caches = verify_fn(tok0, lengths, caches, draft)
+
+    step_fn = jax.jit(lambda i, p, c: decode_step(
+        params, cfg, i, p, c, method=method))
+    seq_caches = caches
+    tok, pos = tok0, lengths
+    inputs = [tok0] + [draft[:, j] for j in range(depth)]
+    seq_toks = []
+    for j, tok in enumerate(inputs):
+        lg, seq_caches = step_fn({"tokens": tok[:, None]}, pos + j,
+                                 seq_caches)
+        seq_toks.append(jnp.argmax(lg, axis=-1).astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(v_toks),
+                                  np.stack([np.asarray(t)
+                                            for t in seq_toks], axis=1))
+    for a, b in zip(jax.tree_util.tree_leaves(v_caches),
+                    jax.tree_util.tree_leaves(seq_caches)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# engine level: served outputs identical with and without speculation
+# ---------------------------------------------------------------------------
+
+def _check_engines_match(params, cfg, mk_spec, *, lens, news,
+                         batch=3, prompt_len=32, max_new=16):
+    plain = ServingEngine(params, cfg, CFG_SIKV, method="sikv",
+                          batch_size=batch, prompt_len=prompt_len,
+                          max_new_tokens=max_new)
+    prompts = _prompts(cfg, lens)
+    ref, _ = _serve(plain, prompts, news)
+    spec_eng = mk_spec()
+    got, sched = _serve(spec_eng, prompts, news)
+    assert got == ref
+    return spec_eng, sched
+
+
+def test_spec_dense_matches_plain(gqa_setup):
+    params, cfg = gqa_setup
+    eng, sched = _check_engines_match(
+        params, cfg,
+        lambda: ServingEngine(params, cfg, CFG_SIKV, method="sikv",
+                              batch_size=3, prompt_len=32, max_new_tokens=16,
+                              spec_depth=4, spec_draft_k=4),
+        lens=[31, 16, 17, 30, 9, 24], news=[14, 9, 16, 5, 11, 16])
+    s = eng.stats
+    assert s["spec_steps"] == s["draft_launches"] == s["verify_launches"]
+    assert s["spec_rollbacks"] == s["spec_steps"]
+    # every decode token came through the spec path
+    dec = sum(r.decode_tokens for r in sched.completed.values())
+    assert s["spec_emitted"] == dec and s["steps"] == 0
+
+
+@pytest.mark.slow
+def test_spec_mla_matches_plain(mla_setup):
+    params, cfg = mla_setup
+    _check_engines_match(
+        params, cfg,
+        lambda: ServingEngine(params, cfg, CFG_SIKV, method="sikv",
+                              batch_size=2, prompt_len=32, max_new_tokens=16,
+                              spec_depth=3, spec_draft_k=4),
+        lens=[31, 17, 24, 12], news=[16, 9, 5, 14], batch=2)
+
+
+def test_spec_paged_matches_plain_across_page_boundaries(gqa_setup):
+    """page_size=4 with spec_depth=3: verify windows straddle page
+    boundaries constantly; rejected tails allocate and release pages."""
+    params, cfg = gqa_setup
+    eng, _ = _check_engines_match(
+        params, cfg,
+        lambda: PagedServingEngine(params, cfg, CFG_SIKV, batch_size=3,
+                                   prompt_len=32, max_new_tokens=16,
+                                   page_size=4, spec_depth=3,
+                                   spec_draft_k=4),
+        lens=[15, 16, 17, 30, 9, 13], news=[14, 9, 16, 5, 11, 16])
+    # pool fully consistent after every request retired: only the prefix
+    # registry holds pages, nothing reserved, no leaked refcounts
+    reg = sum(len(e.page_ids) for e in eng.pool.registry.values())
+    assert eng.pool.num_pages - eng.pool.free_pages == reg
+    assert eng.pool.reserved == 0
+
+
+@pytest.mark.slow
+def test_spec_tiered_matches_plain(gqa_setup):
+    """Tight staging + prefetch: draft windows run device-only, verify
+    windows pin staged pages, rollbacks discard staged tails."""
+    params, cfg = gqa_setup
+    eng, _ = _check_engines_match(
+        params, cfg,
+        lambda: TieredServingEngine(params, cfg, CFG_SIKV, batch_size=3,
+                                    prompt_len=32, max_new_tokens=16,
+                                    page_size=4, prefetch_depth=2,
+                                    spec_depth=3, spec_draft_k=4),
+        lens=[15, 16, 17, 30, 9, 13], news=[14, 9, 16, 5, 11, 16])
+    assert eng.staging.pinned_pages == 0          # no leaked window pins
+    assert eng.pool.reserved == 0
+
+
+@pytest.mark.slow
+def test_spec_with_chunked_admission_and_prefix_hits(gqa_setup):
+    """Chunked prefill interleaves plain merged decode with admissions;
+    spec windows run between them.  An identical prompt later in the queue
+    takes the prefix-hit path and then speculates from shared pages."""
+    params, cfg = gqa_setup
+    prompts = _prompts(cfg, [31, 16, 30, 9])
+    prompts.append(list(prompts[0]))              # prefix-cache hit
+    news = [14, 9, 5, 11, 14]
+    plain = ServingEngine(params, cfg, CFG_SIKV, method="sikv",
+                          batch_size=3, prompt_len=32, max_new_tokens=16)
+    ref, _ = _serve(plain, prompts, news)
+    eng = TieredServingEngine(params, cfg, CFG_SIKV, batch_size=3,
+                              prompt_len=32, max_new_tokens=16,
+                              page_size=4, prefetch_depth=2,
+                              prefill_chunk=8, spec_depth=3)
+    got, sched = _serve(eng, prompts, news)
+    assert got == ref
+    assert sched.completed[4].prefix_hit
+
+
+@pytest.mark.slow
+def test_spec_adversarial_draft_still_exact(gqa_setup):
+    """A draft that is ALWAYS wrong forces full rejection + rollback on
+    every window (including windows straddling page boundaries) — output
+    must still match plain decode token for token, and the pool must come
+    back clean."""
+    params, cfg = gqa_setup
+    prompts = _prompts(cfg, [15, 16, 17, 30])
+    news = [14, 9, 16, 5]
+    plain = ServingEngine(params, cfg, CFG_SIKV, method="sikv",
+                          batch_size=2, prompt_len=32, max_new_tokens=16)
+    ref, _ = _serve(plain, prompts, news)
+    for mk in [
+        lambda: PagedServingEngine(params, cfg, CFG_SIKV, batch_size=2,
+                                   prompt_len=32, max_new_tokens=16,
+                                   page_size=4, spec_depth=3),
+        lambda: TieredServingEngine(params, cfg, CFG_SIKV, batch_size=2,
+                                    prompt_len=32, max_new_tokens=16,
+                                    page_size=4, prefetch_depth=2,
+                                    spec_depth=3),
+    ]:
+        eng = mk()
+        orig = eng._draft
+
+        def wrecked(p, *, tokens, pos, caches, _orig=orig):
+            d, cs = _orig(p, tokens=tokens, pos=pos, caches=caches)
+            return (d + 1) % cfg.vocab_size, cs
+
+        eng._draft = wrecked
+        got, sched = _serve(eng, prompts, news)
+        assert got == ref
+        assert sched.service_stats()["spec_accept_rate"] == 0.0
+        assert eng.pool.reserved == 0
+
+
+def test_spec_accept_rate_counts_verified_not_committed(gqa_setup):
+    """A window clamped by the request budget must not read as a drafting
+    failure: with an ORACLE draft (the true continuation) every drafted
+    token verifies, so the accept rate is 1.0 even though the final
+    window commits fewer tokens than it accepted."""
+    params, cfg = gqa_setup
+    prompt = _prompts(cfg, [20])[0]
+    plain = ServingEngine(params, cfg, CFG_SIKV, method="sikv",
+                          batch_size=1, prompt_len=32, max_new_tokens=16)
+    ref, _ = _serve(plain, [prompt], [8])
+    ref_long = ref[0]                       # true greedy continuation
+
+    eng = ServingEngine(params, cfg, CFG_SIKV, method="sikv", batch_size=1,
+                        prompt_len=32, max_new_tokens=16, spec_depth=4)
+
+    def oracle(p, *, tokens, pos, caches):
+        g = int(jax.device_get(pos)[0]) - len(prompt)
+        return jnp.asarray([ref_long[g + 1: g + 5]], jnp.int32), None
+
+    eng._draft = oracle
+    got, sched = _serve(eng, [prompt], [3])  # budget 3 < spec_depth + 1
+    assert got[0] == ref_long[:3]
+    assert sched.service_stats()["spec_accept_rate"] == 1.0
+
+
+def test_spec_respects_request_budget(gqa_setup):
+    """A request whose remaining budget is smaller than an accepted window
+    is clamped: exactly max_new_tokens come back, cache lengths match."""
+    params, cfg = gqa_setup
+    eng = ServingEngine(params, cfg, CFG_SIKV, method="sikv", batch_size=2,
+                        prompt_len=32, max_new_tokens=16, spec_depth=4)
+    prompts = _prompts(cfg, [20, 12])
+    got, _ = _serve(eng, prompts, [3, 5])
+    assert [len(got[0]), len(got[1])] == [3, 5]
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_unsupported_stacks():
+    cfg = reduced_config(get_model_config("mamba2-130m"))
+    assert not supports_spec_decode(cfg)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine(params, cfg, CFG_SIKV, method="sikv", batch_size=2,
+                      prompt_len=16, max_new_tokens=4, spec_depth=2)
+
+
+def test_spec_rejects_window_deeper_than_ring(gqa_setup):
+    params, cfg = gqa_setup
+    with pytest.raises(ValueError, match="recent_window"):
+        ServingEngine(params, cfg, CFG_SIKV, method="sikv", batch_size=2,
+                      prompt_len=16, max_new_tokens=4,
+                      spec_depth=CFG_SIKV.recent_window)
+
+
+def test_spec_rejects_methods_without_draft_policy(gqa_setup):
+    params, cfg = gqa_setup
+    with pytest.raises(ValueError, match="draft"):
+        ServingEngine(params, cfg, CFG_SIKV, method="snapkv", batch_size=2,
+                      prompt_len=16, max_new_tokens=4, spec_depth=2)
+
+
+def test_serve_flag_guards():
+    from repro.launch.serve import validate_serve_flags
+    base = dict(paged=False, method="sikv", host_pages=False,
+                staging_pages=None, prefetch_depth=None)
+    validate_serve_flags(**base, spec_depth=4, spec_draft_k=2)
+    with pytest.raises(ValueError, match="spec-depth"):
+        validate_serve_flags(**dict(base, method="quest"), spec_depth=4)
+    with pytest.raises(ValueError, match="spec-draft-k"):
+        validate_serve_flags(**base, spec_draft_k=2)

@@ -1,0 +1,214 @@
+"""Cache rollback edge cases, independent of speculative decoding.
+
+Rollback is a first-class cache operation (``repro.spec.rollback`` +
+``SlotPageManager.truncate``); these tests pin its contracts directly:
+the ring rewind is exact and never resurrects a token that had already
+left the ring for the quantized store, a rollback across a page boundary
+frees the page exactly once (and re-credits the admission reservation),
+and a tiered rollback of a dirty staged page discards the tail instead of
+writing it back.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.core.cache import append_token, prefill_compress, ring_positions
+from repro.models import init_params
+from repro.paged.pool import PagePool, SlotPageManager
+from repro.serving import TieredServingEngine
+from repro.spec import rollback_cache, tree_rollback
+
+CFG = SIKVConfig(num_sink_tokens=4, token_budget=24, recent_window=8,
+                 obs_window=8)
+
+
+def _prefilled(rng, B=2, H=2, L=24, D=32, capacity=40):
+    k = jax.random.normal(rng, (B, H, L, D))
+    v = jax.random.normal(jax.random.fold_in(rng, 1), (B, H, L, D))
+    q_obs = jax.random.normal(jax.random.fold_in(rng, 2), (B, H, 8, D))
+    return prefill_compress(k, v, q_obs, CFG, capacity=capacity,
+                            scale_dtype=jnp.float32)
+
+
+def _appended(cache, n, seed=7):
+    """Append n tokens; returns (states, kvs) with states[j] = cache after
+    j appends (states[0] is the input)."""
+    B, H, D = cache.mu.shape[0], cache.mu.shape[1], cache.head_dim
+    states, kvs = [cache], []
+    for j in range(n):
+        kn = jax.random.normal(jax.random.PRNGKey(seed + 2 * j), (B, H, 1, D))
+        vn = jax.random.normal(jax.random.PRNGKey(seed + 2 * j + 1),
+                               (B, H, 1, D))
+        states.append(append_token(states[-1], kn, vn, CFG))
+        kvs.append((kn, vn))
+    return states, kvs
+
+
+def test_rollback_bitwise_matches_unspeculated_state(rng):
+    """rollback(old, old+n appends, emit=m) must equal the state after
+    exactly m appends — ring and length to the bit."""
+    states, _ = _appended(_prefilled(rng), 5)
+    for m in range(0, 5):
+        rb = rollback_cache(states[0], states[5],
+                            jnp.full((2,), m, jnp.int32))
+        ref = states[m]
+        np.testing.assert_array_equal(np.asarray(rb.length),
+                                      np.asarray(ref.length))
+        np.testing.assert_array_equal(np.asarray(rb.res_k),
+                                      np.asarray(ref.res_k))
+        np.testing.assert_array_equal(np.asarray(rb.res_v),
+                                      np.asarray(ref.res_v))
+
+
+def test_rollback_decode_continuation_bit_exact(rng):
+    """Decoding on after a rollback equals never having speculated: the
+    overwritten-but-invisible quantized tail cannot leak."""
+    states, _ = _appended(_prefilled(rng), 4)
+    rb = rollback_cache(states[0], states[4], jnp.full((2,), 1, jnp.int32))
+    # continue with fresh tokens on both the rolled-back and the reference
+    cont_rb, _ = _appended(rb, 3, seed=91)
+    cont_ref, _ = _appended(states[1], 3, seed=91)
+    for a, b in zip(cont_rb[-1], cont_ref[-1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rollback_never_resurrects_flushed_token(rng):
+    """A token that left the ring for the quantized store before the
+    window must NOT reappear in the ring after rollback.  Keys encode
+    their position, so every ring slot's content is checkable against the
+    position it claims to hold."""
+    B, H, D, L = 1, 2, 32, 24
+    R = CFG.recent_window
+    k = jnp.broadcast_to(jnp.arange(L, dtype=jnp.float32)[None, None, :,
+                                                          None],
+                         (B, H, L, D))
+    v = k + 0.5
+    q_obs = jax.random.normal(rng, (B, H, 8, D))
+    cache = prefill_compress(k, v, q_obs, CFG, capacity=48,
+                             scale_dtype=jnp.float32)
+    # append with position-encoded keys too
+    cur = cache
+    appended = [cache]
+    for j in range(6):
+        p = float(L + j)
+        appended.append(append_token(
+            appended[-1], jnp.full((B, H, 1, D), p),
+            jnp.full((B, H, 1, D), p + 0.5), CFG))
+    for emit in range(0, 7):
+        rb = rollback_cache(appended[0], appended[6],
+                            jnp.asarray([emit], jnp.int32))
+        assert int(rb.length[0]) == L + emit
+        rp = np.asarray(ring_positions(rb.length, R))[0]     # target pos
+        ring = np.asarray(rb.res_k)[0, 0, :, 0]              # slot values
+        for slot in range(R):
+            if rp[slot] < 0:
+                continue
+            # the slot holds exactly its target position's key — never an
+            # older (flushed) one like target - R
+            assert ring[slot] == float(rp[slot]), (emit, slot, rp[slot],
+                                                   ring[slot])
+
+
+def test_tree_rollback_leaves_non_cache_state_alone(rng):
+    cache = _prefilled(rng)
+    states, _ = _appended(cache, 2)
+    old = [{"self": states[0], "aux": jnp.zeros((3,))}]
+    new = [{"self": states[2], "aux": jnp.ones((3,))}]
+    out = tree_rollback(old, new, jnp.full((2,), 1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out[0]["aux"]), np.ones((3,)))
+    assert [int(x) for x in out[0]["self"].length] \
+        == [int(x) + 1 for x in states[0].length]
+
+
+# ---------------------------------------------------------------------------
+# page release on rollback (host side)
+# ---------------------------------------------------------------------------
+
+def _mgr(num_pages=6, page_size=4, pages_per_seq=4, slots=2):
+    pool = PagePool(num_pages, page_size)
+    blocks, copies = [], []
+    mgr = SlotPageManager(pool, pages_per_seq, slots,
+                          set_block=lambda s, j, p: blocks.append((s, j, p)),
+                          copy_page=lambda a, b: copies.append((a, b)))
+    return pool, mgr, blocks
+
+
+def test_truncate_frees_page_exactly_once():
+    pool, mgr, blocks = _mgr()
+    [p0] = pool.allocate(1)
+    mgr.assign(0, [p0], reserved=3)
+    mgr.ensure_writable(0, 4)          # boundary: allocates page 1
+    mgr.ensure_writable(0, 8)          # boundary: allocates page 2
+    assert len(mgr.slot_pages(0)) == 3
+    freed_before = pool.stats["freed"]
+    released = mgr.truncate(0, 1)
+    assert len(released) == 2
+    assert pool.stats["freed"] == freed_before + 2
+    for p in released:
+        assert pool.refcount[p] == 0
+    # the free list holds each exactly once
+    assert sorted(pool._free).count(released[0]) == 1
+    # block-table entries were unmapped before the pages went free
+    assert (0, 1, -1) in blocks and (0, 2, -1) in blocks
+    # idempotent: nothing left to release, no double free
+    assert mgr.truncate(0, 1) == []
+    assert pool.stats["freed"] == freed_before + 2
+
+
+def test_truncate_recredits_reservation():
+    """Released tail pages go back to the slot's reservation so a
+    competing admission can never be promised them — available() must be
+    identical before the window and after its rollback."""
+    pool, mgr, _ = _mgr()
+    [p0] = pool.allocate(1)
+    mgr.assign(0, [p0], reserved=3)
+    avail0 = pool.available()
+    mgr.ensure_writable(0, 4)
+    mgr.ensure_writable(0, 8)
+    mgr.truncate(0, 1)
+    assert pool.available() == avail0
+    assert pool.reserved == 3          # back to the full admission promise
+    # and release_slot still returns everything cleanly
+    mgr.release_slot(0)
+    assert pool.reserved == 0
+    assert pool.free_pages == pool.num_pages
+
+
+def test_tiered_rollback_discards_dirty_staged_tail(rng):
+    """Rolling back a window that crossed into a freshly staged (dirty)
+    page must DISCARD that page — no device->host writeback, no host-valid
+    copy — while the kept write page stays staged and pinned for the next
+    step."""
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = TieredServingEngine(params, cfg, CFG, batch_size=2, prompt_len=16,
+                              max_new_tokens=8, page_size=4,
+                              prefetch_depth=0, spec_depth=3)
+    prompt = [int(t) for t in jax.random.randint(rng, (15,), 1,
+                                                 cfg.vocab_size)]
+    eng.admit(0, prompt, max_new_tokens=8)
+    # force total rejection: every spec window commits exactly one token
+    orig = eng._draft
+
+    def wrecked(p, *, tokens, pos, caches):
+        d, cs = orig(p, tokens=tokens, pos=pos, caches=caches)
+        return (d + 1) % cfg.vocab_size, cs
+
+    eng._draft = wrecked
+    d2h_before = eng.xfer.stats["d2h_pages"]
+    host_valid_before = set(eng.host.valid)
+    pages_before = list(eng.slots.slot_pages(0))
+    out = eng.spec_step()
+    assert len(out[0]) == 1                  # full rejection: 1 token
+    # the window crossed pos 15 -> 16 (page boundary): a page was
+    # allocated, staged, dirtied, then released by the rollback
+    assert eng.slots.slot_pages(0) == pages_before
+    assert eng.xfer.stats["d2h_pages"] == d2h_before, \
+        "rolled-back dirty page must be discarded, not written back"
+    assert set(eng.host.valid) == host_valid_before
+    assert eng.pool.reserved > 0             # tail reservation restored
+    assert eng.staging.pinned_pages <= 1     # only the write page pin

@@ -208,6 +208,7 @@ def _assert_all_fields_match(t, host, dense, pages, ps):
                 err_msg=f"slot {b} field {f}")
 
 
+@pytest.mark.slow
 def test_tiered_decode_bitexact_with_demotion_writeback(rng):
     """Decode through the tiered cache with the prompt payload HOST-tier
     (exact io_callback misses) and write pages demoted at every boundary
@@ -252,6 +253,7 @@ def test_tiered_decode_bitexact_with_demotion_writeback(rng):
     _assert_all_fields_match(t, host, dc, pages, ps)
 
 
+@pytest.mark.slow
 def test_tiered_decode_prefetch_lane_is_consumed_exactly(rng):
     """Pages moved into the prefetch lane (as in-flight device_put arrays)
     serve top-k winners bit-exactly, and lane hits are not counted (or
@@ -344,6 +346,7 @@ def _engines(params, cfg, tiered_kw=None, **kw):
     return paged, tiered
 
 
+@pytest.mark.slow
 def test_tiered_engine_matches_paged_engine(engine_setup):
     """Identical admit/step/retire stream through both engines: bit-exact
     logits => identical tokens, through a retire + refill cycle."""
@@ -374,6 +377,7 @@ def test_tiered_engine_matches_paged_engine(engine_setup):
     assert outs["tiered"] == outs["paged"]
 
 
+@pytest.mark.slow
 def test_tiered_scheduler_parity_under_demotion_pressure(engine_setup):
     """The regression config for the prefetch-commit eviction bug: a tight
     staging cache (one floating slot), prefetch on, retire+refill churn —
@@ -434,6 +438,7 @@ def test_tiered_prefix_hit_skips_prefill_and_reopens_host_tail(
     assert outs["tiered"] == outs["paged"]
 
 
+@pytest.mark.slow
 def test_tiered_chunked_admission_parity(engine_setup):
     params, cfg = engine_setup
     res = {}
@@ -472,6 +477,7 @@ def test_staging_capacity_bounds_concurrency_not_completion(engine_setup):
     assert all(len(sched.completed[i].result) == 4 for i in range(5))
 
 
+@pytest.mark.slow
 def test_tiered_engine_handles_hybrid_mamba_arch():
     """Hybrid (attention + Mamba2) stacks: SIKV layers tier their pages,
     Mamba state layers stay dense per-slot rows — parity with the paged
