@@ -9,7 +9,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, header
 from repro.config import SIKVConfig
@@ -28,7 +27,6 @@ BASE = SIKVConfig(num_sink_tokens=64, token_budget=256, recent_window=16,
 def _decode_mse(k, v, q, q_obs, cfg, *, sign_only_retrieval=False,
                 no_sign_quant=False) -> float:
     B, Hkv, L, D = k.shape
-    Hq = q.shape[1]
     cache = prefill_compress(k, v, q_obs, cfg, capacity=L,
                              scale_dtype=jnp.float32)
     q_kv = group_queries(q[:, :, 0, :], Hkv)

@@ -1,0 +1,48 @@
+"""Audit-census benchmark rows: the launch/transfer shape of every traced
+engine program, emitted through the common harness so the perf-trajectory
+JSON (BENCH_serving.json) carries the program contracts next to the
+timings they explain.
+
+Rows:
+
+* ``analysis/trace`` — wall time to trace + lower the whole program set
+  (the cost CI's ``analysis`` job pays per run), with suite totals.
+* ``analysis/<program>`` — one row per audited program; ``derived`` holds
+  the census counters (pallas launches, io/pure callbacks, device_puts,
+  their in-loop variants) plus whether the lowering donates its cache
+  operand.  These are the same numbers ANALYSIS_BUDGET.json pins; the
+  benchmark row makes drift visible in the perf artifact too.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, header
+
+
+def run(smoke: bool = False) -> None:
+    from repro.analysis import build_suite
+
+    header("analysis: program census (jaxpr audit, DESIGN.md §7)")
+    t0 = time.perf_counter()
+    suite = build_suite(kernels=not smoke)
+    trace_us = (time.perf_counter() - t0) * 1e6
+
+    violations = suite.audit()
+    totals = {"programs": len(suite.programs),
+              "violations": len(violations)}
+    for prog in suite.programs:
+        for k, v in prog.census.counts.items():
+            if v:
+                totals[k] = totals.get(k, 0) + v
+    emit("analysis/trace", trace_us,
+         ";".join(f"{k}={v}" for k, v in sorted(totals.items())))
+
+    for prog in suite.programs:
+        cen = prog.census
+        parts = [f"{k}={v}" for k, v in cen.counts.items() if v]
+        parts.append(f"donates={int(prog.donates)}")
+        emit(f"analysis/{prog.name}", 0.0, ";".join(parts))
+
+    assert not violations, \
+        f"program contracts violated: {[str(v) for v in violations]}"

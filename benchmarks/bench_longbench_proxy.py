@@ -90,7 +90,6 @@ def run(budget: int = 160, L: int = 4096, trials: int = 3) -> None:
                         & set(np.asarray(ie[b, h]).tolist())) / budget
                     for b in range(B) for h in range(Hkv)])
                 recalls[m].append(rec)
-    ref_mse = errs["full"]
     for m in METHODS:
         mse = float(np.mean(errs[m]))
         extra = f"output_mse={mse:.5f}"

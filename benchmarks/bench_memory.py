@@ -13,7 +13,6 @@ droppable (see EXPERIMENTS §Perf), the figure is 768 exactly.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, header
 from repro.config import SIKVConfig

@@ -4,7 +4,7 @@ from __future__ import annotations
 import os
 
 from benchmarks.common import emit, header
-from repro.roofline import HW, load_records, roofline_terms
+from repro.roofline import load_records, roofline_terms
 
 ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 

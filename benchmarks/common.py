@@ -5,7 +5,6 @@ import time
 from typing import Any, Callable, Dict, List
 
 import jax
-import jax.numpy as jnp
 
 ROWS: List[str] = []
 # structured mirror of ROWS for --emit-json (benchmarks/run.py): the

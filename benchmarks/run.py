@@ -32,8 +32,9 @@ def main() -> None:
                          "repo root, the committed perf-trajectory file")
     args = ap.parse_args()
 
-    from benchmarks import (bench_ablation, bench_longbench_proxy,
-                            bench_memory, bench_modules, bench_roofline,
+    from benchmarks import (bench_ablation, bench_analysis,
+                            bench_longbench_proxy, bench_memory,
+                            bench_modules, bench_roofline,
                             bench_ruler_proxy, bench_serving, bench_tt2t)
     if args.smoke:
         suites = [
@@ -41,6 +42,8 @@ def main() -> None:
             ("bench_serving",
              lambda: bench_serving.run(prompt_len=32, n_requests=4,
                                        smoke=True)),
+            # audit census rows (no pallas-kernel trace at smoke shapes)
+            ("bench_analysis", lambda: bench_analysis.run(smoke=True)),
         ]
     else:
         suites = [
@@ -52,6 +55,7 @@ def main() -> None:
             ("bench_ablation", bench_ablation.run),      # Table 5
             ("bench_serving", bench_serving.run),        # batching + paged
             ("bench_roofline", bench_roofline.run),      # dry-run roofline
+            ("bench_analysis", bench_analysis.run),      # §7 program census
         ]
     failures = []
     ran = []

@@ -4,7 +4,6 @@ Usage: PYTHONPATH=src python scripts/render_experiments.py > /tmp/tables.md
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 

@@ -1,0 +1,164 @@
+#!/usr/bin/env python
+"""Repo gate: AST lint + jaxpr program audit + launch/transfer budget diff.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python scripts/sikv_lint.py             # all three gates
+    PYTHONPATH=src python scripts/sikv_lint.py --ast       # AST rules only
+    PYTHONPATH=src python scripts/sikv_lint.py --audit     # jaxpr contracts
+    PYTHONPATH=src python scripts/sikv_lint.py --budget    # budget diff
+    PYTHONPATH=src python scripts/sikv_lint.py --refresh-budget
+
+``--refresh-budget`` rewrites ANALYSIS_BUDGET.json from the current tree
+(preserving the hand-written ``regressions`` block); commit the diff
+alongside the change that moved the numbers.  ``--github-summary FILE``
+appends a per-rule markdown table (CI passes ``$GITHUB_STEP_SUMMARY``).
+
+Exit status: 0 clean, 1 findings, 2 usage/infra error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from collections import Counter
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis import ast_rules  # noqa: E402
+from repro.analysis import budget as budget_mod  # noqa: E402
+from repro.analysis import jaxpr_audit  # noqa: E402
+
+JAXPR_RULES = {
+    "SIKV-J001": "forbidden primitive in a program",
+    "SIKV-J002": "primitive count != contract",
+    "SIKV-J003": "host transfer/callback in a scan body",
+    "SIKV-J004": "donation contract violated",
+}
+BUDGET_RULES = {
+    "SIKV-B001": "program primitive count drifted from budget",
+    "SIKV-B002": "audited program set drifted from budget",
+    "SIKV-B003": "recompile/launch drift under churn",
+}
+
+
+def _rule_of(line: str) -> str:
+    return line.split(" ", 1)[0].split("[")[0].strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="SIKV static-analysis gate (DESIGN.md §7)")
+    ap.add_argument("--ast", action="store_true", help="AST rules only")
+    ap.add_argument("--audit", action="store_true",
+                    help="jaxpr program contracts only")
+    ap.add_argument("--budget", action="store_true",
+                    help="budget diff only")
+    ap.add_argument("--refresh-budget", action="store_true",
+                    help="rewrite ANALYSIS_BUDGET.json from this tree")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the pallas-kernel decode trace")
+    ap.add_argument("--github-summary", metavar="FILE",
+                    help="append a markdown summary (CI step summary)")
+    args = ap.parse_args(argv)
+    run_all = not (args.ast or args.audit or args.budget
+                   or args.refresh_budget)
+    do_ast = run_all or args.ast
+    do_audit = run_all or args.audit
+    do_budget = run_all or args.budget or args.refresh_budget
+
+    failures: list[str] = []
+    sections: list[tuple[str, dict, list[str]]] = []
+    t0 = time.time()
+
+    if do_ast:
+        findings = ast_rules.run_lint()
+        lines = [str(f) for f in findings]
+        failures += lines
+        per_rule = Counter(f.rule for f in findings)
+        counts = {r: per_rule.get(r, 0)
+                  for r in sorted(ast_rules.RULE_DESCRIPTIONS)}
+        sections.append(("AST lint (src/repro)", counts, lines))
+
+    suite = None
+    if do_audit or do_budget:
+        print("tracing engine programs ...", flush=True)
+        suite = jaxpr_audit.build_suite(kernels=not args.no_kernels)
+
+    if do_audit:
+        violations = suite.audit()
+        lines = [str(v) for v in violations]
+        failures += lines
+        per_rule = Counter(v.rule for v in violations)
+        counts = {r: per_rule.get(r, 0) for r in sorted(JAXPR_RULES)}
+        sections.append((f"Jaxpr audit ({len(suite.programs)} programs)",
+                         counts, lines))
+
+    if do_budget:
+        print("running admit/retire/admit churn ...", flush=True)
+        measured = budget_mod.compute_budget(suite)
+        if args.refresh_budget:
+            budget_mod.save_budget(measured)
+            print(f"wrote {budget_mod.BUDGET_PATH}")
+            sections.append(("Budget refresh", {"programs":
+                             len(measured["programs"])}, []))
+        else:
+            try:
+                committed = budget_mod.load_budget()
+            except FileNotFoundError:
+                failures += ["SIKV-B002 ANALYSIS_BUDGET.json missing — "
+                             "generate it with --refresh-budget and commit"]
+                committed = {}
+            diffs = budget_mod.diff_budget(committed, measured) \
+                if committed else []
+            failures += diffs
+            per_rule = Counter(_rule_of(d) for d in diffs)
+            counts = {r: per_rule.get(r, 0) for r in sorted(BUDGET_RULES)}
+            sections.append((f"Budget diff vs ANALYSIS_BUDGET.json "
+                             f"({len(measured['programs'])} programs)",
+                             counts, diffs))
+
+    # -- report -----------------------------------------------------------
+    for title, counts, lines in sections:
+        print(f"\n== {title} ==")
+        for rule, n in counts.items():
+            desc = {**ast_rules.RULE_DESCRIPTIONS, **JAXPR_RULES,
+                    **BUDGET_RULES}.get(rule, "")
+            print(f"  {rule}  {n:3d}  {desc}")
+        for line in lines:
+            print("  " + line)
+    verdict = "FAIL" if failures else "ok"
+    print(f"\nsikv_lint: {verdict} — {len(failures)} finding(s) in "
+          f"{time.time() - t0:.1f}s")
+    if failures and do_budget and not args.refresh_budget:
+        print("budget mismatches: if intentional, run\n"
+              "  PYTHONPATH=src python scripts/sikv_lint.py --refresh-budget"
+              "\nand commit the ANALYSIS_BUDGET.json diff with your change.")
+
+    if args.github_summary:
+        with open(args.github_summary, "a") as f:
+            f.write("## sikv_lint — " +
+                    ("❌ FAIL" if failures else "✅ clean") + "\n\n")
+            for title, counts, lines in sections:
+                f.write(f"### {title}\n\n| rule | findings | meaning |\n"
+                        "|---|---|---|\n")
+                for rule, n in counts.items():
+                    desc = {**ast_rules.RULE_DESCRIPTIONS, **JAXPR_RULES,
+                            **BUDGET_RULES}.get(rule, "")
+                    mark = "❌" if n else "✅"
+                    f.write(f"| {rule} | {mark} {n} | {desc} |\n")
+                f.write("\n")
+                if lines:
+                    f.write("```\n" + "\n".join(lines) + "\n```\n\n")
+            if failures and do_budget and not args.refresh_budget:
+                f.write("On an intentional budget change: "
+                        "`PYTHONPATH=src python scripts/sikv_lint.py "
+                        "--refresh-budget` and commit the "
+                        "`ANALYSIS_BUDGET.json` diff.\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Static-analysis layer: jaxpr program contracts, repo-specific AST lint,
+and the committed launch/transfer budget gate (DESIGN.md §7).
+
+Entry points:
+
+* :func:`repro.analysis.jaxpr_audit.build_suite` — trace every audited
+  engine program; ``suite.audit()`` returns contract violations;
+* :func:`repro.analysis.ast_rules.run_lint` — AST rules over src/repro;
+* :func:`repro.analysis.budget.compute_budget` /
+  :func:`repro.analysis.budget.diff_budget` — measure and gate the
+  committed ``ANALYSIS_BUDGET.json``.
+
+``python scripts/sikv_lint.py`` runs all three.
+"""
+from repro.analysis.ast_rules import Finding, lint_source, run_lint
+from repro.analysis.budget import (compute_budget, diff_budget, load_budget,
+                                   save_budget)
+from repro.analysis.jaxpr_audit import (AuditSuite, Census, Contract,
+                                        TracedProgram, Violation,
+                                        audit_program, build_suite, census)
+
+__all__ = [
+    "AuditSuite", "Census", "Contract", "Finding", "TracedProgram",
+    "Violation", "audit_program", "build_suite", "census", "compute_budget",
+    "diff_budget", "lint_source", "load_budget", "run_lint", "save_budget",
+]

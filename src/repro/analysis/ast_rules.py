@@ -1,0 +1,364 @@
+"""Repo-specific AST lint — rules ruff cannot express.
+
+The serving design splits the codebase into two disciplines:
+
+* **traced modules** (cache/attention/kernel/model code) execute under
+  ``jax.jit`` — any host materialisation (``.item()``, ``float(tracer)``,
+  ``np.asarray``, ``jax.device_get``) either crashes at trace time or, worse,
+  silently forces a device sync per call;
+* **host modules** (scheduler, page pool, staging policy, host page store,
+  acceptance) are pure-Python bookkeeping that must stay trace-free — a
+  stray ``jnp.`` there would put device work (and a potential dispatch)
+  on the scheduling path.
+
+Rule IDs (referenced from DESIGN.md §7):
+
+* ``SIKV-L001`` — host sync / materialisation inside a traced module.
+  ``float``/``int``/``bool`` calls are only flagged when their argument is
+  *dynamic* per a local static-dataflow pass (values derived from shapes,
+  ``len()``, config attributes and constants are trace-static and fine).
+* ``SIKV-L002`` — ``jax``/``jnp`` use inside a host-side module.
+* ``SIKV-L003`` — a ``pallas_call`` without an explicit ``interpret=``
+  kwarg (every kernel must thread the interpret-mode fallback so the repo
+  runs off-TPU).
+* ``SIKV-L004`` — version-shimmed jax API used directly instead of via
+  ``repro.compat``.
+
+Waivers: append ``# lint: allow[SIKV-L00N] <reason>`` to the offending
+line, or mark a whole function host-side with ``# lint: host`` on its
+``def`` line (e.g. a byte-accounting helper living in a traced module).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import List, Optional, Set
+
+REPO_SRC = Path(__file__).resolve().parents[2]       # .../src
+RULE_DESCRIPTIONS = {
+    "SIKV-L001": "host sync / materialisation in a traced module",
+    "SIKV-L002": "jax/jnp on the host-side bookkeeping path",
+    "SIKV-L003": "pallas_call without an interpret= fallback",
+    "SIKV-L004": "version-shimmed jax API bypassing repro.compat",
+}
+
+# modules whose function bodies run under jax.jit (relative to src/)
+TRACED_MODULES = (
+    "repro/core/attention.py", "repro/core/cache.py",
+    "repro/core/codebook.py", "repro/core/quantization.py",
+    "repro/core/retrieval.py",
+    "repro/models/", "repro/kernels/", "repro/sparse/",
+    "repro/paged/cache.py", "repro/paged/attention.py",
+    "repro/tiered/cache.py", "repro/tiered/attention.py",
+    "repro/spec/rollback.py",
+)
+# pure-Python bookkeeping that must never touch jax
+HOST_MODULES = (
+    "repro/serving/scheduler.py", "repro/paged/pool.py",
+    "repro/tiered/host_store.py", "repro/tiered/staging.py",
+    "repro/spec/accept.py",
+)
+# dotted jax APIs that moved/renamed across versions; call sites must go
+# through the named repro.compat shim instead
+SHIMMED_APIS = {
+    "jax.tree.flatten_with_path": "repro.compat.tree_flatten_with_path",
+    "jax.tree_util.tree_flatten_with_path":
+        "repro.compat.tree_flatten_with_path",
+    "jax.shard_map": "repro.compat.shard_map",
+    "jax.experimental.shard_map": "repro.compat.shard_map",
+    "jax.set_mesh": "repro.compat.use_mesh",
+    "jax.make_mesh": "repro.compat.make_mesh",
+    "jax.sharding.AxisType": "repro.compat.AxisType",
+    "jax.sharding.get_abstract_mesh": "repro.compat.abstract_mesh",
+}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[(?:SIKV-)?(L\d{3})\]")
+_HOST_FN_RE = re.compile(r"#\s*lint:\s*host\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.rule} {self.path}:{self.line} {self.message}"
+
+
+def classify(rel_path: str) -> Optional[str]:
+    """'traced' | 'host' | None for a path relative to ``src/``."""
+    p = rel_path.replace("\\", "/")
+    if any(p == m or (m.endswith("/") and p.startswith(m))
+           for m in HOST_MODULES):
+        return "host"
+    if any(p == m or (m.endswith("/") and p.startswith(m))
+           for m in TRACED_MODULES):
+        return "traced"
+    return None
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# -- static-dataflow for SIKV-L001 ------------------------------------------
+
+_STATIC_ROOTS = {"cfg", "config", "sikv"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "nbytes", "itemsize", "size"}
+
+
+def _is_static(node: ast.AST, static: Set[str]) -> bool:
+    """Whether ``node`` is a trace-time constant (shape math, config)."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in static or node.id in _STATIC_ROOTS
+    if isinstance(node, ast.Attribute):
+        if node.attr in _SHAPE_ATTRS:
+            return True                       # shapes are static under jit
+        return _is_static(node.value, static)
+    if isinstance(node, ast.Subscript):
+        return _is_static(node.value, static)
+    if isinstance(node, ast.BinOp):
+        return (_is_static(node.left, static)
+                and _is_static(node.right, static))
+    if isinstance(node, ast.UnaryOp):
+        return _is_static(node.operand, static)
+    if isinstance(node, ast.Compare):
+        return (_is_static(node.left, static)
+                and all(_is_static(c, static) for c in node.comparators))
+    if isinstance(node, ast.IfExp):
+        return all(_is_static(n, static)
+                   for n in (node.test, node.body, node.orelse))
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_is_static(e, static) for e in node.elts)
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id == "len":
+            return True                       # lengths are always static
+        # a call whose inputs are all trace-static cannot produce a tracer;
+        # for method calls the receiver is an input too (x.sum() is dynamic)
+        recv_ok = (not isinstance(node.func, ast.Attribute)
+                   or _is_static(node.func.value, static))
+        return (recv_ok
+                and all(_is_static(a, static) for a in node.args)
+                and all(_is_static(k.value, static)
+                        for k in node.keywords))
+    return False
+
+
+def _static_names(fn: ast.AST, seed: Optional[Set[str]] = None) -> Set[str]:
+    """Names in ``fn`` bound (anywhere) to a static expression.
+
+    One forward pass in textual order — good enough for the straight-line
+    shape math these modules contain; a name rebound dynamically later
+    drops out of the set.
+    """
+    static: Set[str] = set(seed or ())
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.expr):
+            targets = []
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    targets.append(t.id)
+                elif isinstance(t, ast.Tuple):
+                    targets.extend(e.id for e in t.elts
+                                   if isinstance(e, ast.Name))
+            if not targets:
+                continue
+            if (isinstance(node.value, (ast.Tuple, ast.List))
+                    and isinstance(node.targets[0], ast.Tuple)):
+                # B, H, L, D = x.shape style unpacking
+                if _is_static(node.value, static):
+                    static.update(targets)
+                continue
+            if _is_static(node.value, static):
+                static.update(targets)
+            else:
+                static.difference_update(targets)
+    return static
+
+
+_SYNC_CALLS = {
+    "jax.device_get": "forces a device->host transfer",
+    "jax.device_put": "forces a host->device transfer",
+    "time.time": "wall-clock read inside a traced function",
+    "time.perf_counter": "wall-clock read inside a traced function",
+}
+# host materialisation — flagged only on a dynamic argument (static shape
+# math through numpy at trace time is legitimate kernel-grid code)
+_NP_MATERIALISE = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_SYNC_METHODS = {"item", "tolist"}
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, kind: Optional[str], lines: List[str]):
+        self.path = path
+        self.kind = kind
+        self.lines = lines
+        self.findings: List[Finding] = []
+        self._fn_static: List[Set[str]] = []
+        self._host_fn_depth = 0
+
+    # -- helpers --------------------------------------------------------
+    def _waived(self, rule: str, line: int) -> bool:
+        if not (1 <= line <= len(self.lines)):
+            return False
+        m = _ALLOW_RE.search(self.lines[line - 1])
+        return bool(m) and ("SIKV-" + m.group(1)) == rule
+
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        line = getattr(node, "lineno", 1)
+        if not self._waived(rule, line):
+            self.findings.append(Finding(rule, self.path, line, msg))
+
+    def _static(self) -> Set[str]:
+        return self._fn_static[-1] if self._fn_static else set()
+
+    # -- scopes ---------------------------------------------------------
+    def _visit_fn(self, node) -> None:
+        is_host_fn = bool(node.lineno <= len(self.lines) and _HOST_FN_RE.
+                          search(self.lines[node.lineno - 1]))
+        self._host_fn_depth += is_host_fn
+        seed = set()
+        for arg in (node.args.args + node.args.kwonlyargs
+                    + node.args.posonlyargs):
+            ann = arg.annotation
+            name = (ann.id if isinstance(ann, ast.Name)
+                    else ann.attr if isinstance(ann, ast.Attribute)
+                    else ann.value if isinstance(ann, ast.Constant) else "")
+            if isinstance(name, str) and name.endswith("Config"):
+                seed.add(arg.arg)     # config dataclasses are trace-static
+        self._fn_static.append(_static_names(node, seed))
+        self.generic_visit(node)
+        self._fn_static.pop()
+        self._host_fn_depth -= is_host_fn
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_fn
+
+    # -- SIKV-L002: host modules must stay jax-free ----------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            root = alias.name.split(".")[0]
+            if self.kind == "host" and root == "jax":
+                self._emit("SIKV-L002", node,
+                           f"import of '{alias.name}' — this module is "
+                           "host-side scheduler/pool bookkeeping and must "
+                           "stay trace-free (DESIGN.md §7); move the device "
+                           "work to the engine or waive with a reason")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if self.kind == "host" and mod.split(".")[0] == "jax":
+            self._emit("SIKV-L002", node,
+                       f"import from '{mod}' — host-side bookkeeping must "
+                       "stay trace-free (DESIGN.md §7)")
+        if mod in SHIMMED_APIS and self.path != "repro/compat.py":
+            self._emit("SIKV-L004", node,
+                       f"'{mod}' moved across jax versions — use "
+                       f"{SHIMMED_APIS[mod]} instead")
+        self.generic_visit(node)
+
+    # -- calls -----------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        # SIKV-L003: pallas_call must thread the interpret fallback
+        if dotted and dotted.split(".")[-1] == "pallas_call":
+            kws = {k.arg for k in node.keywords}
+            if "interpret" not in kws and None not in kws:
+                self._emit("SIKV-L003", node,
+                           "pallas_call without an explicit interpret= "
+                           "kwarg — every kernel launch must thread the "
+                           "interpret-mode fallback so the repo runs "
+                           "off-TPU (DESIGN.md §2)")
+        if self.kind == "traced" and not self._host_fn_depth:
+            self._check_traced_call(node, dotted)
+        self.generic_visit(node)
+
+    def _check_traced_call(self, node: ast.Call, dotted: Optional[str]
+                           ) -> None:
+        if dotted in _SYNC_CALLS:
+            self._emit("SIKV-L001", node,
+                       f"'{dotted}' in a traced module — {_SYNC_CALLS[dotted]}"
+                       " (host sync under jit); keep this on the engine/"
+                       "host side or waive with '# lint: host' if the "
+                       "whole function is host-only")
+            return
+        if (dotted in _NP_MATERIALISE and node.args
+                and not _is_static(node.args[0], self._static())):
+            self._emit("SIKV-L001", node,
+                       f"'{dotted}' on a traced value — materialises the "
+                       "array on the host (sync under jit)")
+            return
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SYNC_METHODS
+                and not _is_static(node.func.value, self._static())):
+            self._emit("SIKV-L001", node,
+                       f"'.{node.func.attr}()' on a traced value — blocks "
+                       "on device->host transfer under jit")
+            return
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and len(node.args) == 1
+                and not _is_static(node.args[0], self._static())):
+            self._emit("SIKV-L001", node,
+                       f"'{node.func.id}()' on a dynamic value — "
+                       "TracerConversionError under jit (or a silent sync); "
+                       "shape/config-derived values are fine, traced arrays "
+                       "are not")
+
+    # -- attribute uses ---------------------------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        dotted = _dotted(node)
+        if dotted:
+            if self.kind == "host" and dotted.split(".")[0] in ("jnp", "jax"):
+                self._emit("SIKV-L002", node,
+                           f"'{dotted}' on the host-side bookkeeping path — "
+                           "this code must stay trace-free (DESIGN.md §7)")
+            if (dotted in SHIMMED_APIS and self.path != "repro/compat.py"):
+                self._emit("SIKV-L004", node,
+                           f"'{dotted}' moved across jax versions — use "
+                           f"{SHIMMED_APIS[dotted]} instead")
+        # do not recurse: _dotted covered the chain; nested calls inside
+        # subscripts etc. are reached via generic_visit of other nodes
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.Name, ast.Attribute)):
+                self.visit(child)
+
+
+def lint_source(src: str, rel_path: str,
+                kind: str = "auto") -> List[Finding]:
+    """Lint one module; ``rel_path`` is relative to ``src/`` and selects
+    the rule set when ``kind='auto'``."""
+    k = classify(rel_path) if kind == "auto" else (
+        None if kind == "none" else kind)
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:  # pragma: no cover
+        return [Finding("SIKV-L000", rel_path, e.lineno or 1,
+                        f"syntax error: {e.msg}")]
+    linter = _Linter(rel_path, k, src.splitlines())
+    linter.visit(tree)
+    return sorted(linter.findings, key=lambda f: (f.path, f.line))
+
+
+def run_lint(src_root: Optional[Path] = None) -> List[Finding]:
+    """Lint every module under ``src/repro``."""
+    root = Path(src_root) if src_root else REPO_SRC
+    findings: List[Finding] = []
+    for path in sorted(root.glob("repro/**/*.py")):
+        rel = path.relative_to(root).as_posix()
+        findings.extend(lint_source(path.read_text(), rel))
+    return findings

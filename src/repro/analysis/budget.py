@@ -1,0 +1,165 @@
+"""Committed launch/transfer budget gate.
+
+``ANALYSIS_BUDGET.json`` (repo root) freezes, per audited program, the
+primitive census the design pays for — pallas launches, callbacks, host
+transfers, loop-body transfers — plus the compile counts of a scripted
+admit/retire/admit churn.  CI recomputes the numbers and diffs them against
+the committed file: a PR that adds a launch, a callback, or a retrace to a
+hot path fails with the offending program and primitive named.
+
+Every recorded quantity is host-side-deterministic (primitive counts of a
+trace, integer compile counts) — nothing numeric-dependent goes into the
+file, so the gate is stable across jax point versions and platforms.
+
+Rule IDs:
+
+* ``SIKV-B001`` — a program's primitive count drifted from the budget;
+* ``SIKV-B002`` — a program appeared/disappeared from the audited set;
+* ``SIKV-B003`` — the churn script recompiled a program (static-shape
+  contract broken: admit/retire/admit must reuse every compiled program).
+
+Refresh (after an *intentional* change, with the diff in the PR):
+``PYTHONPATH=src python scripts/sikv_lint.py --refresh-budget``.
+The hand-written ``regressions`` block of the committed file documents
+violations the auditor's first run surfaced; refreshes preserve it.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+from repro.analysis.jaxpr_audit import AuditSuite, build_suite
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+BUDGET_PATH = REPO_ROOT / "ANALYSIS_BUDGET.json"
+SCHEMA = 1
+REFRESH_HINT = ("if this change is intentional, refresh the budget with "
+                "`PYTHONPATH=src python scripts/sikv_lint.py "
+                "--refresh-budget` and commit the ANALYSIS_BUDGET.json "
+                "diff alongside the code")
+
+# jitted-program attributes whose compile counts the churn script pins
+_CHURN_PROGRAMS = ("_prefill", "_step", "_insert_prefill", "_insert",
+                   "_draft", "_verify", "_rollback_op", "_set_blk",
+                   "_copy", "_clear_row")
+# launch counters that are pure host-side integers (deterministic)
+_CHURN_STAT_KEYS = ("prefills", "steps", "prefill_chunks", "finalizes",
+                    "draft_launches", "verify_launches", "spec_rollbacks",
+                    "spec_steps", "aux_launches", "prefix_hits")
+
+
+def _compile_counts(engine) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for name in _CHURN_PROGRAMS:
+        prog = getattr(engine, name, None)
+        if prog is None:
+            continue
+        try:
+            out[name.lstrip("_")] = prog._cache_size()
+        except AttributeError:  # pragma: no cover - very old/new jax
+            pass
+    return out
+
+
+def run_churn(engine, prompts: List[List[int]]) -> Dict[str, Any]:
+    """Scripted admit/retire/admit churn; returns compile + launch counts.
+
+    The engine must already have slot 0 admitted (the audit suite leaves it
+    that way).  The script exercises every decode-path program at least
+    twice with an admission in between, so any shape- or weak-type-
+    dependent retrace shows up as ``cache_size > 1``.
+    """
+    engine.step()
+    engine.admit(1, prompts[0])
+    engine.step()
+    engine.spec_step()
+    engine.retire(0)
+    engine.step()
+    engine.admit(0, prompts[1])
+    engine.step()
+    engine.spec_step()
+    return {
+        "program_compiles": _compile_counts(engine),
+        "launches": {k: int(v) for k, v in sorted(engine.stats.items())
+                     if k in _CHURN_STAT_KEYS},
+    }
+
+
+def compute_budget(suite: Optional[AuditSuite] = None, *,
+                   churn: bool = True) -> Dict[str, Any]:
+    """Measure the current tree's budget (suite is built if not passed)."""
+    if suite is None:
+        suite = build_suite()
+    programs: Dict[str, Any] = {}
+    for prog in suite.programs:
+        entry = dict(prog.census.counts)
+        if prog.lowered_text is not None:
+            entry["donates"] = prog.donates
+        programs[prog.name] = entry
+    out: Dict[str, Any] = {"schema": SCHEMA, "programs": programs}
+    if churn:
+        from repro.analysis.jaxpr_audit import _mk_prompt
+        eng = suite.engines["paged"]
+        out["churn"] = {"paged": run_churn(
+            eng, [_mk_prompt(eng.cfg, 7, seed=11),
+                  _mk_prompt(eng.cfg, 11, seed=12)])}
+    return out
+
+
+def load_budget(path: Path = BUDGET_PATH) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_budget(budget: Dict[str, Any], path: Path = BUDGET_PATH) -> None:
+    """Write the budget, preserving an existing hand-written
+    ``regressions`` block (it documents findings, it is not measured)."""
+    if path.exists():
+        old = load_budget(path)
+        if "regressions" in old and "regressions" not in budget:
+            budget = {**budget, "regressions": old["regressions"]}
+    with open(path, "w") as f:
+        json.dump(budget, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def diff_budget(expected: Dict[str, Any],
+                actual: Dict[str, Any]) -> List[str]:
+    """Human-readable mismatches (empty when the tree matches the budget)."""
+    out: List[str] = []
+    exp_p = expected.get("programs", {})
+    act_p = actual.get("programs", {})
+    for name in sorted(set(exp_p) - set(act_p)):
+        out.append(f"SIKV-B002 [{name}] program in the committed budget but "
+                   f"no longer audited — {REFRESH_HINT}")
+    for name in sorted(set(act_p) - set(exp_p)):
+        out.append(f"SIKV-B002 [{name}] audited program missing from the "
+                   f"committed budget — {REFRESH_HINT}")
+    for name in sorted(set(exp_p) & set(act_p)):
+        for key in sorted(set(exp_p[name]) | set(act_p[name])):
+            want, got = exp_p[name].get(key), act_p[name].get(key)
+            if want != got:
+                out.append(
+                    f"SIKV-B001 [{name}] {key}: budget {want}, measured "
+                    f"{got} — a primitive was "
+                    f"{'added to' if (got or 0) > (want or 0) else 'removed from'} "
+                    f"a hot path; {REFRESH_HINT}")
+    exp_c = expected.get("churn", {})
+    act_c = actual.get("churn", {})
+    for eng in sorted(set(exp_c) | set(act_c)):
+        e, a = exp_c.get(eng, {}), act_c.get(eng, {})
+        for section in ("program_compiles", "launches"):
+            es, as_ = e.get(section, {}), a.get(section, {})
+            for key in sorted(set(es) | set(as_)):
+                want, got = es.get(key), as_.get(key)
+                if want != got:
+                    what = ("recompiled under admit/retire/admit churn "
+                            "(static-shape contract broken)"
+                            if section == "program_compiles"
+                            else "launch count drifted under the scripted "
+                                 "churn")
+                    out.append(f"SIKV-B003 [churn/{eng}] {section}.{key}: "
+                               f"budget {want}, measured {got} — {what}; "
+                               f"{REFRESH_HINT}")
+    return out

@@ -1,0 +1,429 @@
+"""Jaxpr-level program-contract auditor.
+
+DESIGN.md states the serving invariants in prose — "one merged launch per
+step", "no ``io_callback`` in the draft program", "no host transfer inside a
+scan body", "the decode step donates its cache buffers".  This module turns
+each of them into a machine check: it traces the *actual* jitted entry
+points of the three engines (dense / paged / tiered) with
+``jax.make_jaxpr`` + ``jax.jit(...).lower()``, walks the jaxpr recursively
+(into ``pjit`` / ``scan`` / ``while`` / ``cond`` sub-jaxprs) and asserts a
+declared :class:`Contract` per program.
+
+Rule IDs (referenced from DESIGN.md §7 and the CI step summary):
+
+* ``SIKV-J001`` — a forbidden primitive appears anywhere in the program
+  (e.g. ``io_callback`` in a draft or merged-decode program);
+* ``SIKV-J002`` — a primitive count does not match the contract's exact
+  expectation (e.g. the tiered decode step must contain exactly one
+  ``io_callback`` per attention layer — the exact-miss backstop — never
+  more);
+* ``SIKV-J003`` — a host-transfer / callback primitive inside a ``scan`` or
+  ``while`` body: a per-iteration host round-trip;
+* ``SIKV-J004`` — donation contract violated (cache buffers donated where
+  DESIGN.md says they must not be, or not donated where they must be).
+
+Tracing is abstract — no program in the suite is ever *executed* by the
+auditor itself (the paged/tiered engines run one tiny real admission to
+materialise their cache trees; the dense programs are traced on
+``ShapeDtypeStruct`` avals only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:  # newest public home of the jaxpr classes
+    from jax.extend.core import ClosedJaxpr, Jaxpr  # type: ignore
+except ImportError:  # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Jaxpr  # type: ignore
+
+CALLBACK_PRIMS = ("io_callback", "pure_callback", "debug_callback")
+TRANSFER_PRIMS = ("device_put",)
+LAUNCH_PRIMS = ("pallas_call",)
+LOOP_PRIMS = ("scan", "while")
+# every counter a census produces (the budget file schema)
+COUNTER_KEYS = ("pallas_calls", "io_callbacks", "pure_callbacks",
+                "debug_callbacks", "device_puts", "loop_pallas_calls",
+                "loop_io_callbacks", "loop_pure_callbacks",
+                "loop_debug_callbacks", "loop_device_puts")
+_PRIM_TO_KEY = {"pallas_call": "pallas_calls", "io_callback": "io_callbacks",
+                "pure_callback": "pure_callbacks",
+                "debug_callback": "debug_callbacks",
+                "device_put": "device_puts"}
+# markers jit lowering uses for donated/aliased buffers, by jax version
+_DONATION_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+
+
+def _source(eqn) -> str:
+    """Best-effort user-code location of ``eqn`` (for actionable messages)."""
+    try:  # internal but stable across the 0.4.x line; cosmetic only
+        from jax._src import source_info_util
+        return str(source_info_util.summarize(eqn.source_info))
+    except Exception:  # pragma: no cover
+        return "<unknown location>"
+
+
+def _sub_jaxprs(params: Dict[str, Any]) -> Iterator[Jaxpr]:
+    """All sub-jaxprs referenced by an equation's params (any nesting)."""
+    def walk(v):
+        if isinstance(v, ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, Jaxpr):
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                yield from walk(x)
+    for v in params.values():
+        yield from walk(v)
+
+
+def iter_eqns(jaxpr: Jaxpr, in_loop: bool = False):
+    """Yield ``(eqn, in_loop)`` over ``jaxpr`` and every sub-jaxpr.
+
+    ``in_loop`` is True for equations inside a ``scan``/``while`` body —
+    where a callback or transfer runs once *per iteration*, not once per
+    launch.
+    """
+    for eqn in jaxpr.eqns:
+        yield eqn, in_loop
+        child_in_loop = in_loop or eqn.primitive.name in LOOP_PRIMS
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, child_in_loop)
+
+
+@dataclasses.dataclass
+class Census:
+    """Primitive counts of one traced program (+ source sites)."""
+    counts: Dict[str, int]
+    sites: Dict[str, List[str]]    # primitive name -> source locations
+
+    def describe(self, prim: str, limit: int = 3) -> str:
+        sites = self.sites.get(prim, [])
+        shown = "; ".join(sites[:limit])
+        more = f" (+{len(sites) - limit} more)" if len(sites) > limit else ""
+        return shown + more if sites else "<no source info>"
+
+
+def census(closed: ClosedJaxpr) -> Census:
+    counts = {k: 0 for k in COUNTER_KEYS}
+    sites: Dict[str, List[str]] = {}
+    for eqn, in_loop in iter_eqns(closed.jaxpr):
+        key = _PRIM_TO_KEY.get(eqn.primitive.name)
+        if key is None:
+            continue
+        counts[key] += 1
+        if in_loop:
+            counts["loop_" + key] += 1
+        sites.setdefault(eqn.primitive.name, []).append(_source(eqn))
+    return Census(counts, sites)
+
+
+# ---------------------------------------------------------------------------
+# contracts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Per-program invariant set the auditor enforces."""
+    program: str
+    # primitives forbidden anywhere in the program (SIKV-J001)
+    forbid: Tuple[str, ...] = CALLBACK_PRIMS + TRANSFER_PRIMS
+    # exact total count required per primitive (SIKV-J002)
+    exact: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # primitives forbidden inside scan/while bodies (SIKV-J003); primitives
+    # already in ``forbid`` need not be repeated here
+    forbid_in_loop: Tuple[str, ...] = TRANSFER_PRIMS + CALLBACK_PRIMS
+    # True: cache buffers must be donated; False: must NOT be; None: skip
+    donate: Optional[bool] = None
+    # the DESIGN.md invariant this encodes (shown in violation messages)
+    why: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    program: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.rule} [{self.program}] {self.message}"
+
+
+def lowering_donates(lowered_text: str) -> bool:
+    return any(m in lowered_text for m in _DONATION_MARKERS)
+
+
+def audit_program(contract: Contract, closed: ClosedJaxpr,
+                  lowered_text: Optional[str] = None) -> List[Violation]:
+    """Check one traced program against its contract."""
+    cen = census(closed)
+    out: List[Violation] = []
+    why = f" — {contract.why}" if contract.why else ""
+    for prim in contract.forbid:
+        if prim in contract.exact:      # exact rule owns this primitive
+            continue
+        n = cen.counts[_PRIM_TO_KEY[prim]]
+        if n:
+            out.append(Violation(
+                "SIKV-J001", contract.program,
+                f"forbidden primitive '{prim}' appears {n}x: "
+                f"{cen.describe(prim)}{why}"))
+    for prim, want in contract.exact.items():
+        got = cen.counts[_PRIM_TO_KEY[prim]]
+        if got != want:
+            out.append(Violation(
+                "SIKV-J002", contract.program,
+                f"expected exactly {want} '{prim}', found {got}: "
+                f"{cen.describe(prim)}{why}"))
+    for prim in contract.forbid_in_loop:
+        if prim in contract.forbid or prim in contract.exact:
+            continue
+        n = cen.counts["loop_" + _PRIM_TO_KEY[prim]]
+        if n:
+            out.append(Violation(
+                "SIKV-J003", contract.program,
+                f"'{prim}' inside a scan/while body ({n}x: "
+                f"{cen.describe(prim)}) — a per-iteration host "
+                f"round-trip{why}"))
+    if contract.donate is not None and lowered_text is not None:
+        donates = lowering_donates(lowered_text)
+        if contract.donate and not donates:
+            out.append(Violation(
+                "SIKV-J004", contract.program,
+                "no donated/aliased buffers in the lowering — the cache "
+                f"argument must be donated{why}"))
+        elif not contract.donate and donates:
+            out.append(Violation(
+                "SIKV-J004", contract.program,
+                "lowering donates buffers, but this program's inputs are "
+                f"reused after the launch{why}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the real entry-point suite
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TracedProgram:
+    contract: Contract
+    jaxpr: ClosedJaxpr
+    lowered_text: Optional[str]
+
+    @property
+    def name(self) -> str:
+        return self.contract.program
+
+    @property
+    def census(self) -> Census:
+        return census(self.jaxpr)
+
+    @property
+    def donates(self) -> bool:
+        return bool(self.lowered_text) and lowering_donates(self.lowered_text)
+
+    def audit(self) -> List[Violation]:
+        return audit_program(self.contract, self.jaxpr, self.lowered_text)
+
+
+@dataclasses.dataclass
+class AuditSuite:
+    programs: List[TracedProgram]
+    engines: Dict[str, Any]          # live engines, reused by budget churn
+
+    def audit(self) -> List[Violation]:
+        out: List[Violation] = []
+        for p in self.programs:
+            out.extend(p.audit())
+        return out
+
+    def __getitem__(self, name: str) -> TracedProgram:
+        for p in self.programs:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+
+def _sds(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _trace(jitted, *args, **kwargs) -> Tuple[ClosedJaxpr, str]:
+    closed = jax.make_jaxpr(jitted)(*args, **kwargs)
+    text = jitted.lower(*args, **kwargs).as_text()
+    return closed, text
+
+
+# prose invariants (DESIGN.md sections) quoted in violation messages
+_WHY_DRAFT = ("DESIGN.md §6: the draft program runs on the device-resident "
+              "1-bit index only (device_only gather) — zero host traffic")
+_WHY_DECODE = ("DESIGN.md §2: one merged decode launch per step, no host "
+               "sync on the scoring path")
+_WHY_TIERED = ("DESIGN.md §5: exactly one io_callback per attention layer — "
+               "the exact-miss backstop; anything more is a regression")
+_WHY_MERGED = ("DESIGN.md §4: the merged chunk+decode launch must stay "
+               "host-free so decode cadence survives long admissions")
+_WHY_DONATE = ("DESIGN.md §7: decode/rollback consume their input caches — "
+               "donation halves peak cache memory")
+_WHY_NO_DONATE = ("DESIGN.md §7: the engine reuses these inputs after the "
+                  "launch (draft discard / rollback / finalize-failure "
+                  "retry), so donating them would read deleted buffers")
+
+
+def _mk_prompt(cfg, length: int, seed: int = 3) -> List[int]:
+    key = jax.random.PRNGKey(seed)
+    return [int(t) for t in
+            jax.random.randint(key, (length,), 1, cfg.vocab_size)]
+
+
+def build_suite(*, kernels: bool = True) -> AuditSuite:
+    """Trace every audited entry point of the three engines.
+
+    ``kernels=True`` additionally traces the dense decode step with the
+    Pallas kernel path enabled (``SIKVConfig.use_kernels``) so the launch
+    census covers ``pallas_call`` counts; the kernel programs are traced
+    abstractly, never run.
+    """
+    import dataclasses as dc
+
+    from repro.config import SIKVConfig, get_model_config, reduced_config
+    from repro.models import init_params
+    from repro.serving import (PagedServingEngine, ServingEngine,
+                               TieredServingEngine)
+    from repro.tiered.cache import TieredSIKVCache
+
+    cfg = dc.replace(reduced_config(get_model_config("llama3.1-8b")),
+                     dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sikv = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
+                      obs_window=8)
+    B, Lp, new, depth = 2, 16, 8, 2
+    kw = dict(batch_size=B, prompt_len=Lp, max_new_tokens=new)
+
+    programs: List[TracedProgram] = []
+    engines: Dict[str, Any] = {}
+
+    def add(contract, jitted, *args, **kwargs):
+        closed, text = _trace(jitted, *args, **kwargs)
+        programs.append(TracedProgram(contract, closed, text))
+
+    # -- dense engine: traced on abstract caches (nothing executed) --------
+    dense = ServingEngine(params, cfg, sikv, prefill_chunk=8,
+                          spec_depth=depth, **kw)
+    engines["dense"] = dense
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((1, Lp), jnp.int32),
+                 "lengths": jax.ShapeDtypeStruct((1,), jnp.int32)}
+    _, caches_one = jax.eval_shape(dense._prefill, params, batch=batch_sds)
+    caches = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((B,) + s.shape[1:], s.dtype),
+        caches_one)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_col = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    slot = jax.ShapeDtypeStruct((), jnp.int32)
+    drafts = jax.ShapeDtypeStruct((B, depth), jnp.int32)
+
+    add(Contract("dense/decode_step", donate=True,
+                 why=_WHY_DECODE + "; " + _WHY_DONATE),
+        dense._step, params, inputs={"tokens": tok_col}, pos=pos,
+        caches=caches)
+    add(Contract("dense/prefill", donate=False), dense._prefill, params,
+        batch=batch_sds)
+    add(Contract("dense/insert_slot", donate=False), dense._insert, caches,
+        caches_one, slot)
+    from repro.models import init_prefill_stage
+    stage = jax.eval_shape(lambda: init_prefill_stage(cfg, Lp))
+    add(Contract("dense/chunk_and_decode", donate=False,
+                 why=_WHY_MERGED + "; " + _WHY_NO_DONATE),
+        dense._chunk_dec, params,
+        tokens_row=jax.ShapeDtypeStruct((1, Lp), jnp.int32),
+        start=jax.ShapeDtypeStruct((), jnp.int32),
+        length=jax.ShapeDtypeStruct((), jnp.int32), stage=stage,
+        tokens=tok_col, pos=pos, caches=caches)
+    add(Contract("dense/spec_draft", donate=False,
+                 why=_WHY_DRAFT + "; " + _WHY_NO_DONATE),
+        dense._draft, params, tokens=tok, pos=pos, caches=caches)
+    add(Contract("dense/spec_verify", donate=False, why=_WHY_NO_DONATE),
+        dense._verify, params, tokens=tok, pos=pos, caches=caches,
+        draft_tokens=drafts)
+    _, appended = jax.eval_shape(dense._verify, params, tokens=tok, pos=pos,
+                                 caches=caches, draft_tokens=drafts)
+    add(Contract("dense/spec_rollback", donate=True, why=_WHY_DONATE),
+        dense._rollback_op, caches, appended, pos)
+
+    if kernels:
+        sikv_k = dc.replace(sikv, use_kernels=True)
+        dense_k = ServingEngine(params, cfg, sikv_k, **kw)
+        engines["dense_kernels"] = dense_k
+        _, c1k = jax.eval_shape(dense_k._prefill, params, batch=batch_sds)
+        caches_k = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((B,) + s.shape[1:], s.dtype), c1k)
+        add(Contract("dense/decode_step@kernels", donate=True,
+                     why=_WHY_DECODE),
+            dense_k._step, params, inputs={"tokens": tok_col}, pos=pos,
+            caches=caches_k)
+
+    # -- paged engine: one real tiny admission materialises the pools ------
+    paged = PagedServingEngine(params, cfg, sikv, page_size=4,
+                               spec_depth=depth, **kw)
+    engines["paged"] = paged
+    paged.admit(0, _mk_prompt(cfg, 9))
+    pc = paged._caches
+    pages = jax.ShapeDtypeStruct((paged.pages_per_seq,), jnp.int32)
+    add(Contract("paged/decode_step", donate=True,
+                 why=_WHY_DECODE + "; " + _WHY_DONATE),
+        paged._step, params, inputs={"tokens": tok_col}, pos=pos, caches=pc)
+    add(Contract("paged/spec_draft", donate=False,
+                 why=_WHY_DRAFT + "; " + _WHY_NO_DONATE),
+        paged._draft, params, tokens=tok, pos=pos, caches=pc)
+    add(Contract("paged/spec_verify", donate=False, why=_WHY_NO_DONATE),
+        paged._verify, params, tokens=tok, pos=pos, caches=pc,
+        draft_tokens=drafts)
+    add(Contract("paged/insert_prefill", donate=False), paged._insert_prefill,
+        pc, caches_one, slot, pages)
+    add(Contract("paged/cow_copy_page", donate=False,
+                 why="DESIGN.md §3: CoW is one on-device page copy"),
+        paged._copy, pc, slot, slot)
+    add(Contract("paged/set_block_entry", donate=False), paged._set_blk, pc,
+        slot, slot, slot)
+    add(Contract("paged/clear_slot_row", donate=False,
+                 why="DESIGN.md §3: a freed page never aliases live data — "
+                     "the row clear is a pure device op"),
+        paged._clear_row, pc, slot)
+
+    # -- tiered engine: io_callback backstop allowed, draft must be clean --
+    tiered = TieredServingEngine(params, cfg, sikv, page_size=4,
+                                 spec_depth=depth, prefetch_depth=1, **kw)
+    engines["tiered"] = tiered
+    tiered.admit(0, _mk_prompt(cfg, 9, seed=4))
+    tc = tiered._caches
+    n_attn = sum(1 for entry in tc
+                 if isinstance(entry, dict)
+                 and isinstance(entry.get("self"), TieredSIKVCache))
+    assert n_attn > 0, "tiered suite traced a model with no attention layers"
+    add(Contract("tiered/decode_step", donate=True,
+                 exact={"io_callback": n_attn},
+                 forbid=("pure_callback", "debug_callback", "device_put"),
+                 why=_WHY_TIERED + "; " + _WHY_DONATE),
+        tiered._step, params, inputs={"tokens": tok_col}, pos=pos, caches=tc)
+    add(Contract("tiered/spec_draft", donate=False,
+                 why=_WHY_DRAFT + "; " + _WHY_NO_DONATE),
+        tiered._draft, params, tokens=tok, pos=pos, caches=tc)
+    add(Contract("tiered/spec_verify", donate=False,
+                 exact={"io_callback": n_attn},
+                 forbid=("pure_callback", "debug_callback", "device_put"),
+                 why=_WHY_TIERED + "; " + _WHY_NO_DONATE),
+        tiered._verify, params, tokens=tok, pos=pos, caches=tc,
+        draft_tokens=drafts)
+    npages = jax.ShapeDtypeStruct((2,), jnp.int32)
+    add(Contract("tiered/map_update", donate=False), tiered._map_upd, tc,
+        npages, npages)
+    add(Contract("tiered/commit_lane", donate=False,
+                 why="DESIGN.md §5: lane commit is a pure device copy"),
+        tiered._commit, tc, jax.ShapeDtypeStruct((1,), jnp.int32))
+    add(Contract("tiered/clear_lane", donate=False), tiered._clear_lane, tc)
+
+    return AuditSuite(programs, engines)

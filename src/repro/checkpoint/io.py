@@ -63,7 +63,7 @@ def load_checkpoint(path: str, like: Any, *, shardings: Any | None = None
         arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
         assert arr.shape == ref.shape, (i, arr.shape, ref.shape)
         if dtypes and arr.dtype.kind == "u" and dtypes[i] != str(arr.dtype):
-            import ml_dtypes  # bit-view restore of non-native dtypes
+            import ml_dtypes  # noqa: F401 -- bit-view restore of non-native dtypes
             arr = arr.view(np.dtype(dtypes[i]))
         val = jnp.asarray(arr, dtype=ref.dtype)
         if sh is not None:

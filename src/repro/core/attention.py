@@ -19,8 +19,6 @@ A pure-jnp path (always available) and a Pallas-kernel path
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -7,12 +7,9 @@ These adapt core-layer shapes ``(B, H, ...)`` to the kernels' flattened
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lut_gemv import lut_gemv_pallas
 from repro.kernels.sign_quant import sign_quant_pallas

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import SIKVConfig, get_model_config, list_archs, \
     reduced_config

@@ -7,7 +7,6 @@ end-to-end training example and the ~100M-model run in EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax

@@ -17,7 +17,7 @@ from typing import Any, Dict, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, SSMConfig
+from repro.config import ModelConfig
 from repro.models.layers import INIT_STD, rms_norm
 
 Params = Dict[str, Any]

@@ -26,7 +26,7 @@ from repro.models.attention import (attn_forward, attn_init, attn_output,
                                     attn_project)
 from repro.models.layers import (cross_entropy_loss, dense_init,
                                  embedding_init, rms_norm, swiglu, swiglu_init)
-from repro.models.mamba2 import (MambaState, mamba_decode_step, mamba_forward,
+from repro.models.mamba2 import (mamba_decode_step, mamba_forward,
                                  mamba_init, mamba_init_state)
 from repro.models.moe import moe_forward, moe_init
 from repro.core.attention import (chunk_causal_attention,
@@ -251,10 +251,6 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     positions = jnp.arange(L)
     lengths = batch.get("lengths")
     W = min(obs_window, L)
-    mla_scale = None
-    if cfg.mla is not None:
-        mla_scale = 1.0 / float(
-            cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** 0.5
 
     enc_out = None
     if cfg.num_encoder_layers:
@@ -549,7 +545,6 @@ def decode_step(params: Params, cfg: ModelConfig,
       ``(logits (B, V), updated caches)``.
     """
     x = embed_inputs(params, cfg, inputs)
-    B = x.shape[0]
     pos = jnp.asarray(pos)
     positions = pos[:, None] if pos.ndim else jnp.reshape(pos, (1,))
     mla_scale = None

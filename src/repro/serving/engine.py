@@ -121,8 +121,16 @@ class ServingEngine:
         self._prefill = jax.jit(functools.partial(
             prefill, cfg=cfg, method=self.method, capacity=self.capacity))
         self._prefill_one = self._prefill  # same program; batch-1 inputs
+        # the decode step CONSUMES its cache tree (the engine immediately
+        # rebinds self._caches to the output), so the input buffers are
+        # donated — halving peak cache memory per launch.  Draft/verify/
+        # merged-chunk programs must NOT donate: the engine reuses their
+        # input caches afterwards (draft discard, rollback from the
+        # pre-verify tree, finalize-failure retry).  Machine-checked as
+        # SIKV-J004 (DESIGN.md §7).
         self._step = jax.jit(functools.partial(
-            decode_step, cfg=cfg, method=self.method))
+            decode_step, cfg=cfg, method=self.method),
+            donate_argnames=("caches",))
         self._insert = jax.jit(_insert_slot)
         if prefill_chunk is not None:
             if prefill_chunk <= 0:
@@ -184,7 +192,9 @@ class ServingEngine:
             self._verify = jax.jit(functools.partial(
                 spec_verify_steps, cfg=cfg, method=self.method,
                 depth=spec_depth))
-            self._rollback_op = jax.jit(tree_rollback)
+            # rollback also consumes the pre-verify tree (donated); the
+            # verify-appended tree is still read per-leaf, so only arg 0
+            self._rollback_op = jax.jit(tree_rollback, donate_argnums=(0,))
             self.stats.update(spec_steps=0, draft_launches=0,
                               verify_launches=0, spec_rollbacks=0,
                               spec_drafted=0, spec_accepted=0,

@@ -460,15 +460,18 @@ class TieredServingEngine(PagedServingEngine):
                 self.stats["aux_launches"] += 1
             return
         fields = self.xfer.dispatch(pages, self.prefetch_depth)
-        lane = jnp.asarray(
-            pages + [-1] * (self.prefetch_depth - len(pages)), jnp.int32)
+        lane = pages + [-1] * (self.prefetch_depth - len(pages))
         new_caches = []
         for i, entry in enumerate(self._caches):
             new = dict(entry)
             if i in fields:
                 for k, c in entry.items():
                     if isinstance(c, TieredSIKVCache):
-                        new[k] = set_prefetch_lane(c, lane, fields[i])
+                        # a fresh lane buffer per layer: the decode launch
+                        # donates the cache tree, and XLA rejects two
+                        # donated leaves aliasing one buffer (SIKV-J004)
+                        new[k] = set_prefetch_lane(
+                            c, jnp.asarray(lane, jnp.int32), fields[i])
             new_caches.append(new)
         self._caches = new_caches
         self._lane_live = list(pages)

@@ -12,7 +12,7 @@ valid token (prompts are right-padded), and each sequence's kept length is
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

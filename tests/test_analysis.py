@@ -1,0 +1,240 @@
+"""The analyzer analyzed: every rule must fire on a deliberately-broken
+fixture program with an actionable message (rule ID + offending primitive
+named), and the clean tree must pass with zero noise.
+
+The acceptance demos from the issue are here: an injected ``io_callback``
+in a draft program and an added second launch in ``decode_step`` are both
+caught, by the jaxpr contract AND by the budget diff."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import io_callback
+
+from repro.analysis import (Contract, audit_program, build_suite, census,
+                            compute_budget, diff_budget, lint_source,
+                            load_budget, run_lint)
+from repro.analysis.jaxpr_audit import CALLBACK_PRIMS
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# broken fixture programs (jaxpr rules)
+# ---------------------------------------------------------------------------
+
+def _jaxpr_of(fn, *args):
+    return jax.make_jaxpr(jax.jit(fn))(*args)
+
+
+def _with_io_callback(x):
+    y = io_callback(lambda a: a, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+    return y + 1.0
+
+
+def _scan_with_transfer(x):
+    def body(c, _):
+        c = jax.device_put(c)
+        return c + 1.0, c
+    return jax.lax.scan(body, x, None, length=3)
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _two_launch_decode(x):
+    from jax.experimental import pallas as pl
+    call = pl.pallas_call(
+        _copy_kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True)
+    return call(call(x))          # two launches where the design pays one
+
+
+def test_injected_io_callback_in_draft_program_fires():
+    """Acceptance demo 1: io_callback smuggled into a draft program."""
+    bad = _jaxpr_of(_with_io_callback, jnp.ones(3))
+    contract = Contract("tiered/spec_draft",
+                        why="DESIGN.md §6: draft is device-only")
+    vs = audit_program(contract, bad)
+    assert len(vs) == 1
+    msg = str(vs[0])
+    assert "SIKV-J001" in msg and "io_callback" in msg
+    assert "tiered/spec_draft" in msg and "§6" in msg
+
+
+def test_host_transfer_in_scan_body_fires():
+    bad = _jaxpr_of(_scan_with_transfer, jnp.ones(3))
+    contract = Contract("fixture/scan", forbid=CALLBACK_PRIMS,
+                        forbid_in_loop=("device_put",))
+    vs = audit_program(contract, bad)
+    assert len(vs) == 1
+    msg = str(vs[0])
+    assert "SIKV-J003" in msg and "device_put" in msg
+    assert "scan" in msg and "per-iteration" in msg
+
+
+def test_two_launch_decode_fires_count_contract():
+    """Acceptance demo 2a: a second launch breaks the exact-count rule."""
+    bad = _jaxpr_of(_two_launch_decode, jnp.ones((4, 4)))
+    contract = Contract("dense/decode_step", forbid=CALLBACK_PRIMS,
+                        exact={"pallas_call": 1},
+                        why="DESIGN.md §2: one merged launch per step")
+    vs = audit_program(contract, bad)
+    assert len(vs) == 1
+    msg = str(vs[0])
+    assert "SIKV-J002" in msg and "pallas_call" in msg
+    assert "expected exactly 1" in msg and "found 2" in msg
+
+
+def test_two_launch_decode_fires_budget_diff():
+    """Acceptance demo 2b: the same regression trips the committed budget."""
+    committed = load_budget(REPO / "ANALYSIS_BUDGET.json")
+    drifted = json.loads(json.dumps(committed))      # deep copy
+    entry = drifted["programs"]["dense/decode_step@kernels"]
+    entry["pallas_calls"] += 1
+    diffs = diff_budget(committed, drifted)
+    assert len(diffs) == 1
+    assert "SIKV-B001" in diffs[0] and "pallas_calls" in diffs[0]
+    assert "dense/decode_step@kernels" in diffs[0]
+    assert "--refresh-budget" in diffs[0]            # actionable
+
+
+def test_budget_detects_program_set_and_churn_drift():
+    committed = load_budget(REPO / "ANALYSIS_BUDGET.json")
+    drifted = json.loads(json.dumps(committed))
+    drifted["programs"]["rogue/new_program"] = {"pallas_calls": 0}
+    drifted["churn"]["paged"]["program_compiles"]["step"] = 2
+    diffs = diff_budget(committed, drifted)
+    assert any("SIKV-B002" in d and "rogue/new_program" in d for d in diffs)
+    assert any("SIKV-B003" in d and "step" in d and "recompiled" in d
+               for d in diffs)
+
+
+def test_census_counts_loop_nesting():
+    cen = census(_jaxpr_of(_scan_with_transfer, jnp.ones(3)))
+    assert cen.counts["device_puts"] == 1
+    assert cen.counts["loop_device_puts"] == 1
+    cen = census(_jaxpr_of(_with_io_callback, jnp.ones(3)))
+    assert cen.counts["io_callbacks"] == 1
+    assert cen.counts["loop_io_callbacks"] == 0
+
+
+def test_donation_contract_both_directions():
+    def f(caches, x):
+        return caches + x, caches * 2.0
+    donating = jax.jit(f, donate_argnums=(0,))
+    plain = jax.jit(f)
+    args = (jnp.ones(3), jnp.ones(3))
+    closed = jax.make_jaxpr(plain)(*args)
+    must = Contract("fixture/step", forbid=(), forbid_in_loop=(),
+                    donate=True)
+    must_not = Contract("fixture/draft", forbid=(), forbid_in_loop=(),
+                        donate=False)
+    assert audit_program(must, closed,
+                         plain.lower(*args).as_text())[0].rule == "SIKV-J004"
+    assert audit_program(must, closed,
+                         donating.lower(*args).as_text()) == []
+    assert audit_program(must_not, closed,
+                         donating.lower(*args).as_text())[0].rule \
+        == "SIKV-J004"
+    assert audit_program(must_not, closed, plain.lower(*args).as_text()) == []
+
+
+# ---------------------------------------------------------------------------
+# AST rules on fixture sources
+# ---------------------------------------------------------------------------
+
+def _rules(src, kind):
+    return [f.rule for f in lint_source(src, "repro/fixture.py", kind)]
+
+
+def test_ast_host_sync_in_traced_module():
+    assert _rules("def f(x):\n    return x.item()\n",
+                  "traced") == ["SIKV-L001"]
+    assert _rules("import jax\ndef f(x):\n    return jax.device_get(x)\n",
+                  "traced") == ["SIKV-L001"]
+    assert _rules("import numpy as np\ndef f(x):\n    return np.asarray(x)\n",
+                  "traced") == ["SIKV-L001"]
+
+
+def test_ast_float_on_tracer_vs_static():
+    assert _rules("def f(x):\n    return float(x.sum())\n",
+                  "traced") == ["SIKV-L001"]
+    # shape/config math is trace-static: no finding
+    clean = ("def f(cfg, x, m: MLAConfig):\n"
+             "    B, L, D = x.shape\n"
+             "    s = 1.0 / float(cfg.d_model + m.rope_dim + D) ** 0.5\n"
+             "    n = int(m.capacity_factor * L / B)\n"
+             "    return s, n, len(x)\n")
+    assert _rules(clean, "traced") == []
+
+
+def test_ast_jnp_on_host_path_and_waiver():
+    src = "import jax.numpy as jnp\ndef f(n):\n    return jnp.zeros(n)\n"
+    rules = _rules(src, "host")
+    assert rules and set(rules) == {"SIKV-L002"}
+    waived = ("import jax  # lint: allow[SIKV-L002] sanctioned\n"
+              "def f(n):\n    return n\n")
+    assert _rules(waived, "host") == []
+
+
+def test_ast_pallas_call_needs_interpret():
+    src = ("from jax.experimental import pallas as pl\n"
+           "def k(x):\n"
+           "    return pl.pallas_call(body, out_shape=o)(x)\n")
+    assert _rules(src, "none") == ["SIKV-L003"]
+    src_ok = ("from jax.experimental import pallas as pl\n"
+              "def k(x, interpret):\n"
+              "    return pl.pallas_call(body, out_shape=o,\n"
+              "                          interpret=interpret)(x)\n")
+    assert _rules(src_ok, "none") == []
+
+
+def test_ast_compat_shim_bypass():
+    assert _rules("import jax\ndef f(g, mesh):\n"
+                  "    return jax.shard_map(g, mesh=mesh, in_specs=None,\n"
+                  "                         out_specs=None)\n",
+                  "none") == ["SIKV-L004"]
+    assert _rules("from jax.experimental.shard_map import shard_map\n",
+                  "none") == ["SIKV-L004"]
+
+
+def test_ast_host_fn_escape_hatch():
+    src = ("def bytes_of(tree):  # lint: host\n"
+           "    return sum(float(x.mean()) for x in tree)\n")
+    assert _rules(src, "traced") == []
+
+
+def test_clean_tree_lint_zero_noise():
+    assert [str(f) for f in run_lint()] == []
+
+
+# ---------------------------------------------------------------------------
+# the real engine programs (shared trace, slow)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def suite():
+    return build_suite()
+
+
+@pytest.mark.slow
+def test_real_programs_satisfy_contracts(suite):
+    assert [str(v) for v in suite.audit()] == []
+
+
+@pytest.mark.slow
+def test_committed_budget_matches_tree(suite):
+    committed = load_budget(REPO / "ANALYSIS_BUDGET.json")
+    measured = compute_budget(suite)
+    assert diff_budget(committed, measured) == []
+    # the headline invariants, pinned explicitly
+    progs = committed["programs"]
+    assert progs["tiered/spec_draft"]["io_callbacks"] == 0
+    assert progs["tiered/decode_step"]["io_callbacks"] >= 1
+    assert progs["dense/decode_step"]["donates"] is True
+    assert progs["dense/spec_draft"]["donates"] is False
+    assert committed["churn"]["paged"]["program_compiles"]["step"] == 1

@@ -4,7 +4,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import SIKVConfig
 from repro.core.attention import (full_causal_attention, masked_attention,

@@ -1,7 +1,6 @@
 """Baseline methods: API conformance + comparative retrieval quality."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import SIKVConfig
@@ -88,7 +87,6 @@ def test_sikv_beats_snapkv_on_needles(rng):
     q_obs = jax.random.normal(jax.random.PRNGKey(42), (B, Hkv, 8, D))
     budget_cfg = SIKVConfig(num_sink_tokens=16, token_budget=128,
                             recent_window=8, obs_window=8)
-    Hq = Hkv
     qd = q[:, :, None, :]  # (B, Hq=Hkv, 1, D)
     k_new = jnp.zeros((B, Hkv, 1, D))
     v_new = jnp.zeros((B, Hkv, 1, D))

@@ -16,7 +16,7 @@ from repro.data.synthetic import structured_kv
 from repro.models import init_params
 from repro.paged import (PagePool, PoolExhausted, SlotPageManager,
                          init_paged_cache, insert_prefill_pages,
-                         paged_sikv_decode_attention, paged_token_bytes,
+                         paged_sikv_decode_attention,
                          tree_copy_page, tree_set_block_entry)
 from repro.serving import (PagedServingEngine, Request, RequestScheduler,
                            ServingEngine)

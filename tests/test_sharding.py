@@ -8,7 +8,6 @@ import textwrap
 import jax
 import pytest
 
-from repro.config import get_model_config
 from repro.launch.sharding import param_spec
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")

@@ -4,7 +4,6 @@ Reduced variants of each assigned family (2 layers, d_model<=512, <=4
 experts): one forward/train step + one prefill/decode step on CPU, asserting
 output shapes and the absence of NaNs.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -90,7 +90,6 @@ def test_rollback_never_resurrects_flushed_token(rng):
     cache = prefill_compress(k, v, q_obs, CFG, capacity=48,
                              scale_dtype=jnp.float32)
     # append with position-encoded keys too
-    cur = cache
     appended = [cache]
     for j in range(6):
         p = float(L + j)

@@ -1,5 +1,4 @@
 """Data pipeline, optimizer, checkpointing unit tests."""
-import os
 import tempfile
 
 import jax

@@ -9,13 +9,11 @@ same budget diverges more.
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.config import SIKVConfig, get_model_config, reduced_config
 from repro.launch.train import train
-from repro.models import init_params
 from repro.serving import ServingEngine
 
 

@@ -1,6 +1,5 @@
 """Integration: training decreases loss; serving engine end-to-end."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.config import SIKVConfig, get_model_config, reduced_config
