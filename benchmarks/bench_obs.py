@@ -1,0 +1,149 @@
+"""Observability overhead: the disabled mode must be ~free.
+
+The instrumentation contract (DESIGN.md §8) is that components bind
+their metric/tracer handles at construction, so a disabled registry
+costs one attribute load plus one empty call per seam.  This suite
+turns that into a measured bound:
+
+1. microbenchmark the no-op handles (``NULL_COUNTER.inc``, the null
+   tracer's ``instant``/``span``) to get a per-call cost;
+2. run the smoke serving workload once with observability DISABLED
+   (wall time ``W_d``) and once ENABLED with a tracer, counting every
+   event/observation the workload actually produces;
+3. bound the disabled-mode overhead as
+   ``calls * per_call_cost / W_d`` — a deliberate OVERestimate (the
+   call count is padded 2x for gauge sets and handle loads the
+   snapshot cannot see) — and assert it stays under 2% (smoke-relaxed
+   per the ``assert_ratio`` convention).
+
+The analytic bound is used instead of differencing two wall-clock runs
+because at these shapes the run-to-run jitter of jitted-program
+dispatch (>5%) would drown a sub-2% effect; the no-op cost itself is
+measured, not modeled.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import assert_ratio, emit, header
+from repro import obs
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.data.synthetic import lm_sequence_batch
+from repro.models import init_params
+from repro.obs.metrics import NULL_COUNTER
+from repro.obs.trace import NULL_TRACER
+from repro.serving import Request, RequestScheduler, ServingEngine
+
+
+def _noop_cost_us(iters: int = 200_000) -> float:
+    """Worst per-call wall cost (µs) across the disabled-mode handles."""
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        NULL_COUNTER.inc()
+    t1 = time.perf_counter()
+    for _ in range(iters):
+        NULL_TRACER.instant("track", "name", uid=0, n=1)
+    t2 = time.perf_counter()
+    for _ in range(iters):
+        with NULL_TRACER.span("track", "name"):
+            pass
+    t3 = time.perf_counter()
+    return max(t1 - t0, t2 - t1, t3 - t2) / iters * 1e6
+
+
+def _serve_once(params, cfg, sikv, *, batch, prompt_len, max_new,
+                n_requests) -> float:
+    """One continuous-batching flush; returns wall seconds."""
+    eng = ServingEngine(params, cfg, sikv, method="sikv",
+                        batch_size=batch, prompt_len=prompt_len,
+                        max_new_tokens=max_new)
+    sched = RequestScheduler(eng)
+    toks = lm_sequence_batch(jax.random.PRNGKey(5), n_requests,
+                             prompt_len, cfg.vocab_size)
+    news = [max_new, max_new // 2, max_new // 4]
+    for i in range(n_requests):
+        sched.submit(Request(uid=i, prompt=[int(t) for t in toks[i]],
+                             max_new_tokens=news[i % len(news)]))
+    t0 = time.perf_counter()
+    sched.run()
+    return time.perf_counter() - t0
+
+
+def _count_observations() -> int:
+    """Total mutator calls visible in the live registry (counters count
+    their value — every serving-seam counter here increments by 1 — and
+    histograms their observation count)."""
+    n = 0
+    for series in obs.get_registry().snapshot().values():
+        for s in series.values():
+            if s["type"] == "counter":
+                n += int(s["value"])
+            elif s["type"] == "histogram":
+                n += int(s["n"])
+    return n
+
+
+def run(*, prompt_len: int = 32, max_new: int = 16, batch: int = 2,
+        n_requests: int = 4, arch: str = "llama3.1-8b",
+        smoke: bool = False):
+    header("bench_obs (disabled-mode observability overhead)")
+    import dataclasses
+    cfg = reduced_config(get_model_config(arch))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    sikv = SIKVConfig(num_sink_tokens=8, token_budget=28, recent_window=4,
+                      obs_window=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    shape = dict(batch=batch, prompt_len=prompt_len, max_new=max_new,
+                 n_requests=n_requests)
+
+    per_call_us = _noop_cost_us()
+    emit("obs/noop_cost", per_call_us, "per disabled-mode handle call")
+
+    # this suite flips the process-wide registry/tracer; other suites in
+    # the same run (and the harness's --trace export) must get their
+    # state back untouched
+    reg = obs.get_registry()
+    saved_series = dict(reg._series)
+    saved_enabled = reg.enabled
+    saved_tracer = obs.get_tracer()
+    try:
+        # disabled run (warm the jit caches off the clock, first flush)
+        obs.set_enabled(False, reset=True)
+        obs.set_tracer(obs.NULL_TRACER)
+        _serve_once(params, cfg, sikv, **shape)
+        w_disabled = _serve_once(params, cfg, sikv, **shape)
+        emit("obs/serve_disabled", w_disabled * 1e6, "obs off")
+
+        # enabled run: same workload, count everything it records
+        obs.set_enabled(True, reset=True)
+        tracer = obs.set_tracer(obs.Tracer(capacity=1 << 20))
+        w_enabled = _serve_once(params, cfg, sikv, **shape)
+        n_trace = len(tracer.events())
+        n_metrics = _count_observations()
+        # 2x pad: gauge sets, handle loads, and CounterGroup dict upkeep
+        # are invisible to the snapshot but cost about one no-op call each
+        calls = 2 * (n_trace + n_metrics)
+    finally:
+        reg._series.clear()
+        reg._series.update(saved_series)
+        reg.enabled = saved_enabled
+        obs.set_tracer(saved_tracer)
+
+    overhead = (calls * per_call_us * 1e-6) / w_disabled
+    emit("obs/serve_enabled", w_enabled * 1e6,
+         f"trace_events={n_trace};metric_observations={n_metrics};"
+         f"enabled_over_disabled={w_enabled / w_disabled:.3f}x")
+    emit("obs/disabled_overhead", 0.0,
+         f"bound_calls={calls};per_call_us={per_call_us:.4f};"
+         f"overhead_frac={overhead:.5f};bar=0.02")
+    assert_ratio("disabled-mode observability overhead", overhead, 0.02,
+                 ceiling=True, smoke=smoke, smoke_relaxed=0.05,
+                 detail=f"{calls} calls x {per_call_us:.4f}us over "
+                        f"{w_disabled * 1e3:.1f}ms")
+    return {"overhead": overhead, "noop_us": per_call_us}
+
+
+if __name__ == "__main__":
+    run()

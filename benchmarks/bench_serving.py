@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import assert_ratio, emit, header
+from repro import obs
 from repro.config import SIKVConfig, get_model_config, reduced_config
 from repro.core.cache import init_cache
 from repro.core.policy import staging_pages_needed, tiered_pool_split
@@ -69,6 +70,10 @@ def _make_engine(params, cfg, sikv, batch, prompt_len):
 def run(*, batch: int = 2, prompt_len: int = 64, n_requests: int = 6,
         arch: str = "llama3.1-8b", smoke: bool = False):
     header("bench_serving (continuous vs lock-step batching)")
+    # the sections below read their launch/transfer counters from the
+    # metrics registry (engines mirror their stats dicts into it), so the
+    # registry must be live before any engine is constructed
+    obs.set_enabled(True)
     import dataclasses
     cfg = reduced_config(get_model_config(arch))
     cfg = dataclasses.replace(cfg, dtype="float32")
@@ -91,11 +96,23 @@ def run(*, batch: int = 2, prompt_len: int = 64, n_requests: int = 6,
         stats = sched.service_stats()
         inv = eng.invocations()
         results[policy] = inv
+        # launch counts come from the metrics registry (per-engine labeled
+        # series), not the engine's stats dict — same integers, but this
+        # exercises the export path every consumer uses
+        reg = obs.get_registry()
+        prefills = reg.value("engine.prefills", engine=eng.obs_label)
+        steps = reg.value("engine.steps", engine=eng.obs_label)
+        assert prefills == eng.stats["prefills"], (prefills, eng.stats)
+        assert steps == eng.stats["steps"], (steps, eng.stats)
         emit(f"serving/{policy}", dt * 1e6,
              f"requests={done};tokens={toks};invocations={inv};"
-             f"prefills={eng.stats['prefills']};steps={eng.stats['steps']};"
+             f"prefills={prefills};steps={steps};"
              f"tok_per_s={toks / dt:.1f};ttft_ms={stats['ttft_mean'] * 1e3:.1f};"
-             f"tpot_ms={stats['tpot_mean'] * 1e3:.1f}")
+             f"tpot_ms={stats['tpot_mean'] * 1e3:.1f};"
+             f"n_requests={stats['n_requests']};"
+             f"n_decoded={stats['n_decoded']};"
+             f"ttft_p95_ms={stats['ttft_p95'] * 1e3:.1f};"
+             f"tpot_p95_ms={stats['tpot_p95'] * 1e3:.2f}")
 
     saved = results["lockstep"] - results["continuous"]
     emit("serving/invocations_saved", 0.0,
@@ -189,18 +206,22 @@ def paged_concurrency(params, cfg, sikv, *, prompt_len: int = 64,
     dt_p = time.time() - t0
     paged_bytes = eng_p.token_store_bytes()
     pstats = eng_p.pool_stats()
+    # allocator counters via the registry, labeled by pool instance
+    reg = obs.get_registry()
+    pool_label = eng_p.pool.obs.labels["pool"]
     emit("serving/budget/paged", dt_p * 1e6,
          f"requests={done_p};pages={num_pages};page_size={page_size};"
          f"peak_concurrent={sched_p.peak_active};"
          f"token_store_bytes={paged_bytes};"
          f"registry_state_bytes={pstats['registry_state_bytes']};"
-         f"prefix_hits={pstats['prefix_hits']};"
-         f"cow_copies={pstats['cow_copies']};"
-         f"evictions={pstats['evictions']};"
+         f"prefix_hits={reg.value('pool.prefix_hits', pool=pool_label)};"
+         f"cow_copies={reg.value('pool.cow_copies', pool=pool_label)};"
+         f"evictions={reg.value('pool.evictions', pool=pool_label)};"
          f"invocations={eng_p.invocations()};"
-         f"prefills={eng_p.stats['prefills']};"
-         f"steps={eng_p.stats['steps']};"
-         f"aux_launches={eng_p.stats['aux_launches']}")
+         f"prefills={reg.value('engine.prefills', engine=eng_p.obs_label)};"
+         f"steps={reg.value('engine.steps', engine=eng_p.obs_label)};"
+         f"aux_launches="
+         f"{reg.value('engine.aux_launches', engine=eng_p.obs_label)}")
     for uid in sorted(sched_p.completed):
         req = sched_p.completed[uid]
         emit(f"serving/budget/request/{uid}", 0.0,
@@ -303,6 +324,17 @@ def tiered_concurrency(params, cfg, sikv, *, prompt_len: int = 256,
     tiered_bytes = eng_t.token_store_bytes()
     tstats = eng_t.tier_stats()
     stats_t = sched_t.service_stats()
+    # cross-check: the staging hit rate recomputed from the registry's
+    # transfer counters must equal what tier_stats() derives from the
+    # same events — the metrics JSON a CI run uploads is trustworthy
+    reg = obs.get_registry()
+    xl = eng_t.xfer.obs.labels["transfer"]
+    hits = (reg.value("transfer.hit_tokens", transfer=xl)
+            + reg.value("transfer.prefetch_hit_tokens", transfer=xl))
+    served = hits + reg.value("transfer.miss_tokens", transfer=xl)
+    reg_hit_rate = hits / served if served else 1.0
+    assert abs(reg_hit_rate - tstats["staging_hit_rate"]) < 1e-9, (
+        reg_hit_rate, tstats["staging_hit_rate"])
     emit("serving/tiered/tiered", dt_t * 1e6,
          f"requests={done_t};index_pages={num_pages};"
          f"staging_pages={staging};prefetch_depth={prefetch};"
@@ -539,6 +571,25 @@ def spec_decode_section(arch: str = "llama3.1-8b", *, prompt_len: int = 64,
         # distribution identity: speculation must never change a token
         assert results[name] == results["baseline"], (
             f"{name} spec output diverged from plain greedy decode")
+        if eng.spec_depth is not None:
+            # the registry's accept-depth histogram must agree with the
+            # engine's scalar counters: one observation per emitting
+            # window, summing to the accepted-draft total
+            hist = obs.get_registry().find("engine.spec_accept_depth",
+                                           engine=eng.obs_label)
+            assert len(hist) == 1, hist
+            h = hist[0][1]
+            assert int(h.total) == eng.stats["spec_accepted"], (
+                h.export(), eng.stats)
+            acc_rate = (int(h.total)
+                        / max(1, h.n * eng.spec_depth))
+            assert abs(acc_rate - stats["spec_accept_rate"]) < 1e-9, (
+                acc_rate, stats["spec_accept_rate"])
+            emit(f"serving/spec/accept_depth/{name}", 0.0,
+                 f"windows={h.n};mean={h.total / max(1, h.n):.2f};"
+                 f"p50={h.percentile(0.5):.1f};"
+                 f"p95={h.percentile(0.95):.1f};"
+                 f"hist_accept_rate={acc_rate:.3f}")
     ratio = out["baseline"]["lpt"] / max(out["dense"]["lpt"], 1e-9)
     emit("serving/spec/summary", 0.0,
          f"launch_reduction={ratio:.2f}x;"

@@ -7,6 +7,13 @@ stdout).  ``python -m benchmarks.run [--only <name>] [--emit-json [F]]`` —
 ``BENCH_serving.json`` at the repo root — the committed trajectory file the
 next PR diffs against (CI-artifact-only results are invisible to it) and
 the artifact the CI smoke job uploads.
+
+``--metrics-json [F]`` / ``--trace [F]`` additionally export the
+observability layer after the suites: the metrics-registry snapshot
+(launch/transfer counters, accept-depth histograms) and the Chrome
+trace-event file (Perfetto-loadable).  ``--smoke`` implies both at their
+default paths (``BENCH_metrics.json`` / ``BENCH_trace.json``) so the CI
+smoke job uploads them as artifacts.
 """
 from __future__ import annotations
 
@@ -30,11 +37,31 @@ def main() -> None:
                          "(serving + memory + every other suite run); "
                          "FILE defaults to BENCH_serving.json at the "
                          "repo root, the committed perf-trajectory file")
+    ap.add_argument("--metrics-json", default=None, metavar="FILE",
+                    nargs="?", const="BENCH_metrics.json",
+                    help="write the metrics-registry snapshot after the "
+                         "suites (default FILE: BENCH_metrics.json; "
+                         "implied by --smoke)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    nargs="?", const="BENCH_trace.json",
+                    help="record a Chrome trace of the serving suites and "
+                         "write it after the run (default FILE: "
+                         "BENCH_trace.json; implied by --smoke)")
     args = ap.parse_args()
+    if args.smoke:
+        args.metrics_json = args.metrics_json or "BENCH_metrics.json"
+        args.trace = args.trace or "BENCH_trace.json"
+
+    from repro import obs
+    if args.metrics_json or args.trace:
+        # before any suite builds an engine: handles bind at construction
+        obs.set_enabled(True)
+    if args.trace:
+        obs.set_tracer(obs.Tracer())
 
     from benchmarks import (bench_ablation, bench_analysis,
                             bench_longbench_proxy, bench_memory,
-                            bench_modules, bench_roofline,
+                            bench_modules, bench_obs, bench_roofline,
                             bench_ruler_proxy, bench_serving, bench_tt2t)
     if args.smoke:
         suites = [
@@ -42,6 +69,8 @@ def main() -> None:
             ("bench_serving",
              lambda: bench_serving.run(prompt_len=32, n_requests=4,
                                        smoke=True)),
+            # disabled-mode observability overhead bound (<2%)
+            ("bench_obs", lambda: bench_obs.run(smoke=True)),
             # audit census rows (no pallas-kernel trace at smoke shapes)
             ("bench_analysis", lambda: bench_analysis.run(smoke=True)),
         ]
@@ -54,6 +83,7 @@ def main() -> None:
             ("bench_tt2t", bench_tt2t.run),              # Table 3
             ("bench_ablation", bench_ablation.run),      # Table 5
             ("bench_serving", bench_serving.run),        # batching + paged
+            ("bench_obs", bench_obs.run),                # obs overhead bound
             ("bench_roofline", bench_roofline.run),      # dry-run roofline
             ("bench_analysis", bench_analysis.run),      # §7 program census
         ]
@@ -86,6 +116,15 @@ def main() -> None:
         with open(args.emit_json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {len(RESULTS)} rows -> {args.emit_json}")
+    if args.metrics_json:
+        snap = obs.get_registry().snapshot()
+        with open(args.metrics_json, "w") as f:
+            json.dump({"schema": 1, "metrics": snap}, f, indent=1)
+        print(f"wrote {len(snap)} metric series -> {args.metrics_json}")
+    if args.trace:
+        n = obs.get_tracer().dump(args.trace)
+        print(f"wrote {n} trace events -> {args.trace} "
+              f"(load at https://ui.perfetto.dev)")
     if failures:
         sys.exit(f"benchmark failures: {failures}")
 

@@ -1,0 +1,118 @@
+"""Serving observability: metrics registry, Perfetto trace, request table.
+
+Runs a mixed workload — tiered engine (host-offloaded payload pages) with
+self-speculative decoding and chunked admission — with the observability
+layer ON (DESIGN.md §8):
+
+1. flips the process-wide metrics registry and installs a tracer BEFORE
+   building the engine (components bind their handles at construction);
+2. serves ragged requests through the scheduler, then prints the
+   per-request lifecycle table derived from the trace events: queued /
+   TTFT / per-token TPOT / worst stall / spec drafted-vs-accepted;
+3. prints the registry highlights — launch counters, tiered staging hit
+   rate, the spec accept-depth histogram with its percentiles — and
+   cross-checks them against the engine's own ``stats`` dicts;
+4. dumps the Chrome trace-event JSON (one lane per decode slot plus
+   scheduler / engine / transfer tracks) for https://ui.perfetto.dev.
+
+Run:  PYTHONPATH=src python examples/observability.py
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro import obs
+from repro.config import SIKVConfig, get_model_config, reduced_config
+from repro.data.synthetic import lm_sequence_batch
+from repro.models import init_params
+from repro.serving import Request, RequestScheduler, TieredServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--spec-depth", type=int, default=2)
+    ap.add_argument("--trace", default="observability_trace.json",
+                    help="Chrome trace-event output path")
+    args = ap.parse_args()
+
+    # 1. observability on FIRST: handles bind at construction time
+    obs.set_enabled(True, reset=True)
+    tracer = obs.set_tracer(obs.Tracer())
+
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    sikv = SIKVConfig(num_sink_tokens=8, token_budget=28, recent_window=4,
+                      obs_window=8)
+
+    eng = TieredServingEngine(params, cfg, sikv, batch_size=3,
+                              prompt_len=args.prompt_len,
+                              max_new_tokens=args.max_new, page_size=8,
+                              staging_pages=None, prefetch_depth=2,
+                              prefill_chunk=32, spec_depth=args.spec_depth,
+                              spec_draft_k=4)
+    sched = RequestScheduler(eng)
+
+    # 2. ragged request stream (more requests than slots -> real queueing)
+    toks = lm_sequence_batch(jax.random.PRNGKey(5), args.requests,
+                             args.prompt_len, cfg.vocab_size)
+    lens = [args.prompt_len, args.prompt_len // 2, args.prompt_len // 4]
+    for i in range(args.requests):
+        sched.submit(Request(
+            uid=i, prompt=[int(t) for t in toks[i]][:lens[i % len(lens)]],
+            max_new_tokens=args.max_new - 2 * (i % 3)))
+    done = sched.run()
+    print(f"== served {done} requests "
+          f"(tiered + spec depth {args.spec_depth} + chunked admission) ==")
+
+    # 3. per-request timelines from the trace ring
+    timelines = obs.build_timelines(tracer.events())
+    print("\n" + obs.format_table(timelines))
+
+    st = sched.service_stats()
+    print(f"\nservice:  ttft p50/p95 {st['ttft_p50'] * 1e3:.1f}/"
+          f"{st['ttft_p95'] * 1e3:.1f} ms   "
+          f"tpot p50/p95 {st['tpot_p50'] * 1e3:.2f}/"
+          f"{st['tpot_p95'] * 1e3:.2f} ms   "
+          f"({st['n_decoded']:.0f}/{st['n_requests']:.0f} decoded, "
+          f"spec accept rate {st['spec_accept_rate']:.2f})")
+
+    # 4. registry highlights + engine cross-checks
+    reg = obs.get_registry()
+    el = eng.obs_label
+    print(f"\nregistry ({el}):")
+    for key in ["prefills", "draft_launches", "verify_launches",
+                "spec_rollbacks", "aux_launches"]:
+        v = reg.value(f"engine.{key}", engine=el)
+        assert v == eng.stats.get(key, 0), (key, v, eng.stats)
+        print(f"  engine.{key:<18} {v}")
+    [(_, depth_hist)] = reg.find("engine.spec_accept_depth", engine=el)
+    print(f"  accept depth          mean {depth_hist.total / depth_hist.n:.2f} "
+          f"p50 {depth_hist.percentile(0.5):.1f} "
+          f"p95 {depth_hist.percentile(0.95):.1f} "
+          f"over {depth_hist.n} windows")
+    xl = eng.xfer.obs.labels["transfer"]
+    hits = (reg.value("transfer.hit_tokens", transfer=xl)
+            + reg.value("transfer.prefetch_hit_tokens", transfer=xl))
+    served = hits + reg.value("transfer.miss_tokens", transfer=xl)
+    rate = hits / served if served else 1.0
+    assert abs(rate - eng.tier_stats()["staging_hit_rate"]) < 1e-9
+    print(f"  staging hit rate      {rate:.2f} "
+          f"({served - hits} exact host misses over {served} payload reads)")
+    pl = eng.pool.obs.labels["pool"]
+    [(_, in_use)] = reg.find("pool.pages_in_use", pool=pl)
+    print(f"  pool.pages_in_use     {in_use.value} "
+          f"(high water {in_use.high_water})")
+
+    # 5. Perfetto dump: scheduler/engine/transfer tracks + one per slot
+    n = tracer.dump(args.trace)
+    print(f"\nwrote {n} trace events -> {args.trace} "
+          f"(open at https://ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,10 @@ HOST_MODULES = (
     "repro/serving/scheduler.py", "repro/paged/pool.py",
     "repro/tiered/host_store.py", "repro/tiered/staging.py",
     "repro/spec/accept.py",
+    # the observability layer is host-side by design: its handles are
+    # called from HOST modules, so a jax import here would defeat the rule
+    "repro/obs/metrics.py", "repro/obs/trace.py", "repro/obs/timeline.py",
+    "repro/obs/__init__.py",
 )
 # dotted jax APIs that moved/renamed across versions; call sites must go
 # through the named repro.compat shim instead

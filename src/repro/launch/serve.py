@@ -7,10 +7,17 @@ prefix caching, see DESIGN.md §3) instead of dense per-slot caches;
 memory, keeping only the sign-code index device-resident (the tiered store
 of DESIGN.md §5 — requires ``--paged``; ``--staging-pages`` and
 ``--prefetch-depth`` size its device staging cache and prefetch lane).
+
+``--metrics-json PATH`` / ``--trace PATH`` turn the observability layer
+on and export it after the run: a registry snapshot (counters, gauges,
+percentile histograms) and a Chrome trace-event file loadable at
+https://ui.perfetto.dev — one lane per decode slot plus scheduler and
+transfer tracks (DESIGN.md §8).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -66,7 +73,15 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           host_pages: bool = False, staging_pages: int | None = None,
           prefetch_depth: int | None = None,
           prefill_chunk: int | None = None,
-          spec_depth: int | None = None, spec_draft_k: int | None = None):
+          spec_depth: int | None = None, spec_draft_k: int | None = None,
+          metrics_json: str | None = None, trace: str | None = None):
+    if metrics_json is not None or trace is not None:
+        # flip BEFORE building anything: engines/schedulers bind their
+        # metric and tracer handles at construction time
+        from repro import obs
+        obs.set_enabled(True)
+        if trace is not None:
+            obs.set_tracer(obs.Tracer())
     validate_serve_flags(paged=paged, method=method, host_pages=host_pages,
                          staging_pages=staging_pages,
                          prefetch_depth=prefetch_depth,
@@ -134,6 +149,23 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
             print(f"[serve] tiers: device {engine.token_store_bytes()} B, "
                   f"host {engine.host_store_bytes()} B")
             print(f"[serve] transfers: {engine.tier_stats()}")
+    if metrics_json is not None:
+        from repro import obs
+        st = sched.service_stats()
+        payload = {"service_stats": st,
+                   "metrics": obs.get_registry().snapshot()}
+        with open(metrics_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        if verbose:
+            print(f"[serve] metrics -> {metrics_json} "
+                  f"(ttft_p95={st['ttft_p95']:.4f}s "
+                  f"tpot_p95={st['tpot_p95']:.4f}s)")
+    if trace is not None:
+        from repro import obs
+        n = obs.get_tracer().dump(trace)
+        if verbose:
+            print(f"[serve] trace -> {trace} ({n} events; load at "
+                  f"https://ui.perfetto.dev)")
     return sched, tput
 
 
@@ -173,6 +205,13 @@ def main() -> None:
     ap.add_argument("--spec-draft-k", type=int, default=None,
                     help="retrieval top-k of the DRAFT pass (default 4; "
                          "needs --spec-depth)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable the metrics registry and write its "
+                         "snapshot (plus service_stats percentiles) to "
+                         "PATH after the run")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the step tracer and write a Chrome "
+                         "trace-event JSON to PATH (open in Perfetto)")
     args = ap.parse_args()
     serve(args.arch, method=args.method, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new,
@@ -181,7 +220,8 @@ def main() -> None:
           staging_pages=args.staging_pages,
           prefetch_depth=args.prefetch_depth,
           prefill_chunk=args.prefill_chunk,
-          spec_depth=args.spec_depth, spec_draft_k=args.spec_draft_k)
+          spec_depth=args.spec_depth, spec_draft_k=args.spec_draft_k,
+          metrics_json=args.metrics_json, trace=args.trace)
 
 
 if __name__ == "__main__":

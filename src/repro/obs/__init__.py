@@ -1,0 +1,30 @@
+"""Zero-dependency serving-stack observability (§8 of DESIGN.md).
+
+Three layers, all host-side pure Python (no jax import — the package is
+a HOST module under the SIKV-L002 lint rule):
+
+* :mod:`repro.obs.metrics` — process-wide registry of named counters /
+  gauges / fixed-bucket histograms with label support and a disabled
+  mode that binds every handle to a shared no-op;
+* :mod:`repro.obs.trace` — bounded ring-buffer event tracer exporting
+  Chrome trace-event JSON viewable in Perfetto;
+* :mod:`repro.obs.timeline` — per-request lifecycle records derived
+  from trace events (TTFT/TPOT/stall distributions, not just means).
+
+Instrumentation lives at the host-orchestration seams only — never
+inside jitted programs — so the PR-6 jaxpr contracts and the launch
+budget are unaffected whether observability is on or off.
+"""
+from repro.obs.metrics import (NULL_COUNTER, NULL_GAUGE, NULL_HISTOGRAM,
+                               CounterGroup, MetricsRegistry, enabled,
+                               get_registry, instance_label, set_enabled)
+from repro.obs.timeline import build_timelines, format_table, percentiles
+from repro.obs.trace import NULL_TRACER, Tracer, get_tracer, set_tracer
+
+__all__ = [
+    "MetricsRegistry", "CounterGroup", "get_registry", "set_enabled",
+    "enabled",
+    "instance_label", "NULL_COUNTER", "NULL_GAUGE", "NULL_HISTOGRAM",
+    "Tracer", "get_tracer", "set_tracer", "NULL_TRACER",
+    "build_timelines", "format_table", "percentiles",
+]

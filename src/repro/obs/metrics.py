@@ -1,0 +1,315 @@
+"""Process-wide metrics registry: counters, gauges, histograms.
+
+Design points (tentpole of ISSUE 7):
+
+* **Named + labeled series.**  ``registry.counter("staging.hit_tokens",
+  engine="TieredServingEngine-0")`` returns a handle unique to the
+  (name, sorted-label-set) pair; repeated calls return the same object.
+* **Fixed-bucket histograms.**  Bucket bounds are frozen at first
+  construction, counts are plain ints, and two histograms with the same
+  bounds merge by summing — so per-engine series can be rolled up into
+  fleet totals without quantile sketches.
+* **Disabled mode compiles to near-no-ops.**  Components fetch their
+  handles at *construction* time; when the registry is disabled those
+  handles are the shared ``NULL_*`` singletons whose methods are empty
+  ``def``s.  The steady-state cost of an instrumented seam is then one
+  attribute load + one no-op call — bounded by ``bench_obs`` at <2% of
+  the smoke serving workload.
+* **snapshot() export.**  A plain nested dict (JSON-ready) keyed by
+  metric name, then by the label set rendered ``k=v,k=v`` (``""`` for
+  unlabeled), mirroring the Prometheus text-format data model without
+  the dependency.
+
+Host-side pure Python only: no jax import (SIKV-L002 applies to this
+package), no threads, no time source — timestamps belong to the tracer.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+LabelSet = Tuple[Tuple[str, str], ...]
+
+
+def _label_key(labels: Dict[str, str]) -> LabelSet:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _render_labels(key: LabelSet) -> str:
+    return ",".join(f"{k}={v}" for k, v in key)
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` accepts a (possibly float) delta."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, delta: int = 1) -> None:
+        self.value += delta
+
+    def export(self) -> Dict[str, Any]:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    """Last-write-wins scalar with a high-water mark."""
+
+    __slots__ = ("value", "high_water")
+
+    def __init__(self) -> None:
+        self.value = 0
+        self.high_water = 0
+
+    def set(self, value) -> None:
+        self.value = value
+        if value > self.high_water:
+            self.high_water = value
+
+    def add(self, delta) -> None:
+        self.set(self.value + delta)
+
+    def export(self) -> Dict[str, Any]:
+        return {"type": "gauge", "value": self.value,
+                "high_water": self.high_water}
+
+
+class Histogram:
+    """Fixed-bucket histogram: mergeable, exact count/sum/min/max.
+
+    ``bounds`` are inclusive upper edges; an implicit +inf bucket catches
+    the overflow.  ``percentile`` interpolates within the containing
+    bucket (exact at bucket edges) — good enough for p50/p95/p99 gates
+    on launch counts and microsecond latencies.
+    """
+
+    __slots__ = ("bounds", "counts", "n", "total", "vmin", "vmax")
+
+    def __init__(self, bounds: Sequence[float]) -> None:
+        self.bounds = tuple(float(b) for b in bounds)
+        if list(self.bounds) != sorted(set(self.bounds)):
+            raise ValueError(f"histogram bounds must be strictly "
+                             f"increasing: {bounds}")
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.n = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+
+    def observe(self, value) -> None:
+        v = float(value)
+        i = 0
+        for b in self.bounds:
+            if v <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.n += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+
+    def merge(self, other: "Histogram") -> None:
+        if other.bounds != self.bounds:
+            raise ValueError("cannot merge histograms with different "
+                             f"bounds: {self.bounds} vs {other.bounds}")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.n += other.n
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+
+    def percentile(self, q: float) -> float:
+        """Interpolated q-quantile (q in [0, 1]); 0.0 when empty."""
+        if self.n == 0:
+            return 0.0
+        target = q * self.n
+        seen = 0
+        lo = self.vmin
+        for i, c in enumerate(self.counts):
+            hi = self.bounds[i] if i < len(self.bounds) else self.vmax
+            hi = min(hi, self.vmax)
+            if c and seen + c >= target:
+                frac = (target - seen) / c
+                return max(lo, min(self.vmax, lo + frac * (hi - lo)))
+            if c:
+                lo = hi
+            seen += c
+        return self.vmax
+
+    def export(self) -> Dict[str, Any]:
+        return {"type": "histogram", "bounds": list(self.bounds),
+                "counts": list(self.counts), "n": self.n,
+                "sum": self.total,
+                "min": self.vmin if self.n else 0.0,
+                "max": self.vmax if self.n else 0.0,
+                "p50": self.percentile(0.50),
+                "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99)}
+
+
+class _NullMetric:
+    """Shared no-op bound by disabled registries; every mutator is an
+    empty method so the instrumented fast path costs one call."""
+
+    __slots__ = ()
+
+    def inc(self, delta: int = 1) -> None:
+        pass
+
+    def set(self, value) -> None:
+        pass
+
+    def add(self, delta) -> None:
+        pass
+
+    def observe(self, value) -> None:
+        pass
+
+
+NULL_COUNTER = _NullMetric()
+NULL_GAUGE = _NullMetric()
+NULL_HISTOGRAM = _NullMetric()
+
+# Default bucket ladders.  Token/byte counts are powers of two (page and
+# chunk sizes are), depths are small ints, wall times are in seconds.
+TOKEN_BUCKETS = tuple(float(2 ** i) for i in range(0, 15))
+BYTE_BUCKETS = tuple(float(2 ** i) for i in range(6, 31, 2))
+DEPTH_BUCKETS = tuple(float(i) for i in range(0, 9))
+SECONDS_BUCKETS = tuple(2.0 ** i for i in range(-20, 7))
+
+
+class MetricsRegistry:
+    """Registry of named metric series.
+
+    A *series* is (name, labels); the first accessor call creates it and
+    later calls (with any bucket argument) return the same handle.  When
+    ``enabled`` is False every accessor returns the matching ``NULL_*``
+    singleton and nothing is recorded.
+    """
+
+    def __init__(self, enabled: bool = True) -> None:
+        self.enabled = enabled
+        self._series: Dict[Tuple[str, str, LabelSet], Any] = {}
+
+    # -- accessors ---------------------------------------------------
+    def _get(self, kind: str, name: str, labels: Dict[str, str],
+             factory):
+        key = (kind, name, _label_key(labels))
+        series = self._series.get(key)
+        if series is None:
+            series = self._series[key] = factory()
+        return series
+
+    def counter(self, name: str, **labels: str) -> Counter:
+        if not self.enabled:
+            return NULL_COUNTER  # type: ignore[return-value]
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels: str) -> Gauge:
+        if not self.enabled:
+            return NULL_GAUGE  # type: ignore[return-value]
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(self, name: str,
+                  buckets: Optional[Sequence[float]] = None,
+                  **labels: str) -> Histogram:
+        if not self.enabled:
+            return NULL_HISTOGRAM  # type: ignore[return-value]
+        return self._get("histogram", name, labels,
+                         lambda: Histogram(buckets or TOKEN_BUCKETS))
+
+    # -- export ------------------------------------------------------
+    def snapshot(self) -> Dict[str, Dict[str, Any]]:
+        """``{name: {"k=v,...": exported-series, ...}, ...}`` — plain
+        dicts ready for ``json.dump``."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for (_, name, labels), series in sorted(
+                self._series.items(), key=lambda kv: (kv[0][1], kv[0][2])):
+            out.setdefault(name, {})[_render_labels(labels)] = \
+                series.export()
+        return out
+
+    def find(self, name: str, **labels: str) -> List[Tuple[LabelSet, Any]]:
+        """All live series under ``name`` whose labels are a superset of
+        ``labels`` (consumer-side selector; never creates series)."""
+        want = set(_label_key(labels))
+        return [(key, series)
+                for (_, n, key), series in sorted(self._series.items(),
+                                                  key=lambda kv: kv[0])
+                if n == name and want <= set(key)]
+
+    def value(self, name: str, default=0, **labels: str):
+        """Sum of ``value`` over matching counter/gauge series (or
+        ``default`` when none exist)."""
+        hits = self.find(name, **labels)
+        if not hits:
+            return default
+        return sum(s.value for _, s in hits)
+
+    def reset(self) -> None:
+        self._series.clear()
+
+
+class CounterGroup:
+    """Registry mirror for a host-side ``stats`` dict.
+
+    The serving stack already keeps deterministic integer counters in
+    plain ``stats`` dicts (the launch-budget gate reads them).  A
+    ``CounterGroup`` wraps one such dict so a single ``obs.add(key, n)``
+    bumps both the dict entry and a lazily-created registry counter
+    ``<prefix>.<key>`` carrying the group's labels.  Unknown keys raise
+    ``KeyError`` exactly like the direct ``stats[key] += n`` they
+    replace.  Disabled registries cache the shared no-op counter, so the
+    steady-state cost is one dict lookup + one empty call.
+    """
+
+    __slots__ = ("stats", "prefix", "labels", "_counters")
+
+    def __init__(self, stats: Dict[str, int], prefix: str,
+                 **labels: str) -> None:
+        self.stats = stats
+        self.prefix = prefix
+        self.labels = labels
+        self._counters: Dict[str, Any] = {}
+
+    def add(self, key: str, n: int = 1) -> None:
+        self.stats[key] += n
+        c = self._counters.get(key)
+        if c is None:
+            c = self._counters[key] = get_registry().counter(
+                f"{self.prefix}.{key}", **self.labels)
+        c.inc(n)
+
+
+# -- process-wide default registry -----------------------------------
+_REGISTRY = MetricsRegistry(enabled=False)
+_INSTANCE_IDS = itertools.count()
+
+
+def get_registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def set_enabled(on: bool, *, reset: bool = False) -> MetricsRegistry:
+    """Flip the process-wide registry.  Components bind handles at
+    construction time, so flip *before* building engines/schedulers."""
+    _REGISTRY.enabled = on
+    if reset:
+        _REGISTRY.reset()
+    return _REGISTRY
+
+
+def enabled() -> bool:
+    return _REGISTRY.enabled
+
+
+def instance_label(kind: str) -> str:
+    """Unique-per-process instance label, e.g. ``TieredServingEngine-3``
+    — lets exports distinguish the several engines a benchmark builds."""
+    return f"{kind}-{next(_INSTANCE_IDS)}"

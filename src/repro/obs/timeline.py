@@ -1,0 +1,176 @@
+"""Per-request lifecycle timelines derived from trace events.
+
+The scheduler emits a small event vocabulary (all carrying a ``uid``
+arg): ``submit`` / ``admit`` / ``admit_chunk`` / ``first_token`` /
+``token`` / ``spec_window`` / ``retire``.  :func:`build_timelines`
+folds a tracer's retained events into one :class:`RequestTimeline` per
+request, from which TTFT / TPOT / stall *distributions* follow — the
+aggregate means in ``service_stats()`` hide tail behaviour that decides
+SLO compliance (ISSUE 7 tentpole).
+
+Events live in a bounded ring, so a timeline can be *partial*: a
+request whose ``submit`` fell off the back still yields decode gaps
+from its surviving ``token`` events; fields that need evicted events
+stay ``None`` and the distributions simply skip them.
+
+Also home to :func:`percentiles`, the exact 0.0-safe helper that
+``service_stats()`` uses for its percentile fields (satellite 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+def percentiles(xs: Sequence[float],
+                qs: Sequence[float] = (0.50, 0.95, 0.99)
+                ) -> Tuple[float, ...]:
+    """Exact linear-interpolation quantiles; all-0.0 when ``xs`` is
+    empty (downstream asserts gate on the explicit counts instead)."""
+    if not xs:
+        return tuple(0.0 for _ in qs)
+    s = sorted(float(x) for x in xs)
+    out = []
+    for q in qs:
+        pos = q * (len(s) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(s) - 1)
+        out.append(s[lo] + (pos - lo) * (s[hi] - s[lo]))
+    return tuple(out)
+
+
+@dataclass
+class RequestTimeline:
+    """Lifecycle of one request, reconstructed from trace events.
+
+    Timestamps are tracer microseconds (monotonic); ``None`` means the
+    event was never seen (still in flight, or evicted from the ring).
+    """
+
+    uid: int
+    t_submit: Optional[int] = None
+    t_admit: Optional[int] = None
+    t_first_token: Optional[int] = None
+    t_retire: Optional[int] = None
+    admit_chunks: int = 0
+    token_ts: List[int] = field(default_factory=list)
+    spec_windows: List[Tuple[int, int]] = field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def queued_us(self) -> Optional[int]:
+        if self.t_submit is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft_us(self) -> Optional[int]:
+        if self.t_submit is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def decode_gaps_us(self) -> List[int]:
+        """Inter-token gaps (the per-token TPOT samples)."""
+        return [b - a for a, b in zip(self.token_ts, self.token_ts[1:])]
+
+    @property
+    def tpot_us(self) -> float:
+        gaps = self.decode_gaps_us
+        return sum(gaps) / len(gaps) if gaps else 0.0
+
+    @property
+    def max_stall_us(self) -> int:
+        return max(self.decode_gaps_us, default=0)
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.token_ts)
+
+
+def build_timelines(events: Iterable[Dict[str, Any]]
+                    ) -> Dict[int, RequestTimeline]:
+    """Fold trace events (tracer order = time order) into per-uid
+    timelines; events without a ``uid`` arg are scheduler/engine
+    machinery and are skipped."""
+    out: Dict[int, RequestTimeline] = {}
+    for ev in events:
+        args = ev.get("args") or {}
+        uid = args.get("uid")
+        if uid is None:
+            continue
+        tl = out.get(uid)
+        if tl is None:
+            tl = out[uid] = RequestTimeline(uid=uid)
+        name, ts = ev["name"], ev["ts"]
+        if name == "submit":
+            tl.t_submit = ts
+        elif name == "admit":
+            tl.t_admit = ts
+            tl.slot = args.get("slot", tl.slot)
+        elif name == "admit_chunk":
+            tl.admit_chunks += 1
+        elif name == "token":
+            n = int(args.get("n", 1))
+            if tl.t_first_token is None:
+                tl.t_first_token = ts
+            if n > 1 and tl.token_ts:
+                # a spec window commits its k tokens at one wall instant;
+                # spread them over the gap so per-token TPOT samples stay
+                # comparable with non-spec runs (satellite: decode_time
+                # attribution per emitted token)
+                t0 = tl.token_ts[-1]
+                tl.token_ts.extend(
+                    t0 + (ts - t0) * (i + 1) // n for i in range(n))
+            else:
+                tl.token_ts.extend([ts] * n)
+        elif name == "spec_window":
+            tl.spec_windows.append((int(args.get("drafted", 0)),
+                                    int(args.get("accepted", 0))))
+        elif name == "retire":
+            tl.t_retire = ts
+    return out
+
+
+def summarize(timelines: Dict[int, RequestTimeline]) -> Dict[str, Any]:
+    """Distribution summary across requests (all-0.0-safe)."""
+    ttfts = [tl.ttft_us for tl in timelines.values()
+             if tl.ttft_us is not None]
+    gaps = [g for tl in timelines.values() for g in tl.decode_gaps_us]
+    stalls = [tl.max_stall_us for tl in timelines.values()
+              if tl.decode_gaps_us]
+    t50, t95, t99 = percentiles(ttfts)
+    g50, g95, g99 = percentiles(gaps)
+    s50, s95, s99 = percentiles(stalls)
+    return {
+        "n_requests": len(timelines),
+        "n_tokens": sum(tl.n_tokens for tl in timelines.values()),
+        "ttft_us_p50": t50, "ttft_us_p95": t95, "ttft_us_p99": t99,
+        "tpot_us_p50": g50, "tpot_us_p95": g95, "tpot_us_p99": g99,
+        "stall_us_p50": s50, "stall_us_p95": s95, "stall_us_p99": s99,
+    }
+
+
+def format_table(timelines: Dict[int, RequestTimeline]) -> str:
+    """Fixed-width per-request table (the observability example prints
+    this after a mixed tiered+spec run)."""
+    hdr = (f"{'uid':>4} {'slot':>4} {'queued_ms':>10} {'ttft_ms':>9} "
+           f"{'tpot_ms':>9} {'stall_ms':>9} {'tokens':>6} "
+           f"{'chunks':>6} {'spec d/a':>9}")
+    lines = [hdr, "-" * len(hdr)]
+
+    def ms(us: Optional[float]) -> str:
+        return "-" if us is None else f"{us / 1e3:.2f}"
+
+    for uid in sorted(timelines):
+        tl = timelines[uid]
+        drafted = sum(d for d, _ in tl.spec_windows)
+        accepted = sum(a for _, a in tl.spec_windows)
+        spec = f"{drafted}/{accepted}" if tl.spec_windows else "-"
+        lines.append(
+            f"{tl.uid:>4} {'-' if tl.slot is None else tl.slot:>4} "
+            f"{ms(tl.queued_us):>10} {ms(tl.ttft_us):>9} "
+            f"{ms(tl.tpot_us if tl.decode_gaps_us else None):>9} "
+            f"{ms(tl.max_stall_us if tl.decode_gaps_us else None):>9} "
+            f"{tl.n_tokens:>6} {tl.admit_chunks:>6} {spec:>9}")
+    return "\n".join(lines)

@@ -1,0 +1,195 @@
+"""Bounded ring-buffer event tracer with Chrome trace-event export.
+
+Events carry monotonic microsecond timestamps (``time.perf_counter_ns``)
+and live in a ``deque(maxlen=capacity)`` — a steady stream of events
+costs O(1) memory and the oldest events fall off the back, so a serving
+loop can stay instrumented indefinitely.
+
+Export is the Chrome trace-event JSON format (``{"traceEvents": [...]}``),
+loadable in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``:
+
+* ``ph: "X"`` complete slices (begin + duration, what ``span`` emits),
+* ``ph: "B"``/``"E"`` unmatched begin/end pairs,
+* ``ph: "i"`` instants (request submit, admission retry, rollback),
+* ``ph: "M"`` metadata naming the tracks.
+
+Tracks map to ``tid``s inside one ``pid``: the scheduler loop, the
+transfer engine, and one track per decode slot (``slot/0``...), so a
+continuous-batching run reads as a lane-per-slot waterfall.
+
+Same disabled-mode contract as the metrics registry: components bind a
+tracer handle at construction; when tracing is off they get the shared
+``NULL_TRACER`` whose methods are empty (and whose ``span`` returns a
+no-op context manager) — bounded by ``bench_obs``.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+PID = 1
+# Well-known tracks get stable low tids; slot/N tracks follow.
+_FIXED_TRACKS = ("scheduler", "engine", "transfer")
+
+
+def _now_us() -> int:
+    return time.perf_counter_ns() // 1000
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _NullTracer:
+    """Shared no-op tracer bound when tracing is disabled."""
+
+    __slots__ = ()
+    enabled = False
+
+    def begin(self, track: str, name: str, **args) -> None:
+        pass
+
+    def end(self, track: str, name: str, **args) -> None:
+        pass
+
+    def instant(self, track: str, name: str, **args) -> None:
+        pass
+
+    def span(self, track: str, name: str, **args):
+        return _NULL_SPAN
+
+    def events(self) -> List[Dict[str, Any]]:
+        return []
+
+
+NULL_TRACER = _NullTracer()
+
+
+class _Span:
+    __slots__ = ("tracer", "track", "name", "args", "t0")
+
+    def __init__(self, tracer: "Tracer", track: str, name: str,
+                 args: Dict[str, Any]) -> None:
+        self.tracer = tracer
+        self.track = track
+        self.name = name
+        self.args = args
+
+    def __enter__(self):
+        self.t0 = _now_us()
+        return self
+
+    def __exit__(self, *exc):
+        self.tracer._complete(self.track, self.name, self.t0,
+                              _now_us() - self.t0, self.args)
+        return False
+
+
+class Tracer:
+    """Ring-buffer tracer; ``capacity`` bounds the retained event count
+    (metadata/track registration is kept separately and is O(#tracks))."""
+
+    enabled = True
+
+    def __init__(self, capacity: int = 65536) -> None:
+        self.capacity = capacity
+        self._ring: deque = deque(maxlen=capacity)
+        self._tracks: Dict[str, int] = {
+            t: i for i, t in enumerate(_FIXED_TRACKS)}
+
+    def _tid(self, track: str) -> int:
+        tid = self._tracks.get(track)
+        if tid is None:
+            tid = self._tracks[track] = len(self._tracks)
+        return tid
+
+    def _push(self, ph: str, track: str, name: str, ts: int,
+              args: Dict[str, Any],
+              dur: Optional[int] = None) -> None:
+        ev: Dict[str, Any] = {"name": name, "ph": ph, "ts": ts,
+                              "pid": PID, "tid": self._tid(track)}
+        if dur is not None:
+            ev["dur"] = dur
+        if args:
+            ev["args"] = args
+        self._ring.append(ev)
+
+    # -- emitters ----------------------------------------------------
+    def begin(self, track: str, name: str, **args) -> None:
+        self._push("B", track, name, _now_us(), args)
+
+    def end(self, track: str, name: str, **args) -> None:
+        self._push("E", track, name, _now_us(), args)
+
+    def instant(self, track: str, name: str, **args) -> None:
+        ev_args = dict(args)
+        self._push("i", track, name, _now_us(), ev_args)
+        self._ring[-1]["s"] = "t"  # instant scope: thread
+
+    def span(self, track: str, name: str, **args):
+        """``with tracer.span("engine", "decode_step"): ...`` emits one
+        complete (``ph: "X"``) slice covering the block."""
+        return _Span(self, track, name, args)
+
+    def _complete(self, track: str, name: str, ts: int, dur: int,
+                  args: Dict[str, Any]) -> None:
+        self._push("X", track, name, ts, args, dur=dur)
+
+    # -- export ------------------------------------------------------
+    def events(self) -> List[Dict[str, Any]]:
+        """Retained events (oldest first), without metadata records."""
+        return list(self._ring)
+
+    def _metadata(self) -> List[Dict[str, Any]]:
+        out = [{"name": "process_name", "ph": "M", "ts": 0, "pid": PID,
+                "tid": 0, "args": {"name": "repro.serving"}}]
+        for track, tid in sorted(self._tracks.items(),
+                                 key=lambda kv: kv[1]):
+            out.append({"name": "thread_name", "ph": "M", "ts": 0,
+                        "pid": PID, "tid": tid, "args": {"name": track}})
+            out.append({"name": "thread_sort_index", "ph": "M", "ts": 0,
+                        "pid": PID, "tid": tid,
+                        "args": {"sort_index": tid}})
+        return out
+
+    def export(self) -> Dict[str, Any]:
+        """Chrome trace-event JSON object (Perfetto-loadable)."""
+        return {"traceEvents": self._metadata() + self.events(),
+                "displayTimeUnit": "ms"}
+
+    def dump(self, path: str) -> int:
+        """Write ``export()`` to ``path``; returns the event count."""
+        payload = self.export()
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return len(payload["traceEvents"])
+
+    def clear(self) -> None:
+        self._ring.clear()
+
+
+# -- process-wide default tracer -------------------------------------
+_TRACER: Any = NULL_TRACER
+
+
+def get_tracer():
+    return _TRACER
+
+
+def set_tracer(tracer) -> Any:
+    """Install the process-wide tracer (``NULL_TRACER`` to disable).
+    Components bind at construction time — install before building."""
+    global _TRACER
+    _TRACER = tracer
+    return tracer

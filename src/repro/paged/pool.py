@@ -32,6 +32,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.obs import CounterGroup, get_registry, instance_label
+
 
 class PoolExhausted(RuntimeError):
     """Raised when an allocation cannot be satisfied even after evicting
@@ -93,6 +95,14 @@ class PagePool:
         self.stats: Dict[str, int] = {
             "allocated": 0, "freed": 0, "evictions": 0, "prefix_hits": 0,
         }
+        # observability: registry mirror of stats plus allocator gauges
+        # (pages in use tracks the free list; refcount keeps a high-water
+        # mark of the most-shared page — prefix-sharing pressure)
+        reg = get_registry()
+        label = instance_label(type(self).__name__)
+        self.obs = CounterGroup(self.stats, "pool", pool=label)
+        self._g_in_use = reg.gauge("pool.pages_in_use", pool=label)
+        self._g_refcount = reg.gauge("pool.refcount", pool=label)
 
     # -- allocation ----------------------------------------------------
 
@@ -136,13 +146,15 @@ class PagePool:
         ids = [self._free.pop() for _ in range(n)]
         for p in ids:
             self.refcount[p] = 1
-        self.stats["allocated"] += n
+        self.obs.add("allocated", n)
+        self._g_in_use.set(self.num_pages - len(self._free))
         return ids
 
     def share(self, page_ids: Sequence[int]) -> None:
         for p in page_ids:
             assert self.refcount[p] > 0, f"sharing a free page {p}"
             self.refcount[p] += 1
+            self._g_refcount.set(self.refcount[p])
 
     def set_tier(self, page_ids: Sequence[int], tier: Optional[str]) -> None:
         """Record where the pages' payload lives ("device" / "host")."""
@@ -164,8 +176,9 @@ class PagePool:
             if self.refcount[p] == 0:
                 self._free.append(p)
                 self.tier[p] = None
-                self.stats["freed"] += 1
+                self.obs.add("freed")
                 freed.append(p)
+        self._g_in_use.set(self.num_pages - len(self._free))
         if freed and self.on_free is not None:
             self.on_free(freed)
 
@@ -191,7 +204,7 @@ class PagePool:
         if entry is not None:
             self.registry[key] = self.registry.pop(key)  # LRU touch
             entry.hits += 1
-            self.stats["prefix_hits"] += 1
+            self.obs.add("prefix_hits")
         return entry
 
     def _evict_one(self, protect: Optional[Tuple[int, ...]]) -> bool:
@@ -200,7 +213,7 @@ class PagePool:
                 entry = self.registry.pop(key)
                 self._registry_pages.difference_update(entry.page_ids)
                 self.release(entry.page_ids)
-                self.stats["evictions"] += 1
+                self.obs.add("evictions")
                 return True
         return False
 
@@ -268,6 +281,8 @@ class SlotPageManager:
         # point that distinguishes them from re-opened host-tier pages
         self.on_alloc = on_alloc
         self.cow_copies = 0
+        self._m_cow = get_registry().counter("pool.cow_copies",
+                                             pool=pool.obs.labels["pool"])
 
     def slot_pages(self, slot: int) -> Optional[List[int]]:
         s = self._slots[slot]
@@ -351,6 +366,7 @@ class SlotPageManager:
             s.pages[j] = new
             self._set_block(slot, j, new)
             self.cow_copies += 1
+            self._m_cow.inc()
 
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is not None]

@@ -66,6 +66,8 @@ from repro.models import (decode_step, finalize_chunked_prefill,
                           spec_draft_steps, spec_verify_steps,
                           supports_chunked_prefill, supports_spec_decode)
 from repro.models.transformer import Params
+from repro.obs import CounterGroup, get_registry, get_tracer, instance_label
+from repro.obs.metrics import DEPTH_BUCKETS
 from repro.sparse import get_method
 from repro.spec import accept_counts, emit_counts, tree_rollback
 
@@ -156,6 +158,13 @@ class ServingEngine:
         self._pending: Optional[Dict[str, Any]] = None
         self.stats: Dict[str, int] = {"prefills": 0, "steps": 0,
                                       "prefill_chunks": 0, "finalizes": 0}
+        # observability: per-instance launch-counter mirror (the registry
+        # series carry an ``engine=<Class>-<n>`` label so exports can tell
+        # the several engines a benchmark builds apart); subclasses extend
+        # ``self.stats`` before first use, which the lazy mirror tolerates
+        self.obs_label = instance_label(type(self).__name__)
+        self.obs = CounterGroup(self.stats, "engine", engine=self.obs_label)
+        self._trace_obs = get_tracer()
         # per-slot draft-verification counts of the most recent spec_step
         self.last_spec_accepts: List[int] = []
         self.spec_depth = spec_depth
@@ -199,6 +208,12 @@ class ServingEngine:
                               verify_launches=0, spec_rollbacks=0,
                               spec_drafted=0, spec_accepted=0,
                               spec_emitted=0)
+            # accept-depth distribution: one observation per emitting slot
+            # per window — the histogram bench_serving's accept-rate line
+            # summarizes as a mean
+            self._m_accept_depth = get_registry().histogram(
+                "engine.spec_accept_depth", buckets=DEPTH_BUCKETS,
+                engine=self.obs_label)
         # admission metadata of the most recent admit() (schedulers read it)
         self.last_admit: Dict[str, Any] = {}
         # live slot state (continuous batching)
@@ -251,7 +266,7 @@ class ServingEngine:
         if extra_inputs:
             batch.update(extra_inputs)
         logits, caches = self._prefill(self.params, batch=batch)
-        self.stats["prefills"] += 1
+        self.obs.add("prefills")
         outs = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         pos0 = (batch["lengths"] if lengths is not None
@@ -262,7 +277,7 @@ class ServingEngine:
             logits, caches = self._step(
                 self.params, inputs={"tokens": tok[:, None]}, pos=pos,
                 caches=caches)
-            self.stats["steps"] += 1
+            self.obs.add("steps")
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         gen = jnp.stack(outs, axis=1)
         stats = {
@@ -379,7 +394,7 @@ class ServingEngine:
             batch = {"tokens": p["row"],
                      "lengths": jnp.asarray([p["length"]], jnp.int32)}
             logits, caches_one = self._prefill_one(self.params, batch=batch)
-            self.stats["prefills"] += 1
+            self.obs.add("prefills")
             return self._finish_admission(p, logits, caches_one), None
         C = self.prefill_chunk
         # the final chunk of a non-multiple prompt overlaps backwards so the
@@ -399,7 +414,7 @@ class ServingEngine:
             logits_c, stage = self._chunk(
                 self.params, tokens_row=p["row"], start=start,
                 length=p["length"], stage=p["stage"])
-        self.stats["prefill_chunks"] += 1
+        self.obs.add("prefill_chunks")
         p["stage"] = stage
         p["next"] += 1
         final = p["next"] >= p["n_chunks"]
@@ -411,10 +426,10 @@ class ServingEngine:
             # without live requests losing a token their caches already
             # consumed
             caches_one = self._finalize(p["stage"], p["length"])
-            self.stats["finalizes"] += 1
+            self.obs.add("finalizes")
         if new_caches is not None:
             self._caches = new_caches
-            self.stats["steps"] += 1
+            self.obs.add("steps")
             dec = self._apply_decode(logits_d)
         if not final:
             return None, dec
@@ -477,12 +492,14 @@ class ServingEngine:
         harmless, because ``admit`` rebuilds the whole row.
         """
         assert self._caches is not None, "admit() at least one request first"
-        self._decode_prep()
-        logits, self._caches = self._step(
-            self.params, inputs={"tokens": self._tok[:, None]},
-            pos=self._pos, caches=self._caches)
-        self.stats["steps"] += 1
-        return self._apply_decode(logits)
+        with self._trace_obs.span("engine", "decode_step"):
+            self._decode_prep()
+            logits, self._caches = self._step(
+                self.params, inputs={"tokens": self._tok[:, None]},
+                pos=self._pos, caches=self._caches)
+            self.obs.add("steps")
+            out = self._apply_decode(logits)
+        return out
 
     # -- speculative decoding -------------------------------------------
 
@@ -514,14 +531,16 @@ class ServingEngine:
             "finish the pending admission before a spec step"
         depth = self.spec_depth
         self._decode_prep()
-        draft, _ = self._draft(self.params, tokens=self._tok, pos=self._pos,
-                               caches=self._caches)
-        self.stats["draft_launches"] += 1
+        with self._trace_obs.span("engine", "spec_draft"):
+            draft, _ = self._draft(self.params, tokens=self._tok,
+                                   pos=self._pos, caches=self._caches)
+            self.obs.add("draft_launches")
         self._spec_prep()
-        verify, appended = self._verify(
-            self.params, tokens=self._tok, pos=self._pos,
-            caches=self._caches, draft_tokens=draft)
-        self.stats["verify_launches"] += 1
+        with self._trace_obs.span("engine", "spec_verify"):
+            verify, appended = self._verify(
+                self.params, tokens=self._tok, pos=self._pos,
+                caches=self._caches, draft_tokens=draft)
+            self.obs.add("verify_launches")
         # one batched device->host sync for everything acceptance needs
         d, v, pos = jax.device_get((draft, verify, self._pos))
         pos_h = [int(p) for p in pos]
@@ -537,16 +556,17 @@ class ServingEngine:
                 # VERIFIED, not drafts that committed — a window clamped by
                 # the request budget (emit < accepted + 1) would otherwise
                 # deflate the rate even under perfect drafting
-                self.stats["spec_drafted"] += depth
-                self.stats["spec_accepted"] += accepted[s]
-                self.stats["spec_emitted"] += emit[s]
+                self.obs.add("spec_drafted", depth)
+                self.obs.add("spec_accepted", accepted[s])
+                self.obs.add("spec_emitted", emit[s])
+                self._m_accept_depth.observe(accepted[s])
         # per-slot verification outcomes of this step (schedulers fold them
         # into per-request accept stats, like last_admit)
         self.last_spec_accepts = list(accepted)
         emit_dev = jnp.asarray(emit, jnp.int32)
         self._caches = self._rollback_op(self._caches, appended, emit_dev)
-        self.stats["spec_rollbacks"] += 1
-        self.stats["spec_steps"] += 1
+        self.obs.add("spec_rollbacks")
+        self.obs.add("spec_steps")
         self._spec_commit(emit)
         last = [out[s][-1] if out[s] else 0 for s in range(B)]
         self._tok = jnp.where(emit_dev > 0, jnp.asarray(last, jnp.int32),

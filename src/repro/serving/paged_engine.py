@@ -148,12 +148,12 @@ class PagedServingEngine(ServingEngine):
                                      jnp.asarray(slot, jnp.int32),
                                      jnp.asarray(j, jnp.int32),
                                      jnp.asarray(page_id, jnp.int32))
-        self.stats["aux_launches"] += 1
+        self.obs.add("aux_launches")
 
     def _copy_page(self, src: int, dst: int) -> None:
         self._caches = self._copy(self._caches, jnp.asarray(src, jnp.int32),
                                   jnp.asarray(dst, jnp.int32))
-        self.stats["aux_launches"] += 1
+        self.obs.add("aux_launches")
 
     # -- admission -------------------------------------------------------
 
@@ -283,7 +283,7 @@ class PagedServingEngine(ServingEngine):
         self._caches = self._insert_prefill(
             self._caches, caches_one, jnp.asarray(slot, jnp.int32),
             self._pad_pages(page_ids))
-        self.stats["aux_launches"] += 1          # _insert_prefill
+        self.obs.add("aux_launches")          # _insert_prefill
 
     def _finish_admission(self, p: Dict[str, Any], logits: Any,
                           caches_one: Any) -> int:
@@ -299,7 +299,7 @@ class PagedServingEngine(ServingEngine):
                 self._caches, entry.slot_state, jnp.asarray(slot, jnp.int32),
                 pad(entry.page_ids), jnp.asarray(len(prompt), jnp.int32))
             first = entry.first_token
-            self.stats["aux_launches"] += 1          # _insert_hit
+            self.obs.add("aux_launches")          # _insert_hit
             self.last_admit = {"prefix_hit": True,
                                "shared_pages": len(entry.page_ids)}
         else:
@@ -316,7 +316,7 @@ class PagedServingEngine(ServingEngine):
                     state_bytes=sum(x.nbytes for x in
                                     jax.tree_util.tree_leaves(state)))
             self.last_admit = {"prefix_hit": False, "shared_pages": 0}
-        self.stats["prefix_hits"] += int(self.last_admit["prefix_hit"])
+        self.obs.add("prefix_hits", int(self.last_admit["prefix_hit"]))
         self._host_pos[slot] = len(prompt)
         self._tok = self._tok.at[slot].set(first)
         self._pos = self._pos.at[slot].set(len(prompt))
@@ -409,7 +409,7 @@ class PagedServingEngine(ServingEngine):
         if self._caches is not None:
             self._caches = self._clear_row(self._caches,
                                            jnp.asarray(slot, jnp.int32))
-            self.stats["aux_launches"] += 1
+            self.obs.add("aux_launches")
         self._host_pos[slot] = self.capacity
         super().retire(slot)
 

@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.policy import step_token_budget
+from repro.obs import get_registry, get_tracer, percentiles
 from repro.serving.engine import ServingEngine
 
 
@@ -77,6 +78,11 @@ class Request:
     spec_steps: int = 0
     spec_drafted: int = 0
     spec_accepted: int = 0
+    # wall-clock attributed to each emitted token, in emission order: one
+    # gap per token on the plain decode path; a spec window's single gap
+    # divided evenly over its k committed tokens — so per-token TPOT
+    # distributions are comparable between spec and non-spec runs
+    token_times: List[float] = field(default_factory=list)
 
     @property
     def spec_accept_rate(self) -> float:
@@ -96,6 +102,7 @@ class _Slot:
     decode_time: float = 0.0
     decode_tokens: int = 0
     max_gap: float = 0.0
+    token_times: List[float] = field(default_factory=list)
 
 
 @dataclass
@@ -121,6 +128,17 @@ class RequestScheduler:
     # deterministic failure must surface instead of spinning run() forever
     max_admit_retries: int = 2
     _admit_failures: Dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        # observability handles bound once at construction: disabled mode
+        # binds the shared no-ops, so the serving loop pays one attribute
+        # load + empty call per seam (bounded by benchmarks/bench_obs.py)
+        reg = get_registry()
+        self._trace = get_tracer()
+        self._m_queue_depth = reg.gauge("scheduler.queue_depth")
+        self._m_admit_retries = reg.counter("scheduler.admission_retries")
+        self._m_step_tokens = reg.histogram("scheduler.step_tokens")
+        self._m_completed = reg.counter("scheduler.requests_completed")
 
     @property
     def step_token_budget(self) -> int:
@@ -149,6 +167,9 @@ class RequestScheduler:
         self.engine.validate_prompt(req.prompt, self._clamped_new(req))
         req.t_submit = time.time()
         self.queue.append(req)
+        self._trace.instant("scheduler", "submit", uid=req.uid,
+                            prompt_len=len(req.prompt))
+        self._m_queue_depth.set(len(self.queue))
 
     # ------------------------------------------------------------------
     # continuous batching
@@ -173,6 +194,11 @@ class RequestScheduler:
         slot.decode_time = 0.0
         slot.decode_tokens = 0
         slot.max_gap = 0.0
+        slot.token_times = []
+        track = f"slot/{adm.slot}"
+        self._trace.instant(track, "admit", uid=req.uid, slot=adm.slot,
+                            prefix_hit=req.prefix_hit)
+        self._trace.instant(track, "token", uid=req.uid, n=1)
         if slot.remaining <= 0:
             self._retire(slots, adm.slot)
 
@@ -183,9 +209,14 @@ class RequestScheduler:
                     if slots[i].decode_tokens else 0.0)
         req.decode_tokens = slots[i].decode_tokens
         req.max_stall = slots[i].max_gap
+        req.token_times = slots[i].token_times
         self.completed[req.uid] = req
         slots[i].req = None
+        slots[i].token_times = []
         self.engine.retire(i)
+        self._trace.instant(f"slot/{i}", "retire", uid=req.uid,
+                            tokens=req.decode_tokens)
+        self._m_completed.inc()
 
     def _admission_failed(self, req: Request) -> None:
         """Cancel the failed admission and re-queue the request at the head
@@ -195,6 +226,9 @@ class RequestScheduler:
         self.engine.cancel_admission()
         n = self._admit_failures.get(req.uid, 0) + 1
         self._admit_failures[req.uid] = n
+        self._m_admit_retries.inc()
+        self._trace.instant("scheduler", "admission_retry", uid=req.uid,
+                            attempt=n)
         if n > self.max_admit_retries:
             raise
         self.queue.insert(0, req)
@@ -270,6 +304,10 @@ class RequestScheduler:
             slot.max_gap = max(slot.max_gap, gap)
             slot.decode_time += gap
             slot.decode_tokens += len(toks)
+            # the window's single wall gap, attributed evenly over its
+            # committed tokens: per-token TPOT samples stay comparable
+            # with non-spec runs (where each token books its own gap)
+            slot.token_times.extend([gap / len(toks)] * len(toks))
             slot.t_last = now
             slot.remaining -= len(toks)
             slot.req.spec_steps += 1
@@ -277,6 +315,11 @@ class RequestScheduler:
             # verification outcome, not commit count: a budget-clamped
             # window must not read as a drafting failure
             slot.req.spec_accepted += self.engine.last_spec_accepts[i]
+            self._trace.instant(
+                f"slot/{i}", "spec_window", uid=slot.req.uid,
+                drafted=depth, accepted=self.engine.last_spec_accepts[i])
+            self._trace.instant(f"slot/{i}", "token", uid=slot.req.uid,
+                                n=len(toks))
             if slot.remaining <= 0:
                 self._retire(slots, i)
         return len(active) * (2 * depth + 1)
@@ -300,6 +343,7 @@ class RequestScheduler:
             step_tokens = 0
             if admitting is None:
                 admitting, step_tokens = self._begin_admissions(slots)
+                self._m_queue_depth.set(len(self.queue))
             active = [j for j in range(B) if slots[j].req is not None]
             self.peak_active = max(
                 self.peak_active, len(active) + (admitting is not None))
@@ -317,6 +361,9 @@ class RequestScheduler:
                     admitting, first = None, None
                 else:
                     step_tokens += self.engine.prefill_chunk
+                    self._trace.instant(f"slot/{admitting.slot}",
+                                        "admit_chunk",
+                                        uid=admitting.req.uid)
                 if dec_tokens is not None:
                     stepped = list(active)
                     admitting.decode_steps += 1
@@ -337,6 +384,7 @@ class RequestScheduler:
                     step_tokens += self._run_spec_step(slots, active_now)
                     self.max_step_tokens = max(self.max_step_tokens,
                                                step_tokens)
+                    self._m_step_tokens.observe(step_tokens)
                     continue
                 if active_now:
                     dec_tokens = self.engine.step()
@@ -355,6 +403,8 @@ class RequestScheduler:
                     # prefill; keep draining the queue
             step_tokens += len(stepped)
             self.max_step_tokens = max(self.max_step_tokens, step_tokens)
+            if step_tokens:
+                self._m_step_tokens.observe(step_tokens)
             if dec_tokens is not None:
                 now = time.time()
                 for i in stepped:
@@ -364,8 +414,11 @@ class RequestScheduler:
                     slot.max_gap = max(slot.max_gap, gap)
                     slot.decode_time += gap
                     slot.decode_tokens += 1
+                    slot.token_times.append(gap)
                     slot.t_last = now
                     slot.remaining -= 1
+                    self._trace.instant(f"slot/{i}", "token",
+                                        uid=slot.req.uid, n=1)
                     if slot.remaining <= 0:
                         self._retire(slots, i)
         return len(self.completed) - done0
@@ -401,6 +454,10 @@ class RequestScheduler:
             # decode_time / decode_tokens; still includes the batch's own
             # prefill, which lock-step cannot separate from decode).
             req.tpot = (now - t_batch) / max(1, len(req.result))
+            # lock-step cannot observe individual token instants; attribute
+            # the batch mean to each decoded token so per-token percentile
+            # fields stay populated (and honest: flat by construction)
+            req.token_times = [req.tpot] * req.decode_tokens
             self.completed[req.uid] = req
 
     def flush_lockstep(self) -> int:
@@ -427,16 +484,25 @@ class RequestScheduler:
         (the head-of-line metric chunked admission shrinks).
         ``spec_accept_rate`` aggregates accepted/drafted tokens across all
         completed requests (0.0 when the engine ran without spec decode).
+
+        Percentile fields are 0.0-safe (all-zero on an empty or
+        prefill-only completion set) and the explicit ``n_requests`` /
+        ``n_decoded`` counts let downstream asserts gate on *how many*
+        requests shaped the means instead of trusting a silent 0.0.
+        ``tpot_p*`` are per-TOKEN percentiles over the attributed
+        ``token_times`` samples (a spec window's gap divided across its
+        committed tokens), so spec and non-spec runs compare directly.
         """
-        if not self.completed:
-            return {"ttft_mean": 0.0, "tpot_mean": 0.0,
-                    "max_decode_stall": 0.0, "decode_requests": 0.0,
-                    "spec_accept_rate": 0.0}
         reqs = list(self.completed.values())
         dec = [r for r in reqs if r.decode_tokens > 0]
         drafted = sum(r.spec_drafted for r in reqs)
+        ttft_p = percentiles([r.ttft for r in reqs])
+        tok_times = [t for r in dec for t in r.token_times]
+        tpot_p = percentiles(tok_times)
+        stall_p = percentiles([r.max_stall for r in dec])
         return {
-            "ttft_mean": sum(r.ttft for r in reqs) / len(reqs),
+            "ttft_mean": (sum(r.ttft for r in reqs) / len(reqs)
+                          if reqs else 0.0),
             "tpot_mean": (sum(r.tpot for r in dec) / len(dec)
                           if dec else 0.0),
             "max_decode_stall": max((r.max_stall for r in reqs),
@@ -444,4 +510,12 @@ class RequestScheduler:
             "decode_requests": float(len(dec)),
             "spec_accept_rate": (sum(r.spec_accepted for r in reqs) / drafted
                                  if drafted else 0.0),
+            "n_requests": len(reqs),
+            "n_decoded": len(dec),
+            "ttft_p50": ttft_p[0], "ttft_p95": ttft_p[1],
+            "ttft_p99": ttft_p[2],
+            "tpot_p50": tpot_p[0], "tpot_p95": tpot_p[1],
+            "tpot_p99": tpot_p[2],
+            "stall_p50": stall_p[0], "stall_p95": stall_p[1],
+            "stall_p99": stall_p[2],
         }

@@ -198,7 +198,7 @@ class TieredServingEngine(PagedServingEngine):
         self._caches = self._map_upd(self._caches,
                                      jnp.asarray(pages, jnp.int32),
                                      jnp.asarray(slots, jnp.int32))
-        self.stats["aux_launches"] += 1
+        self.obs.add("aux_launches")
 
     def _writeback(self, page: int, slot: int) -> None:
         """One device->host payload page copy (demotion writeback)."""
@@ -219,7 +219,7 @@ class TieredServingEngine(PagedServingEngine):
             if ev.dirty:
                 self._writeback(ev.page, ev.slot)
             self.pool.set_tier([ev.page], "host")
-            self.stats["demotions"] += 1
+            self.obs.add("demotions")
         self._flush_map([ev.page for ev in evs], [-1] * len(evs))
 
     def _stage_page(self, page: int, *, fetch: bool) -> int:
@@ -237,7 +237,7 @@ class TieredServingEngine(PagedServingEngine):
             fields_list = [fields.get(i) for i in range(len(self._caches))]
             self._caches = self._stage_fill(
                 self._caches, jnp.asarray([slot], jnp.int32), fields_list)
-            self.stats["aux_launches"] += 1
+            self.obs.add("aux_launches")
         return slot
 
     def _set_write_page(self, slot: int, page: int) -> None:
@@ -283,7 +283,7 @@ class TieredServingEngine(PagedServingEngine):
                 jnp.asarray(src_slot, jnp.int32),
                 jnp.asarray(dst_slot, jnp.int32))
             self.staging.touch(src)
-            self.stats["aux_launches"] += 1
+            self.obs.add("aux_launches")
         else:
             assert src in self.host.valid, \
                 f"CoW source page {src} neither staged nor host-valid"
@@ -295,7 +295,7 @@ class TieredServingEngine(PagedServingEngine):
             self._caches = self._stage_fill(
                 self._caches, jnp.asarray([dst_slot], jnp.int32),
                 fields_list)
-            self.stats["aux_launches"] += 2
+            self.obs.add("aux_launches", 2)
 
     def _on_pages_freed(self, pages: List[int]) -> None:
         """Pool refcounts hit zero (retire / registry eviction / CoW): drop
@@ -316,7 +316,7 @@ class TieredServingEngine(PagedServingEngine):
         if self._lane_live and set(pages) & set(self._lane_live):
             self._caches = self._clear_lane(self._caches)
             self._lane_live = []
-            self.stats["aux_launches"] += 1
+            self.obs.add("aux_launches")
 
     # -- admission -------------------------------------------------------
 
@@ -350,7 +350,7 @@ class TieredServingEngine(PagedServingEngine):
                 self._writeback(page, self.staging.slot_of(page))
                 self.staging.clear_dirty(page)
                 n += 1
-        self.stats["pressure_writebacks"] += n
+        self.obs.add("pressure_writebacks", n)
         return n > 0
 
     def _init_paged(self, caches_one: Any) -> Any:
@@ -398,7 +398,7 @@ class TieredServingEngine(PagedServingEngine):
             self._pad_pages(page_ids), jnp.asarray(n - 1, jnp.int32),
             jnp.asarray(tail_page, jnp.int32),
             jnp.asarray(tail_slot, jnp.int32))
-        self.stats["aux_launches"] += 1
+        self.obs.add("aux_launches")
         self._offload_prompt(caches_one, page_ids)
 
     def _offload_prompt(self, caches_one: Any, page_ids: List[int]) -> None:
@@ -417,9 +417,9 @@ class TieredServingEngine(PagedServingEngine):
                     }
         host_data = jax.device_get(views)
         for i, fields in host_data.items():
-            self.xfer.stats["d2h_bytes"] += self.host.write_pages(
-                i, page_ids, fields)
-        self.xfer.stats["d2h_pages"] += n
+            self.xfer.obs.add("d2h_bytes", self.host.write_pages(
+                i, page_ids, fields))
+        self.xfer.obs.add("d2h_pages", n)
         self.host.mark_valid(page_ids)
 
     def retire(self, slot: int) -> None:
@@ -457,7 +457,7 @@ class TieredServingEngine(PagedServingEngine):
             if self._lane_live:
                 self._caches = self._clear_lane(self._caches)
                 self._lane_live = []
-                self.stats["aux_launches"] += 1
+                self.obs.add("aux_launches")
             return
         fields = self.xfer.dispatch(pages, self.prefetch_depth)
         lane = pages + [-1] * (self.prefetch_depth - len(pages))
@@ -536,7 +536,7 @@ class TieredServingEngine(PagedServingEngine):
         self._caches = self._commit(self._caches,
                                     jnp.asarray(lane_slots, jnp.int32))
         self._lane_live = []
-        self.stats["aux_launches"] += 1
+        self.obs.add("aux_launches")
 
     def _apply_decode(self, logits):
         self._commit_lane()

@@ -24,6 +24,8 @@ from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import CounterGroup, instance_label
+
 __all__ = ["HostPageStore", "PAYLOAD_FIELDS"]
 
 # pool-page payload fields offloaded to host (everything token-indexed that
@@ -50,6 +52,8 @@ class HostPageStore:
         self.valid: set = set()
         self.stats: Dict[str, int] = {"page_writes": 0, "page_reads": 0,
                                       "gather_tokens": 0}
+        self.obs = CounterGroup(self.stats, "host_store",
+                                store=instance_label(type(self).__name__))
 
     # -- layout ---------------------------------------------------------
 
@@ -85,7 +89,7 @@ class HostPageStore:
             src = fields[f]
             buf[ids] = src
             n += src.nbytes
-        self.stats["page_writes"] += len(ids)
+        self.obs.add("page_writes", len(ids))
         return n
 
     def mark_valid(self, page_ids: Sequence[int]) -> None:
@@ -101,7 +105,7 @@ class HostPageStore:
         """Fetch payload pages ``(n, H, ps, X)`` for an upload (prefetch or
         staging fill).  Every page must be host-valid."""
         ids = np.asarray(page_ids, np.int64)
-        self.stats["page_reads"] += len(ids)
+        self.obs.add("page_reads", len(ids))
         return {f: buf[ids] for f, buf in self._layers[layer].items()}
 
     # -- exact-retrieval miss path --------------------------------------
@@ -125,7 +129,7 @@ class HostPageStore:
         pgc = np.where(need, pg, 0).astype(np.int64)
         offc = np.where(need, off, 0).astype(np.int64)
         h = np.arange(H, dtype=np.int64)[None, :, None]
-        self.stats["gather_tokens"] += int(need.sum())
+        self.obs.add("gather_tokens", int(need.sum()))
         out = []
         for f in PAYLOAD_FIELDS:
             buf = arrs[f]

@@ -26,6 +26,7 @@ from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import CounterGroup, get_tracer, instance_label
 from repro.tiered.host_store import HostPageStore
 
 __all__ = ["StagingCache", "StagingExhausted", "TransferEngine", "Eviction"]
@@ -59,6 +60,8 @@ class StagingCache:
         self._dirty: set = set()
         self._lru: Dict[int, None] = {}      # unpinned pages, oldest first
         self.stats: Dict[str, int] = {"evictions": 0, "writebacks": 0}
+        self.obs = CounterGroup(self.stats, "staging",
+                                staging=instance_label(type(self).__name__))
 
     # -- queries --------------------------------------------------------
 
@@ -131,9 +134,9 @@ class StagingCache:
             dirty = page in self._dirty
             self._dirty.discard(page)
             self._free.append(slot)
-            self.stats["evictions"] += 1
+            self.obs.add("evictions")
             if dirty:
-                self.stats["writebacks"] += 1
+                self.obs.add("writebacks")
             return Eviction(page, slot, dirty)
         return None
 
@@ -193,6 +196,9 @@ class TransferEngine:
             "hit_tokens": 0, "miss_tokens": 0, "prefetch_hit_tokens": 0,
             "prefetched_pages": 0, "callbacks": 0,
         }
+        self.obs = CounterGroup(self.stats, "transfer",
+                                transfer=instance_label(type(self).__name__))
+        self._trace = get_tracer()
 
     # -- miss path (io_callback target; runs mid-launch, after top-k) ----
 
@@ -207,18 +213,20 @@ class TransferEngine:
         layer = int(layer)
         pg = np.asarray(pg)
         need = np.asarray(need, bool)
-        self.stats["callbacks"] += 1
-        self.stats["hit_tokens"] += int(np.asarray(on_device, bool).sum())
-        self.stats["prefetch_hit_tokens"] += int(np.asarray(pf_hit,
-                                                            bool).sum())
-        self.stats["miss_tokens"] += int(need.sum())
+        self.obs.add("callbacks")
+        self.obs.add("hit_tokens", int(np.asarray(on_device, bool).sum()))
+        self.obs.add("prefetch_hit_tokens",
+                     int(np.asarray(pf_hit, bool).sum()))
+        self.obs.add("miss_tokens", int(need.sum()))
+        self._trace.instant("transfer", "host_gather", layer=layer,
+                            miss_tokens=int(need.sum()))
         for p in np.unique(pg[need]):
             p = int(p)
             self.last_misses[p] = self.last_misses.get(p, 0) + 1
         out = self.host.gather(layer, pg, np.asarray(off), need)
         # the miss path IS host->device traffic: account the fetched
         # tokens' payload bytes so the prefetch sweep compares real totals
-        self.stats["h2d_bytes"] += sum(int(a[need].nbytes) for a in out)
+        self.obs.add("h2d_bytes", sum(int(a[need].nbytes) for a in out))
         return out
 
     # -- prefetch (dispatch before the launch, consume after top-k) ------
@@ -249,6 +257,8 @@ class TransferEngine:
         out: Dict[int, Dict[str, np.ndarray]] = {}
         if not pages:
             return out
+        self._trace.instant("transfer", "upload", pages=len(pages),
+                            padded=pad_to is not None)
         for layer in self.host.layers:
             fields = self.host.read_pages(layer, pages)
             if pad_to is not None and len(pages) < pad_to:
@@ -259,11 +269,11 @@ class TransferEngine:
                     for f, v in fields.items()
                 }
             # count what device_put actually moves — padding included
-            self.stats["h2d_bytes"] += sum(int(v.nbytes)
-                                           for v in fields.values())
+            self.obs.add("h2d_bytes",
+                         sum(int(v.nbytes) for v in fields.values()))
             out[layer] = {f: jax.device_put(v)  # lint: allow[SIKV-L002] async h2d upload
                           for f, v in fields.items()}
-        self.stats["h2d_pages"] += len(pages) * max(1, len(self.host.layers))
+        self.obs.add("h2d_pages", len(pages) * max(1, len(self.host.layers)))
         return out
 
     def dispatch(self, pages: Sequence[int], depth: int
@@ -272,7 +282,7 @@ class TransferEngine:
         lane depth; the decode launch consumes them after top-k, so the
         copies overlap its scoring phase."""
         out = self.upload(pages, pad_to=depth)
-        self.stats["prefetched_pages"] += len(pages)
+        self.obs.add("prefetched_pages", len(pages))
         return out
 
     # -- writeback (device -> host, demotion) ----------------------------
@@ -282,7 +292,8 @@ class TransferEngine:
         """Store one page's payload rows (already device_get'ed, one per
         layer) back to the host tier and mark the host copy current."""
         for layer, fields in layer_rows.items():
-            self.stats["d2h_bytes"] += self.host.write_pages(
-                layer, [page], {f: v[None] for f, v in fields.items()})
-        self.stats["d2h_pages"] += 1
+            self.obs.add("d2h_bytes", self.host.write_pages(
+                layer, [page], {f: v[None] for f, v in fields.items()}))
+        self.obs.add("d2h_pages")
+        self._trace.instant("transfer", "writeback", page=page)
         self.host.mark_valid([page])

@@ -1,0 +1,370 @@
+"""Observability layer: registry/tracer/timeline unit invariants, the
+disabled-mode "emits nothing" contract, Perfetto-export validity, the
+service_stats percentile fields, spec-decode token-time attribution
+(satellite: TPOT comparable with non-spec runs), and the engine-level
+cross-check that the tiered miss-path counter matches the io_callback
+count the jaxpr audit pins (one per attention layer per exact launch)."""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro import obs
+from repro.config import ATTN, SIKVConfig, get_model_config, reduced_config
+from repro.models import init_params
+from repro.obs.metrics import (DEPTH_BUCKETS, NULL_COUNTER, NULL_GAUGE,
+                               NULL_HISTOGRAM, Histogram, MetricsRegistry)
+from repro.obs.timeline import build_timelines, format_table, summarize
+from repro.serving import (Request, RequestScheduler, ServingEngine,
+                           TieredServingEngine)
+
+CFG = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
+                 obs_window=8)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+@pytest.fixture
+def live_obs():
+    """Enable the process-wide registry + a fresh tracer for one test and
+    restore whatever state the surrounding session had."""
+    reg = obs.get_registry()
+    saved_series = dict(reg._series)
+    saved_enabled = reg.enabled
+    saved_tracer = obs.get_tracer()
+    obs.set_enabled(True, reset=True)
+    tracer = obs.set_tracer(obs.Tracer())
+    yield reg, tracer
+    reg._series.clear()
+    reg._series.update(saved_series)
+    reg.enabled = saved_enabled
+    obs.set_tracer(saved_tracer)
+
+
+def _prompts(cfg, lens, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (l,), 1, cfg.vocab_size)]
+        for i, l in enumerate(lens)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_series_identity_and_snapshot():
+    reg = MetricsRegistry(enabled=True)
+    c = reg.counter("engine.steps", engine="E-0")
+    c.inc()
+    c.inc(3)
+    assert reg.counter("engine.steps", engine="E-0") is c
+    assert c.value == 4
+    # a different label set is a different series
+    reg.counter("engine.steps", engine="E-1").inc(7)
+    assert reg.value("engine.steps", engine="E-0") == 4
+    assert reg.value("engine.steps") == 11          # superset-match sum
+    assert reg.value("engine.nothing", default=-1) == -1
+    g = reg.gauge("pool.pages_in_use", pool="P-0")
+    g.set(5), g.set(2)
+    snap = reg.snapshot()
+    assert snap["engine.steps"]["engine=E-0"]["value"] == 4
+    assert snap["pool.pages_in_use"]["pool=P-0"] == {
+        "type": "gauge", "value": 2, "high_water": 5}
+    json.loads(json.dumps(snap))                     # JSON-ready
+
+
+def test_histogram_percentiles_merge_and_empty_safety():
+    h = Histogram(bounds=(1.0, 2.0, 4.0, 8.0))
+    assert h.percentile(0.5) == 0.0                  # empty => 0.0, no raise
+    for v in [1, 1, 2, 3, 5, 9, 20]:
+        h.observe(v)
+    assert h.n == 7 and h.counts[-1] == 2            # 9, 20 overflow +inf
+    assert h.vmin == 1 and h.vmax == 20
+    assert 1.0 <= h.percentile(0.5) <= 4.0
+    assert h.percentile(1.0) == 20.0
+    other = Histogram(bounds=(1.0, 2.0, 4.0, 8.0))
+    other.observe(0.5)
+    h.merge(other)
+    assert h.n == 8 and h.vmin == 0.5
+    with pytest.raises(ValueError):
+        h.merge(Histogram(bounds=(1.0, 2.0)))
+    with pytest.raises(ValueError):
+        Histogram(bounds=(2.0, 1.0))
+    exp = h.export()
+    assert exp["n"] == 8 and exp["p95"] >= exp["p50"]
+
+
+def test_disabled_registry_returns_nulls_and_records_nothing():
+    reg = MetricsRegistry(enabled=False)
+    assert reg.counter("x") is NULL_COUNTER
+    assert reg.gauge("x") is NULL_GAUGE
+    assert reg.histogram("x", buckets=DEPTH_BUCKETS) is NULL_HISTOGRAM
+    reg.counter("x").inc(100)
+    reg.gauge("x").set(5)
+    reg.histogram("x").observe(3)
+    assert reg.snapshot() == {}
+    assert reg.find("x") == []
+
+
+def test_counter_group_mirrors_stats_and_keyerrors(live_obs):
+    reg, _ = live_obs
+    stats = {"hits": 0, "misses": 0}
+    group = obs.CounterGroup(stats, "staging", staging="S-0")
+    group.add("hits")
+    group.add("hits", 4)
+    group.add("misses", 2)
+    assert stats == {"hits": 5, "misses": 2}
+    assert reg.value("staging.hits", staging="S-0") == 5
+    assert reg.value("staging.misses", staging="S-0") == 2
+    with pytest.raises(KeyError):                    # same as stats[k] += n
+        group.add("typo_key")
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_never_exceeds_capacity():
+    tr = obs.Tracer(capacity=16)
+    for i in range(100):
+        tr.instant("scheduler", "tick", uid=i)
+        assert len(tr.events()) <= 16
+    evs = tr.events()
+    assert len(evs) == 16
+    # oldest fell off the back: the survivors are the most recent 16
+    assert [e["args"]["uid"] for e in evs] == list(range(84, 100))
+
+
+def test_null_tracer_emits_nothing():
+    tr = obs.NULL_TRACER
+    tr.begin("engine", "x")
+    tr.end("engine", "x")
+    tr.instant("engine", "x", uid=1)
+    with tr.span("engine", "x"):
+        pass
+    assert tr.events() == [] and tr.enabled is False
+
+
+def test_perfetto_export_roundtrips_and_is_wellformed(tmp_path):
+    tr = obs.Tracer(capacity=64)
+    tr.instant("scheduler", "submit", uid=0)
+    with tr.span("engine", "decode_step"):
+        pass
+    tr.begin("transfer", "upload", pages=2)
+    tr.end("transfer", "upload")
+    tr.instant("slot/0", "token", uid=0, n=1)
+    path = tmp_path / "trace.json"
+    n = tr.dump(str(path))
+    doc = json.loads(path.read_text())               # round-trips json.loads
+    evs = doc["traceEvents"]
+    assert n == len(evs)
+    assert {e["ph"] for e in evs} >= {"M", "i", "X", "B", "E"}
+    for e in evs:
+        assert e["ph"] in ("M", "B", "E", "X", "i")
+        assert isinstance(e["ts"], int) and e["ts"] >= 0
+        assert e["pid"] == 1 and isinstance(e["tid"], int)
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert xs and all(e["dur"] >= 0 for e in xs)
+    assert all(e["s"] == "t" for e in evs if e["ph"] == "i")
+    # the metadata names every track, fixed tracks on stable low tids
+    names = {e["args"]["name"]: e["tid"] for e in evs
+             if e["name"] == "thread_name"}
+    assert names["scheduler"] == 0 and names["engine"] == 1
+    assert names["transfer"] == 2 and "slot/0" in names
+
+
+# ---------------------------------------------------------------------------
+# timelines
+# ---------------------------------------------------------------------------
+
+def test_percentiles_exact_and_empty():
+    assert obs.percentiles([]) == (0.0, 0.0, 0.0)
+    p50, p95, p99 = obs.percentiles(list(range(1, 101)))
+    assert p50 == pytest.approx(50.5)
+    assert p95 == pytest.approx(95.05)
+    assert p99 == pytest.approx(99.01)
+    assert obs.percentiles([7.0]) == (7.0, 7.0, 7.0)
+
+
+def _ev(name, ts, **args):
+    return {"name": name, "ph": "i", "ts": ts, "pid": 1, "tid": 0,
+            "args": args}
+
+
+def test_build_timelines_spreads_spec_bursts():
+    evs = [
+        _ev("submit", 0, uid=1, prompt_len=8),
+        _ev("admit", 100, uid=1, slot=0),
+        _ev("token", 110, uid=1, n=1),               # first token
+        _ev("spec_window", 140, uid=1, drafted=4, accepted=3),
+        _ev("token", 140, uid=1, n=4),               # burst of 4
+        _ev("retire", 150, uid=1, tokens=5),
+        _ev("heartbeat", 160),                       # no uid: skipped
+    ]
+    tls = build_timelines(evs)
+    assert list(tls) == [1]
+    tl = tls[1]
+    assert tl.queued_us == 100 and tl.ttft_us == 110
+    assert tl.slot == 0 and tl.t_retire == 150
+    # the 4-token burst spreads evenly over (110, 140]
+    assert tl.token_ts[:1] == [110]
+    assert tl.token_ts[1:] == [117, 125, 132, 140]
+    assert tl.n_tokens == 5 and tl.spec_windows == [(4, 3)]
+    assert tl.max_stall_us <= 30                     # spread, not one 30us gap
+    table = format_table(tls)
+    assert "4/3" in table and len(table.splitlines()) == 2 + len(tls)
+    summ = summarize(tls)
+    assert summ["n_requests"] == 1 and summ["n_tokens"] == 5
+    json.loads(json.dumps(summ))
+
+
+def test_build_timelines_partial_after_ring_eviction():
+    # submit/admit evicted from the ring: decode gaps still reconstructable
+    evs = [_ev("token", 100 + 10 * i, uid=3) for i in range(4)]
+    tl = build_timelines(evs)[3]
+    assert tl.t_submit is None and tl.queued_us is None
+    assert tl.ttft_us is None
+    assert tl.decode_gaps_us == [10, 10, 10]
+    assert "-" in format_table({3: tl}).splitlines()[2]
+
+
+# ---------------------------------------------------------------------------
+# service_stats percentile fields (satellites 1 + 2)
+# ---------------------------------------------------------------------------
+
+def test_service_stats_empty_is_zero_safe(engine_setup):
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=4)
+    st = RequestScheduler(eng).service_stats()
+    assert st["n_requests"] == 0 and st["n_decoded"] == 0
+    for k, v in st.items():
+        assert v == 0.0, (k, v)
+
+
+def test_service_stats_percentiles_and_token_attribution(engine_setup):
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=6)
+    sched = RequestScheduler(eng)
+    prompts = _prompts(cfg, [9, 16, 5], seed=5)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+    assert sched.run() == 3
+    st = sched.service_stats()
+    assert st["n_requests"] == 3 and st["n_decoded"] == 3
+    assert 0.0 < st["ttft_p50"] <= st["ttft_p95"] <= st["ttft_p99"]
+    assert 0.0 < st["tpot_p50"] <= st["tpot_p99"]
+    assert st["stall_p99"] >= st["stall_p50"] > 0.0
+    # per-token attribution: one sample per decoded token, and they
+    # account for the request's whole decode wall time
+    for r in sched.completed.values():
+        assert len(r.token_times) == r.decode_tokens
+        # tpot == decode_time / decode_tokens, so the samples must
+        # account for the whole decode wall time
+        assert sum(r.token_times) == pytest.approx(
+            r.tpot * r.decode_tokens, rel=1e-6)
+
+
+def test_spec_token_times_split_window_gap(engine_setup):
+    """A spec window commits k tokens after ONE wall gap; the attribution
+    satellite divides that gap across the k samples so spec-run TPOT
+    percentiles are comparable with non-spec runs."""
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=8, spec_depth=3,
+                        spec_draft_k=4)
+    sched = RequestScheduler(eng)
+    for i, p in enumerate(_prompts(cfg, [9, 12], seed=6)):
+        sched.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+    assert sched.run() == 2
+    multi = 0
+    for r in sched.completed.values():
+        assert len(r.token_times) == r.decode_tokens
+        assert sum(r.token_times) == pytest.approx(
+            r.tpot * r.decode_tokens, rel=1e-6)
+        # scan for a window that emitted >1 token: its samples are equal
+        # (the gap split k ways), which is only detectable because
+        # adjacent windows virtually never have identical wall gaps
+        i = 0
+        times = r.token_times
+        while i < len(times) - 1:
+            j = i + 1
+            while j < len(times) and times[j] == times[i]:
+                j += 1
+            multi += (j - i > 1)
+            i = j
+    assert multi > 0, "no multi-token spec window committed; weak test"
+    st = sched.service_stats()
+    assert st["spec_accept_rate"] > 0.0
+    assert st["tpot_p99"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine-level: registry mirrors, audit cross-check
+# ---------------------------------------------------------------------------
+
+def test_engine_counters_mirror_registry(engine_setup, live_obs):
+    reg, tracer = live_obs
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=4)
+    sched = RequestScheduler(eng)
+    for i, p in enumerate(_prompts(cfg, [9, 12], seed=7)):
+        sched.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    assert sched.run() == 2
+    for key in ["prefills", "steps"]:
+        assert reg.value(f"engine.{key}", engine=eng.obs_label) \
+            == eng.stats[key]
+    assert reg.value("scheduler.requests_completed") == 2
+    # the trace covers the run: every request has a full timeline
+    tls = build_timelines(tracer.events())
+    assert sorted(tls) == [0, 1]
+    for tl in tls.values():
+        assert tl.t_submit is not None and tl.t_retire is not None
+        assert tl.n_tokens == 4                      # first + 3 decoded
+
+
+@pytest.mark.slow
+def test_tiered_miss_counter_matches_io_callback_pin(engine_setup,
+                                                     live_obs):
+    """The jaxpr audit pins the tiered decode/verify programs to exactly
+    one io_callback per attention layer (and the draft to zero); verify
+    scans that body over its ``depth + 1`` window tokens.  The transfer
+    engine counts every host_gather invocation, so over a run each
+    exactly-scored token costs ``n_attn`` callbacks:
+    ``callbacks == (steps + verify_launches * (depth + 1)) * n_attn`` —
+    the runtime counter and the static contract must agree, and the
+    registry must mirror the dict."""
+    params, cfg = engine_setup
+    n_attn = sum(1 for p in cfg.resolved_layer_pattern if p == ATTN)
+    assert n_attn > 0
+    reg, _ = live_obs
+    for spec in [None, 2]:
+        eng = TieredServingEngine(params, cfg, CFG, batch_size=2,
+                                  prompt_len=16, max_new_tokens=6,
+                                  page_size=4, staging_pages=3,
+                                  prefetch_depth=2, spec_depth=spec,
+                                  spec_draft_k=4)
+        sched = RequestScheduler(eng)
+        for i, p in enumerate(_prompts(cfg, [9, 16, 5], seed=8)):
+            sched.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        assert sched.run() == 3
+        exact_tokens = eng.stats["steps"] \
+            + eng.stats.get("verify_launches", 0) * ((spec or 0) + 1)
+        assert eng.xfer.stats["callbacks"] == exact_tokens * n_attn, \
+            (spec, eng.stats)
+        xl = eng.xfer.obs.labels["transfer"]
+        assert reg.value("transfer.callbacks", transfer=xl) \
+            == eng.xfer.stats["callbacks"]
+        if spec is not None:                         # draft stays clean
+            assert eng.stats["draft_launches"] > 0
