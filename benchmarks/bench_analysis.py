@@ -12,6 +12,12 @@ Rows:
   their in-loop variants) plus whether the lowering donates its cache
   operand.  These are the same numbers ANALYSIS_BUDGET.json pins; the
   benchmark row makes drift visible in the perf artifact too.
+* ``analysis/protocol_<harness>`` — exhaustive page-protocol exploration
+  throughput (DESIGN.md §9): wall time per explored state, with the
+  state/transition counts at the gate's smoke depth in ``derived``.
+* ``analysis/protocol_guard`` — cost of one ``check_view`` pass over a
+  populated harness, i.e. the per-scheduler-step overhead a serve run
+  pays under ``--check-invariants``.
 """
 from __future__ import annotations
 
@@ -46,3 +52,39 @@ def run(smoke: bool = False) -> None:
 
     assert not violations, \
         f"program contracts violated: {[str(v) for v in violations]}"
+
+    from repro.analysis import protocol
+
+    header("analysis: page-protocol explorer (DESIGN.md §9)")
+    harnesses = [("paged", protocol.make_paged_harness, 6 if smoke else 9),
+                 ("tiered", protocol.make_tiered_harness, 5 if smoke else 8),
+                 ("tiered_spec",
+                  lambda: protocol.make_tiered_harness(spec=True),
+                  5 if smoke else 7)]
+    bad = []
+    for label, make, depth in harnesses:
+        res = protocol.explore(make, depth=depth)
+        us_per_state = res.elapsed * 1e6 / max(1, res.states)
+        emit(f"analysis/protocol_{label}", us_per_state,
+             f"states={res.states};transitions={res.transitions};"
+             f"depth={res.depth};"
+             f"states_per_s={res.states / max(res.elapsed, 1e-9):.0f}")
+        if res.violation is not None:
+            bad.append(f"{label}: {res.violation}")
+
+    # guard overhead: check_view on a harness with both slots live (the
+    # densest state a scheduler-step boundary sees at this shape)
+    h = protocol.make_tiered_harness()
+    for ev in [("admit_start", "A"), ("admit_finish",),
+               ("admit_start", "B"), ("admit_finish",), ("decode", 0)]:
+        bad += [f"guard-setup {ev}: {f}" for f in h.apply(ev)]
+    view = h.view()
+    n = 200 if smoke else 2000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        bad += protocol.check_view(view)
+    guard_us = (time.perf_counter() - t0) * 1e6 / n
+    emit("analysis/protocol_guard", guard_us,
+         f"pages={h.pool.num_pages};slots={h.num_slots}")
+
+    assert not bad, f"page protocol violated: {bad[:4]}"

@@ -3,16 +3,27 @@
 
 Usage (from the repo root):
 
-    PYTHONPATH=src python scripts/sikv_lint.py             # all three gates
+    PYTHONPATH=src python scripts/sikv_lint.py             # all four gates
     PYTHONPATH=src python scripts/sikv_lint.py --ast       # AST rules only
     PYTHONPATH=src python scripts/sikv_lint.py --audit     # jaxpr contracts
     PYTHONPATH=src python scripts/sikv_lint.py --budget    # budget diff
+    PYTHONPATH=src python scripts/sikv_lint.py --protocol  # page protocol
     PYTHONPATH=src python scripts/sikv_lint.py --refresh-budget
 
 ``--refresh-budget`` rewrites ANALYSIS_BUDGET.json from the current tree
 (preserving the hand-written ``regressions`` block); commit the diff
 alongside the change that moved the numbers.  ``--github-summary FILE``
 appends a per-rule markdown table (CI passes ``$GITHUB_STEP_SUMMARY``).
+
+``--protocol`` runs the page-lifecycle checker (DESIGN.md §9): the AST
+ordering lint over the pool/engine/staging modules, then bounded
+exhaustive exploration of the real pool structures through every
+scheduler-event interleaving up to the smoke depth, checking the
+typestate spec and all cross-structure invariants after each
+transition.  ``--protocol-deeper N`` explores N levels past each
+harness's smoke depth (CI's coverage-artifact step uses this — state
+counts grow geometrically, so the knob is a delta, not an absolute);
+``--protocol-json FILE`` dumps the exploration coverage stats.
 
 Exit status: 0 clean, 1 findings, 2 usage/infra error.
 """
@@ -43,6 +54,13 @@ BUDGET_RULES = {
     "SIKV-B003": "recompile/launch drift under churn",
 }
 
+# (harness label, factory kwargs, smoke depth) — depths chosen so the
+# whole protocol gate stays well under a minute in CI while still
+# covering every event kind (lane dispatch, CoW shares, registry
+# eviction all fire; measured ~13s total on the CI shape).
+PROTOCOL_SMOKE = (("paged", {}, 9), ("tiered", {}, 8),
+                  ("tiered_spec", {"spec": True}, 7))
+
 
 def _rule_of(line: str) -> str:
     return line.split(" ", 1)[0].split("[")[0].strip()
@@ -56,6 +74,14 @@ def main(argv=None) -> int:
                     help="jaxpr program contracts only")
     ap.add_argument("--budget", action="store_true",
                     help="budget diff only")
+    ap.add_argument("--protocol", action="store_true",
+                    help="page-lifecycle protocol checker only")
+    ap.add_argument("--protocol-deeper", type=int, default=0, metavar="N",
+                    help="explore N levels past each harness's smoke "
+                         "depth (CI's coverage-artifact step)")
+    ap.add_argument("--protocol-json", metavar="FILE",
+                    help="write protocol exploration coverage stats "
+                         "(states, transitions, event counts) to FILE")
     ap.add_argument("--refresh-budget", action="store_true",
                     help="rewrite ANALYSIS_BUDGET.json from this tree")
     ap.add_argument("--no-kernels", action="store_true",
@@ -64,10 +90,11 @@ def main(argv=None) -> int:
                     help="append a markdown summary (CI step summary)")
     args = ap.parse_args(argv)
     run_all = not (args.ast or args.audit or args.budget
-                   or args.refresh_budget)
+                   or args.protocol or args.refresh_budget)
     do_ast = run_all or args.ast
     do_audit = run_all or args.audit
     do_budget = run_all or args.budget or args.refresh_budget
+    do_protocol = run_all or args.protocol
 
     failures: list[str] = []
     sections: list[tuple[str, dict, list[str]]] = []
@@ -120,13 +147,47 @@ def main(argv=None) -> int:
                              f"({len(measured['programs'])} programs)",
                              counts, diffs))
 
+    protocol_rules: dict = {}
+    if do_protocol:
+        from repro.analysis import protocol  # deferred: pulls numpy/jax
+        protocol_rules = protocol.PROTOCOL_RULES
+        lines = [str(f) for f in protocol.run_protocol_lint()]
+        coverage = {}
+        for label, kwargs, smoke_depth in PROTOCOL_SMOKE:
+            depth = smoke_depth + args.protocol_deeper
+            print(f"exploring {label} interleavings to depth {depth} ...",
+                  flush=True)
+            make = (protocol.make_paged_harness if label == "paged"
+                    else lambda kw=kwargs: protocol.make_tiered_harness(**kw))
+            res = protocol.explore(make, depth=depth)
+            coverage[label] = res.as_dict()
+            print(f"  {res.states} states, {res.transitions} transitions, "
+                  f"{res.elapsed:.1f}s", flush=True)
+            if res.violation is not None:
+                mtrace, mfind = protocol.shrink_trace(
+                    make, res.violation.trace)
+                lines += [f"{f}  [{label}]" for f in mfind]
+                lines.append(f"  minimal {label} trace: "
+                             + " -> ".join(repr(e) for e in mtrace))
+        failures += lines
+        per_rule = Counter(_rule_of(ln) for ln in lines)
+        counts = {r: per_rule.get(r, 0) for r in sorted(protocol_rules)}
+        n_states = sum(c["states"] for c in coverage.values())
+        sections.append((f"Page protocol (ordering lint + {n_states} "
+                         f"explored states)", counts, lines))
+        if args.protocol_json:
+            import json
+            with open(args.protocol_json, "w") as f:
+                json.dump(coverage, f, indent=1)
+            print(f"protocol coverage -> {args.protocol_json}")
+
     # -- report -----------------------------------------------------------
+    descs = {**ast_rules.RULE_DESCRIPTIONS, **JAXPR_RULES,
+             **BUDGET_RULES, **protocol_rules}
     for title, counts, lines in sections:
         print(f"\n== {title} ==")
         for rule, n in counts.items():
-            desc = {**ast_rules.RULE_DESCRIPTIONS, **JAXPR_RULES,
-                    **BUDGET_RULES}.get(rule, "")
-            print(f"  {rule}  {n:3d}  {desc}")
+            print(f"  {rule}  {n:3d}  {descs.get(rule, '')}")
         for line in lines:
             print("  " + line)
     verdict = "FAIL" if failures else "ok"
@@ -145,10 +206,9 @@ def main(argv=None) -> int:
                 f.write(f"### {title}\n\n| rule | findings | meaning |\n"
                         "|---|---|---|\n")
                 for rule, n in counts.items():
-                    desc = {**ast_rules.RULE_DESCRIPTIONS, **JAXPR_RULES,
-                            **BUDGET_RULES}.get(rule, "")
                     mark = "❌" if n else "✅"
-                    f.write(f"| {rule} | {mark} {n} | {desc} |\n")
+                    f.write(f"| {rule} | {mark} {n} | "
+                            f"{descs.get(rule, '')} |\n")
                 f.write("\n")
                 if lines:
                     f.write("```\n" + "\n".join(lines) + "\n```\n\n")

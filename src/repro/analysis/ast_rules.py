@@ -78,7 +78,7 @@ SHIMMED_APIS = {
     "jax.sharding.get_abstract_mesh": "repro.compat.abstract_mesh",
 }
 
-_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[(?:SIKV-)?(L\d{3})\]")
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[(?:SIKV-)?([LP]\d{3})\]")
 _HOST_FN_RE = re.compile(r"#\s*lint:\s*host\b")
 
 

@@ -1,0 +1,59 @@
+"""Page-lifecycle protocol checker (DESIGN.md §9).
+
+Three cooperating pieces, all driving the REAL bookkeeping structures
+(:class:`~repro.paged.pool.PagePool`, ``SlotPageManager``,
+:class:`~repro.tiered.staging.StagingCache`, ``TransferEngine``,
+:class:`~repro.tiered.host_store.HostPageStore`) — never a re-model of
+them:
+
+* :mod:`repro.analysis.protocol.spec` — the executable typestate spec:
+  per-page lifecycle states (free / reserved / mapped / host-current /
+  staged-clean / staged-dirty / lane, with pin + CoW-share attributes)
+  and the legal transition relation per scheduler-level event
+  (SIKV-T001 on an illegal transition);
+* :mod:`repro.analysis.protocol.invariants` — cross-structure
+  consistency checks (SIKV-I001..I010) cheap enough to run at scheduler
+  step boundaries (the ``--check-invariants`` runtime guard) and after
+  every explored transition;
+* :mod:`repro.analysis.protocol.harness` +
+  :mod:`repro.analysis.protocol.explorer` — a host-side mirror of the
+  serving engines' orchestration wired to the real structures, and a
+  bounded exhaustive breadth-first explorer over all interleavings of
+  its scheduler-level events, with minimal failing-trace reproduction;
+* :mod:`repro.analysis.protocol.ordering` — the SIKV-P001..P003 AST
+  ordering lint over the handler code itself (unmap-before-free,
+  re-credit-before-release, commit-after-finalize).
+
+``python scripts/sikv_lint.py --protocol`` runs the lint plus a
+smoke-depth exploration; ``tests/test_protocol.py`` holds the mutation
+fixtures proving every rule fires.
+"""
+from repro.analysis.protocol.explorer import (ExploreResult,
+                                              ProtocolViolation, explore,
+                                              shrink_trace)
+from repro.analysis.protocol.harness import (ProtocolHarness,
+                                             make_paged_harness,
+                                             make_tiered_harness)
+from repro.analysis.protocol.invariants import (INVARIANT_RULES,
+                                                ProtocolView, check_view)
+from repro.analysis.protocol.ordering import (ORDERING_RULES,
+                                              lint_protocol_source,
+                                              run_protocol_lint)
+from repro.analysis.protocol.spec import (EVENTS, STATES, TRANSITIONS,
+                                          ProtocolSpec, page_label,
+                                          render_transition_table)
+
+PROTOCOL_RULES = dict(ORDERING_RULES, **INVARIANT_RULES,
+                      **{"SIKV-T001": "illegal typestate transition "
+                                      "for the applied event",
+                         "SIKV-E001": "event handler raised instead of "
+                                      "backpressuring"})
+
+__all__ = [
+    "EVENTS", "ExploreResult", "INVARIANT_RULES", "ORDERING_RULES",
+    "PROTOCOL_RULES", "ProtocolHarness", "ProtocolSpec",
+    "ProtocolViolation", "ProtocolView", "STATES", "TRANSITIONS",
+    "check_view", "explore", "lint_protocol_source", "make_paged_harness",
+    "make_tiered_harness", "page_label", "render_transition_table",
+    "run_protocol_lint", "shrink_trace",
+]

@@ -1,0 +1,155 @@
+"""Bounded exhaustive interleaving explorer (breadth-first).
+
+Drives a :class:`~repro.analysis.protocol.harness.ProtocolHarness`
+through EVERY sequence of enabled scheduler-level events up to a depth
+bound, forking the full system state (the real pool / slot / staging /
+host structures) with ``copy.deepcopy`` at each branch and deduplicating
+states by :meth:`ProtocolHarness.state_key`.
+
+Breadth-first order makes the first violation a MINIMAL-depth one; the
+greedy :func:`shrink_trace` then removes events that are not needed to
+reproduce it, so a failure reads as a three-line recipe, not a
+thousand-event log.
+
+Bounded-scope argument (DESIGN.md §9): the harness shapes are chosen so
+every protocol mechanism is exercised inside the bound — two slots
+contend for seven pages (allocation pressure + registry eviction),
+prompt A's partial tail forces CoW after a prefix hit, three staging
+slots over up to six live pages force demotion/writeback, and prefetch
+depth two fills the lane.  State-space growth past the bound adds more
+pages and steps, not new transition KINDS: every handler the engines
+own is reachable within depth ~6.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+Event = Tuple
+
+
+@dataclass
+class ProtocolViolation:
+    """A failing event trace: replayable via ``harness.apply`` in order."""
+
+    trace: List[Event]
+    findings: List[str]
+    depth: int
+
+    def __str__(self) -> str:
+        steps = " -> ".join(repr(e) for e in self.trace) or "<initial>"
+        return (f"protocol violation at depth {self.depth}\n"
+                f"  trace: {steps}\n"
+                + "\n".join(f"  {f}" for f in self.findings))
+
+
+@dataclass
+class ExploreResult:
+    states: int            # distinct states discovered (initial included)
+    transitions: int       # events applied (forks, pre-dedup)
+    depth: int             # deepest level fully expanded
+    elapsed: float         # wall seconds
+    event_counts: Dict[str, int] = field(default_factory=dict)
+    violation: Optional[ProtocolViolation] = None
+    complete: bool = True  # False when max_states truncated the frontier
+
+    def as_dict(self) -> Dict:
+        return {
+            "states": self.states, "transitions": self.transitions,
+            "depth": self.depth, "elapsed_s": round(self.elapsed, 3),
+            "event_counts": dict(sorted(self.event_counts.items())),
+            "complete": self.complete,
+            "violation": None if self.violation is None
+            else {"trace": [list(e) for e in self.violation.trace],
+                  "findings": self.violation.findings,
+                  "depth": self.violation.depth},
+        }
+
+
+def explore(make_harness: Callable[[], "object"], *, depth: int,
+            max_states: int = 0) -> ExploreResult:
+    """Exhaust every event interleaving up to ``depth`` events deep.
+
+    Stops at the first violation (breadth-first, so it is minimal-depth);
+    ``max_states`` (0 = unlimited) caps the dedup set as a safety net —
+    exceeding it marks the result ``complete=False``.
+    """
+    t0 = time.perf_counter()
+    root = make_harness()
+    seen = {root.state_key()}
+    frontier: List[Tuple[object, List[Event]]] = [(root, [])]
+    res = ExploreResult(states=1, transitions=0, depth=0, elapsed=0.0)
+    for level in range(1, depth + 1):
+        nxt: List[Tuple[object, List[Event]]] = []
+        for h, trace in frontier:
+            for ev in h.enabled_events():
+                fork = copy.deepcopy(h)
+                res.transitions += 1
+                res.event_counts[ev[0]] = \
+                    res.event_counts.get(ev[0], 0) + 1
+                try:
+                    findings = fork.apply(ev)
+                except Exception as e:  # backpressure leak / struct break
+                    findings = [f"SIKV-E001 event {ev!r} raised "
+                                f"{type(e).__name__}: {e}"]
+                if findings:
+                    res.violation = ProtocolViolation(
+                        trace + [ev], findings, level)
+                    res.elapsed = time.perf_counter() - t0
+                    return res
+                key = fork.state_key()
+                if key not in seen:
+                    if max_states and len(seen) >= max_states:
+                        res.complete = False
+                        continue
+                    seen.add(key)
+                    nxt.append((fork, trace + [ev]))
+        res.states = len(seen)
+        res.depth = level
+        frontier = nxt
+        if not frontier:
+            break
+    res.elapsed = time.perf_counter() - t0
+    return res
+
+
+def _replay(make_harness: Callable[[], "object"],
+            trace: List[Event]) -> Optional[List[str]]:
+    """Replay ``trace`` on a fresh harness.  Returns the findings (empty
+    list = clean) or ``None`` if the trace is infeasible — an event not
+    enabled in the state it is applied to proves nothing."""
+    h = make_harness()
+    for ev in trace:
+        if ev not in h.enabled_events():
+            return None
+        try:
+            findings = h.apply(ev)
+        except Exception as e:
+            return [f"SIKV-E001 event {ev!r} raised "
+                    f"{type(e).__name__}: {e}"]
+        if findings:
+            return findings
+    return []
+
+
+def shrink_trace(make_harness: Callable[[], "object"],
+                 trace: List[Event]) -> Tuple[List[Event], List[str]]:
+    """Greedy delta-debugging: drop one event at a time, keep the drop
+    whenever the remaining trace still fails.  Returns the minimal trace
+    and its findings (the input must fail on replay)."""
+    cur = list(trace)
+    findings = _replay(make_harness, cur)
+    assert findings, f"shrink_trace needs a failing trace, got {findings!r}"
+    changed = True
+    while changed:
+        changed = False
+        for i in range(len(cur)):
+            cand = cur[:i] + cur[i + 1:]
+            got = _replay(make_harness, cand)
+            if got:
+                cur, findings = cand, got
+                changed = True
+                break
+    return cur, findings

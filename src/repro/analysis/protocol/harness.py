@@ -1,0 +1,569 @@
+"""Scheduler-level event harness over the REAL page structures.
+
+The explorer needs to drive every interleaving of admissions, decode
+steps, speculation windows, retires and pressure events — but through
+the real ``PagePool`` / ``SlotPageManager`` / ``StagingCache`` /
+``HostPageStore`` / ``TransferEngine`` implementations, not a re-model
+of them.  The full serving engines carry jitted programs and device
+arrays, which a breadth-first explorer cannot fork thousands of times;
+this harness keeps the engines' ORCHESTRATION (the exact call sequences
+of ``TieredServingEngine._decode_prep`` / ``_commit_lane`` /
+``_do_insert_miss`` / ``retire`` / ...) while replacing each device
+launch with its host-visible effect on two mirrors:
+
+* ``block_table[slot][j]`` — what the device block table would hold
+  (written at the same points the engine issues ``set_block`` /
+  ``_clear_row`` / the in-launch insert row write);
+* ``payload_map[page]`` — the device page->staging-slot map (written at
+  the same points the engine issues ``update_payload_map``).
+
+Host payload traffic is real: admissions offload through
+``HostPageStore.write_pages``, fetches and prefetch dispatches go
+through ``TransferEngine.upload``/``dispatch`` (tiny one-field pages),
+writebacks through ``TransferEngine.writeback`` — so the host store's
+valid-set bookkeeping and the transfer engine's demand window are the
+production code paths under exploration.
+
+Everything is plain Python + tiny numpy, so ``copy.deepcopy`` forks a
+state in ~100µs and the explorer can cover tens of thousands of states
+in CI.  Mutation fixtures subclass the harness and misorder one handler
+to prove the invariants catch the historical bugs (see
+``tests/test_protocol.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.protocol import spec as spec_mod
+from repro.analysis.protocol.invariants import ProtocolView, check_view
+from repro.core.policy import (pages_needed, spec_tail_pages,
+                               spec_window_pages)
+from repro.paged.pool import PagePool, SlotPageManager
+from repro.tiered.host_store import HostPageStore
+from repro.tiered.staging import Eviction, StagingCache, TransferEngine
+
+# tiny but adversarial shapes: 2 slots over 7 pages of 2 tokens,
+# capacity 3 pages/slot, so two live requests plus the prefix registry
+# contend for every page.  Prompt A has a partial tail page (CoW on the
+# first divergent append after a prefix hit), prompt B a full one, and a
+# third distinct prompt C overflows the 2-entry prefix registry so LRU
+# eviction (pages freeing under an ADMISSION) is reachable too.
+PROMPTS: Dict[str, Tuple[int, ...]] = {"A": (11, 12, 13), "B": (21, 22),
+                                       "C": (31, 32, 33, 34)}
+
+Event = Tuple[Any, ...]
+
+
+class ProtocolHarness:
+    """One explorable system state; ``apply(event)`` mutates it through
+    the real structures and returns protocol findings (empty = clean)."""
+
+    def __init__(self, *, tiered: bool, page_size: int = 2,
+                 pages_per_seq: int = 3, num_slots: int = 2,
+                 num_pages: int = 7, max_prompts: int = 2,
+                 staging_slots: int = 3, prefetch_depth: int = 2,
+                 spec_depth: Optional[int] = None,
+                 slots_cls: type = SlotPageManager):
+        self.tiered = tiered
+        self.page_size = page_size
+        self.pages_per_seq = pages_per_seq
+        self.num_slots = num_slots
+        self.capacity = page_size * pages_per_seq
+        self.prefetch_depth = prefetch_depth
+        self.spec_depth = spec_depth
+        self.pool = PagePool(num_pages, page_size, max_prompts=max_prompts)
+        self.pool.page_detail = self._page_detail
+        self.slots = slots_cls(
+            self.pool, pages_per_seq, num_slots,
+            set_block=self._set_block, copy_page=self._copy_page,
+            on_alloc=self._on_fresh_page if tiered else None)
+        self.block_table = [[-1] * pages_per_seq for _ in range(num_slots)]
+        self._host_pos = [self.capacity] * num_slots
+        self._pending: Optional[Dict[str, Any]] = None
+        if tiered:
+            self.staging = StagingCache(staging_slots)
+            self.host = HostPageStore(num_pages)
+            # one layer, one tiny payload field per page: enough to make
+            # write_pages/read_pages/upload/writeback real transfers
+            self.host.ensure_layer(
+                0, {"kmag": ((1, page_size, 1), np.float32)})
+            self.xfer = TransferEngine(self.host)
+            self.payload_map = [-1] * num_pages
+            self._write_page: List[Optional[int]] = [None] * num_slots
+            self._lane_live: List[int] = []
+            self.pool.on_free = self._on_pages_freed
+        else:
+            self.staging = None
+            self.host = None
+            self.xfer = None
+            self.payload_map = None
+            self._write_page = [None] * num_slots
+            self._lane_live = []
+        self.spec_obs = spec_mod.ProtocolSpec(num_pages)
+        self.spec_obs.observe("init", self.view())  # baseline labels
+        self._mid: List[str] = []
+
+    # -- views -----------------------------------------------------------
+
+    def view(self) -> ProtocolView:
+        p = self._pending or {}
+        return ProtocolView(
+            pool=self.pool, slots=self.slots, staging=self.staging,
+            host=self.host, lane=tuple(self._lane_live),
+            write_pages=tuple(self._write_page),
+            pending_slot=p.get("slot"),
+            pending_pages=tuple(p.get("pages") or ()),
+            block_table=self.block_table, payload_map=self.payload_map)
+
+    def _page_detail(self, page: int) -> Optional[str]:
+        """pool.snapshot() annotation — MUST agree with the spec's
+        ``page_label`` (the SIKV-I009 check asserts exactly that)."""
+        p = self._pending or {}
+        if page in (p.get("pages") or ()):
+            return spec_mod.RESERVED
+        if self.staging is not None:
+            if self.staging.slot_of(page) is not None:
+                label = (spec_mod.STAGED_DIRTY
+                         if self.staging.is_dirty(page)
+                         else spec_mod.STAGED_CLEAN)
+                if self.staging.pin_count(page):
+                    label += f"+pinned{self.staging.pin_count(page)}"
+                return label
+            if page in self._lane_live:
+                return spec_mod.LANE
+            if page in self.host.valid:
+                return spec_mod.HOST
+        return None  # -> tier map / "mapped"
+
+    def check(self) -> List[str]:
+        return check_view(self.view())
+
+    def state_key(self) -> Tuple:
+        """Everything that can influence future behavior (free-list and
+        LRU ORDER included; stats counters excluded)."""
+        pool, st = self.pool, self.staging
+        p = self._pending
+        key: List[Any] = [
+            tuple(pool.refcount), tuple(pool.tier), tuple(pool._free),
+            pool.reserved,
+            tuple(sorted(pool.reservations.items(), key=repr)),
+            tuple((k, tuple(e.page_ids)) for k, e in pool.registry.items()),
+            tuple(tuple(row) for row in self.block_table),
+            tuple(self._host_pos),
+            tuple(tuple(self.slots.slot_pages(s) or ())
+                  if s in self.slots.active_slots() else None
+                  for s in range(self.num_slots)),
+            tuple(self.slots._resv),
+            None if p is None else (p["slot"], p["key"], p["mode"],
+                                    tuple(p.get("pages") or ())),
+        ]
+        if st is not None:
+            key += [
+                tuple(sorted(st._slot.items())),
+                tuple(sorted(st._pinned.items())),
+                tuple(sorted(st._dirty)), tuple(st._lru), tuple(st._free),
+                frozenset(self.host.valid), tuple(self.payload_map),
+                tuple(self._write_page), tuple(self._lane_live),
+                tuple(sorted(self.xfer.last_misses.items())),
+            ]
+        return tuple(key)
+
+    # -- SlotPageManager device callbacks (mirror writes) ----------------
+
+    def _set_block(self, slot: int, j: int, page_id: int) -> None:
+        self.block_table[slot][j] = page_id
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """CoW payload copy.  Tiered mirror of
+        ``TieredServingEngine._copy_page``: dst was just staged by
+        ``_on_fresh_page``; a staged source copies slot->slot on device,
+        a host-tier source uploads its host copy."""
+        if self.staging is None:
+            return  # single-tier: pure device copy, no bookkeeping
+        assert self.staging.slot_of(dst) is not None, \
+            "CoW target must be staged"
+        if self.staging.slot_of(src) is not None:
+            self.staging.touch(src)
+        else:
+            assert src in self.host.valid, \
+                f"CoW source page {src} neither staged nor host-valid"
+            self.xfer.upload([src])
+
+    def _on_fresh_page(self, slot: int, page: int) -> None:
+        if self._write_page[slot] is not None:
+            self.staging.unpin(self._write_page[slot])
+            self._write_page[slot] = None
+        self._stage_page(page, fetch=False)
+        self.staging.mark_dirty(page)
+
+    def _on_pages_freed(self, pages: List[int]) -> None:
+        stale: List[int] = []
+        for p in pages:
+            if self.staging.slot_of(p) is not None:
+                self.staging.release_page(p)
+                stale.append(p)
+            for s, wp in enumerate(self._write_page):
+                if wp == p:
+                    self._write_page[s] = None
+        self.host.drop_pages(pages)
+        for p in stale:
+            self.payload_map[p] = -1
+        if self._lane_live and set(pages) & set(self._lane_live):
+            self._lane_live = []
+
+    # -- tier helpers (mirrors of the tiered engine's) -------------------
+
+    def _writeback(self, page: int) -> None:
+        rows = {0: {"kmag": np.full((1, self.page_size, 1), float(page),
+                                    np.float32)}}
+        self.xfer.writeback(rows, page)
+
+    def _process_evictions(self, evs: List[Eviction]) -> None:
+        for ev in evs:
+            if ev.dirty:
+                self._writeback(ev.page)
+            self.pool.set_tier([ev.page], "host")
+            self.payload_map[ev.page] = -1
+
+    def _stage_page(self, page: int, *, fetch: bool) -> int:
+        slot, evs = self.staging.acquire(page, pin=False)
+        self._process_evictions(evs)
+        self.pool.set_tier([page], "device")
+        self.payload_map[page] = slot
+        if fetch:
+            assert page in self.host.valid, \
+                f"page {page} has no valid host copy to fetch"
+            self.xfer.upload([page])
+        return slot
+
+    def _set_write_page(self, slot: int, page: int) -> None:
+        cur = self._write_page[slot]
+        if cur != page:
+            if cur is not None:
+                self.staging.unpin(cur)
+            self.staging.pin(page)
+            self._write_page[slot] = page
+        self.staging.mark_dirty(page)
+
+    # -- admission (mirrors of Paged/TieredServingEngine) ----------------
+
+    def _new_tokens(self, key: str) -> int:
+        return self.capacity - len(PROMPTS[key])
+
+    def _spec_tail(self, prompt_len: int, new: int) -> int:
+        if self.spec_depth is None:
+            return 0
+        return spec_tail_pages(prompt_len, new, self.page_size,
+                               self.spec_depth,
+                               pages_per_seq=self.pages_per_seq)
+
+    def _pages_needed_now(self, key: str) -> int:
+        prompt = PROMPTS[key]
+        new = self._new_tokens(key)
+        tail = self._spec_tail(len(prompt), new)
+        entry = self.pool.registry.get(prompt)
+        if entry is None:
+            return pages_needed(len(prompt), new, self.page_size) + tail
+        need = pages_needed(len(prompt), new, self.page_size,
+                            prefix_hit=True)
+        has_tail = len(prompt) % self.page_size != 0
+        if has_tail and self.pool.live_refs(entry.page_ids[-1]) == 0:
+            need -= 1
+        return need + tail
+
+    def _free_slot(self) -> Optional[int]:
+        active = set(self.slots.active_slots())
+        if self._pending is not None:
+            active.add(self._pending["slot"])
+        for s in range(self.num_slots):
+            if s not in active:
+                return s
+        return None
+
+    def can_admit(self, key: str) -> bool:
+        if self._pending is not None or self._free_slot() is None:
+            return False
+        prompt = PROMPTS[key]
+        hit = prompt in self.pool.registry
+        if self.pool.available(protect=prompt if hit else None) \
+                < self._pages_needed_now(key):
+            return False
+        if self.tiered:
+            per_slot = (1 if self.spec_depth is None
+                        else spec_window_pages(self.spec_depth,
+                                               self.page_size))
+            active = len(self.slots.active_slots())
+            if (active + 1) * per_slot > self.staging.num_slots:
+                return False
+        return True
+
+    def _admit_start(self, key: str) -> None:
+        prompt = PROMPTS[key]
+        slot = self._free_slot()
+        need = self._pages_needed_now(key)
+        pending: Dict[str, Any] = {"slot": slot, "key": key, "need": need}
+        entry = self.pool.lookup_prefix(prompt)
+        if entry is not None:
+            pending["mode"] = "hit"
+            pending["entry_pages"] = list(entry.page_ids)
+        else:
+            pending["mode"] = "miss"
+            n_prompt = -(-len(prompt) // self.page_size)
+            page_ids = self.pool.allocate(n_prompt, protect=prompt)
+            self.slots.assign(slot, page_ids, reserved=need - n_prompt)
+            pending["pages"] = page_ids
+        self._pending = pending
+
+    def _admit_finish(self) -> None:
+        p = self._pending
+        assert p is not None
+        slot, prompt = p["slot"], PROMPTS[p["key"]]
+        if p["mode"] == "hit":
+            pages = p["entry_pages"]
+            self.pool.share(pages)
+            self.slots.assign(slot, pages, reserved=p["need"])
+        else:
+            pages = p["pages"]
+            if self.tiered:
+                tail = pages[-1]
+                tail_slot, evs = self.staging.acquire(tail, pin=True)
+                self._process_evictions(evs)
+                self.pool.set_tier(pages, "host")
+                self.pool.set_tier([tail], "device")
+                self._write_page[slot] = tail
+                self.payload_map[tail] = tail_slot
+                # one bulk device->host offload of the prompt payload
+                n = len(pages)
+                self.xfer.obs.add("d2h_bytes", self.host.write_pages(
+                    0, pages, {"kmag": np.zeros(
+                        (n, 1, self.page_size, 1), np.float32)}))
+                self.host.mark_valid(pages)
+            self.pool.register_prefix(
+                prompt, pages, prompt_len=len(prompt),
+                first_token=prompt[0], slot_state=None)
+        # the insert launch writes the whole block-table row
+        row = list(pages) + [-1] * (self.pages_per_seq - len(pages))
+        self.block_table[slot] = row
+        self._host_pos[slot] = len(prompt)
+        self._pending = None
+
+    def _admit_cancel(self) -> None:
+        p = self._pending
+        assert p is not None
+        if p.get("pages") is not None:
+            self.slots.release_slot(p["slot"])
+        self._pending = None
+
+    # -- decode / speculation (mirrors of TieredServingEngine) -----------
+
+    def _dispatch_prefetch(self) -> None:
+        pages: List[int] = []
+        if self.tiered and self.prefetch_depth:
+            exclude = set(self.staging.cold_pages()) \
+                | {p for p in self._write_page if p is not None}
+            for s in self.slots.active_slots():
+                pos = self._host_pos[s]
+                spages = self.slots.slot_pages(s)
+                j = pos // self.page_size
+                if pos < self.capacity and spages and j < len(spages):
+                    exclude.add(spages[j])
+            pages = [p for p in self.xfer.predict(
+                self.prefetch_depth, exclude=exclude)
+                if self.staging.slot_of(p) is None]
+        if self.xfer is not None:
+            self.xfer.step_begin()
+        if not pages:
+            self._lane_live = []
+            return
+        self.xfer.dispatch(pages, self.prefetch_depth)
+        self._lane_live = list(pages)
+
+    def _probe(self, event: str) -> None:
+        """Mid-event invariant probe: the prefetch lane is filled and
+        consumed within one decode/spec event, so the LANE state is only
+        visible here — right after dispatch, before the commit."""
+        self._mid += self.spec_obs.observe(event, self.view())
+        self._mid += self.check()
+
+    def _record_misses(self, slot: int) -> None:
+        """The decode launch's top-k selects this slot's pages; the
+        host-tier ones go through ``host_gather`` and land in the demand
+        window that drives the NEXT dispatch."""
+        if not self.tiered:
+            return
+        for p in self.slots.slot_pages(slot) or ():
+            if self.staging.slot_of(p) is None and p in self.host.valid \
+                    and p not in self._lane_live:
+                self.xfer.last_misses[p] = \
+                    self.xfer.last_misses.get(p, 0) + 1
+
+    def _commit_lane(self) -> None:
+        if not self._lane_live:
+            return
+        committed_now: set = set()
+        for p in self._lane_live:
+            if (self.staging.slot_of(p) is not None
+                    or self.staging.pinnable() <= 0):
+                continue
+            if self.staging.free_slots == 0 \
+                    and self.staging.lru_head() in committed_now:
+                continue
+            slot, evs = self.staging.acquire(p, pin=False)
+            self._process_evictions(evs)
+            self.pool.set_tier([p], "device")
+            self.payload_map[p] = slot
+            committed_now.add(p)
+        self._lane_live = []
+
+    def _prep_position(self, s: int, pos: int) -> Optional[int]:
+        """ensure_writable + tier residency for one write position;
+        returns the covering page (None past the slot's page list)."""
+        j = pos // self.page_size
+        self.slots.ensure_writable(s, pos)
+        pages = self.slots.slot_pages(s)
+        if pages is None or j >= len(pages):
+            return None
+        page = pages[j]
+        if self.tiered and self.staging.slot_of(page) is None:
+            self._stage_page(page, fetch=True)
+        return page
+
+    def _decode(self, s: int) -> None:
+        self._dispatch_prefetch()
+        if self._lane_live:
+            self._probe("decode")
+        pos = self._host_pos[s]
+        if pos < self.capacity:
+            j = pos // self.page_size
+            cur = self._write_page[s]
+            pages = self.slots.slot_pages(s)
+            if self.tiered and cur is not None \
+                    and (pages is None or j >= len(pages)
+                         or pages[j] != cur):
+                self.staging.unpin(cur)
+                self._write_page[s] = None
+            page = self._prep_position(s, pos)
+            if page is not None and self.tiered:
+                self._set_write_page(s, page)
+            self._record_misses(s)
+            self._host_pos[s] = pos + 1
+        self._commit_lane()
+
+    def _spec(self, s: int, accept: int) -> None:
+        pos = self._host_pos[s]
+        if pos >= self.capacity:
+            return
+        pins: List[int] = []
+        for p in range(pos, min(pos + self.spec_depth + 1, self.capacity)):
+            pg = self._prep_position(s, p)
+            if pg is None or pg in pins:
+                continue
+            if self.tiered:
+                self.staging.pin(pg)
+                self.staging.mark_dirty(pg)
+                pins.append(pg)
+        self._record_misses(s)
+        # verify launch ran; commit `accept` tokens, roll the rest back
+        self._host_pos[s] = min(pos + accept, self.capacity)
+        keep = -(-self._host_pos[s] // self.page_size)
+        self.slots.truncate(s, keep)
+        for pg in pins:
+            self.staging.unpin(pg)
+        self._commit_lane()
+
+    def _retire(self, s: int) -> None:
+        if self.tiered and self._write_page[s] is not None:
+            self.staging.unpin(self._write_page[s])
+            self._write_page[s] = None
+        # unmap-before-free (SIKV-P001): clear the row, THEN release
+        self.block_table[s] = [-1] * self.pages_per_seq
+        self.slots.release_slot(s)
+        self._host_pos[s] = self.capacity
+
+    def _pressure(self) -> None:
+        for page in self.staging.cold_pages():
+            if self.staging.is_dirty(page):
+                self._writeback(page)
+                self.staging.clear_dirty(page)
+
+    def _demote(self) -> None:
+        ev = self.staging.evict_one()
+        if ev is not None:
+            self._process_evictions([ev])
+
+    # -- the explorable surface ------------------------------------------
+
+    def enabled_events(self) -> List[Event]:
+        evs: List[Event] = []
+        for key in PROMPTS:
+            if self.can_admit(key):
+                evs.append(("admit_start", key))
+        if self._pending is not None:
+            evs.append(("admit_finish",))
+            evs.append(("admit_cancel",))
+        decodable = [s for s in self.slots.active_slots()
+                     if self._host_pos[s] < self.capacity]
+        if self.spec_depth is None:
+            evs += [("decode", s) for s in decodable]
+        else:
+            for s in decodable:
+                evs += [("spec", s, 0), ("spec", s, self.spec_depth)]
+        evs += [("retire", s) for s in self.slots.active_slots()
+                if self._pending is None
+                or self._pending["slot"] != s]
+        if self.tiered:
+            if any(self.staging.is_dirty(p)
+                   for p in self.staging.cold_pages()):
+                evs.append(("pressure",))
+            if self.staging.lru_head() is not None:
+                evs.append(("demote",))
+        return evs
+
+    def apply(self, event: Event) -> List[str]:
+        """Apply one event through the real structures; returns every
+        protocol finding it produced (typestate transitions +
+        cross-structure invariants, mid-event probe included)."""
+        self._mid = []
+        kind = event[0]
+        if kind == "admit_start":
+            self._admit_start(event[1])
+        elif kind == "admit_finish":
+            # a prefix hit is its own spec event: only refcounts move
+            kind = ("admit_hit" if self._pending["mode"] == "hit"
+                    else "admit_finish")
+            self._admit_finish()
+        elif kind == "admit_cancel":
+            self._admit_cancel()
+        elif kind == "decode":
+            self._decode(event[1])
+        elif kind == "spec":
+            self._spec(event[1], event[2])
+        elif kind == "retire":
+            self._retire(event[1])
+        elif kind == "pressure":
+            self._pressure()
+        elif kind == "demote":
+            self._demote()
+        else:
+            raise ValueError(f"unknown event {event!r}")
+        return self._mid + self.spec_obs.observe(kind, self.view()) \
+            + self.check()
+
+
+def make_paged_harness(**kw) -> ProtocolHarness:
+    """Single-tier pool: admissions, decode, CoW, prefix cache, retire."""
+    return ProtocolHarness(tiered=False, **kw)
+
+
+def make_tiered_harness(*, spec: bool = False, **kw) -> ProtocolHarness:
+    """Two-tier store.  ``spec=True`` swaps per-token decode events for
+    verify-window events (accept-all / reject-all) and sizes the staging
+    cache so two slots can hold their windows."""
+    if spec:
+        kw.setdefault("spec_depth", 2)
+        kw.setdefault("staging_slots", 4)
+    else:
+        kw.setdefault("staging_slots", 3)
+    return ProtocolHarness(tiered=True, **kw)

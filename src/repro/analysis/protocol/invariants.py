@@ -1,0 +1,331 @@
+"""Cross-structure consistency invariants over the REAL page structures.
+
+Each check reads the live ``PagePool`` / ``SlotPageManager`` /
+``StagingCache`` / ``HostPageStore`` objects (plus the host-side block
+table and payload-map mirrors, where the caller keeps them) and returns
+human-actionable findings tagged with a rule id.  Pure Python, no jax —
+cheap enough that the serving scheduler can run the whole battery at
+every step boundary under ``--check-invariants``, and the explorer runs
+it after every transition.
+
+Rule ids (SIKV-I001..I010; referenced from DESIGN.md §9):
+
+* I001 — a block-table entry points at a page the slot does not own
+  (freed, foreign, or left mapped after the slot died: the
+  retire-without-unmap bug class);
+* I002 — a page's refcount differs from the number of referencing slots
+  plus its registry holds;
+* I003 — the reservation ledger does not balance: ``pool.reserved`` vs
+  the per-owner ledger vs the slot manager's per-slot budgets;
+* I004 — a freed page id is still aliased by the free list, tier map,
+  staging cache, host-valid set, prefetch lane, or a write-page slot;
+* I005 — tier bookkeeping inconsistent: a mapped page without a tier,
+  or staged residency disagreeing with ``tier == "device"``;
+* I006 — a mapped, non-staged, non-pending page has no current host
+  copy (the "host copy current for every non-staged page" contract);
+* I007 — staging cache structure broken: duplicate slot mapping, pin or
+  dirty bit on a non-resident page, slot accounting off, or a live
+  slot's write page unstaged/unpinned;
+* I008 — a prefetch-lane page is freed, staged, or not host-valid;
+* I009 — ``pool.snapshot()`` page states disagree with the typestate
+  spec's derivation (snapshot-vs-spec agreement);
+* I010 — the device payload-map mirror disagrees with the staging
+  cache (two lane pages committed into one slot: the same-loop
+  writeback-eviction bug class).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+INVARIANT_RULES = {
+    "SIKV-I001": "block-table entry maps a page the slot does not own",
+    "SIKV-I002": "refcount != referencing slots + registry holds",
+    "SIKV-I003": "reservation ledger does not balance",
+    "SIKV-I004": "freed page id aliased by another structure",
+    "SIKV-I005": "payload tier disagrees with staging residency",
+    "SIKV-I006": "mapped non-staged page without a current host copy",
+    "SIKV-I007": "staging cache structure inconsistent",
+    "SIKV-I008": "prefetch-lane page freed / staged / not host-valid",
+    "SIKV-I009": "pool.snapshot() disagrees with the typestate spec",
+    "SIKV-I010": "device payload-map mirror disagrees with staging",
+}
+
+
+@dataclass
+class ProtocolView:
+    """Everything the invariants can see.  ``pool`` and ``slots`` are
+    mandatory; the tiered fields default to absent (single-tier pools),
+    and the mirrors (``block_table``, ``payload_map``) are only kept by
+    the harness — the engines' copies live on device."""
+
+    pool: object
+    slots: object
+    staging: object = None
+    host: object = None
+    lane: Sequence[int] = ()
+    write_pages: Sequence[Optional[int]] = ()
+    pending_slot: Optional[int] = None
+    pending_pages: Sequence[int] = ()
+    block_table: Optional[List[List[int]]] = None
+    payload_map: Optional[List[int]] = None
+    _slot_pages: Dict[int, List[int]] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self._slot_pages = {
+            s: self.slots.slot_pages(s) or []
+            for s in self.slots.active_slots()
+        }
+
+
+def _check_refcounts(v: ProtocolView, errs: List[str]) -> None:
+    pool = v.pool
+    expect = [0] * pool.num_pages
+    for s, pages in v._slot_pages.items():
+        for p in pages:
+            expect[p] += 1
+    for key, entry in pool.registry.items():
+        for p in entry.page_ids:
+            expect[p] += 1
+    for p in range(pool.num_pages):
+        if pool.refcount[p] != expect[p]:
+            owners = [f"slot {s}" for s, pages in v._slot_pages.items()
+                      if p in pages]
+            owners += [f"registry {k[:3]}..." for k, e in
+                       pool.registry.items() if p in e.page_ids]
+            errs.append(
+                f"SIKV-I002 page {p}: refcount {pool.refcount[p]} but "
+                f"{expect[p]} reference(s) held ({owners or 'nobody'})")
+    # free-list structure rides along: it IS the refcount-0 set
+    free = list(pool._free)
+    if len(set(free)) != len(free):
+        errs.append(f"SIKV-I002 free list holds duplicates: {free}")
+    for p in free:
+        if pool.refcount[p] != 0:
+            errs.append(f"SIKV-I002 page {p} on the free list with "
+                        f"refcount {pool.refcount[p]}")
+    n_free = sum(1 for p in range(pool.num_pages) if pool.refcount[p] == 0)
+    if len(free) != n_free:
+        errs.append(f"SIKV-I002 {n_free} pages have refcount 0 but the "
+                    f"free list holds {len(free)}")
+
+
+def _check_reservations(v: ProtocolView, errs: List[str]) -> None:
+    pool, slots = v.pool, v.slots
+    ledger = getattr(pool, "reservations", None)
+    if ledger is not None:
+        total = sum(ledger.values())
+        if pool.reserved != total:
+            errs.append(
+                f"SIKV-I003 pool.reserved={pool.reserved} but the "
+                f"per-owner ledger sums to {total}: {dict(ledger)}")
+        if any(n < 0 for n in ledger.values()):
+            errs.append(f"SIKV-I003 negative ledger entry: {dict(ledger)}")
+    resv = getattr(slots, "_resv", None)
+    if resv is not None:
+        total = sum(resv)
+        if pool.reserved != total:
+            errs.append(
+                f"SIKV-I003 pool.reserved={pool.reserved} but slot "
+                f"budgets sum to {total} "
+                f"({ {s: r for s, r in enumerate(resv) if r} })")
+        if ledger is not None:
+            for s, r in enumerate(resv):
+                if ledger.get(s, 0) != r:
+                    errs.append(
+                        f"SIKV-I003 slot {s}: manager budget {r} but "
+                        f"ledger holds {ledger.get(s, 0)}")
+        if any(r < 0 for r in resv):
+            errs.append(f"SIKV-I003 negative slot budget: {list(resv)}")
+
+
+def _check_freed_aliases(v: ProtocolView, errs: List[str]) -> None:
+    pool = v.pool
+    writers = {p for p in v.write_pages if p is not None}
+    for p in range(pool.num_pages):
+        if pool.refcount[p] != 0:
+            continue
+        where = []
+        if pool.tier[p] is not None:
+            where.append(f"tier={pool.tier[p]}")
+        if v.staging is not None:
+            if v.staging.slot_of(p) is not None:
+                where.append(f"staging slot {v.staging.slot_of(p)}")
+            if v.staging.is_dirty(p):
+                where.append("dirty set")
+        if v.host is not None and p in v.host.valid:
+            where.append("host-valid set")
+        if p in v.lane:
+            where.append("prefetch lane")
+        if p in writers:
+            where.append("a slot's write page")
+        if where:
+            errs.append(f"SIKV-I004 freed page {p} still aliased by "
+                        + ", ".join(where))
+
+
+def _check_tiers(v: ProtocolView, errs: List[str]) -> None:
+    if v.staging is None:
+        return
+    pool = v.pool
+    pending = set(v.pending_pages)
+    for p in range(pool.num_pages):
+        if pool.refcount[p] == 0 or p in pending:
+            continue
+        staged = v.staging.slot_of(p) is not None
+        tier = pool.tier[p]
+        if tier not in ("device", "host"):
+            errs.append(f"SIKV-I005 mapped page {p} has tier {tier!r} "
+                        f"(expected 'device' or 'host')")
+        elif staged != (tier == "device"):
+            errs.append(
+                f"SIKV-I005 page {p}: tier {tier!r} but staging slot is "
+                f"{v.staging.slot_of(p)} (staged <=> tier=='device')")
+        if not staged and v.host is not None and p not in v.host.valid:
+            errs.append(
+                f"SIKV-I006 page {p} is mapped and not staged but has "
+                f"no current host copy — its payload exists nowhere")
+
+
+def _check_staging(v: ProtocolView, errs: List[str]) -> None:
+    st = v.staging
+    if st is None:
+        return
+    pool = v.pool
+    slots_used: Dict[int, int] = {}
+    for page, slot in st._slot.items():
+        if slot in slots_used:
+            errs.append(f"SIKV-I007 staging slot {slot} mapped by pages "
+                        f"{slots_used[slot]} AND {page}")
+        slots_used[slot] = page
+        if not (0 <= slot < st.num_slots):
+            errs.append(f"SIKV-I007 page {page} mapped to out-of-range "
+                        f"staging slot {slot}")
+        if pool.refcount[page] == 0:
+            errs.append(f"SIKV-I007 freed page {page} resident in "
+                        f"staging slot {slot}")
+    for page in st._pinned:
+        if page not in st._slot:
+            errs.append(f"SIKV-I007 pin refcount on non-resident "
+                        f"page {page}")
+    for page in st._dirty:
+        if page not in st._slot:
+            errs.append(f"SIKV-I007 dirty bit on non-resident page {page}")
+    for page in st._lru:
+        if page not in st._slot:
+            errs.append(f"SIKV-I007 LRU entry for non-resident page {page}")
+        if page in st._pinned:
+            errs.append(f"SIKV-I007 page {page} both pinned and on the "
+                        f"eviction LRU")
+    if st.free_slots + st.resident_pages != st.num_slots:
+        errs.append(
+            f"SIKV-I007 slot accounting: {st.free_slots} free + "
+            f"{st.resident_pages} resident != {st.num_slots} slots")
+    if set(st._free) & set(slots_used):
+        errs.append(f"SIKV-I007 slots both free and mapped: "
+                    f"{sorted(set(st._free) & set(slots_used))}")
+    for s, wp in enumerate(v.write_pages):
+        if wp is None:
+            continue
+        if st.slot_of(wp) is None:
+            errs.append(f"SIKV-I007 slot {s} write page {wp} is not "
+                        f"staged — its appends would be dropped")
+        elif wp not in st._pinned:
+            errs.append(f"SIKV-I007 slot {s} write page {wp} is not "
+                        f"pinned — eviction could demote a live writer")
+
+
+def _check_lane(v: ProtocolView, errs: List[str]) -> None:
+    for p in v.lane:
+        if v.pool.refcount[p] == 0:
+            errs.append(f"SIKV-I008 freed page {p} in the prefetch lane "
+                        f"(stale lane: a reallocation would alias it)")
+            continue
+        if v.host is not None and p not in v.host.valid:
+            errs.append(f"SIKV-I008 lane page {p} has no valid host "
+                        f"copy — the lane holds garbage")
+
+
+def _check_block_table(v: ProtocolView, errs: List[str]) -> None:
+    bt = v.block_table
+    if bt is None:
+        return
+    active = set(v._slot_pages)
+    for s, row in enumerate(bt):
+        pages = v._slot_pages.get(s, [])
+        if s == v.pending_slot:
+            # the insert writes the row at admit_finish; until then the
+            # device row is still clear even though pages are bound
+            pages = []
+        for j, entry in enumerate(row):
+            want = pages[j] if j < len(pages) else -1
+            if entry == want:
+                continue
+            if s not in active and entry != -1:
+                errs.append(
+                    f"SIKV-I001 dead slot {s} block-table[{j}] still "
+                    f"maps page {entry} (refcount "
+                    f"{v.pool.refcount[entry]}) — retire must unmap "
+                    f"before its appends land in a re-allocated page")
+            else:
+                errs.append(
+                    f"SIKV-I001 slot {s} block-table[{j}] = {entry} but "
+                    f"the slot owns {want} "
+                    f"(pages {pages})")
+
+
+def _check_payload_map(v: ProtocolView, errs: List[str]) -> None:
+    pm = v.payload_map
+    if pm is None or v.staging is None:
+        return
+    for p, slot in enumerate(pm):
+        real = v.staging.slot_of(p)
+        want = -1 if real is None else real
+        if slot != want:
+            errs.append(
+                f"SIKV-I010 payload_map[{p}] = {slot} but the staging "
+                f"cache has {real!r} — a stale map entry serves another "
+                f"page's payload bytes")
+
+
+def _check_snapshot(v: ProtocolView, errs: List[str]) -> None:
+    from repro.analysis.protocol import spec as spec_mod
+    snap = v.pool.snapshot(detail=True)
+    pages = snap.get("pages")
+    if pages is None:
+        return
+    for p in range(v.pool.num_pages):
+        want = spec_mod.page_label(
+            p, pool=v.pool, staging=v.staging, host=v.host, lane=v.lane,
+            pending_pages=v.pending_pages)
+        got = pages.get(p)
+        if want == spec_mod.FREE:
+            if got is not None:
+                errs.append(f"SIKV-I009 snapshot reports freed page {p} "
+                            f"as {got!r}")
+        elif got is None or not got.startswith(want):
+            errs.append(f"SIKV-I009 snapshot reports page {p} as "
+                        f"{got!r}, spec derives {want!r}")
+
+
+def check_view(view: ProtocolView, *, snapshot: bool = True) -> List[str]:
+    """Run every invariant; returns findings (empty = clean).  Set
+    ``snapshot=False`` on pools whose ``page_detail`` hook is not wired
+    (plain unit-test pools) to skip the I009 agreement check."""
+    errs: List[str] = []
+    _check_refcounts(view, errs)
+    _check_reservations(view, errs)
+    _check_freed_aliases(view, errs)
+    _check_tiers(view, errs)
+    _check_staging(view, errs)
+    _check_lane(view, errs)
+    _check_block_table(view, errs)
+    _check_payload_map(view, errs)
+    if snapshot:
+        _check_snapshot(view, errs)
+    return errs
+
+
+def check_pair(pool, slots, **kw) -> List[str]:
+    """Convenience wrapper for the engines' runtime guard."""
+    return check_view(ProtocolView(pool=pool, slots=slots, **kw))

@@ -1,0 +1,181 @@
+"""Static AST ordering lint over the page-lifecycle handler code.
+
+The explorer catches ordering bugs dynamically; these rules catch the
+same three historical bug classes at lint time, directly in the handler
+source, so a regression fails ``scripts/sikv_lint.py --protocol`` before
+any test runs:
+
+* **SIKV-P001 — unmap before free.**  A function that both unmaps
+  block-table entries (``_clear_row`` / ``set_block(..., -1)``) and
+  releases pages (``pool.release`` / ``release_slot``) must issue the
+  unmap FIRST: a freed page left mapped absorbs the dead slot's appends
+  after reallocation (``SlotPageManager.truncate`` documents the
+  contract; the original ``retire`` violated it).
+* **SIKV-P002 — re-credit before release.**  When a rollback returns
+  pages to the pool AND re-credits the slot's admission reservation, the
+  ``reserve`` must precede the ``release`` of the same pages — between a
+  release and a late re-credit, ``pool.available`` over-reports and a
+  competing admission can double-book the page.
+* **SIKV-P003 — finalize before commit.**  In the chunked-admission
+  step, ``self._finalize`` must run before any ``self._caches``
+  commit: if finalize raises after the merged decode committed, live
+  requests have consumed a token their caches no longer reflect.
+
+Rules are heuristic but scoped to the protocol modules
+(``PROTOCOL_MODULES``) where the vocabulary is unambiguous; waive a
+deliberate exception with ``# lint: allow[SIKV-P00N] reason`` on the
+flagged line, like the L-rules.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Set
+
+from repro.analysis.ast_rules import _ALLOW_RE, Finding
+
+ORDERING_RULES = {
+    "SIKV-P001": "page release precedes its block-table unmap",
+    "SIKV-P002": "reservation released before the re-credit",
+    "SIKV-P003": "cache commit before the admission finalize",
+}
+
+# the modules whose functions speak the page-lifecycle vocabulary; the
+# call-name heuristics below are only unambiguous inside them
+PROTOCOL_MODULES = (
+    "repro/paged/pool.py",
+    "repro/serving/engine.py",
+    "repro/serving/paged_engine.py",
+    "repro/serving/tiered_engine.py",
+    "repro/tiered/staging.py",
+)
+
+_FREE_ATTRS = {"release", "release_slot"}
+_UNMAP_ATTRS = {"_clear_row", "clear_row"}
+_SET_BLOCK_ATTRS = {"_set_block", "set_block"}
+
+
+def _attr_of(call: ast.Call) -> Optional[str]:
+    return call.func.attr if isinstance(call.func, ast.Attribute) else None
+
+
+def _is_unmap(call: ast.Call) -> bool:
+    attr = _attr_of(call)
+    if attr in _UNMAP_ATTRS:
+        return True
+    if attr in _SET_BLOCK_ATTRS and len(call.args) >= 3:
+        a = call.args[2]
+        return (isinstance(a, ast.UnaryOp) and isinstance(a.op, ast.USub)
+                and isinstance(a.operand, ast.Constant)
+                and a.operand.value == 1) \
+            or (isinstance(a, ast.Constant) and a.value == -1)
+    return False
+
+
+def _pos_arg_names(call: ast.Call) -> Set[str]:
+    """Names reachable from POSITIONAL arguments only — keyword args
+    (``owner=slot`` tags) carry no page list and would false-positive."""
+    out: Set[str] = set()
+    for a in call.args:
+        for n in ast.walk(a):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+class _OrderingLinter(ast.NodeVisitor):
+    def __init__(self, path: str, lines: List[str]):
+        self.path = path
+        self.lines = lines
+        self.findings: List[Finding] = []
+
+    def _emit(self, rule: str, line: int, msg: str) -> None:
+        if 1 <= line <= len(self.lines):
+            m = _ALLOW_RE.search(self.lines[line - 1])
+            if m and ("SIKV-" + m.group(1)) == rule:
+                return
+        self.findings.append(Finding(rule, self.path, line, msg))
+
+    def _visit_fn(self, node) -> None:
+        calls = [n for n in ast.walk(node) if isinstance(n, ast.Call)]
+        frees = [c for c in calls if _attr_of(c) in _FREE_ATTRS]
+        unmaps = [c for c in calls if _is_unmap(c)]
+        reserves = [c for c in calls if _attr_of(c) == "reserve"]
+        finalizes = [c for c in calls if _attr_of(c) == "_finalize"]
+
+        # P001: a function that does both must unmap first
+        if frees and unmaps:
+            first_free = min(frees, key=lambda c: c.lineno)
+            if not any(u.lineno < first_free.lineno for u in unmaps):
+                self._emit(
+                    "SIKV-P001", first_free.lineno,
+                    f"`{node.name}` releases pages before unmapping their "
+                    f"block-table entries (unmap at line "
+                    f"{min(u.lineno for u in unmaps)}): a freed page left "
+                    f"mapped absorbs dead appends after reallocation")
+
+        # P002: release of X before a reserve re-crediting X
+        for fr in frees:
+            names = _pos_arg_names(fr)
+            if not names:
+                continue
+            for rs in reserves:
+                if rs.lineno > fr.lineno and names & _pos_arg_names(rs):
+                    self._emit(
+                        "SIKV-P002", fr.lineno,
+                        f"`{node.name}` releases "
+                        f"{sorted(names & _pos_arg_names(rs))} at line "
+                        f"{fr.lineno} but re-credits the reservation only "
+                        f"at line {rs.lineno}: in between, "
+                        f"pool.available over-reports and an admission "
+                        f"can double-book the page")
+                    break
+
+        # P003: self._caches committed before the finalize call
+        if finalizes:
+            first_fin = min(c.lineno for c in finalizes)
+            for n in ast.walk(node):
+                if isinstance(n, ast.Assign) and n.lineno < first_fin:
+                    for t in n.targets:
+                        if (isinstance(t, ast.Attribute)
+                                and t.attr == "_caches"
+                                and isinstance(t.value, ast.Name)
+                                and t.value.id == "self"):
+                            self._emit(
+                                "SIKV-P003", n.lineno,
+                                f"`{node.name}` commits self._caches at "
+                                f"line {n.lineno}, before the _finalize "
+                                f"call at line {first_fin}: a finalize "
+                                f"failure would strand the committed "
+                                f"decode")
+
+        # nested defs get their own visit
+        self.generic_visit(node)
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_fn
+
+
+def lint_protocol_source(src: str, rel_path: str) -> List[Finding]:
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("SIKV-P000", rel_path, e.lineno or 1,
+                        f"syntax error: {e.msg}")]
+    linter = _OrderingLinter(rel_path, src.splitlines())
+    linter.visit(tree)
+    return sorted(linter.findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def run_protocol_lint(src_root: Optional[Path] = None) -> List[Finding]:
+    """Lint every protocol module under ``src_root`` (defaults to the
+    repo's ``src/``)."""
+    if src_root is None:
+        src_root = Path(__file__).resolve().parents[3]
+    findings: List[Finding] = []
+    for rel in PROTOCOL_MODULES:
+        path = src_root / rel
+        if not path.exists():
+            continue
+        findings.extend(
+            lint_protocol_source(path.read_text(), rel))
+    return findings

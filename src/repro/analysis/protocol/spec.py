@@ -1,0 +1,178 @@
+"""Executable typestate spec of the page lifecycle (DESIGN.md §9).
+
+Every pool page is, at any *event boundary* (between scheduler-level
+events), in exactly one base state:
+
+* ``free``          — refcount 0, on the free list; no other structure
+                      may reference the id (invariant SIKV-I004);
+* ``reserved``      — allocated to a pending admission (``admit_start``
+                      ran, the insert has not): mapped host-side, but the
+                      payload exists nowhere yet — block-table row and
+                      host-valid checks exempt it until ``admit_finish``;
+* ``mapped``        — single-tier pools: refcount > 0, payload in the
+                      device pool (no tier split);
+* ``host-current``  — tiered: mapped, payload only in the host store
+                      (``host.valid``), sign-code index device-resident;
+* ``staged-clean``  — tiered: payload occupies a device staging slot AND
+                      the host copy is current (admitted tail, lane
+                      commit, post-writeback);
+* ``staged-dirty``  — tiered: staged with appends the host has not seen;
+                      demotion of this state obliges a writeback first;
+* ``lane``          — tiered: payload sitting in the prefetch lane
+                      (dispatched, not yet committed).  The lane is
+                      filled and consumed within one decode/spec event,
+                      so this state is only observable at the mid-event
+                      probe the harness runs right after dispatch.
+
+Pinning (a live slot's write page / spec-window page) and CoW sharing
+(refcount > 1) are orthogonal *attributes* constrained by the
+invariants (pinned ⟹ staged, shared pages never written in place);
+folding them into the base state would square the table for no checking
+power.
+
+``TRANSITIONS`` is the legal relation per event: ``observe`` derives
+every page's label from the REAL structures after an event and flags
+any (before, after) pair the event does not allow (SIKV-T001).  The
+self-transition (label unchanged) is always legal.
+"""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+FREE = "free"
+RESERVED = "reserved"
+MAPPED = "mapped"
+HOST = "host-current"
+STAGED_CLEAN = "staged-clean"
+STAGED_DIRTY = "staged-dirty"
+LANE = "lane"
+
+STATES = (FREE, RESERVED, MAPPED, HOST, STAGED_CLEAN, STAGED_DIRTY, LANE)
+
+# scheduler-level events (the explorer's alphabet; prefetch dispatch and
+# lane commit are sub-steps of decode/spec, exactly as in the engine)
+EVENTS = ("admit_start", "admit_finish", "admit_hit", "admit_cancel",
+          "decode", "spec", "retire", "pressure", "demote")
+
+# any event that allocates (registry eviction under pressure) or
+# releases pages can free a mapped page in ANY payload placement — a
+# freed lane page is force-cleared, a freed staged page drops its slot
+# without writeback, and dirty content is discarded (it is dead)
+_FREEABLE = (MAPPED, HOST, STAGED_CLEAN, STAGED_DIRTY, LANE)
+_TO_FREE = frozenset((s, FREE) for s in _FREEABLE)
+
+TRANSITIONS: Dict[str, FrozenSet[Tuple[str, str]]] = {
+    # prompt pages allocated + reserved; the allocation may evict LRU
+    # registry entries whose pages then free — or get REALLOCATED to
+    # this very admission within the same event, so the endpoint pair
+    # skips FREE (any registry placement -> reserved; never lane, since
+    # lane pages always belong to a live slot and freeing force-clears)
+    "admit_start": frozenset({(FREE, RESERVED)})
+    | frozenset((s, RESERVED)
+                for s in (MAPPED, HOST, STAGED_CLEAN, STAGED_DIRTY))
+    | _TO_FREE,
+    # insert: body offloaded host-side (single-tier: into the device
+    # pool), tail staged clean+pinned; the tail's staging acquire can
+    # demote a cold page, and register_prefix can evict an LRU entry
+    "admit_finish": frozenset({(RESERVED, HOST), (RESERVED, STAGED_CLEAN),
+                               (RESERVED, MAPPED),
+                               (STAGED_CLEAN, HOST),
+                               (STAGED_DIRTY, HOST)}) | _TO_FREE,
+    # prefix hit: pure sharing (refcount attribute); no page moves
+    "admit_hit": frozenset(),
+    # the pending pages (refcount 1 by construction) release
+    "admit_cancel": frozenset({(RESERVED, FREE)}),
+    # one append: fresh boundary/CoW pages stage dirty, a re-opened
+    # host-tier write page fetches + dirties, the admitted-clean tail
+    # dirties on first write, staging pressure demotes cold pages,
+    # prefetch dispatches host pages into the lane and the commit
+    # promotes (or abandons) them, and any boundary allocation can evict
+    # registry entries
+    "decode": frozenset({(FREE, MAPPED), (FREE, STAGED_DIRTY),
+                         (HOST, STAGED_DIRTY),
+                         (STAGED_CLEAN, STAGED_DIRTY),
+                         (STAGED_CLEAN, HOST), (STAGED_DIRTY, HOST),
+                         (HOST, LANE), (LANE, STAGED_CLEAN),
+                         (LANE, HOST)}) | _TO_FREE,
+    # verify window prep is a multi-position decode prep; rollback
+    # truncates the rejected tail (dirty pages DISCARDED, never written
+    # back — already covered by staged-dirty -> free)
+    "spec": frozenset({(FREE, MAPPED), (FREE, STAGED_DIRTY),
+                       (HOST, STAGED_DIRTY),
+                       (STAGED_CLEAN, STAGED_DIRTY),
+                       (STAGED_CLEAN, HOST), (STAGED_DIRTY, HOST),
+                       (HOST, LANE), (LANE, STAGED_CLEAN),
+                       (LANE, HOST)}) | _TO_FREE,
+    # slot references drop; pages with no other sharer free (dirty
+    # content discarded), registry-shared pages merely lose a reference
+    "retire": _TO_FREE,
+    # queue-head pressure: dirty cold pages write back IN PLACE
+    "pressure": frozenset({(STAGED_DIRTY, STAGED_CLEAN)}),
+    # explicit demotion (LRU eviction): writeback first when dirty
+    "demote": frozenset({(STAGED_CLEAN, HOST), (STAGED_DIRTY, HOST)}),
+}
+
+
+def page_label(page: int, *, pool, staging=None, host=None,
+               lane: Sequence[int] = (),
+               pending_pages: Sequence[int] = ()) -> str:
+    """Base lifecycle state of ``page``, derived from the real
+    structures (the one-page version of what the snapshot reports)."""
+    if pool.refcount[page] == 0:
+        return FREE
+    if page in pending_pages:
+        return RESERVED
+    if staging is None:
+        return MAPPED
+    if staging.slot_of(page) is not None:
+        return STAGED_DIRTY if staging.is_dirty(page) else STAGED_CLEAN
+    if page in lane:
+        return LANE
+    return HOST
+
+
+class ProtocolSpec:
+    """Transition observer: label every page after each event and check
+    the (before, after) pair against ``TRANSITIONS`` (SIKV-T001)."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._prev: Optional[List[str]] = None
+
+    def labels(self, view) -> List[str]:
+        return [page_label(p, pool=view.pool, staging=view.staging,
+                           host=view.host, lane=view.lane,
+                           pending_pages=view.pending_pages)
+                for p in range(self.num_pages)]
+
+    def observe(self, event: str, view) -> List[str]:
+        """Record the post-``event`` state; returns SIKV-T001 findings
+        for any page whose transition the event does not permit."""
+        cur = self.labels(view)
+        errs: List[str] = []
+        if self._prev is not None:
+            allowed = TRANSITIONS.get(event)
+            if allowed is None:
+                errs.append(f"SIKV-T001 unknown event {event!r} — "
+                            f"spec covers {sorted(TRANSITIONS)}")
+                allowed = frozenset()
+            for p, (a, b) in enumerate(zip(self._prev, cur)):
+                if a != b and (a, b) not in allowed:
+                    errs.append(
+                        f"SIKV-T001 page {p}: illegal transition "
+                        f"{a} -> {b} under event {event!r} (legal: "
+                        f"{sorted(t for t in allowed if t[0] == a) or 'none from this state'})")
+        self._prev = cur
+        return errs
+
+
+def render_transition_table() -> str:
+    """Markdown transition table (the DESIGN.md §9 figure is generated
+    from this, so spec and doc cannot drift)."""
+    lines = ["| event | legal transitions (besides identity) |",
+             "|---|---|"]
+    for ev in EVENTS:
+        ts = sorted(TRANSITIONS[ev])
+        cell = "; ".join(f"{a} → {b}" for a, b in ts) or "—"
+        lines.append(f"| `{ev}` | {cell} |")
+    return "\n".join(lines)

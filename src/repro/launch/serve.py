@@ -74,7 +74,8 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           prefetch_depth: int | None = None,
           prefill_chunk: int | None = None,
           spec_depth: int | None = None, spec_draft_k: int | None = None,
-          metrics_json: str | None = None, trace: str | None = None):
+          metrics_json: str | None = None, trace: str | None = None,
+          check_invariants: bool = False):
     if metrics_json is not None or trace is not None:
         # flip BEFORE building anything: engines/schedulers bind their
         # metric and tracer handles at construction time
@@ -115,7 +116,7 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
                                batch_size=batch, prompt_len=prompt_len,
                                max_new_tokens=max_new,
                                prefill_chunk=prefill_chunk, **spec)
-    sched = RequestScheduler(engine)
+    sched = RequestScheduler(engine, check_invariants=check_invariants)
     prompts = lm_sequence_batch(jax.random.PRNGKey(seed + 1), n_requests,
                                 prompt_len, cfg.vocab_size)
     for i in range(n_requests):
@@ -212,6 +213,11 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="enable the step tracer and write a Chrome "
                          "trace-event JSON to PATH (open in Perfetto)")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="run the page-protocol cross-structure checks "
+                         "(SIKV-I rules, DESIGN.md §9) at every scheduler "
+                         "step boundary and fail fast on a violation; "
+                         "host-side only — jitted programs unchanged")
     args = ap.parse_args()
     serve(args.arch, method=args.method, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new,
@@ -221,7 +227,8 @@ def main() -> None:
           prefetch_depth=args.prefetch_depth,
           prefill_chunk=args.prefill_chunk,
           spec_depth=args.spec_depth, spec_draft_k=args.spec_draft_k,
-          metrics_json=args.metrics_json, trace=args.trace)
+          metrics_json=args.metrics_json, trace=args.trace,
+          check_invariants=args.check_invariants)
 
 
 if __name__ == "__main__":

@@ -90,8 +90,17 @@ class PagePool:
         self._registry_pages: set = set()
         # admission reservations: pages promised to admitted slots that will
         # be drawn lazily during decode.  Without this, admission control
-        # could promise the same free page to two slots.
+        # could promise the same free page to two slots.  ``reservations``
+        # is the per-owner ledger behind the total: SlotPageManager passes
+        # its slot index, so snapshots (and the SIKV-I003 balance check)
+        # can say WHO holds each promised page, not just how many.
         self.reserved: int = 0
+        self.reservations: Dict[Any, int] = {}
+        # optional per-page annotation hook (tiered engines / the protocol
+        # harness set it) consulted by ``page_state``: returns extra detail
+        # for a mapped page ("staged-dirty+pinned", "lane", ...) beyond
+        # what the pool's own tier map knows
+        self.page_detail: Optional[Callable[[int], Optional[str]]] = None
         self.stats: Dict[str, int] = {
             "allocated": 0, "freed": 0, "evictions": 0, "prefix_hits": 0,
         }
@@ -116,11 +125,19 @@ class PagePool:
         so a single live writer may append in place; see SlotPageManager)."""
         return self.refcount[page] - (1 if page in self._registry_pages else 0)
 
-    def reserve(self, n: int) -> None:
+    def reserve(self, n: int, owner: Any = None) -> None:
         self.reserved += n
+        if n:
+            self.reservations[owner] = self.reservations.get(owner, 0) + n
 
-    def unreserve(self, n: int) -> None:
+    def unreserve(self, n: int, owner: Any = None) -> None:
         self.reserved = max(0, self.reserved - n)
+        if n and owner in self.reservations:
+            left = self.reservations[owner] - n
+            if left > 0:
+                self.reservations[owner] = left
+            else:
+                del self.reservations[owner]
 
     def available(self, protect: Optional[Tuple[int, ...]] = None) -> int:
         """Pages obtainable for a NEW admission: free + freeable by evicting
@@ -142,7 +159,7 @@ class PagePool:
             raise PoolExhausted(
                 f"need {n} pages, {len(self._free)} free of "
                 f"{self.num_pages} (and nothing left to evict); "
-                f"pool snapshot: {self.snapshot()}")
+                f"pool snapshot: {self.snapshot(detail=True)}")
         ids = [self._free.pop() for _ in range(n)]
         for p in ids:
             self.refcount[p] = 1
@@ -217,15 +234,53 @@ class PagePool:
                 return True
         return False
 
-    def snapshot(self) -> Dict[str, int]:
-        snap = dict(self.stats, num_pages=self.num_pages,
-                    free=len(self._free), reserved=self.reserved,
-                    in_use=self.num_pages - len(self._free),
-                    registered_prompts=len(self.registry),
-                    registry_state_bytes=sum(
-                        e.state_bytes for e in self.registry.values()))
+    def page_state(self, page: int) -> Optional[str]:
+        """Lifecycle label for one page: ``None`` when free, otherwise the
+        ``page_detail`` hook's answer (tiered residency: staged-clean,
+        staged-dirty+pinned, lane, host-current, reserved...) or the tier
+        map / plain "mapped", suffixed with the sharing attributes the pool
+        itself knows (``+registry`` hold, ``+sharedN`` for CoW refs)."""
+        if self.refcount[page] == 0:
+            return None
+        label = None
+        if self.page_detail is not None:
+            label = self.page_detail(page)
+        if label is None:
+            label = self.tier[page] or "mapped"
+        if page in self._registry_pages:
+            label += "+registry"
+        live = self.live_refs(page)
+        if live > 1:
+            label += f"+shared{live}"
+        return label
+
+    def snapshot(self, detail: bool = False) -> Dict[str, Any]:
+        """Allocator state dump.  Always aggregates per-state page counts
+        and the reservation ledger; ``detail=True`` adds the per-page map
+        (``PoolExhausted`` and protocol-checker failures print that form,
+        so "which page is stuck where" is in the message, not a debugger
+        session away)."""
+        snap: Dict[str, Any] = dict(
+            self.stats, num_pages=self.num_pages,
+            free=len(self._free), reserved=self.reserved,
+            in_use=self.num_pages - len(self._free),
+            registered_prompts=len(self.registry),
+            registry_state_bytes=sum(
+                e.state_bytes for e in self.registry.values()))
         for tier, n in self.tier_counts().items():
             snap[f"{tier}_payload_pages"] = n
+        states: Dict[str, int] = {}
+        pages: Dict[int, str] = {}
+        for p in range(self.num_pages):
+            label = self.page_state(p)
+            if label is None:
+                continue
+            states[label] = states.get(label, 0) + 1
+            pages[p] = label
+        snap["page_states"] = states
+        snap["reservation_ledger"] = dict(self.reservations)
+        if detail:
+            snap["pages"] = pages
         return snap
 
 
@@ -302,21 +357,21 @@ class SlotPageManager:
         self.release_slot(slot)
         self._slots[slot] = _SlotPages(list(page_ids))
         self._resv[slot] = reserved
-        self.pool.reserve(reserved)
+        self.pool.reserve(reserved, owner=slot)
 
     def release_slot(self, slot: int) -> None:
         s = self._slots[slot]
         if s is not None:
             self.pool.release(s.pages)
             self._slots[slot] = None
-        self.pool.unreserve(self._resv[slot])
+        self.pool.unreserve(self._resv[slot], owner=slot)
         self._resv[slot] = 0
 
     def _take_page(self, slot: int) -> int:
         pid = self.pool.allocate(1)[0]
         if self._resv[slot] > 0:
             self._resv[slot] -= 1
-            self.pool.unreserve(1)
+            self.pool.unreserve(1, owner=slot)
         if self.on_alloc is not None:
             self.on_alloc(slot, pid)
         return pid
@@ -344,7 +399,7 @@ class SlotPageManager:
         for j in range(n_keep, n_keep + len(released)):
             self._set_block(slot, j, -1)
         self._resv[slot] += len(released)
-        self.pool.reserve(len(released))
+        self.pool.reserve(len(released), owner=slot)
         self.pool.release(released)
         return released
 

@@ -320,6 +320,14 @@ class ServingEngine:
         scheduler step either way)."""
         return False
 
+    def check_protocol_invariants(self) -> List[str]:
+        """Cross-structure page-protocol findings (DESIGN.md §9), empty
+        when consistent.  The dense engine has no page structures; paged
+        subclasses run the SIKV-I checks over their live pool state.
+        Host-side only — the scheduler calls this at step boundaries
+        under ``--check-invariants``, and no jitted program changes."""
+        return []
+
     # -- two-phase admission -------------------------------------------
 
     @property

@@ -122,6 +122,7 @@ class PagedServingEngine(ServingEngine):
         self.prefix_caching = prefix_caching
         self.pool = PagePool(self.num_pages, page_size,
                              max_prompts=max_cached_prompts)
+        self.pool.page_detail = self._page_detail
         self.slots = SlotPageManager(
             self.pool, self.pages_per_seq, batch_size,
             set_block=self._set_block, copy_page=self._copy_page)
@@ -140,6 +141,27 @@ class PagedServingEngine(ServingEngine):
         """Total jitted program launches, including the paged memory
         manager's own (inserts, set_block, CoW copies, clear_row)."""
         return super().invocations() + self.stats["aux_launches"]
+
+    # -- protocol checker hooks ------------------------------------------
+
+    def _page_detail(self, page: int) -> Optional[str]:
+        """Per-page lifecycle annotation for ``pool.snapshot()`` (the
+        tiered subclass adds staging/lane residency)."""
+        p = self._pending
+        if p is not None and page in (p.get("pages") or ()):
+            return "reserved"
+        return None
+
+    def check_protocol_invariants(self) -> List[str]:
+        # imported lazily: repro.analysis.__init__ pulls the jaxpr audit,
+        # which imports the engines — a module-level import would cycle
+        from repro.analysis.protocol.invariants import (ProtocolView,
+                                                        check_view)
+        p = self._pending or {}
+        return check_view(ProtocolView(
+            pool=self.pool, slots=self.slots,
+            pending_slot=p.get("slot"),
+            pending_pages=tuple(p.get("pages") or ())))
 
     # -- device callbacks for the host-side page manager ----------------
 
@@ -400,16 +422,19 @@ class PagedServingEngine(ServingEngine):
             self.slots.truncate(s, keep)
 
     def retire(self, slot: int) -> None:
-        """Release the slot's page references AND unmap its block-table
-        row: the dead slot keeps flowing through the jitted step (static
-        shapes) and its device-side length keeps advancing, so without the
-        unmap its appends would scatter into freed — possibly
-        re-allocated — pages and corrupt live requests."""
-        self.slots.release_slot(slot)
+        """Unmap the slot's block-table row, THEN release its page
+        references: the dead slot keeps flowing through the jitted step
+        (static shapes) and its device-side length keeps advancing, so a
+        row left mapped after the pages free would scatter appends into
+        freed — possibly re-allocated — pages and corrupt live requests.
+        Unmap-before-free is the ordering contract ``truncate`` documents
+        (SIKV-P001); releasing first opens a window where the freed ids
+        are still mapped."""
         if self._caches is not None:
             self._caches = self._clear_row(self._caches,
                                            jnp.asarray(slot, jnp.int32))
             self.obs.add("aux_launches")
+        self.slots.release_slot(slot)
         self._host_pos[slot] = self.capacity
         super().retire(slot)
 

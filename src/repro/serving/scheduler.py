@@ -127,6 +127,11 @@ class RequestScheduler:
     # errors retry (the request is re-queued at the head, never lost), a
     # deterministic failure must surface instead of spinning run() forever
     max_admit_retries: int = 2
+    # run the engine's page-protocol invariants (DESIGN.md §9) at every
+    # step boundary and raise on the first finding.  Host-side dict scans
+    # only — jitted programs and the launch budget are untouched — but
+    # off by default; overhead measured in benchmarks/bench_analysis.py
+    check_invariants: bool = False
     _admit_failures: Dict[int, int] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -340,6 +345,12 @@ class RequestScheduler:
         admitting: Optional[_Admission] = None
         while self.queue or admitting is not None \
                 or any(s.req is not None for s in slots):
+            if self.check_invariants:
+                findings = self.engine.check_protocol_invariants()
+                if findings:
+                    raise RuntimeError(
+                        "page-protocol invariant violation at a scheduler "
+                        "step boundary:\n" + "\n".join(findings))
             step_tokens = 0
             if admitting is None:
                 admitting, step_tokens = self._begin_admissions(slots)

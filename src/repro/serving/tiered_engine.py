@@ -190,6 +190,34 @@ class TieredServingEngine(PagedServingEngine):
         self._stage_fill = jax.jit(_tree_stage_fill)
         self.stats.update(demotions=0, pressure_writebacks=0)
 
+    # -- protocol checker hooks ------------------------------------------
+
+    def _page_detail(self, page: int) -> Optional[str]:
+        reserved = super()._page_detail(page)
+        if reserved is not None:
+            return reserved
+        if self.staging.slot_of(page) is not None:
+            label = ("staged-dirty" if self.staging.is_dirty(page)
+                     else "staged-clean")
+            pins = self.staging.pin_count(page)
+            return label + (f"+pinned{pins}" if pins else "")
+        if page in self._lane_live:
+            return "lane"
+        if page in self.host.valid:
+            return "host-current"
+        return None
+
+    def check_protocol_invariants(self) -> List[str]:
+        from repro.analysis.protocol.invariants import (ProtocolView,
+                                                        check_view)
+        p = self._pending or {}
+        return check_view(ProtocolView(
+            pool=self.pool, slots=self.slots, staging=self.staging,
+            host=self.host, lane=tuple(self._lane_live),
+            write_pages=tuple(self._write_page),
+            pending_slot=p.get("slot"),
+            pending_pages=tuple(p.get("pages") or ())))
+
     # -- tier bookkeeping ------------------------------------------------
 
     def _flush_map(self, pages: List[int], slots: List[int]) -> None:

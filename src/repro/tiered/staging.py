@@ -71,6 +71,9 @@ class StagingCache:
     def is_dirty(self, page: int) -> bool:
         return page in self._dirty
 
+    def pin_count(self, page: int) -> int:
+        return self._pinned.get(page, 0)
+
     @property
     def pinned_pages(self) -> int:
         return len(self._pinned)

@@ -1,0 +1,43 @@
+"""Hypothesis fuzz complement to the exhaustive protocol explorer
+(DESIGN.md §9): random event sequences LONGER than the exhaustive depth
+bound, on the same harness with the same per-event checks.  When a bug
+is introduced, hypothesis shrinks the failing choice list, so the replay
+is a short recipe just like the explorer's ``shrink_trace`` output."""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.analysis.protocol import (make_paged_harness,  # noqa: E402
+                                     make_tiered_harness)
+
+# each integer picks one of the currently-enabled events; 25 events is
+# ~3x the exhaustive smoke depth of the tiered harness
+_CHOICES = st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=25)
+
+
+def _drive(h, choices):
+    for c in choices:
+        evs = h.enabled_events()
+        if not evs:
+            break
+        findings = h.apply(evs[c % len(evs)])
+        assert findings == [], findings
+
+
+@settings(max_examples=50, deadline=None)
+@given(_CHOICES)
+def test_fuzz_paged_random_traces_stay_clean(choices):
+    _drive(make_paged_harness(), choices)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_CHOICES)
+def test_fuzz_tiered_random_traces_stay_clean(choices):
+    _drive(make_tiered_harness(), choices)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_CHOICES)
+def test_fuzz_spec_random_traces_stay_clean(choices):
+    _drive(make_tiered_harness(spec=True), choices)
