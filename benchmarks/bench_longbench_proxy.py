@@ -29,6 +29,7 @@ def run(budget: int = 160, L: int = 4096, trials: int = 3) -> None:
                      recent_window=16, obs_window=32)
     errs = {m: [] for m in METHODS}
     recalls = {m: [] for m in METHODS}
+    audits = []          # shared-definition (recall, coverage) per trial
     import dataclasses
     cfg16 = dataclasses.replace(cfg, key_bits=8, value_bits=8)
     for t in range(trials):
@@ -90,11 +91,22 @@ def run(budget: int = 160, L: int = 4096, trials: int = 3) -> None:
                         & set(np.asarray(ie[b, h]).tolist())) / budget
                     for b in range(B) for h in range(Hkv)])
                 recalls[m].append(rec)
+                # same recall/coverage definition the ONLINE audit plane
+                # samples in production (DESIGN.md §10) — the offline
+                # table and the serving telemetry must agree on what
+                # "retrieval quality" means
+                from repro.core.attention import sikv_static_audit_metrics
+                am = sikv_static_audit_metrics(q, cache, cfg, topk=budget)
+                audits.append((float(jnp.mean(am["recall"])),
+                               float(jnp.mean(am["coverage"]))))
     for m in METHODS:
         mse = float(np.mean(errs[m]))
         extra = f"output_mse={mse:.5f}"
         if recalls[m]:
             extra += f";recall@{budget}={np.mean(recalls[m]):.3f}"
+        if m == "sikv" and audits:
+            extra += (f";audit_recall={np.mean([a[0] for a in audits]):.3f}"
+                      f";audit_coverage={np.mean([a[1] for a in audits]):.3f}")
         emit(f"longbench_proxy/{m}", 0.0, extra)
     # ordering claim from Table 1 under query drift: self-indexing
     # *selection* (sikv16 isolates it from payload quantization, matching

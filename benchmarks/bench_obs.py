@@ -20,6 +20,11 @@ The analytic bound is used instead of differencing two wall-clock runs
 because at these shapes the run-to-run jitter of jitted-program
 dispatch (>5%) would drown a sub-2% effect; the no-op cost itself is
 measured, not modeled.
+
+A fourth run serves the same workload with the retrieval-quality audit
+probe sampling every 16th decode step (DESIGN.md §10) and asserts the
+audited wall time stays within a small factor of the unaudited run —
+the sampled probe must stay cheap enough to leave on in production.
 """
 from __future__ import annotations
 
@@ -54,11 +59,12 @@ def _noop_cost_us(iters: int = 200_000) -> float:
 
 
 def _serve_once(params, cfg, sikv, *, batch, prompt_len, max_new,
-                n_requests) -> float:
-    """One continuous-batching flush; returns wall seconds."""
+                n_requests, audit_every=None, out=None) -> float:
+    """One continuous-batching flush; returns wall seconds.  ``out``
+    (a dict) receives the engine's launch stats when passed."""
     eng = ServingEngine(params, cfg, sikv, method="sikv",
                         batch_size=batch, prompt_len=prompt_len,
-                        max_new_tokens=max_new)
+                        max_new_tokens=max_new, audit_every=audit_every)
     sched = RequestScheduler(eng)
     toks = lm_sequence_batch(jax.random.PRNGKey(5), n_requests,
                              prompt_len, cfg.vocab_size)
@@ -68,7 +74,10 @@ def _serve_once(params, cfg, sikv, *, batch, prompt_len, max_new,
                              max_new_tokens=news[i % len(news)]))
     t0 = time.perf_counter()
     sched.run()
-    return time.perf_counter() - t0
+    dt = time.perf_counter() - t0
+    if out is not None:
+        out.update(eng.stats)
+    return dt
 
 
 def _count_observations() -> int:
@@ -125,6 +134,17 @@ def run(*, prompt_len: int = 32, max_new: int = 16, batch: int = 2,
         # 2x pad: gauge sets, handle loads, and CounterGroup dict upkeep
         # are invisible to the snapshot but cost about one no-op call each
         calls = 2 * (n_trace + n_metrics)
+
+        # sampled-audit run (DESIGN.md §10): every 16th decode step pays
+        # the exact-rescoring probe and the host-side histogram fold.
+        # First flush warms the probe's compile off the clock, like the
+        # disabled run's warm-up above.
+        obs.set_enabled(True, reset=True)
+        obs.set_tracer(obs.Tracer(capacity=1 << 20))
+        stats: dict = {}
+        _serve_once(params, cfg, sikv, audit_every=16, **shape)
+        w_audited = _serve_once(params, cfg, sikv, audit_every=16,
+                                out=stats, **shape)
     finally:
         reg._series.clear()
         reg._series.update(saved_series)
@@ -142,7 +162,22 @@ def run(*, prompt_len: int = 32, max_new: int = 16, batch: int = 2,
                  ceiling=True, smoke=smoke, smoke_relaxed=0.05,
                  detail=f"{calls} calls x {per_call_us:.4f}us over "
                         f"{w_disabled * 1e3:.1f}ms")
-    return {"overhead": overhead, "noop_us": per_call_us}
+    audit_factor = w_audited / w_disabled
+    emit("obs/serve_audited", w_audited * 1e6,
+         f"audit_every=16;audit_steps={stats.get('audit_steps', 0)};"
+         f"steps={stats.get('steps', 0)};"
+         f"audited_over_disabled={audit_factor:.3f}x;bar=2.0")
+    # the probe is roughly one extra decode-shaped launch per sampled
+    # step, so at 1/16 sampling the whole serve must stay well under 2x
+    # the unaudited wall time (smoke shapes: dispatch jitter dominates,
+    # relax to 3x)
+    assert_ratio("sampled-audit serving overhead (audit_every=16)",
+                 audit_factor, 2.0, ceiling=True, smoke=smoke,
+                 smoke_relaxed=3.0,
+                 detail=f"{stats.get('audit_steps', 0)} probes over "
+                        f"{stats.get('steps', 0)} steps")
+    return {"overhead": overhead, "noop_us": per_call_us,
+            "audit_factor": audit_factor}
 
 
 if __name__ == "__main__":

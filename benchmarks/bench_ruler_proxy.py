@@ -41,12 +41,22 @@ def run(L: int = 4096) -> None:
                          token_budget=budget, recent_window=16,
                          obs_window=32)
         row = []
+        audit = ""
         for m in METHODS:
             meth = get_method(m, cfg)
             cache = meth.prefill(k, v, q_obs, capacity=L + 8)
             out, _ = meth.decode(q, k_new, v_new, cache)
             mse = float(jnp.mean((out - ref) ** 2))
             row.append((m, mse))
+            if m == "sikv":
+                # shared definition with the online audit plane
+                # (DESIGN.md §10): sign-code top-k recall and softmax
+                # mass coverage at this sparsity ratio
+                from repro.core.attention import sikv_static_audit_metrics
+                am = sikv_static_audit_metrics(q, cache, cfg)
+                audit = (f";sikv_recall={float(jnp.mean(am['recall'])):.3f}"
+                         f";sikv_coverage="
+                         f"{float(jnp.mean(am['coverage'])):.3f}")
         # paper's "Ours (16 bits)" row: 1-bit index, (near-)full-precision
         # payload — isolates selection quality from quantization error
         cfg16 = dataclasses.replace(cfg, key_bits=8, value_bits=8)
@@ -54,5 +64,5 @@ def run(L: int = 4096) -> None:
         cache = meth.prefill(k, v, q_obs, capacity=L + 8)
         out, _ = meth.decode(q, k_new, v_new, cache)
         row.append(("sikv16", float(jnp.mean((out - ref) ** 2))))
-        derived = ";".join(f"{m}={mse:.5f}" for m, mse in row)
+        derived = ";".join(f"{m}={mse:.5f}" for m, mse in row) + audit
         emit(f"ruler_proxy/ratio={ratio}", 0.0, derived)

@@ -18,7 +18,6 @@ smoke job uploads them as artifacts.
 from __future__ import annotations
 
 import argparse
-import json
 import platform
 import sys
 
@@ -61,8 +60,9 @@ def main() -> None:
 
     from benchmarks import (bench_ablation, bench_analysis,
                             bench_longbench_proxy, bench_memory,
-                            bench_modules, bench_obs, bench_roofline,
-                            bench_ruler_proxy, bench_serving, bench_tt2t)
+                            bench_modules, bench_obs, bench_quality,
+                            bench_roofline, bench_ruler_proxy,
+                            bench_serving, bench_tt2t)
     if args.smoke:
         suites = [
             ("bench_memory", bench_memory.run),
@@ -71,6 +71,8 @@ def main() -> None:
                                        smoke=True)),
             # disabled-mode observability overhead bound (<2%)
             ("bench_obs", lambda: bench_obs.run(smoke=True)),
+            # online audit-plane recall/coverage floors (DESIGN.md §10)
+            ("bench_quality", lambda: bench_quality.run(smoke=True)),
             # audit census rows (no pallas-kernel trace at smoke shapes)
             ("bench_analysis", lambda: bench_analysis.run(smoke=True)),
         ]
@@ -83,6 +85,7 @@ def main() -> None:
             ("bench_tt2t", bench_tt2t.run),              # Table 3
             ("bench_ablation", bench_ablation.run),      # Table 5
             ("bench_serving", bench_serving.run),        # batching + paged
+            ("bench_quality", bench_quality.run),        # online audit floors
             ("bench_obs", bench_obs.run),                # obs overhead bound
             ("bench_roofline", bench_roofline.run),      # dry-run roofline
             ("bench_analysis", bench_analysis.run),      # §7 program census
@@ -113,13 +116,14 @@ def main() -> None:
             "failures": [{"suite": n, "error": e} for n, e in failures],
             "rows": RESULTS,
         }
-        with open(args.emit_json, "w") as f:
-            json.dump(payload, f, indent=1)
+        from repro.obs.export import write_json_atomic
+        write_json_atomic(args.emit_json, payload, indent=1)
         print(f"wrote {len(RESULTS)} rows -> {args.emit_json}")
     if args.metrics_json:
+        from repro.obs.export import write_json_atomic
         snap = obs.get_registry().snapshot()
-        with open(args.metrics_json, "w") as f:
-            json.dump({"schema": 1, "metrics": snap}, f, indent=1)
+        write_json_atomic(args.metrics_json,
+                          {"schema": 1, "metrics": snap}, indent=1)
         print(f"wrote {len(snap)} metric series -> {args.metrics_json}")
     if args.trace:
         n = obs.get_tracer().dump(args.trace)

@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Diff a fresh ``BENCH_serving.json`` against the committed baseline.
+
+The smoke bench writes its rows as structured JSON; the repo commits
+that file so the perf/quality trajectory is reviewable (CI artifacts
+age out, the committed file does not).  This script turns the committed
+file into an enforced contract: the CI smoke job regenerates the rows
+and fails when
+
+* a baseline row **disappears** (a suite silently stopped emitting it);
+* a **quality-like** derived field (recall/coverage/accept/hit rates,
+  overhead fractions) moves more than its absolute tolerance;
+* a **timing** row (``us_per_call``) slows down by more than a generous
+  factor — CI machines jitter wildly, so only order-of-magnitude cliffs
+  trip this.
+
+Intentional shifts are committed explicitly::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --emit-json fresh.json
+    python scripts/bench_diff.py --fresh fresh.json --refresh-baseline
+    git add BENCH_serving.json   # the diff IS the review surface
+
+Exit status: 0 clean, 1 regression (each violation printed with its
+row, field, baseline/fresh values and the tolerance applied).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import sys
+from typing import Dict, Tuple
+
+# derived fields holding bounded quality ratios (compared with an
+# ABSOLUTE tolerance; everything else in ``derived`` is informational)
+QUALITY_KEY = re.compile(
+    r"(recall|coverage|accept_rate|hit_rate|overhead_frac|divergence)")
+# default absolute tolerance for a quality field
+DEFAULT_ABS_TOL = 0.15
+# per-row overrides: (name regex, field regex) -> absolute tolerance.
+# First match wins; rows with inherently jittery small-sample stats get
+# wider bands.
+ABS_TOL_OVERRIDES: Tuple[Tuple[str, str, float], ...] = (
+    # staging hit rate at smoke shapes swings with scheduler interleaving
+    (r"^serving/tiered/", r"hit_rate", 0.25),
+    # online audit stats come from a handful of sampled steps
+    (r"^quality/", r".*", 0.25),
+    (r"^obs/serve_audited$", r".*", 0.25),
+    # accept rate is trained-draft dependent; smoke trains 60 steps
+    (r"^serving/spec/", r"accept_rate", 0.25),
+)
+# us_per_call slowdown factor that fails CI (generous: shared runners)
+TIME_FACTOR = 10.0
+# timing rows faster than this are dispatch noise, never compared
+MIN_BASELINE_US = 50.0
+
+
+def _abs_tol(name: str, field: str) -> float:
+    for name_re, field_re, tol in ABS_TOL_OVERRIDES:
+        if re.search(name_re, name) and re.search(field_re, field):
+            return tol
+    return DEFAULT_ABS_TOL
+
+
+def _rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {r["name"]: r for r in payload.get("rows", [])}
+    if not rows:
+        sys.exit(f"bench_diff: no rows in {path}")
+    return rows
+
+
+def diff(fresh_path: str, baseline_path: str) -> int:
+    fresh = _rows(fresh_path)
+    base = _rows(baseline_path)
+    violations = []
+    for name, brow in sorted(base.items()):
+        frow = fresh.get(name)
+        if frow is None:
+            violations.append(
+                f"MISSING ROW {name}: present in baseline, absent in "
+                f"fresh run (suite stopped emitting it?)")
+            continue
+        bd, fd = brow.get("derived", {}), frow.get("derived", {})
+        for field, bval in bd.items():
+            if not isinstance(bval, (int, float)) or isinstance(bval, bool):
+                continue
+            if not QUALITY_KEY.search(field):
+                continue
+            fval = fd.get(field)
+            if not isinstance(fval, (int, float)):
+                violations.append(
+                    f"MISSING FIELD {name}.{field}: baseline={bval}, "
+                    f"fresh row lacks it")
+                continue
+            tol = _abs_tol(name, field)
+            if abs(fval - bval) > tol:
+                violations.append(
+                    f"QUALITY {name}.{field}: baseline={bval:.4f} "
+                    f"fresh={fval:.4f} |delta|={abs(fval - bval):.4f} "
+                    f"> tol={tol}")
+        bus = float(brow.get("us_per_call", 0.0))
+        fus = float(frow.get("us_per_call", 0.0))
+        if bus >= MIN_BASELINE_US and fus > bus * TIME_FACTOR:
+            violations.append(
+                f"TIMING {name}: {bus:.1f}us -> {fus:.1f}us "
+                f"(> {TIME_FACTOR:.0f}x)")
+    new = sorted(set(fresh) - set(base))
+    if new:
+        print(f"bench_diff: {len(new)} new row(s) not in baseline "
+              f"(informational): {', '.join(new[:8])}"
+              + (" ..." if len(new) > 8 else ""))
+    if violations:
+        print(f"bench_diff: {len(violations)} regression(s) vs "
+              f"{baseline_path}:")
+        for v in violations:
+            print(f"  {v}")
+        print("If intentional, refresh the committed baseline:\n"
+              f"  python scripts/bench_diff.py --fresh {fresh_path} "
+              "--refresh-baseline\n  git add BENCH_serving.json")
+        return 1
+    print(f"bench_diff: OK — {len(base)} baseline rows matched "
+          f"({len(new)} new)")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default="BENCH_serving.json",
+                    help="freshly generated bench JSON")
+    ap.add_argument("--baseline", default="BENCH_serving.json",
+                    help="committed baseline (CI extracts HEAD's copy "
+                         "via 'git show HEAD:BENCH_serving.json')")
+    ap.add_argument("--refresh-baseline", action="store_true",
+                    help="copy --fresh over BENCH_serving.json instead "
+                         "of diffing (then commit the result)")
+    args = ap.parse_args()
+    if args.refresh_baseline:
+        _rows(args.fresh)  # validate before overwriting
+        shutil.copyfile(args.fresh, "BENCH_serving.json")
+        print(f"bench_diff: refreshed BENCH_serving.json from "
+              f"{args.fresh}")
+        return
+    if args.fresh == args.baseline:
+        sys.exit("bench_diff: --fresh and --baseline are the same file; "
+                 "pass the regenerated JSON as --fresh")
+    sys.exit(diff(args.fresh, args.baseline))
+
+
+if __name__ == "__main__":
+    main()

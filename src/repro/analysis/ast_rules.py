@@ -62,6 +62,7 @@ HOST_MODULES = (
     # the observability layer is host-side by design: its handles are
     # called from HOST modules, so a jax import here would defeat the rule
     "repro/obs/metrics.py", "repro/obs/trace.py", "repro/obs/timeline.py",
+    "repro/obs/audit.py", "repro/obs/export.py",
     "repro/obs/__init__.py",
 )
 # dotted jax APIs that moved/renamed across versions; call sites must go

@@ -39,10 +39,13 @@ REFRESH_HINT = ("if this change is intentional, refresh the budget with "
                 "--refresh-budget` and commit the ANALYSIS_BUDGET.json "
                 "diff alongside the code")
 
-# jitted-program attributes whose compile counts the churn script pins
+# jitted-program attributes whose compile counts the churn script pins.
+# ``_audit`` is the retrieval-quality probe: the churn engine runs with
+# auditing DISABLED, so its pinned compile count is 0 — machine proof that
+# unsampled serving never traces (let alone launches) the audit program
 _CHURN_PROGRAMS = ("_prefill", "_step", "_insert_prefill", "_insert",
                    "_draft", "_verify", "_rollback_op", "_set_blk",
-                   "_copy", "_clear_row")
+                   "_copy", "_clear_row", "_audit")
 # launch counters that are pure host-side integers (deterministic)
 _CHURN_STAT_KEYS = ("prefills", "steps", "prefill_chunks", "finalizes",
                     "draft_launches", "verify_launches", "spec_rollbacks",

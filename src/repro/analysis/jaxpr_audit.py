@@ -271,6 +271,13 @@ _WHY_DONATE = ("DESIGN.md §7: decode/rollback consume their input caches — "
 _WHY_NO_DONATE = ("DESIGN.md §7: the engine reuses these inputs after the "
                   "launch (draft discard / rollback / finalize-failure "
                   "retry), so donating them would read deleted buffers")
+_WHY_AUDIT = ("DESIGN.md §10: the audit probe is a SEPARATE program — the "
+              "hot decode step that follows re-reads the same caches, so "
+              "the probe must never donate them")
+_WHY_AUDIT_TIERED = ("DESIGN.md §10: exactly two io_callbacks per attention "
+                     "layer in the tiered probe — the hot-path winner "
+                     "gather plus ONE full-region gather for the exact fp "
+                     "reference; anything more is a probe regression")
 
 
 def _mk_prompt(cfg, length: int, seed: int = 3) -> List[int]:
@@ -353,6 +360,9 @@ def build_suite(*, kernels: bool = True) -> AuditSuite:
                                  caches=caches, draft_tokens=drafts)
     add(Contract("dense/spec_rollback", donate=True, why=_WHY_DONATE),
         dense._rollback_op, caches, appended, pos)
+    add(Contract("dense/audit_probe", donate=False, why=_WHY_AUDIT),
+        dense._audit, params, inputs={"tokens": tok_col}, pos=pos,
+        caches=caches)
 
     if kernels:
         sikv_k = dc.replace(sikv, use_kernels=True)
@@ -393,6 +403,9 @@ def build_suite(*, kernels: bool = True) -> AuditSuite:
                  why="DESIGN.md §3: a freed page never aliases live data — "
                      "the row clear is a pure device op"),
         paged._clear_row, pc, slot)
+    add(Contract("paged/audit_probe", donate=False, why=_WHY_AUDIT),
+        paged._audit, params, inputs={"tokens": tok_col}, pos=pos,
+        caches=pc)
 
     # -- tiered engine: io_callback backstop allowed, draft must be clean --
     tiered = TieredServingEngine(params, cfg, sikv, page_size=4,
@@ -425,5 +438,11 @@ def build_suite(*, kernels: bool = True) -> AuditSuite:
                  why="DESIGN.md §5: lane commit is a pure device copy"),
         tiered._commit, tc, jax.ShapeDtypeStruct((1,), jnp.int32))
     add(Contract("tiered/clear_lane", donate=False), tiered._clear_lane, tc)
+    add(Contract("tiered/audit_probe", donate=False,
+                 exact={"io_callback": 2 * n_attn},
+                 forbid=("pure_callback", "debug_callback", "device_put"),
+                 why=_WHY_AUDIT_TIERED + "; " + _WHY_AUDIT),
+        tiered._audit, params, inputs={"tokens": tok_col}, pos=pos,
+        caches=tc)
 
     return AuditSuite(programs, engines)

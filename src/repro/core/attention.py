@@ -33,6 +33,9 @@ __all__ = [
     "chunk_causal_attention",
     "masked_attention",
     "sikv_decode_attention",
+    "sikv_audit_decode_attention",
+    "sikv_static_audit_metrics",
+    "audit_metrics_parts",
     "group_queries",
     "ring_segment_parts",
     "quant_valid_mask_parts",
@@ -360,6 +363,203 @@ def _sink_flash_state(q: jax.Array, cache: SIKVCache, scale: float | None):
     return sink_flash_state_parts(q, cache.sink_k, cache.sink_v, cache.res_k,
                                   cache.res_v, cache.sink_mask, cache.length,
                                   scale)
+
+
+def audit_metrics_parts(
+    q: jax.Array,
+    q_sum: jax.Array,
+    approx_scores: jax.Array,
+    quant_valid: jax.Array,
+    k_exact: jax.Array,
+    sink_k: jax.Array,
+    ring_k: jax.Array,
+    ring_valid: jax.Array,
+    *,
+    k_dyn: int,
+    draft_k: int | None = None,
+    staged: jax.Array | None = None,
+    scale: float | None = None,
+) -> dict[str, jax.Array]:
+    """Retrieval-quality metrics of one audited decode step (pure jnp).
+
+    Compares the sign-code selection against exact fp scoring of the
+    *dequantized* cache — the best reference the cache can realize, and
+    exactly the keys attention would use if every position were a
+    winner.  Shared by the dense/paged/tiered audit wrappers; each
+    supplies its own gathered ``k_exact`` view.
+
+    Args:
+      q: ``(B, Hq, 1, D)`` current query; q_sum: ``(B, Hkv, D)`` grouped
+        query (the one LUT scoring used).
+      approx_scores: ``(B, Hkv, L)`` LUT scores over the quant region.
+      quant_valid: ``(B, 1|Hkv, L)`` quant-region validity.
+      k_exact: ``(B, Hkv, L, D)`` dequantized keys for every position.
+      sink_k / ring_k / ring_valid: the always-attended fp segments.
+      k_dyn: retrieval budget; draft_k: speculative draft budget (adds
+        the ``draft_*`` families); staged: ``(B, 1|Hkv, L)`` "payload is
+        device-resident" mask (adds the ``staged_*`` families).
+    Returns:
+      ``{metric: (B, Hkv) float32}`` — see ``repro.obs.audit`` for the
+      family definitions and bucket ladders.
+    """
+    B, Hq, _, D = q.shape
+    Hkv, L = approx_scores.shape[1], approx_scores.shape[2]
+    g = Hq // Hkv
+    sc = scale if scale is not None else 1.0 / float(D) ** 0.5
+    f32 = jnp.float32
+    valid = jnp.broadcast_to(quant_valid, approx_scores.shape)
+    neg = jnp.asarray(jnp.finfo(f32).min, f32)
+    exact = jnp.einsum("bhd,bhld->bhl", q_sum.astype(f32),
+                       k_exact.astype(f32))
+
+    def topk_set(s: jax.Array, k: int) -> jax.Array:
+        # identical masking + lax.top_k tie-breaking as select_topk, so
+        # the audited selection set matches the hot path's exactly
+        k = max(1, min(k, L))
+        return rtr.topk_mask(jnp.where(valid, s.astype(f32), neg), k) & valid
+
+    approx_sel = topk_set(approx_scores, k_dyn)
+    exact_sel = topk_set(exact, k_dyn)
+    n_exact = jnp.maximum(jnp.sum(exact_sel, axis=-1), 1).astype(f32)
+    recall = jnp.sum(approx_sel & exact_sel, axis=-1).astype(f32) / n_exact
+
+    # exact-score margin at the selection boundary (scaled-logit units):
+    # positive = the selected set is separated from the best rejected
+    # position; negative = the index picked past the boundary
+    unsel = valid & ~approx_sel
+    sel_min = jnp.min(jnp.where(approx_sel, exact, jnp.inf), axis=-1)
+    unsel_max = jnp.max(jnp.where(unsel, exact, -jnp.inf), axis=-1)
+    has_both = jnp.any(approx_sel, axis=-1) & jnp.any(unsel, axis=-1)
+    margin = jnp.where(has_both, (sel_min - unsel_max) * sc, 0.0)
+
+    # true attention-mass coverage: softmax over the FULL cache
+    # [sinks ; ring ; quant] per GQA query head, mass landing on the
+    # attended set (sinks + ring + winners), averaged over the group
+    S = sink_k.shape[2]
+    qg = q.reshape(B, Hkv, g, D).astype(f32)
+    k_cat = jnp.concatenate(
+        [sink_k.astype(f32), ring_k.astype(f32), k_exact.astype(f32)], 2)
+    sink_valid = jnp.ones((B, Hkv, S), bool)
+    base_valid = jnp.concatenate([sink_valid, ring_valid, valid], 2)
+    logits = jnp.einsum("bhgd,bhtd->bhgt", qg, k_cat) * sc
+    logits = jnp.where(base_valid[:, :, None, :], logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+
+    def mass(sel: jax.Array) -> jax.Array:
+        m = jnp.concatenate([sink_valid, ring_valid, sel], 2)
+        return jnp.mean(
+            jnp.sum(jnp.where(m[:, :, None, :], w, 0.0), axis=-1), axis=-1)
+
+    coverage = mass(approx_sel)
+    out = {"recall": recall, "coverage": coverage, "margin": margin}
+    if draft_k is not None:
+        d_approx = topk_set(approx_scores, draft_k)
+        d_exact = topk_set(exact, draft_k)
+        n_d = jnp.maximum(jnp.sum(d_exact, axis=-1), 1).astype(f32)
+        out["draft_recall"] = (
+            jnp.sum(d_approx & d_exact, axis=-1).astype(f32) / n_d)
+        d_cov = mass(d_approx)
+        out["draft_coverage"] = d_cov
+        # attention mass the draft budget forfeits vs full verify budget
+        # — the per-layer/head attribution of draft-vs-verify divergence
+        out["draft_divergence"] = coverage - d_cov
+    if staged is not None:
+        st = jnp.broadcast_to(staged, approx_sel.shape)
+        out["staged_recall"] = (
+            jnp.sum(approx_sel & exact_sel & st, axis=-1).astype(f32)
+            / n_exact)
+        n_sel = jnp.maximum(jnp.sum(approx_sel, axis=-1), 1).astype(f32)
+        out["staged_frac"] = (
+            jnp.sum(approx_sel & st, axis=-1).astype(f32) / n_sel)
+    return {name: v.astype(f32) for name, v in out.items()}
+
+
+def sikv_audit_decode_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    cache: SIKVCache,
+    cfg: SIKVConfig,
+    *,
+    topk: int | None = None,
+    draft_topk: int | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, SIKVCache, dict[str, jax.Array]]:
+    """Audited decode step: the hot-path computation plus quality metrics.
+
+    Runs the exact pure-jnp decode (same selection, same attention — so
+    downstream layers of the probe see the hot path's activations; the
+    kernel path is bit-identical by test) and additionally dequantizes
+    the FULL quant region to score the index against exact fp attention.
+    Only ever traced into the separate non-donating audit-probe program;
+    the hot decode program never contains any of this.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_new.shape[1]
+    cache = append_token(cache, k_new, v_new, cfg)
+    Lmax = cache.capacity
+    k_dyn = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
+                Lmax)
+
+    q_sum = group_queries(q[:, :, 0, :], Hkv)
+    lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                        cache.centroids.astype(jnp.float32), cfg.group_size)
+    scores = rtr.lut_scores(cache.codes, lut)
+
+    valid = _quant_valid_mask(cache)
+    idx, vals = rtr.select_topk(
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+    ring_k, ring_v, ring_valid = _ring_segment(cache)
+    k_sel, v_sel = gather_dequant(cache, idx, cfg)
+    S = cache.num_sinks
+    k_all = jnp.concatenate(
+        [cache.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [cache.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
+    valid_all = jnp.concatenate(
+        [jnp.ones((B, Hkv, S), bool), ring_valid, sel_valid], axis=2)
+    out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
+
+    idx_all = jnp.broadcast_to(jnp.arange(Lmax)[None, None, :],
+                               (B, Hkv, Lmax))
+    k_exact, _ = gather_dequant(cache, idx_all, cfg)
+    metrics = audit_metrics_parts(
+        q, q_sum, scores, valid, k_exact, cache.sink_k, ring_k, ring_valid,
+        k_dyn=k_dyn, draft_k=draft_topk, scale=scale)
+    return out, cache, metrics
+
+
+def sikv_static_audit_metrics(
+    q: jax.Array,
+    cache: SIKVCache,
+    cfg: SIKVConfig,
+    *,
+    topk: int | None = None,
+    draft_topk: int | None = None,
+    scale: float | None = None,
+) -> dict[str, jax.Array]:
+    """Quality metrics over a *static* cache (no append) — the offline
+    entry point the longbench/ruler proxies share with the online audit
+    plane, so both report the same recall/coverage definition."""
+    B, Hq, _, D = q.shape
+    Hkv = cache.sink_k.shape[1]
+    Lmax = cache.capacity
+    k_dyn = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
+                Lmax)
+    q_sum = group_queries(q[:, :, 0, :], Hkv)
+    lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                        cache.centroids.astype(jnp.float32), cfg.group_size)
+    scores = rtr.lut_scores(cache.codes, lut)
+    valid = _quant_valid_mask(cache)
+    ring_k, _, ring_valid = _ring_segment(cache)
+    idx_all = jnp.broadcast_to(jnp.arange(Lmax)[None, None, :],
+                               (B, Hkv, Lmax))
+    k_exact, _ = gather_dequant(cache, idx_all, cfg)
+    return audit_metrics_parts(
+        q, q_sum, scores, valid, k_exact, cache.sink_k, ring_k, ring_valid,
+        k_dyn=k_dyn, draft_k=draft_topk, scale=scale)
 
 
 def sikv_static_attention(

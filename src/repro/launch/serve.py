@@ -12,12 +12,18 @@ of DESIGN.md §5 — requires ``--paged``; ``--staging-pages`` and
 on and export it after the run: a registry snapshot (counters, gauges,
 percentile histograms) and a Chrome trace-event file loadable at
 https://ui.perfetto.dev — one lane per decode slot plus scheduler and
-transfer tracks (DESIGN.md §8).
+transfer tracks (DESIGN.md §8).  Both files are written atomically
+(tmp + rename), so a crashed run never leaves truncated JSON behind.
+
+``--audit-every N`` samples every Nth decode step through the engine's
+retrieval-quality audit probe (exact fp rescoring of the full cache:
+recall@k, attention-mass coverage, boundary margins — DESIGN.md §10);
+the per-layer summaries land in the ``--metrics-json`` payload under
+``"audit"`` and as ``audit/layer*`` counter tracks in the trace.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -74,6 +80,7 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           prefetch_depth: int | None = None,
           prefill_chunk: int | None = None,
           spec_depth: int | None = None, spec_draft_k: int | None = None,
+          audit_every: int | None = None,
           metrics_json: str | None = None, trace: str | None = None,
           check_invariants: bool = False):
     if metrics_json is not None or trace is not None:
@@ -97,7 +104,8 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
                       recent_window=16, obs_window=16)
     params = init_params(jax.random.PRNGKey(seed), cfg)
     spec = dict(spec_depth=spec_depth,
-                spec_draft_k=4 if spec_draft_k is None else spec_draft_k)
+                spec_draft_k=4 if spec_draft_k is None else spec_draft_k,
+                audit_every=audit_every)
     if host_pages:
         engine = TieredServingEngine(
             params, cfg, sikv, batch_size=batch, prompt_len=prompt_len,
@@ -150,13 +158,22 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
             print(f"[serve] tiers: device {engine.token_store_bytes()} B, "
                   f"host {engine.host_store_bytes()} B")
             print(f"[serve] transfers: {engine.tier_stats()}")
+    if audit_every is not None and verbose:
+        st = sched.service_stats()
+        print(f"[serve] audit: every={audit_every} "
+              f"sampled_steps={engine.stats['audit_steps']} "
+              f"recall_mean={st['audit_recall_mean']:.3f} "
+              f"coverage_mean={st['audit_coverage_mean']:.3f} "
+              f"worst_drift={st['audit_recall_drift']:+.3f}")
     if metrics_json is not None:
         from repro import obs
+        from repro.obs.audit import audit_summary
+        from repro.obs.export import write_json_atomic
         st = sched.service_stats()
         payload = {"service_stats": st,
-                   "metrics": obs.get_registry().snapshot()}
-        with open(metrics_json, "w") as f:
-            json.dump(payload, f, indent=1)
+                   "metrics": obs.get_registry().snapshot(),
+                   "audit": audit_summary(obs.get_registry())}
+        write_json_atomic(metrics_json, payload, indent=1)
         if verbose:
             print(f"[serve] metrics -> {metrics_json} "
                   f"(ttft_p95={st['ttft_p95']:.4f}s "
@@ -206,6 +223,13 @@ def main() -> None:
     ap.add_argument("--spec-draft-k", type=int, default=None,
                     help="retrieval top-k of the DRAFT pass (default 4; "
                          "needs --spec-depth)")
+    ap.add_argument("--audit-every", type=int, default=None, metavar="N",
+                    help="sample every Nth decode step through the "
+                         "retrieval-quality audit probe (exact fp "
+                         "rescoring: recall@k, coverage, margins — "
+                         "DESIGN.md §10); a separate non-donating program, "
+                         "so the hot decode path is byte-identical and "
+                         "unsampled steps pay nothing")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="enable the metrics registry and write its "
                          "snapshot (plus service_stats percentiles) to "
@@ -227,6 +251,7 @@ def main() -> None:
           prefetch_depth=args.prefetch_depth,
           prefill_chunk=args.prefill_chunk,
           spec_depth=args.spec_depth, spec_draft_k=args.spec_draft_k,
+          audit_every=args.audit_every,
           metrics_json=args.metrics_json, trace=args.trace,
           check_invariants=args.check_invariants)
 

@@ -528,8 +528,9 @@ def finalize_chunked_prefill(
 
 def decode_step(params: Params, cfg: ModelConfig,
                 inputs: Dict[str, jax.Array], pos: jax.Array, caches: List[Any],
-                method, *, draft_topk: Optional[int] = None
-                ) -> Tuple[jax.Array, List[Any]]:
+                method, *, draft_topk: Optional[int] = None,
+                audit: bool = False, audit_draft_topk: Optional[int] = None
+                ):
     """One decode step.
 
     Args:
@@ -541,8 +542,18 @@ def decode_step(params: Params, cfg: ModelConfig,
         reduced retrieval budget (``spec_draft_k``) of speculative decoding,
         with sinks and the recent ring kept exact.  ``None`` (default) is
         the ordinary full-budget step.
+      audit: trace the AUDITED step instead — every self-attention layer
+        runs ``method.audit_decode`` (hot-path output plus retrieval-
+        quality metrics; DESIGN.md §10) and the return gains a third
+        element ``{layer_index: {metric: (B, Hkv) array}}``.  Only the
+        engines' separate non-donating probe program sets this; the hot
+        decode/draft/verify programs trace with the default ``False`` and
+        are byte-identical to pre-audit builds.
+      audit_draft_topk: with ``audit``, also score the speculative draft
+        budget (adds the ``draft_*`` metric families).
     Returns:
-      ``(logits (B, V), updated caches)``.
+      ``(logits (B, V), updated caches)`` — plus the aux metrics dict
+      when ``audit``.
     """
     x = embed_inputs(params, cfg, inputs)
     pos = jnp.asarray(pos)
@@ -552,7 +563,15 @@ def decode_step(params: Params, cfg: ModelConfig,
         mla_scale = 1.0 / float(
             cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** 0.5
 
-    def attend(q, k_new, v_new, cache, scale=None):
+    aux: Dict[int, Dict[str, jax.Array]] = {}
+
+    def attend(q, k_new, v_new, cache, scale=None, layer=None):
+        if audit:
+            o, c, metrics = method.audit_decode(
+                q, k_new, v_new, cache, draft_topk=audit_draft_topk,
+                scale=scale)
+            aux[layer] = metrics
+            return o, c
         if draft_topk is None:
             return method.decode(q, k_new, v_new, cache, scale=scale)
         return method.draft_decode(q, k_new, v_new, cache,
@@ -579,7 +598,8 @@ def decode_step(params: Params, cfg: ModelConfig,
             q_eff = mla_mod.mla_effective_query(mp, cfg, q_nope, q_rope)
             o, new_entry["self"] = attend(
                 q_eff.astype(jnp.float32), latent_k.astype(jnp.float32),
-                latent_k.astype(jnp.float32), entry["self"], scale=mla_scale)
+                latent_k.astype(jnp.float32), entry["self"], scale=mla_scale,
+                layer=i)
             o_latent = o[..., : cfg.mla.kv_lora_rank]
             x = x + mla_mod.mla_output(mp, cfg, o_latent).astype(x.dtype)
         else:
@@ -587,7 +607,7 @@ def decode_step(params: Params, cfg: ModelConfig,
             q, k, v = attn_project(ap, cfg, h, positions)
             o, new_entry["self"] = attend(
                 q.astype(jnp.float32), k.astype(jnp.float32),
-                v.astype(jnp.float32), entry["self"])
+                v.astype(jnp.float32), entry["self"], layer=i)
             x = x + attn_output(ap, cfg, o.astype(x.dtype))
         if "cross" in entry:
             cl = params["cross"][i]
@@ -603,7 +623,10 @@ def decode_step(params: Params, cfg: ModelConfig,
         new_caches.append(new_entry)
 
     x = rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
-    return _lm_head(params, cfg, x)[:, 0, :], new_caches
+    logits = _lm_head(params, cfg, x)[:, 0, :]
+    if audit:
+        return logits, new_caches, aux
+    return logits, new_caches
 
 
 def _attend_static(method, q: jax.Array, cache) -> Tuple[jax.Array, Any]:

@@ -15,6 +15,9 @@ Instrumentation lives at the host-orchestration seams only — never
 inside jitted programs — so the PR-6 jaxpr contracts and the launch
 budget are unaffected whether observability is on or off.
 """
+from repro.obs.audit import (audit_summary, per_slot_summary, record_audit,
+                             should_audit)
+from repro.obs.export import write_json_atomic
 from repro.obs.metrics import (NULL_COUNTER, NULL_GAUGE, NULL_HISTOGRAM,
                                CounterGroup, MetricsRegistry, enabled,
                                get_registry, instance_label, set_enabled)
@@ -27,4 +30,6 @@ __all__ = [
     "instance_label", "NULL_COUNTER", "NULL_GAUGE", "NULL_HISTOGRAM",
     "Tracer", "get_tracer", "set_tracer", "NULL_TRACER",
     "build_timelines", "format_table", "percentiles",
+    "record_audit", "per_slot_summary", "audit_summary", "should_audit",
+    "write_json_atomic",
 ]

@@ -1,0 +1,175 @@
+"""Retrieval-quality audit plane: host-side recording (DESIGN.md §10).
+
+The device side of the audit lives in ``core/attention.py``
+(:func:`repro.core.attention.audit_metrics_parts` and the per-layout
+``*_audit_decode_attention`` wrappers): on a sampled decode step each
+engine launches a *separate, non-donating* jitted probe program that
+re-runs the decode layer stack with ``audit=True`` and returns, per
+SIKV attention layer, per KV head, pure-jnp quality metrics:
+
+* ``recall``          — recall@k of the sign-code top-k vs the exact
+                        fp top-k over the dequantized cache;
+* ``coverage``        — true attention-mass (softmax) coverage of the
+                        selected set (sinks + recent ring + winners);
+* ``margin``          — exact-score margin at the selection boundary
+                        (min selected − max unselected, scaled units);
+* ``draft_recall`` / ``draft_coverage`` / ``draft_divergence``
+                      — same at the speculative draft budget, plus the
+                        verify-vs-draft coverage gap (spec engines);
+* ``staged_recall`` / ``staged_frac``
+                      — the staging-hit-weighted slice of recall and
+                        the staged fraction of winners (tiered engine).
+
+This module is the host half: it folds the device-computed ``(B, Hkv)``
+arrays (already fetched to numpy by the engine) into registry histogram
+families (``audit.<metric>`` labeled ``engine=...,layer=...``), emits
+one Perfetto counter track per layer (``audit/layerN``), and reduces
+per-batch-slot summaries the scheduler attaches to requests/timelines.
+
+Host-side numpy only — no jax import (SIKV-L002 applies to this
+package); unsampled steps never reach this module at all.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.obs.metrics import get_registry
+from repro.obs.trace import get_tracer
+
+__all__ = [
+    "RATIO_BUCKETS", "MARGIN_BUCKETS", "AUDIT_METRICS",
+    "metric_buckets", "should_audit", "record_audit", "per_slot_summary",
+    "audit_summary",
+]
+
+# Quality ratios live in [0, 1]; 0.05-wide buckets resolve the floors
+# bench_quality asserts without quantile sketches.
+RATIO_BUCKETS = tuple(i / 20.0 for i in range(21))
+# Boundary margins are signed scaled-logit units; symmetric pow-2-ish
+# ladder so "confidently separated" vs "boundary confusion" is one look.
+MARGIN_BUCKETS = (-8.0, -4.0, -2.0, -1.0, -0.5, -0.25, -0.1, -0.05, 0.0,
+                  0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+
+# Every metric family the device probe may emit, with its bucket ladder.
+AUDIT_METRICS: Dict[str, Tuple[float, ...]] = {
+    "recall": RATIO_BUCKETS,
+    "coverage": RATIO_BUCKETS,
+    "margin": MARGIN_BUCKETS,
+    "draft_recall": RATIO_BUCKETS,
+    "draft_coverage": RATIO_BUCKETS,
+    "draft_divergence": RATIO_BUCKETS,
+    "staged_recall": RATIO_BUCKETS,
+    "staged_frac": RATIO_BUCKETS,
+}
+
+
+def metric_buckets(metric: str) -> Tuple[float, ...]:
+    return AUDIT_METRICS.get(metric, RATIO_BUCKETS)
+
+
+def should_audit(clock: int, audit_every: Optional[int]) -> bool:
+    """Deterministic sampling predicate: audit decode launch ``clock``
+    (0-based) iff ``audit_every`` is set and ``clock`` is a multiple.
+    The first launch is always sampled so short requests still get one
+    data point."""
+    return bool(audit_every) and audit_every > 0 and clock % audit_every == 0
+
+
+def _layer_items(aux: Mapping[Any, Mapping[str, Any]]):
+    return sorted(aux.items(), key=lambda kv: int(kv[0]))
+
+
+def record_audit(aux: Mapping[Any, Mapping[str, Any]], *,
+                 engine: str, registry=None, tracer=None
+                 ) -> Dict[int, Dict[str, float]]:
+    """Fold one audited step into the registry + trace.
+
+    ``aux`` is ``{layer: {metric: (B, Hkv) array}}`` (numpy, already
+    device_get by the engine).  Every (batch, head) sample lands in the
+    ``audit.<metric>`` histogram labeled with the engine instance and
+    layer; per-layer means go out as one Perfetto counter track per
+    layer.  Returns ``{layer: {metric: mean}}`` for callers that want
+    the step summary without re-reading the registry.
+    """
+    reg = registry if registry is not None else get_registry()
+    tr = tracer if tracer is not None else get_tracer()
+    summary: Dict[int, Dict[str, float]] = {}
+    for layer, metrics in _layer_items(aux):
+        li = int(layer)
+        means: Dict[str, float] = {}
+        for metric in sorted(metrics):
+            arr = np.asarray(metrics[metric], dtype=np.float64).ravel()
+            if arr.size == 0:
+                continue
+            hist = reg.histogram(f"audit.{metric}",
+                                 buckets=metric_buckets(metric),
+                                 engine=engine, layer=str(li))
+            for v in arr:
+                hist.observe(float(v))
+            means[metric] = float(arr.mean())
+        summary[li] = means
+        if means:
+            tr.counter(f"audit/layer{li}", "quality",
+                       **{k: round(v, 4) for k, v in means.items()})
+    return summary
+
+
+def per_slot_summary(aux: Mapping[Any, Mapping[str, Any]]
+                     ) -> Dict[int, Dict[str, float]]:
+    """Reduce an audited step to per-batch-slot means across layers and
+    heads: ``{slot: {"recall": r, "coverage": c, ...}}`` — what the
+    scheduler attaches to the slot's request and timeline."""
+    acc: Dict[str, List[np.ndarray]] = {}
+    for _, metrics in _layer_items(aux):
+        for metric, arr in metrics.items():
+            a = np.asarray(arr, dtype=np.float64)
+            if a.ndim >= 2:
+                acc.setdefault(metric, []).append(a.mean(axis=tuple(
+                    range(1, a.ndim))))
+    out: Dict[int, Dict[str, float]] = {}
+    for metric, rows in acc.items():
+        per_slot = np.mean(np.stack(rows, axis=0), axis=0)
+        for slot, v in enumerate(per_slot):
+            out.setdefault(slot, {})[metric] = float(v)
+    return out
+
+
+def audit_summary(registry=None, *, engine: Optional[str] = None
+                  ) -> Dict[str, Any]:
+    """Registry roll-up of the audit families for JSON export: per
+    (metric, layer) sample count / mean / p5-ish floor, plus overall
+    means — the ``audit`` rows ``launch/serve.py`` puts in
+    ``--metrics-json``."""
+    reg = registry if registry is not None else get_registry()
+    labels = {"engine": engine} if engine else {}
+    per_layer: Dict[str, Dict[str, Dict[str, float]]] = {}
+    overall: Dict[str, float] = {}
+    for metric in AUDIT_METRICS:
+        hits = reg.find(f"audit.{metric}", **labels)
+        if not hits:
+            continue
+        total_n = 0
+        total_sum = 0.0
+        rows: Dict[str, Dict[str, float]] = {}
+        for key, series in hits:
+            kv = dict(key)
+            layer = kv.get("layer", "?")
+            row = rows.setdefault(layer, {"n": 0, "sum": 0.0,
+                                          "min": float("inf")})
+            row["n"] += series.n
+            row["sum"] += series.total
+            row["min"] = min(row["min"], series.vmin
+                             if series.n else float("inf"))
+            total_n += series.n
+            total_sum += series.total
+        per_layer[metric] = {
+            layer: {"n": int(r["n"]),
+                    "mean": (r["sum"] / r["n"]) if r["n"] else 0.0,
+                    "min": r["min"] if r["n"] else 0.0}
+            for layer, r in sorted(rows.items(), key=lambda kv_: (
+                int(kv_[0]) if kv_[0].isdigit() else 1 << 30, kv_[0]))}
+        if total_n:
+            overall[metric] = total_sum / total_n
+    return {"per_layer": per_layer, "overall_mean": overall}

@@ -1,0 +1,52 @@
+"""Crash-safe JSON artifact writer (tmp + rename).
+
+Every observability export (``--metrics-json``, ``--trace``, the audit
+rows, the benchmark trajectory file) goes through
+:func:`write_json_atomic`: the payload is serialized into a temporary
+file in the *destination* directory (same filesystem, so the final
+``os.replace`` is atomic) and renamed over the target only after a
+successful ``fsync``.  A run that crashes mid-export leaves either the
+previous artifact or nothing — never a truncated JSON file that a later
+``bench_diff``/dashboard load would choke on.  Parent directories are
+created on demand so ``--metrics-json out/run3/metrics.json`` works on
+a fresh checkout.
+
+Host-side pure Python only (SIKV-L002: no jax import in this package).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+__all__ = ["write_json_atomic"]
+
+
+def write_json_atomic(path: str, payload: Any, **json_kwargs: Any) -> str:
+    """Serialize ``payload`` as JSON to ``path`` atomically.
+
+    Creates missing parent directories; writes to a ``tempfile`` sibling
+    and ``os.replace``s it over ``path`` (atomic on POSIX and Windows).
+    Extra keyword arguments go to :func:`json.dump` (``indent`` etc.).
+    Returns ``path``.
+    """
+    target = os.fspath(path)
+    parent = os.path.dirname(os.path.abspath(target))
+    os.makedirs(parent, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        dir=parent, prefix=os.path.basename(target) + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, **json_kwargs)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, target)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return target

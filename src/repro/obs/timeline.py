@@ -2,7 +2,8 @@
 
 The scheduler emits a small event vocabulary (all carrying a ``uid``
 arg): ``submit`` / ``admit`` / ``admit_chunk`` / ``first_token`` /
-``token`` / ``spec_window`` / ``retire``.  :func:`build_timelines`
+``token`` / ``spec_window`` / ``audit`` / ``retire``.
+:func:`build_timelines`
 folds a tracer's retained events into one :class:`RequestTimeline` per
 request, from which TTFT / TPOT / stall *distributions* follow — the
 aggregate means in ``service_stats()`` hide tail behaviour that decides
@@ -55,6 +56,10 @@ class RequestTimeline:
     admit_chunks: int = 0
     token_ts: List[int] = field(default_factory=list)
     spec_windows: List[Tuple[int, int]] = field(default_factory=list)
+    # sampled retrieval-quality probes this request was live for:
+    # ``(ts, recall, coverage)`` per audit event (DESIGN.md §10)
+    audit_samples: List[Tuple[int, float, float]] = field(
+        default_factory=list)
     slot: Optional[int] = None
 
     @property
@@ -86,6 +91,15 @@ class RequestTimeline:
     @property
     def n_tokens(self) -> int:
         return len(self.token_ts)
+
+    @property
+    def recall_drift(self) -> Optional[float]:
+        """Last minus first sampled recall@k (negative = the self-index
+        degraded while this request decoded); ``None`` with fewer than
+        two surviving audit samples."""
+        if len(self.audit_samples) < 2:
+            return None
+        return self.audit_samples[-1][1] - self.audit_samples[0][1]
 
 
 def build_timelines(events: Iterable[Dict[str, Any]]
@@ -127,6 +141,9 @@ def build_timelines(events: Iterable[Dict[str, Any]]
         elif name == "spec_window":
             tl.spec_windows.append((int(args.get("drafted", 0)),
                                     int(args.get("accepted", 0))))
+        elif name == "audit":
+            tl.audit_samples.append((ts, float(args.get("recall", 0.0)),
+                                     float(args.get("coverage", 0.0))))
         elif name == "retire":
             tl.t_retire = ts
     return out
@@ -142,12 +159,20 @@ def summarize(timelines: Dict[int, RequestTimeline]) -> Dict[str, Any]:
     t50, t95, t99 = percentiles(ttfts)
     g50, g95, g99 = percentiles(gaps)
     s50, s95, s99 = percentiles(stalls)
+    recalls = [r for tl in timelines.values()
+               for _, r, _ in tl.audit_samples]
+    drifts = [tl.recall_drift for tl in timelines.values()
+              if tl.recall_drift is not None]
     return {
         "n_requests": len(timelines),
         "n_tokens": sum(tl.n_tokens for tl in timelines.values()),
         "ttft_us_p50": t50, "ttft_us_p95": t95, "ttft_us_p99": t99,
         "tpot_us_p50": g50, "tpot_us_p95": g95, "tpot_us_p99": g99,
         "stall_us_p50": s50, "stall_us_p95": s95, "stall_us_p99": s99,
+        "n_audit_samples": len(recalls),
+        "audit_recall_mean": (sum(recalls) / len(recalls)
+                              if recalls else 0.0),
+        "audit_recall_drift": min(drifts, default=0.0),
     }
 
 
@@ -156,7 +181,7 @@ def format_table(timelines: Dict[int, RequestTimeline]) -> str:
     this after a mixed tiered+spec run)."""
     hdr = (f"{'uid':>4} {'slot':>4} {'queued_ms':>10} {'ttft_ms':>9} "
            f"{'tpot_ms':>9} {'stall_ms':>9} {'tokens':>6} "
-           f"{'chunks':>6} {'spec d/a':>9}")
+           f"{'chunks':>6} {'spec d/a':>9} {'recall':>7} {'drift':>7}")
     lines = [hdr, "-" * len(hdr)]
 
     def ms(us: Optional[float]) -> str:
@@ -167,10 +192,15 @@ def format_table(timelines: Dict[int, RequestTimeline]) -> str:
         drafted = sum(d for d, _ in tl.spec_windows)
         accepted = sum(a for _, a in tl.spec_windows)
         spec = f"{drafted}/{accepted}" if tl.spec_windows else "-"
+        rec = (f"{tl.audit_samples[-1][1]:.3f}" if tl.audit_samples
+               else "-")
+        drift = ("-" if tl.recall_drift is None
+                 else f"{tl.recall_drift:+.3f}")
         lines.append(
             f"{tl.uid:>4} {'-' if tl.slot is None else tl.slot:>4} "
             f"{ms(tl.queued_us):>10} {ms(tl.ttft_us):>9} "
             f"{ms(tl.tpot_us if tl.decode_gaps_us else None):>9} "
             f"{ms(tl.max_stall_us if tl.decode_gaps_us else None):>9} "
-            f"{tl.n_tokens:>6} {tl.admit_chunks:>6} {spec:>9}")
+            f"{tl.n_tokens:>6} {tl.admit_chunks:>6} {spec:>9} "
+            f"{rec:>7} {drift:>7}")
     return "\n".join(lines)

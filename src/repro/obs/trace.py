@@ -24,10 +24,11 @@ no-op context manager) — bounded by ``bench_obs``.
 """
 from __future__ import annotations
 
-import json
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
+
+from repro.obs.export import write_json_atomic
 
 PID = 1
 # Well-known tracks get stable low tids; slot/N tracks follow.
@@ -64,6 +65,9 @@ class _NullTracer:
         pass
 
     def instant(self, track: str, name: str, **args) -> None:
+        pass
+
+    def counter(self, track: str, name: str, **values) -> None:
         pass
 
     def span(self, track: str, name: str, **args):
@@ -137,6 +141,12 @@ class Tracer:
         self._push("i", track, name, _now_us(), ev_args)
         self._ring[-1]["s"] = "t"  # instant scope: thread
 
+    def counter(self, track: str, name: str, **values) -> None:
+        """``ph: "C"`` counter sample — Perfetto renders each track as a
+        stacked value-over-time chart (the audit plane emits one per
+        layer: ``audit/layerN``)."""
+        self._push("C", track, name, _now_us(), dict(values))
+
     def span(self, track: str, name: str, **args):
         """``with tracer.span("engine", "decode_step"): ...`` emits one
         complete (``ph: "X"``) slice covering the block."""
@@ -169,10 +179,10 @@ class Tracer:
                 "displayTimeUnit": "ms"}
 
     def dump(self, path: str) -> int:
-        """Write ``export()`` to ``path``; returns the event count."""
+        """Write ``export()`` to ``path`` atomically (tmp + rename, and
+        parent dirs are created); returns the event count."""
         payload = self.export()
-        with open(path, "w") as f:
-            json.dump(payload, f)
+        write_json_atomic(path, payload)
         return len(payload["traceEvents"])
 
     def clear(self) -> None:

@@ -25,13 +25,13 @@ import jax.numpy as jnp
 from repro.config import SIKVConfig
 from repro.core import policy
 from repro.core import retrieval as rtr
-from repro.core.attention import (group_queries, masked_attention,
-                                  quant_valid_mask_parts, ring_segment_parts,
-                                  sink_flash_state_parts)
+from repro.core.attention import (audit_metrics_parts, group_queries,
+                                  masked_attention, quant_valid_mask_parts,
+                                  ring_segment_parts, sink_flash_state_parts)
 from repro.paged.cache import (PagedSIKVCache, append_token_paged,
                                paged_gather_dequant)
 
-__all__ = ["paged_sikv_decode_attention"]
+__all__ = ["paged_sikv_decode_attention", "paged_sikv_audit_decode_attention"]
 
 
 def paged_sikv_decode_attention(
@@ -121,3 +121,62 @@ def paged_sikv_decode_attention(
     valid_all = jnp.concatenate([sink_valid, ring_valid, sel_valid], axis=2)
     out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
     return out, paged
+
+
+def paged_sikv_audit_decode_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    paged: PagedSIKVCache,
+    cfg: SIKVConfig,
+    *,
+    topk: int | None = None,
+    draft_topk: int | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, PagedSIKVCache, dict[str, jax.Array]]:
+    """Audited paged decode step: hot-path computation + quality metrics.
+
+    Same structure as :func:`repro.core.attention.
+    sikv_audit_decode_attention`; the exact fp reference comes from a
+    full-region ``paged_gather_dequant`` through the block table.  Only
+    ever traced into the separate non-donating audit-probe program.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_new.shape[1]
+    paged = append_token_paged(paged, k_new, v_new, cfg)
+    Lmax = paged.capacity
+    k_dyn = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
+                Lmax)
+
+    codes = rtr.gather_page_view(paged.codes, paged.block_table)
+    sink_mask = rtr.gather_page_view(paged.sink_mask, paged.block_table)
+    q_sum = group_queries(q[:, :, 0, :], Hkv)
+    lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                        paged.centroids.astype(jnp.float32), cfg.group_size)
+    scores = rtr.lut_scores(codes, lut)
+
+    valid = quant_valid_mask_parts(sink_mask, paged.length,
+                                   paged.recent_window)
+    idx, vals = rtr.select_topk(
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+    k_sel, v_sel = paged_gather_dequant(paged, idx, cfg)
+    ring_k, ring_v, ring_valid = ring_segment_parts(
+        paged.res_k, paged.res_v, sink_mask, paged.length)
+    S = paged.num_sinks
+    k_all = jnp.concatenate(
+        [paged.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [paged.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
+    valid_all = jnp.concatenate(
+        [jnp.ones((B, Hkv, S), bool), ring_valid, sel_valid], axis=2)
+    out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
+
+    idx_all = jnp.broadcast_to(jnp.arange(Lmax)[None, None, :],
+                               (B, Hkv, Lmax))
+    k_exact, _ = paged_gather_dequant(paged, idx_all, cfg)
+    metrics = audit_metrics_parts(
+        q, q_sum, scores, valid, k_exact, paged.sink_k, ring_k, ring_valid,
+        k_dyn=k_dyn, draft_k=draft_topk, scale=scale)
+    return out, paged, metrics

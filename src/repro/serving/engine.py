@@ -107,7 +107,8 @@ class ServingEngine:
                  max_new_tokens: int = 64,
                  prefill_chunk: Optional[int] = None,
                  spec_depth: Optional[int] = None,
-                 spec_draft_k: int = 4):
+                 spec_draft_k: int = 4,
+                 audit_every: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.sikv = sikv or SIKVConfig()
@@ -133,6 +134,30 @@ class ServingEngine:
         self._step = jax.jit(functools.partial(
             decode_step, cfg=cfg, method=self.method),
             donate_argnames=("caches",))
+        # retrieval-quality audit probe (DESIGN.md §10): the SAME decode
+        # step with ``audit=True`` — hot-path math plus exact fp rescoring
+        # of the full cache.  A separate jitted program with NO donation
+        # (the probe's cache output is discarded; the hot step that follows
+        # re-reads self._caches), so the hot ``_step`` program above stays
+        # byte-identical whether auditing is on or off.  jax.jit is lazy:
+        # nothing traces or compiles unless a step is actually sampled.
+        self._audit = jax.jit(functools.partial(
+            decode_step, cfg=cfg, method=self.method, audit=True,
+            audit_draft_topk=(spec_draft_k if spec_depth is not None
+                              else None)))
+        if audit_every is not None:
+            if audit_every < 1:
+                raise ValueError(
+                    f"audit_every must be >= 1, got {audit_every}")
+            if not hasattr(self.method, "audit_decode"):
+                raise ValueError(
+                    f"online auditing needs a SIKV-family method with an "
+                    f"audit policy; {self.method.name!r} has none")
+        self.audit_every = audit_every
+        self._audit_clock = 0
+        # per-layer metrics of the most recent sampled step (host numpy,
+        # consumed-and-cleared by the scheduler like last_admit)
+        self.last_audit: Optional[Dict[int, Dict[str, Any]]] = None
         self._insert = jax.jit(_insert_slot)
         if prefill_chunk is not None:
             if prefill_chunk <= 0:
@@ -157,7 +182,8 @@ class ServingEngine:
         self._stage0: Any = None        # zeroed staging template (lazy)
         self._pending: Optional[Dict[str, Any]] = None
         self.stats: Dict[str, int] = {"prefills": 0, "steps": 0,
-                                      "prefill_chunks": 0, "finalizes": 0}
+                                      "prefill_chunks": 0, "finalizes": 0,
+                                      "audit_steps": 0}
         # observability: per-instance launch-counter mirror (the registry
         # series carry an ``engine=<Class>-<n>`` label so exports can tell
         # the several engines a benchmark builds apart); subclasses extend
@@ -483,6 +509,33 @@ class ServingEngine:
         """Subclass hook run before every decode launch (the paged engine
         makes each live slot's write position appendable here)."""
 
+    def _maybe_audit(self) -> None:
+        """Run the audit probe when this decode step is sampled.
+
+        Deterministic modulo sampling over the engine's decode-step clock
+        (every spec window counts once, like a plain step): step ``n`` is
+        audited iff ``n % audit_every == 0`` — the first step is always
+        sampled so short runs still produce quality rows.  The probe runs
+        BEFORE the hot launch against the same pre-step caches and its
+        outputs are discarded except the metrics aux, so the hot path's
+        tokens, caches and jaxprs are untouched.  Unsampled steps return
+        before touching any device value — zero host syncs.
+        """
+        if self.audit_every is None:
+            return
+        clock = self._audit_clock
+        self._audit_clock += 1
+        if clock % self.audit_every != 0:
+            return
+        with self._trace_obs.span("engine", "audit_probe"):
+            _, _, aux = self._audit(
+                self.params, inputs={"tokens": self._tok[:, None]},
+                pos=self._pos, caches=self._caches)
+            # one bulk device->host read of the small per-head metric
+            # arrays; logits and the probe's cache tree are dropped
+            self.last_audit = jax.device_get(aux)
+            self.obs.add("audit_steps")
+
     def _apply_decode(self, logits: jax.Array) -> List[int]:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._tok = tok
@@ -502,6 +555,7 @@ class ServingEngine:
         assert self._caches is not None, "admit() at least one request first"
         with self._trace_obs.span("engine", "decode_step"):
             self._decode_prep()
+            self._maybe_audit()
             logits, self._caches = self._step(
                 self.params, inputs={"tokens": self._tok[:, None]},
                 pos=self._pos, caches=self._caches)
@@ -539,6 +593,7 @@ class ServingEngine:
             "finish the pending admission before a spec step"
         depth = self.spec_depth
         self._decode_prep()
+        self._maybe_audit()
         with self._trace_obs.span("engine", "spec_draft"):
             draft, _ = self._draft(self.params, tokens=self._tok,
                                    pos=self._pos, caches=self._caches)
@@ -621,12 +676,14 @@ class ServingEngine:
         """Total jitted program launches (prefills, chunks, finalizes, and
         decode steps; a merged chunk+decode counts as one chunk + one step
         even though it is a single launch — work, not dispatches).  With
-        spec decode: plus draft, verify and rollback launches."""
+        spec decode: plus draft, verify and rollback launches.  With
+        auditing: plus the sampled audit-probe launches."""
         return (self.stats["prefills"] + self.stats["prefill_chunks"]
                 + self.stats["finalizes"] + self.stats["steps"]
                 + self.stats.get("draft_launches", 0)
                 + self.stats.get("verify_launches", 0)
-                + self.stats.get("spec_rollbacks", 0))
+                + self.stats.get("spec_rollbacks", 0)
+                + self.stats.get("audit_steps", 0))
 
     def token_store_bytes(self) -> int:
         """Measured HBM bytes of the token-indexed cache arrays (every leaf

@@ -103,6 +103,7 @@ class PagedServingEngine(ServingEngine):
                  prefix_caching: bool = True, max_cached_prompts: int = 32,
                  prefill_chunk: Optional[int] = None,
                  spec_depth: Optional[int] = None, spec_draft_k: int = 4,
+                 audit_every: Optional[int] = None,
                  method: Any = "sikv_paged"):
         # round generation headroom up so capacity is a page multiple —
         # but only internally: the ADVERTISED max_new_tokens stays the
@@ -114,7 +115,8 @@ class PagedServingEngine(ServingEngine):
                          batch_size=batch_size, prompt_len=prompt_len,
                          max_new_tokens=max_new_eff,
                          prefill_chunk=prefill_chunk,
-                         spec_depth=spec_depth, spec_draft_k=spec_draft_k)
+                         spec_depth=spec_depth, spec_draft_k=spec_draft_k,
+                         audit_every=audit_every)
         self.max_new_tokens = max_new_tokens
         self.page_size = page_size
         self.pages_per_seq = self.capacity // page_size

@@ -49,6 +49,7 @@ from typing import Dict, List, Optional
 
 from repro.core.policy import step_token_budget
 from repro.obs import get_registry, get_tracer, percentiles
+from repro.obs.audit import per_slot_summary, record_audit
 from repro.serving.engine import ServingEngine
 
 
@@ -83,6 +84,10 @@ class Request:
     # divided evenly over its k committed tokens — so per-token TPOT
     # distributions are comparable between spec and non-spec runs
     token_times: List[float] = field(default_factory=list)
+    # retrieval-quality audit samples (DESIGN.md §10): one
+    # ``{metric: mean}`` summary per sampled decode step this request was
+    # live for, in decode order — the per-request drift series
+    audit_samples: List[Dict[str, float]] = field(default_factory=list)
 
     @property
     def spec_accept_rate(self) -> float:
@@ -92,6 +97,14 @@ class Request:
         budget still counts its verified drafts."""
         return (self.spec_accepted / self.spec_drafted
                 if self.spec_drafted else 0.0)
+
+    @property
+    def recall_drift(self) -> float:
+        """Last minus first sampled recall@k over this request's lifetime
+        (negative = the self-index degraded as the cache filled; 0.0 with
+        fewer than two samples)."""
+        rs = [s["recall"] for s in self.audit_samples if "recall" in s]
+        return rs[-1] - rs[0] if len(rs) >= 2 else 0.0
 
 
 @dataclass
@@ -285,6 +298,28 @@ class RequestScheduler:
                 tokens += self.engine.prompt_len
         return None, tokens
 
+    def _consume_audit(self, slots: List[_Slot], active: List[int]) -> None:
+        """Fold the engine's most recent audit-probe sample (if this step
+        was sampled) into the registry histograms, the Perfetto counter
+        tracks, and each live request's drift series.  Consume-and-clear,
+        like ``last_admit`` — host-side dict work only."""
+        aux = getattr(self.engine, "last_audit", None)
+        if aux is None:
+            return
+        self.engine.last_audit = None
+        record_audit(aux, engine=self.engine.obs_label, tracer=self._trace)
+        per_slot = per_slot_summary(aux)
+        for i in active:
+            summary = per_slot.get(i)
+            req = slots[i].req
+            if summary is None or req is None:
+                continue
+            req.audit_samples.append(summary)
+            self._trace.instant(
+                f"slot/{i}", "audit", uid=req.uid,
+                recall=round(summary.get("recall", 0.0), 4),
+                coverage=round(summary.get("coverage", 0.0), 4))
+
     def _run_spec_step(self, slots: List[_Slot], active: List[int]) -> int:
         """One speculative decode step: every live slot advances by a
         variable number of tokens (1 to ``spec_depth + 1``).  Returns the
@@ -298,6 +333,7 @@ class RequestScheduler:
         limits = [slots[j].remaining if slots[j].req is not None else 0
                   for j in range(B)]
         tok_lists = self.engine.spec_step(limits)
+        self._consume_audit(slots, active)
         now = time.time()
         for i in active:
             toks = tok_lists[i]
@@ -399,6 +435,7 @@ class RequestScheduler:
                     continue
                 if active_now:
                     dec_tokens = self.engine.step()
+                    self._consume_audit(slots, active_now)
                     stepped = active_now
                     if admitting is not None:
                         admitting.decode_steps += 1
@@ -511,6 +548,11 @@ class RequestScheduler:
         tok_times = [t for r in dec for t in r.token_times]
         tpot_p = percentiles(tok_times)
         stall_p = percentiles([r.max_stall for r in dec])
+        audited = [r for r in reqs if r.audit_samples]
+        recalls = [s["recall"] for r in audited for s in r.audit_samples
+                   if "recall" in s]
+        covers = [s["coverage"] for r in audited for s in r.audit_samples
+                  if "coverage" in s]
         return {
             "ttft_mean": (sum(r.ttft for r in reqs) / len(reqs)
                           if reqs else 0.0),
@@ -529,4 +571,15 @@ class RequestScheduler:
             "tpot_p99": tpot_p[2],
             "stall_p50": stall_p[0], "stall_p95": stall_p[1],
             "stall_p99": stall_p[2],
+            # retrieval-quality audit aggregates (all 0.0 when the engine
+            # ran without audit_every): per-sample means over every
+            # completed request's drift series, plus the worst end-to-end
+            # recall drop any single request saw
+            "n_audited": len(audited),
+            "audit_recall_mean": (sum(recalls) / len(recalls)
+                                  if recalls else 0.0),
+            "audit_coverage_mean": (sum(covers) / len(covers)
+                                    if covers else 0.0),
+            "audit_recall_drift": min((r.recall_drift for r in audited),
+                                      default=0.0),
         }

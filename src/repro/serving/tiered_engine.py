@@ -136,7 +136,8 @@ class TieredServingEngine(PagedServingEngine):
                  prefetch_depth: int = 4,
                  prefix_caching: bool = True, max_cached_prompts: int = 32,
                  prefill_chunk: Optional[int] = None,
-                 spec_depth: Optional[int] = None, spec_draft_k: int = 4):
+                 spec_depth: Optional[int] = None, spec_draft_k: int = 4,
+                 audit_every: Optional[int] = None):
         sikv = sikv or SIKVConfig()
         cap = prompt_len + max_new_tokens
         capacity = cap + (-cap) % page_size
@@ -167,6 +168,7 @@ class TieredServingEngine(PagedServingEngine):
                          max_cached_prompts=max_cached_prompts,
                          prefill_chunk=prefill_chunk,
                          spec_depth=spec_depth, spec_draft_k=spec_draft_k,
+                         audit_every=audit_every,
                          method=TieredSIKVAttention(sikv, self.xfer))
         assert self.num_pages == n_pages and self.capacity == capacity
         self.staging = StagingCache(self.staging_pages)

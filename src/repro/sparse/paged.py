@@ -12,7 +12,8 @@ from typing import Tuple
 import jax
 
 from repro.config import SIKVConfig
-from repro.paged.attention import paged_sikv_decode_attention
+from repro.paged.attention import (paged_sikv_audit_decode_attention,
+                                   paged_sikv_decode_attention)
 from repro.paged.cache import PagedSIKVCache
 from repro.sparse.sikv import SIKVAttention
 
@@ -30,3 +31,13 @@ class PagedSIKVAttention(SIKVAttention):
                                                self.cfg, scale=scale,
                                                topk=topk)
         return super().decode(q, k_new, v_new, cache, scale=scale, topk=topk)
+
+    def audit_decode(self, q, k_new, v_new, cache, *, topk=None,
+                     draft_topk=None, scale=None
+                     ) -> Tuple[jax.Array, object, dict]:
+        if isinstance(cache, PagedSIKVCache):
+            return paged_sikv_audit_decode_attention(
+                q, k_new, v_new, cache, self.cfg, topk=topk,
+                draft_topk=draft_topk, scale=scale)
+        return super().audit_decode(q, k_new, v_new, cache, topk=topk,
+                                    draft_topk=draft_topk, scale=scale)

@@ -6,7 +6,8 @@ from typing import Tuple
 import jax
 
 from repro.config import SIKVConfig
-from repro.core.attention import sikv_decode_attention
+from repro.core.attention import (sikv_audit_decode_attention,
+                                  sikv_decode_attention)
 from repro.core.cache import SIKVCache, prefill_compress
 
 
@@ -33,3 +34,15 @@ class SIKVAttention:
         attended exactly.  Tiered caches additionally restrict the payload
         gather to device-resident pages (overridden there)."""
         return self.decode(q, k_new, v_new, cache, scale=scale, topk=topk)
+
+    def audit_decode(self, q, k_new, v_new, cache, *, topk=None,
+                     draft_topk=None, scale=None
+                     ) -> Tuple[jax.Array, object, dict]:
+        """AUDITED decode step: hot-path output + cache plus the per-head
+        retrieval-quality metrics dict (recall@k vs exact fp scoring,
+        attention-mass coverage, boundary margins — DESIGN.md §10).  Only
+        traced into the engines' separate sampled audit-probe program,
+        never the hot decode program."""
+        return sikv_audit_decode_attention(q, k_new, v_new, cache, self.cfg,
+                                           topk=topk, draft_topk=draft_topk,
+                                           scale=scale)

@@ -15,7 +15,8 @@ import jax
 
 from repro.config import SIKVConfig
 from repro.sparse.sikv import SIKVAttention
-from repro.tiered.attention import tiered_sikv_decode_attention
+from repro.tiered.attention import (tiered_sikv_audit_decode_attention,
+                                    tiered_sikv_decode_attention)
 from repro.tiered.cache import TieredSIKVCache
 from repro.tiered.staging import TransferEngine
 
@@ -55,3 +56,18 @@ class TieredSIKVAttention(SIKVAttention):
                 topk=topk, device_only=True)
         return super().draft_decode(q, k_new, v_new, cache, topk=topk,
                                     scale=scale)
+
+    def audit_decode(self, q, k_new, v_new, cache, *, topk=None,
+                     draft_topk=None, scale=None
+                     ) -> Tuple[jax.Array, object, dict]:
+        """Audited step through the transfer engine's STATS-SILENT exact
+        gather — the probe must not perturb the prefetch predictor or the
+        pinned callback accounting.  Adds the tiered-only staging-hit-
+        weighted recall families."""
+        if isinstance(cache, TieredSIKVCache):
+            return tiered_sikv_audit_decode_attention(
+                q, k_new, v_new, cache, self.cfg,
+                self.transfer.audit_gather, topk=topk,
+                draft_topk=draft_topk, scale=scale)
+        return super().audit_decode(q, k_new, v_new, cache, topk=topk,
+                                    draft_topk=draft_topk, scale=scale)

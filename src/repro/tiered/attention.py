@@ -26,14 +26,15 @@ import jax.numpy as jnp
 from repro.config import SIKVConfig
 from repro.core import policy
 from repro.core import retrieval as rtr
-from repro.core.attention import (group_queries, masked_attention,
-                                  quant_valid_mask_parts, ring_segment_parts,
-                                  sink_flash_state_parts)
+from repro.core.attention import (audit_metrics_parts, group_queries,
+                                  masked_attention, quant_valid_mask_parts,
+                                  ring_segment_parts, sink_flash_state_parts)
 from repro.core.cache import dequantize_gathered
 from repro.tiered.cache import (TieredSIKVCache, append_token_tiered,
                                 gather_payload_tiered)
 
-__all__ = ["tiered_sikv_decode_attention"]
+__all__ = ["tiered_sikv_decode_attention",
+           "tiered_sikv_audit_decode_attention"]
 
 
 def tiered_sikv_decode_attention(
@@ -138,3 +139,105 @@ def tiered_sikv_decode_attention(
     valid_all = jnp.concatenate([sink_valid, ring_valid, sel_valid], axis=2)
     out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
     return out, tiered
+
+
+def _device_resident_mask(tiered: TieredSIKVCache,
+                          idx: jax.Array) -> jax.Array:
+    """Positions whose payload page is device-resident (staging pool or
+    prefetch lane) — the same resolution :func:`gather_payload_tiered`
+    performs, as a pure mask.  ``idx (B, H, T) -> (B, H, T) bool``."""
+    B, H, T = idx.shape
+    ps, P = tiered.page_size, tiered.num_pages
+    page_l = jnp.clip(idx // ps, 0, tiered.pages_per_seq - 1)
+    bt = jnp.broadcast_to(tiered.block_table[:, None, :],
+                          (B, H, tiered.pages_per_seq))
+    pg = jnp.take_along_axis(bt, page_l, axis=2)
+    pgc = jnp.clip(pg, 0, P - 1)
+    mapped = pg >= 0
+    resident = mapped & (tiered.payload_map[pgc] >= 0)
+    if tiered.prefetch_depth:
+        lane = tiered.pf_pages
+        eq = ((pgc[..., None] == lane[None, None, None, :])
+              & mapped[..., None] & (lane >= 0)[None, None, None, :])
+        resident = resident | eq.any(-1)
+    return resident
+
+
+def tiered_sikv_audit_decode_attention(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    tiered: TieredSIKVCache,
+    cfg: SIKVConfig,
+    audit_gather: Callable,
+    *,
+    topk: int | None = None,
+    draft_topk: int | None = None,
+    scale: float | None = None,
+) -> tuple[jax.Array, TieredSIKVCache, dict[str, jax.Array]]:
+    """Audited tiered decode step: hot-path computation + quality metrics.
+
+    ``audit_gather`` must be the transfer engine's *stats-silent* exact
+    path (:meth:`~repro.tiered.staging.TransferEngine.audit_gather`) —
+    the probe performs exactly TWO ``io_callback``s per layer (winner
+    gather + full-region gather for the fp reference) and neither may
+    touch the prefetch predictor or the pinned transfer counters.  Adds
+    the tiered-only ``staged_recall``/``staged_frac`` families: the
+    slice of recall served without any host traffic.
+    """
+    B, Hq, _, D = q.shape
+    Hkv = k_new.shape[1]
+    tiered = append_token_tiered(tiered, k_new, v_new, cfg)
+    Lmax = tiered.capacity
+    k_dyn = min(topk if topk is not None else policy.dynamic_k(cfg, Lmax),
+                Lmax)
+
+    codes = rtr.gather_page_view(tiered.codes, tiered.block_table)
+    sink_mask = rtr.gather_page_view(tiered.sink_mask, tiered.block_table)
+    q_sum = group_queries(q[:, :, 0, :], Hkv)
+    lut = rtr.build_lut(q_sum.astype(jnp.float32),
+                        tiered.centroids.astype(jnp.float32), cfg.group_size)
+    scores = rtr.lut_scores(codes, lut)
+
+    valid = quant_valid_mask_parts(sink_mask, tiered.length,
+                                   tiered.recent_window)
+    idx, vals = rtr.select_topk(
+        scores, k_dyn, valid_mask=jnp.broadcast_to(valid, scores.shape))
+    sel_valid = vals > jnp.asarray(jnp.finfo(scores.dtype).min / 4,
+                                   scores.dtype)
+
+    codes_sel = rtr.gather_selected_paged(tiered.codes, tiered.block_table,
+                                          idx, tiered.page_size)
+    payload, sel_valid = gather_payload_tiered(
+        tiered, idx, sel_valid, audit_gather)
+    k_sel, v_sel = dequantize_gathered(
+        codes_sel, payload["kmag"], payload["k_scale"], payload["k_zp"],
+        payload["v_q"], payload["v_scale"], payload["v_zp"],
+        tiered.mu, tiered.alpha, cfg)
+    ring_k, ring_v, ring_valid = ring_segment_parts(
+        tiered.res_k, tiered.res_v, sink_mask, tiered.length)
+    S = tiered.num_sinks
+    k_all = jnp.concatenate(
+        [tiered.sink_k.astype(jnp.float32), ring_k, k_sel], axis=2)
+    v_all = jnp.concatenate(
+        [tiered.sink_v.astype(jnp.float32), ring_v, v_sel], axis=2)
+    valid_all = jnp.concatenate(
+        [jnp.ones((B, Hkv, S), bool), ring_valid, sel_valid], axis=2)
+    out = masked_attention(q, k_all, v_all, valid_all, scale=scale)
+
+    # exact fp reference over the FULL quant region: every position's
+    # payload, wherever it lives (second — and last — io_callback)
+    idx_all = jnp.broadcast_to(jnp.arange(Lmax)[None, None, :],
+                               (B, Hkv, Lmax))
+    all_valid = jnp.ones((B, Hkv, Lmax), bool)
+    payload_all, _ = gather_payload_tiered(
+        tiered, idx_all, all_valid, audit_gather)
+    k_exact, _ = dequantize_gathered(
+        codes, payload_all["kmag"], payload_all["k_scale"],
+        payload_all["k_zp"], payload_all["v_q"], payload_all["v_scale"],
+        payload_all["v_zp"], tiered.mu, tiered.alpha, cfg)
+    metrics = audit_metrics_parts(
+        q, q_sum, scores, valid, k_exact, tiered.sink_k, ring_k, ring_valid,
+        k_dyn=k_dyn, draft_k=draft_topk,
+        staged=_device_resident_mask(tiered, idx_all), scale=scale)
+    return out, tiered, metrics

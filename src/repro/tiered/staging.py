@@ -232,6 +232,18 @@ class TransferEngine:
         self.obs.add("h2d_bytes", sum(int(a[need].nbytes) for a in out))
         return out
 
+    def audit_gather(self, layer, pg, off, need, on_device, pf_hit
+                     ) -> Tuple[np.ndarray, ...]:
+        """Stats-silent exact gather for the sampled audit probe.
+
+        Same callback signature and payload as :meth:`host_gather`, but
+        records NOTHING: no counters, no miss demand, no trace events —
+        the probe must not perturb the prefetch predictor or the pinned
+        ``callbacks`` accounting the launch-budget tests assert on.
+        """
+        return self.host.gather(int(layer), np.asarray(pg),
+                                np.asarray(off), np.asarray(need, bool))
+
     # -- prefetch (dispatch before the launch, consume after top-k) ------
 
     def predict(self, depth: int, *, exclude=()) -> List[int]:

@@ -1,0 +1,302 @@
+"""Retrieval-quality audit plane (DESIGN.md §10): metric definition
+invariants, sampling cadence, host-side recording, the probe-does-not-
+perturb-decode contract, the crippled-index detection guarantee (a
+layer whose sign codes are zeroed is visibly flagged), the tiered+spec
+metric families with the io_callback accounting unchanged, and the
+timeline partial-record behaviour when ring eviction lands mid spec
+window."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.config import ATTN, SIKVConfig, get_model_config, reduced_config
+from repro.core.attention import sikv_static_audit_metrics
+from repro.models import init_params
+from repro.obs.audit import (AUDIT_METRICS, audit_summary, per_slot_summary,
+                             record_audit, should_audit)
+from repro.obs.timeline import build_timelines, format_table
+from repro.serving import (Request, RequestScheduler, ServingEngine,
+                           TieredServingEngine)
+from repro.sparse import get_method
+
+CFG = SIKVConfig(num_sink_tokens=8, token_budget=32, recent_window=4,
+                 obs_window=8)
+# retrieval must be NON-trivial: k_dyn = 12 - 4 - 2 = 6 winners out of a
+# ~32-token quant region (at CFG the smoke prompt fits inside the budget
+# and recall saturates at 1.0, which would mask a broken index)
+CFG_TIGHT = SIKVConfig(num_sink_tokens=4, token_budget=12, recent_window=2,
+                       obs_window=4)
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = reduced_config(get_model_config("llama3.1-8b"))
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+@pytest.fixture
+def live_obs():
+    reg = obs.get_registry()
+    saved_series = dict(reg._series)
+    saved_enabled = reg.enabled
+    saved_tracer = obs.get_tracer()
+    obs.set_enabled(True, reset=True)
+    tracer = obs.set_tracer(obs.Tracer())
+    yield reg, tracer
+    reg._series.clear()
+    reg._series.update(saved_series)
+    reg.enabled = saved_enabled
+    obs.set_tracer(saved_tracer)
+
+
+def _prompts(cfg, lens, seed=3):
+    key = jax.random.PRNGKey(seed)
+    return [
+        [int(t) for t in jax.random.randint(
+            jax.random.fold_in(key, i), (l,), 1, cfg.vocab_size)]
+        for i, l in enumerate(lens)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# metric definition (device side, offline entry point)
+# ---------------------------------------------------------------------------
+
+def test_static_audit_metrics_ranges_and_saturation():
+    B, Hq, Hkv, D, L = 1, 8, 4, 64, 128
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    k = jax.random.normal(ks[0], (B, Hkv, L, D))
+    v = jax.random.normal(ks[1], (B, Hkv, L, D))
+    q = jax.random.normal(ks[2], (B, Hq, 1, D))
+    cfg = SIKVConfig(num_sink_tokens=8, token_budget=48, recent_window=8,
+                     obs_window=16)
+    cache = get_method("sikv", cfg).prefill(
+        k, v, jax.random.normal(jax.random.fold_in(key, 5),
+                                (B, Hkv, 16, D)), capacity=L + 8)
+    am = sikv_static_audit_metrics(q, cache, cfg, draft_topk=8)
+    for name in ("recall", "coverage", "margin", "draft_recall",
+                 "draft_coverage", "draft_divergence"):
+        assert am[name].shape == (B, Hkv), name
+        assert bool(jnp.all(jnp.isfinite(am[name]))), name
+    for name in ("recall", "coverage", "draft_recall", "draft_coverage",
+                 "draft_divergence"):
+        assert bool(jnp.all((am[name] >= 0.0) & (am[name] <= 1.0))), name
+    # the draft budget is a subset of the verify budget
+    assert bool(jnp.all(am["draft_recall"] <= am["recall"] + 1e-6))
+    # topk >= region size: the sign-code top-k IS the exact top-k
+    sat = sikv_static_audit_metrics(q, cache, cfg, topk=L)
+    assert bool(jnp.all(sat["recall"] == 1.0))
+
+
+def test_should_audit_cadence():
+    assert not should_audit(0, None)
+    assert not should_audit(7, 0)
+    assert all(should_audit(c, 1) for c in range(5))
+    hits = [c for c in range(10) if should_audit(c, 4)]
+    assert hits == [0, 4, 8]           # first launch always sampled
+
+
+# ---------------------------------------------------------------------------
+# host-side recording
+# ---------------------------------------------------------------------------
+
+def test_record_audit_folds_registry_trace_and_slots(live_obs):
+    reg, tracer = live_obs
+    aux = {
+        0: {"recall": np.array([[0.5, 0.7], [0.9, 0.9]]),
+            "coverage": np.array([[0.4, 0.4], [0.8, 0.8]])},
+        1: {"recall": np.array([[1.0, 1.0], [0.0, 0.0]]),
+            "coverage": np.array([[0.6, 0.6], [0.2, 0.2]])},
+    }
+    means = record_audit(aux, engine="E-test")
+    assert means[0]["recall"] == pytest.approx(0.75)
+    assert means[1]["recall"] == pytest.approx(0.5)
+    # registry: one histogram series per (metric, layer), 4 samples each
+    for li in (0, 1):
+        hits = reg.find("audit.recall", engine="E-test", layer=str(li))
+        assert len(hits) == 1 and hits[0][1].n == 4
+    # trace: one counter event per layer ("audit/layerN" tracks render
+    # as value-over-time charts in Perfetto)
+    counters = [e for e in tracer.events() if e.get("ph") == "C"]
+    assert len(counters) == 2
+    assert all(e["name"] == "quality" for e in counters)
+    assert counters[0]["args"]["recall"] == pytest.approx(0.75)
+    assert {e["tid"] for e in counters} == {tracer._tid("audit/layer0"),
+                                            tracer._tid("audit/layer1")}
+    # per-slot reduction: mean over layers and heads per batch row
+    slots = per_slot_summary(aux)
+    assert sorted(slots) == [0, 1]
+    assert slots[0]["recall"] == pytest.approx((0.6 + 1.0) / 2)
+    assert slots[1]["recall"] == pytest.approx((0.9 + 0.0) / 2)
+    # roll-up
+    summ = audit_summary(reg, engine="E-test")
+    assert summ["overall_mean"]["recall"] == pytest.approx(0.625)
+    assert summ["per_layer"]["recall"]["1"]["min"] == 0.0
+    assert set(summ["per_layer"]) <= set(AUDIT_METRICS)
+
+
+# ---------------------------------------------------------------------------
+# engine probe: sampling, non-perturbation, crippled-index detection
+# ---------------------------------------------------------------------------
+
+def test_probe_does_not_perturb_decode(engine_setup):
+    """The audited run must emit EXACTLY the tokens the unaudited run
+    emits: the probe is a separate non-donating program whose results
+    are discarded from the decode state."""
+    params, cfg = engine_setup
+    results = {}
+    for every in (None, 1):
+        eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                            prompt_len=16, max_new_tokens=6,
+                            audit_every=every)
+        sched = RequestScheduler(eng)
+        for i, p in enumerate(_prompts(cfg, [9, 16, 5], seed=5)):
+            sched.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        assert sched.run() == 3
+        results[every] = {u: r.result for u, r in sched.completed.items()}
+        if every == 1:
+            assert eng.stats["audit_steps"] == eng.stats["steps"]
+            for r in sched.completed.values():
+                assert r.audit_samples, "no audit sample attached"
+                assert 0.0 <= r.audit_samples[-1]["recall"] <= 1.0
+        else:
+            assert eng.stats["audit_steps"] == 0
+    assert results[None] == results[1]
+
+
+def test_crippled_layer_is_flagged(engine_setup):
+    """Zero the sign codes on ONE layer mid-serve: that layer's sampled
+    recall must crater while the healthy layer's stays put — the audit
+    plane exists to catch exactly this (a mis-written or mis-trained
+    index) online."""
+    params, cfg = engine_setup
+    eng = ServingEngine(params, cfg, CFG_TIGHT, method="sikv",
+                        batch_size=2, prompt_len=32, max_new_tokens=4,
+                        audit_every=1)
+    for slot, p in enumerate(_prompts(cfg, [32, 30], seed=9)):
+        eng.admit(slot, p)
+    eng.step()
+    healthy = {li: float(np.mean(m["recall"]))
+               for li, m in eng.last_audit.items()}
+    assert len(healthy) >= 2
+    victim = sorted(healthy)[0]
+    c = eng._caches[victim]["self"]
+    eng._caches[victim]["self"] = c._replace(
+        codes=jnp.zeros_like(c.codes))
+    eng.step()
+    crippled = {li: float(np.mean(m["recall"]))
+                for li, m in eng.last_audit.items()}
+    other = [li for li in crippled if li != victim]
+    # the broken layer stands out BOTH against its own history and
+    # against the healthy layers in the same sampled step
+    assert crippled[victim] < healthy[victim] - 0.2, (healthy, crippled)
+    for li in other:
+        assert crippled[victim] < crippled[li] - 0.2, (healthy, crippled)
+
+
+@pytest.mark.slow
+def test_tiered_spec_audit_families_and_callback_accounting(engine_setup,
+                                                            live_obs):
+    """The tiered+spec probe emits the staging/draft attribution families
+    and — because its exact-region gather bypasses the transfer-engine
+    counters — the hot-path identity
+    ``callbacks == (steps + verify_launches * (depth + 1)) * n_attn``
+    must survive with auditing enabled."""
+    params, cfg = engine_setup
+    n_attn = sum(1 for p in cfg.resolved_layer_pattern if p == ATTN)
+    eng = TieredServingEngine(params, cfg, CFG, batch_size=2,
+                              prompt_len=16, max_new_tokens=6,
+                              page_size=4, staging_pages=3,
+                              prefetch_depth=2, spec_depth=2,
+                              spec_draft_k=4, audit_every=2)
+    sched = RequestScheduler(eng)
+    for i, p in enumerate(_prompts(cfg, [9, 16, 5], seed=8)):
+        sched.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+    assert sched.run() == 3
+    assert eng.stats["audit_steps"] > 0
+    # the scheduler consumed-and-cleared every probe result into the
+    # registry and the per-request sample lists
+    assert eng.last_audit is None
+    reg, _ = live_obs
+    per_layer = audit_summary(reg, engine=eng.obs_label)["per_layer"]
+    for fam in ("recall", "coverage", "margin", "staged_recall",
+                "staged_frac", "draft_recall", "draft_divergence"):
+        assert fam in per_layer, sorted(per_layer)
+        assert all(r["n"] > 0 for r in per_layer[fam].values())
+    audited = [r for r in sched.completed.values() if r.audit_samples]
+    assert audited
+    for fam in ("recall", "coverage", "staged_recall", "draft_recall"):
+        assert fam in audited[0].audit_samples[0]
+    exact_tokens = eng.stats["steps"] \
+        + eng.stats.get("verify_launches", 0) * (2 + 1)
+    assert eng.xfer.stats["callbacks"] == exact_tokens * n_attn, eng.stats
+    st = sched.service_stats()
+    assert st["n_audited"] == eng.stats["audit_steps"]
+    assert 0.0 < st["audit_recall_mean"] <= 1.0
+    assert 0.0 < st["audit_coverage_mean"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# satellite: timeline partial records when the ring evicts mid spec window
+# ---------------------------------------------------------------------------
+
+def test_timeline_partial_after_eviction_mid_spec_window(engine_setup,
+                                                         live_obs):
+    """The tracer ring keeps the most recent K events; when eviction
+    lands between a request's ``spec_window`` records, its timeline goes
+    partial.  The surviving drafted/accepted counts must stay internally
+    consistent and bounded by the request's authoritative spec counters
+    (``spec_accept_rate`` uses the full counts; the timeline view is a
+    suffix)."""
+    params, cfg = engine_setup
+    _, tracer = live_obs
+    eng = ServingEngine(params, cfg, CFG, method="sikv", batch_size=2,
+                        prompt_len=16, max_new_tokens=8, spec_depth=3,
+                        spec_draft_k=4)
+    sched = RequestScheduler(eng)
+    for i, p in enumerate(_prompts(cfg, [9, 12], seed=6)):
+        sched.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+    assert sched.run() == 2
+    evs = tracer.events()
+    # complete reconstruction agrees with the request-level counters
+    full = build_timelines(evs)
+    for uid, tl in full.items():
+        req = sched.completed[uid]
+        drafted = sum(d for d, _ in tl.spec_windows)
+        accepted = sum(a for _, a in tl.spec_windows)
+        assert drafted == req.spec_drafted
+        assert accepted == req.spec_accepted
+        rate = accepted / drafted if drafted else 0.0
+        assert rate == pytest.approx(req.spec_accept_rate)
+    # evict everything up to AND INCLUDING a mid-run spec_window event
+    # (ring semantics: only the most recent events survive — the cut
+    # request loses that window but keeps the burst that follows it)
+    widx = [i for i, e in enumerate(evs) if e["name"] == "spec_window"]
+    assert len(widx) >= 2, "need multiple spec windows for a mid cut"
+    cut = widx[len(widx) // 2] + 1
+    victim = evs[cut - 1]["args"]["uid"]
+    part = build_timelines(evs[cut:])
+    vt = part[victim]
+    vreq = sched.completed[victim]
+    assert sum(d for d, _ in vt.spec_windows) < vreq.spec_drafted
+    for uid, tl in part.items():
+        req = sched.completed[uid]
+        drafted = sum(d for d, _ in tl.spec_windows)
+        accepted = sum(a for _, a in tl.spec_windows)
+        assert accepted <= drafted <= req.spec_drafted
+        assert accepted <= req.spec_accepted
+        for d, a in tl.spec_windows:
+            assert 0 <= a <= d
+        # partial lifecycle fields degrade to None, never garbage
+        if tl.t_submit is None:
+            assert tl.ttft_us is None and tl.queued_us is None
+    # the table renders partial rows with '-' instead of raising
+    table = format_table(part)
+    assert len(table.splitlines()) == 2 + len(part)
