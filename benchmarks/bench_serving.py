@@ -42,6 +42,8 @@ from repro.core.cache import init_cache
 from repro.core.policy import staging_pages_needed, tiered_pool_split
 from repro.data.synthetic import lm_sequence_batch
 from repro.models import init_params
+from repro.obs import percentiles
+from repro.sched import SLOScheduler
 from repro.serving import (PagedServingEngine, Request, RequestScheduler,
                            ServingEngine, TieredServingEngine)
 from repro.tiered.cache import page_byte_split
@@ -138,11 +140,16 @@ def run(*, batch: int = 2, prompt_len: int = 64, n_requests: int = 6,
         results["spec"] = spec_decode_section(
             arch, prompt_len=32, max_new=12, n_requests=4, train_steps=60,
             smoke=True)
+        results["sched"] = sched_slo_section(
+            params, cfg, sikv, prompt_len=32, page_size=8, max_new=10,
+            n_batch=4, n_interactive=3, smoke=True)
     else:
         results["tiered"] = tiered_concurrency(params, cfg, sikv)
         results["prefetch"] = tiered_prefetch_sweep(params, cfg, sikv)
         results["stall"] = chunked_admission_stall(arch)
         results["spec"] = spec_decode_section(arch)
+        results["sched"] = sched_slo_section(params, cfg, sikv,
+                                             prompt_len=prompt_len)
     return results
 
 
@@ -599,6 +606,249 @@ def spec_decode_section(arch: str = "llama3.1-8b", *, prompt_len: int = 64,
                  smoke=smoke, smoke_relaxed=1.0, detail=str(out))
     return {"launch_reduction": ratio,
             "accept_rate": out["dense"]["accept"]}
+
+
+def _sched_workload(cfg, *, prompt_len: int, max_new: int, n_batch: int,
+                    n_interactive: int, seed: int = 97):
+    """Seeded bursty mixed-class workload: a saturating batch backlog
+    submitted first, then an interactive burst landing behind it (arrival
+    order IS the queue order).  Deterministic for a given seed."""
+    toks = lm_sequence_batch(jax.random.PRNGKey(seed),
+                             n_batch + n_interactive, prompt_len,
+                             cfg.vocab_size)
+    reqs = []
+    for i in range(n_batch):
+        reqs.append(Request(uid=i, prompt=[int(t) for t in toks[i]],
+                            max_new_tokens=max_new, klass="batch",
+                            tenant=f"t{i % 2}"))
+    for j in range(n_interactive):
+        i = n_batch + j
+        reqs.append(Request(uid=i,
+                            prompt=[int(t) for t in toks[i, : prompt_len // 4]],
+                            max_new_tokens=max(2, max_new // 4),
+                            klass="interactive", tenant=f"t{i % 2}"))
+    return reqs
+
+
+def _class_stats(sched):
+    out = {}
+    for klass in ("interactive", "batch"):
+        mine = [r for r in sched.completed.values() if r.klass == klass]
+        tt = percentiles([r.ttft for r in mine])
+        tp = percentiles([t for r in mine for t in r.token_times])
+        out[klass] = {"n": len(mine), "ttft_p50": tt[0], "ttft_p99": tt[2],
+                      "tpot_p50": tp[0], "tpot_p99": tp[2]}
+    return out
+
+
+def _emit_sched_row(name, dt, sched, extra=""):
+    st = _class_stats(sched)
+    toks = sum(len(r.result) for r in sched.completed.values())
+    kv = ";".join(
+        f"{k}_{c[:3]}={st[c][k] * 1e3:.2f}"
+        for c in ("interactive", "batch")
+        for k in ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99"))
+    emit(f"serving/sched/{name}", dt * 1e6,
+         f"requests={len(sched.completed)};tokens={toks};"
+         f"tok_per_s={toks / max(dt, 1e-9):.1f};"
+         f"n_int={st['interactive']['n']};n_bat={st['batch']['n']};"
+         + kv + (";" + extra if extra else ""))
+    return st, toks
+
+
+def sched_slo_section(params, cfg, sikv, *, prompt_len: int = 64,
+                      page_size: int = 16, max_new: int = 16, batch: int = 2,
+                      n_batch: int = 6, n_interactive: int = 4,
+                      ttft_ceiling: float = 0.5, tput_floor: float = 0.9,
+                      smoke: bool = False):
+    """SLO scheduling headline (DESIGN.md §11): FIFO vs class-priority.
+
+    The seeded bursty workload queues a slot-saturating batch backlog with
+    an interactive burst behind it.  FIFO drains in arrival order, so the
+    burst's TTFT (measured from SUBMIT time, not admission start) pays the
+    whole backlog; the SLO scheduler's priority admission lets interactive
+    jump the queue.  Acceptance: interactive p99 TTFT under SLO <=
+    ``ttft_ceiling`` (0.5x) of FIFO while total throughput stays >=
+    ``tput_floor`` (0.9x) — both structural (admission ORDER, not machine
+    speed), so they hold at smoke shapes too.
+
+    The overload sub-section then drives the SLO scheduler with mid-run
+    interactive arrivals while every slot is held by batch work, forcing
+    preemption-by-spill: a batch victim's pages demote through the tiered
+    writeback protocol (host-side snapshot on the single-tier engines),
+    the interactive request takes its slot, and the victim resumes
+    bit-exactly.  The exactness sub-section asserts that token-stream
+    identity on all three engines.
+    """
+    header("bench_serving: SLO scheduling (priority admission + spill)")
+    mk = lambda: PagedServingEngine(params, cfg, sikv, batch_size=batch,
+                                    prompt_len=prompt_len,
+                                    max_new_tokens=max_new,
+                                    page_size=page_size)
+    stats = {}
+    tputs = {}
+    wtoks = lm_sequence_batch(jax.random.PRNGKey(171), 2, prompt_len,
+                              cfg.vocab_size)
+    for policy in ("fifo", "slo"):
+        eng = mk()
+        # warmup: compile every program off the clock — TTFT must measure
+        # queueing policy, not first-launch compilation
+        warm = RequestScheduler(eng)
+        warm.submit(Request(uid=-1, prompt=[int(t) for t in wtoks[0]],
+                            max_new_tokens=2))
+        warm.submit(Request(uid=-2,
+                            prompt=[int(t) for t in wtoks[1, : prompt_len // 4]],
+                            max_new_tokens=2))
+        warm.run()
+        sched = (RequestScheduler(eng) if policy == "fifo"
+                 else SLOScheduler(eng))
+        for r in _sched_workload(cfg, prompt_len=prompt_len,
+                                 max_new=max_new, n_batch=n_batch,
+                                 n_interactive=n_interactive):
+            assert sched.submit(r)
+        t0 = time.time()
+        done = sched.run()
+        dt = time.time() - t0
+        assert done == n_batch + n_interactive, (policy, done)
+        extra = ""
+        if policy == "slo":
+            st = sched.service_stats()
+            extra = (f"preemptions={int(st['preemptions'])};"
+                     f"resumes={int(st['resumes'])};"
+                     f"spilled_pages={int(st['spilled_pages'])};"
+                     f"quota_deferrals={int(st['quota_deferrals'])}")
+        stats[policy], toks = _emit_sched_row(policy, dt, sched, extra)
+        tputs[policy] = toks / max(dt, 1e-9)
+
+    ttft_ratio = (stats["slo"]["interactive"]["ttft_p99"]
+                  / max(stats["fifo"]["interactive"]["ttft_p99"], 1e-9))
+    tput_ratio = tputs["slo"] / max(tputs["fifo"], 1e-9)
+    emit("serving/sched/summary", 0.0,
+         f"int_ttft_p99_ratio={ttft_ratio:.3f};"
+         f"tput_ratio={tput_ratio:.3f};"
+         f"fifo_int_ttft_p99_ms="
+         f"{stats['fifo']['interactive']['ttft_p99'] * 1e3:.2f};"
+         f"slo_int_ttft_p99_ms="
+         f"{stats['slo']['interactive']['ttft_p99'] * 1e3:.2f}")
+    assert_ratio("SLO interactive p99 TTFT vs FIFO under bursty overload",
+                 ttft_ratio, ttft_ceiling, ceiling=True, smoke=smoke,
+                 smoke_relaxed=ttft_ceiling, detail=str(stats))
+    assert_ratio("SLO total throughput vs FIFO", tput_ratio, tput_floor,
+                 smoke=smoke, smoke_relaxed=0.75, detail=str(tputs))
+
+    over = sched_overload_section(params, cfg, sikv, prompt_len=prompt_len,
+                                  page_size=page_size, max_new=max_new,
+                                  batch=batch)
+    exact = sched_preempt_exactness(params, cfg, sikv,
+                                    prompt_len=prompt_len,
+                                    page_size=page_size)
+    return {"ttft_ratio": ttft_ratio, "tput_ratio": tput_ratio,
+            "overload": over, "exactness": exact}
+
+
+def sched_overload_section(params, cfg, sikv, *, prompt_len: int,
+                           page_size: int, max_new: int, batch: int):
+    """Sustained overload: interactive bursts arrive MID-RUN while every
+    slot is pinned by long batch work, so priority admission alone cannot
+    help — the scheduler must spill a victim.  Asserts preemption actually
+    fired, every spill resumed, the full workload completed, and no page
+    leaked under a hold."""
+    eng = PagedServingEngine(params, cfg, sikv, batch_size=batch,
+                             prompt_len=prompt_len, max_new_tokens=max_new,
+                             page_size=page_size)
+    sched = SLOScheduler(eng)
+    toks = lm_sequence_batch(jax.random.PRNGKey(131), batch + 4, prompt_len,
+                             cfg.vocab_size)
+    for i in range(batch + 1):
+        assert sched.submit(Request(
+            uid=i, prompt=[int(t) for t in toks[i]],
+            max_new_tokens=max_new, klass="batch", tenant="t0"))
+    t0 = time.time()
+    # pump until the batch backlog holds every slot, then land the burst
+    while len(sched._active_slots()) < batch and sched.busy:
+        sched.step_once()
+    for j in range(2):
+        i = batch + 1 + j
+        assert sched.submit(Request(
+            uid=i, prompt=[int(t) for t in toks[i, : prompt_len // 4]],
+            max_new_tokens=max(2, max_new // 4),
+            klass="interactive", tenant="t1"))
+    done = sched.run()
+    dt = time.time() - t0
+    st = sched.service_stats()
+    _emit_sched_row("overload", dt, sched,
+                    f"preemptions={int(st['preemptions'])};"
+                    f"resumes={int(st['resumes'])};"
+                    f"spilled_pages={int(st['spilled_pages'])}")
+    assert len(sched.completed) == batch + 3, (done, sched.completed)
+    assert st["preemptions"] >= 1, (
+        "overload never forced a spill — shrink the pool or slots", st)
+    assert st["resumes"] == st["preemptions"], st
+    assert st["preempted_waiting"] == 0, st
+    snap = eng.pool.snapshot()
+    assert not snap["preempt_holds"], snap["preempt_holds"]
+    for r in sched.completed.values():
+        assert len(r.result) == r.max_new_tokens, (r.uid, len(r.result))
+    return {"preemptions": int(st["preemptions"]),
+            "int_ttft_p99": st["ttft_p99_interactive"],
+            "bat_ttft_p99": st["ttft_p99_batch"]}
+
+
+def sched_preempt_exactness(params, cfg, sikv, *, prompt_len: int,
+                            page_size: int, n_steps: int = 10,
+                            preempt_at: int = 4):
+    """Spill/resume exactness: on each engine, decode a request straight
+    through, then decode the SAME prompt with a mid-stream preempt+resume
+    — the committed token streams must be bitwise identical.  The second
+    run on the paged/tiered engines admits via a prefix-cache HIT (the
+    first run registered the prompt), so the spill also exercises pages
+    shared with the registry."""
+    max_new = n_steps + 2
+    engines = {
+        "dense": lambda: ServingEngine(
+            params, cfg, sikv, method="sikv", batch_size=2,
+            prompt_len=prompt_len, max_new_tokens=max_new),
+        "paged": lambda: PagedServingEngine(
+            params, cfg, sikv, batch_size=2, prompt_len=prompt_len,
+            max_new_tokens=max_new, page_size=page_size),
+        "tiered": lambda: TieredServingEngine(
+            params, cfg, sikv, batch_size=2, prompt_len=prompt_len,
+            max_new_tokens=max_new, page_size=page_size, prefetch_depth=2),
+    }
+    toks = lm_sequence_batch(jax.random.PRNGKey(53), 1, prompt_len,
+                             cfg.vocab_size)
+    prompt = [int(t) for t in toks[0]]
+    out = {}
+    for name, mk in engines.items():
+        eng = mk()
+
+        def drive(interrupt: bool) -> list:
+            eng.admit_start(0, prompt, max_new_tokens=max_new)
+            first = None
+            while first is None:
+                first, _ = eng.admit_step()
+            stream = [int(first)]
+            for i in range(n_steps):
+                if interrupt and i == preempt_at:
+                    snap = eng.preempt_slot(0)
+                    assert eng.can_resume(snap)
+                    eng.resume_slot(0, snap)
+                stream.append(int(eng.step()[0]))
+            eng.retire(0)
+            return stream
+
+        t0 = time.time()
+        base = drive(interrupt=False)
+        spilled = drive(interrupt=True)
+        dt = time.time() - t0
+        assert spilled == base, (
+            f"{name}: preempted-then-resumed stream diverged from the "
+            f"uninterrupted run at "
+            f"{next(i for i, (a, b) in enumerate(zip(base, spilled)) if a != b)}")
+        out[name] = True
+        emit(f"serving/sched/exactness/{name}", dt * 1e6,
+             f"tokens={len(base)};preempt_at={preempt_at};identical=True")
+    return out
 
 
 if __name__ == "__main__":

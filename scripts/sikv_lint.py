@@ -57,7 +57,8 @@ BUDGET_RULES = {
 # (harness label, factory kwargs, smoke depth) — depths chosen so the
 # whole protocol gate stays well under a minute in CI while still
 # covering every event kind (lane dispatch, CoW shares, registry
-# eviction all fire; measured ~13s total on the CI shape).
+# eviction, preempt/resume spills all fire; measured ~20s total on the
+# CI shape — the tiered runs cover >2.5k preempt transitions).
 PROTOCOL_SMOKE = (("paged", {}, 9), ("tiered", {}, 8),
                   ("tiered_spec", {"spec": True}, 7))
 

@@ -101,6 +101,11 @@ class ProtocolHarness:
             self.payload_map = None
             self._write_page = [None] * num_slots
             self._lane_live = []
+        # at most ONE outstanding spilled request (bounds the explorer's
+        # state space; the scheduler allows one per batch slot): the
+        # record is what resume needs beyond the pool's hold — write
+        # cursor and admission reservation
+        self._preempted: Optional[Dict[str, Any]] = None
         self.spec_obs = spec_mod.ProtocolSpec(num_pages)
         self.spec_obs.observe("init", self.view())  # baseline labels
         self._mid: List[str] = []
@@ -158,6 +163,10 @@ class ProtocolHarness:
             tuple(self.slots._resv),
             None if p is None else (p["slot"], p["key"], p["mode"],
                                     tuple(p.get("pages") or ())),
+            tuple(sorted((repr(o), tuple(ps))
+                         for o, ps in pool.holds.items())),
+            None if self._preempted is None
+            else (self._preempted["host_pos"], self._preempted["resv"]),
         ]
         if st is not None:
             key += [
@@ -363,6 +372,11 @@ class ProtocolHarness:
         if self.tiered and self.prefetch_depth:
             exclude = set(self.staging.cold_pages()) \
                 | {p for p in self._write_page if p is not None}
+            held = set(self.pool.held_pages())
+            if held:
+                live = {p for s in self.slots.active_slots()
+                        for p in (self.slots.slot_pages(s) or [])}
+                exclude |= held - live
             for s in self.slots.active_slots():
                 pos = self._host_pos[s]
                 spages = self.slots.slot_pages(s)
@@ -482,6 +496,59 @@ class ProtocolHarness:
         self.slots.release_slot(s)
         self._host_pos[s] = self.capacity
 
+    def _preempt(self, s: int) -> None:
+        """Mirror of ``TieredServingEngine.preempt_slot``: hold first,
+        writeback-then-demote the victim's exclusively-staged pages,
+        release the slot.  The hold keeps refcounts above zero, so the
+        retire below can never drop the spilled host copies."""
+        pages = self.slots.slot_pages(s)
+        owner = ("preempt", 0)  # one outstanding spill at a time
+        self.pool.preempt_hold(owner, pages)
+        if self._write_page[s] is not None:
+            self.staging.unpin(self._write_page[s])
+            self._write_page[s] = None
+        shared = {p for o in self.slots.active_slots() if o != s
+                  for p in (self.slots.slot_pages(o) or [])}
+        for page in pages:
+            if self.staging.slot_of(page) is None:
+                continue
+            # writeback covers shared pages too: the hold outlives any
+            # prefix sharer, and held pages cannot be dirtied afterwards
+            if self.staging.is_dirty(page) or page not in self.host.valid:
+                self._writeback(page)
+                self.staging.clear_dirty(page)
+            if page in shared:
+                continue
+            self.staging.release_page(page)
+            self.pool.set_tier([page], "host")
+            self.payload_map[page] = -1
+        self._preempted = {"owner": owner,
+                           "host_pos": self._host_pos[s],
+                           "resv": self.slots._resv[s]}
+        self._retire(s)
+
+    def _resume(self) -> None:
+        """Mirror of ``TieredServingEngine.resume_slot``: the hold's refs
+        transfer to the new slot binding; the write page is left for the
+        next decode's prep to re-stage from its host copy."""
+        rec = self._preempted
+        assert rec is not None
+        slot = self._free_slot()
+        pages = self.pool.release_hold(rec["owner"], transfer=True)
+        self.slots.assign(slot, pages, reserved=rec["resv"])
+        row = list(pages) + [-1] * (self.pages_per_seq - len(pages))
+        self.block_table[slot] = row
+        self._host_pos[slot] = rec["host_pos"]
+        self._preempted = None
+
+    def _retire_preempted(self) -> None:
+        """Abandon a spilled request (cancelled while preempted): the
+        plain hold release frees pages no other holder shares."""
+        rec = self._preempted
+        assert rec is not None
+        self.pool.release_hold(rec["owner"])
+        self._preempted = None
+
     def _pressure(self) -> None:
         for page in self.staging.cold_pages():
             if self.staging.is_dirty(page):
@@ -519,6 +586,20 @@ class ProtocolHarness:
                 evs.append(("pressure",))
             if self.staging.lru_head() is not None:
                 evs.append(("demote",))
+            if self._preempted is None:
+                evs += [("preempt", s) for s in decodable
+                        if self._pending is None
+                        or self._pending["slot"] != s]
+            elif self._free_slot() is not None \
+                    and self.pool.available() >= self._preempted["resv"]:
+                per_slot = (1 if self.spec_depth is None
+                            else spec_window_pages(self.spec_depth,
+                                                   self.page_size))
+                active = len(self.slots.active_slots())
+                if (active + 1) * per_slot <= self.staging.num_slots:
+                    evs.append(("resume",))
+            if self._preempted is not None:
+                evs.append(("retire_preempted",))
         return evs
 
     def apply(self, event: Event) -> List[str]:
@@ -546,6 +627,13 @@ class ProtocolHarness:
             self._pressure()
         elif kind == "demote":
             self._demote()
+        elif kind == "preempt":
+            self._preempt(event[1])
+        elif kind == "resume":
+            self._resume()
+        elif kind == "retire_preempted":
+            kind = "retire"  # abandoning a spill is a retire to the spec
+            self._retire_preempted()
         else:
             raise ValueError(f"unknown event {event!r}")
         return self._mid + self.spec_obs.observe(kind, self.view()) \

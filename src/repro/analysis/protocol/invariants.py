@@ -31,7 +31,14 @@ Rule ids (SIKV-I001..I010; referenced from DESIGN.md §9):
   spec's derivation (snapshot-vs-spec agreement);
 * I010 — the device payload-map mirror disagrees with the staging
   cache (two lane pages committed into one slot: the same-loop
-  writeback-eviction bug class).
+  writeback-eviction bug class);
+* I011 — a preemption-held page is mis-kept: held by a spilled request
+  yet carrying pending writes (staged DIRTY), sitting in the prefetch
+  lane, still some slot's write page, or lacking the host copy a resume
+  would read back.  Clean staged residency is permitted — a page a
+  prefix-hit sharer promoted can outlive that sharer in the staging LRU,
+  which reclaims it — but dirty bits and write pins require a live
+  writer, and a spilled request has none.
 """
 from __future__ import annotations
 
@@ -49,6 +56,8 @@ INVARIANT_RULES = {
     "SIKV-I008": "prefetch-lane page freed / staged / not host-valid",
     "SIKV-I009": "pool.snapshot() disagrees with the typestate spec",
     "SIKV-I010": "device payload-map mirror disagrees with staging",
+    "SIKV-I011": "preemption-held page dirty/lane/write-page or "
+                 "missing its host copy",
 }
 
 
@@ -87,12 +96,18 @@ def _check_refcounts(v: ProtocolView, errs: List[str]) -> None:
     for key, entry in pool.registry.items():
         for p in entry.page_ids:
             expect[p] += 1
+    holds = getattr(pool, "holds", {})
+    for owner, pages in holds.items():
+        for p in pages:
+            expect[p] += 1
     for p in range(pool.num_pages):
         if pool.refcount[p] != expect[p]:
             owners = [f"slot {s}" for s, pages in v._slot_pages.items()
                       if p in pages]
             owners += [f"registry {k[:3]}..." for k, e in
                        pool.registry.items() if p in e.page_ids]
+            owners += [f"hold {o!r}" for o, pages in holds.items()
+                       if p in pages]
             errs.append(
                 f"SIKV-I002 page {p}: refcount {pool.refcount[p]} but "
                 f"{expect[p]} reference(s) held ({owners or 'nobody'})")
@@ -288,6 +303,43 @@ def _check_payload_map(v: ProtocolView, errs: List[str]) -> None:
                 f"page's payload bytes")
 
 
+def _check_holds(v: ProtocolView, errs: List[str]) -> None:
+    pool = v.pool
+    holds = getattr(pool, "holds", {})
+    if not holds:
+        return
+    slot_held = {p for pages in v._slot_pages.values() for p in pages}
+    writers = {p for p in v.write_pages if p is not None}
+    for owner, pages in holds.items():
+        if len(set(pages)) != len(pages):
+            errs.append(f"SIKV-I011 hold {owner!r} lists a page twice: "
+                        f"{pages}")
+        for p in pages:
+            if pool.refcount[p] == 0:
+                errs.append(f"SIKV-I011 hold {owner!r} references freed "
+                            f"page {p}")
+                continue
+            if p in slot_held:
+                # shared with a live slot (prefix-hit sharer): the live
+                # slot's own residency rules apply, nothing extra to say
+                continue
+            if v.staging is not None and v.staging.is_dirty(p):
+                errs.append(
+                    f"SIKV-I011 preempted page {p} (hold {owner!r}) is "
+                    f"staged DIRTY with no live writer — spill must write "
+                    f"back before the victim's slot is released")
+            if p in v.lane:
+                errs.append(f"SIKV-I011 preempted page {p} (hold "
+                            f"{owner!r}) sits in the prefetch lane")
+            if p in writers:
+                errs.append(f"SIKV-I011 preempted page {p} (hold "
+                            f"{owner!r}) is still some slot's write page")
+            if v.host is not None and p not in v.host.valid:
+                errs.append(
+                    f"SIKV-I011 preempted page {p} (hold {owner!r}) has "
+                    f"no current host copy — resume would read garbage")
+
+
 def _check_snapshot(v: ProtocolView, errs: List[str]) -> None:
     from repro.analysis.protocol import spec as spec_mod
     snap = v.pool.snapshot(detail=True)
@@ -321,6 +373,7 @@ def check_view(view: ProtocolView, *, snapshot: bool = True) -> List[str]:
     _check_lane(view, errs)
     _check_block_table(view, errs)
     _check_payload_map(view, errs)
+    _check_holds(view, errs)
     if snapshot:
         _check_snapshot(view, errs)
     return errs

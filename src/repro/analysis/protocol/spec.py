@@ -22,7 +22,15 @@ events), in exactly one base state:
                       (dispatched, not yet committed).  The lane is
                       filled and consumed within one decode/spec event,
                       so this state is only observable at the mid-event
-                      probe the harness runs right after dispatch.
+                      probe the harness runs right after dispatch;
+* ``preempted``     — the page is kept alive ONLY by a preemption hold
+                      (``pool.holds``; no slot maps it): the owning
+                      request was spilled, its payload demoted to the
+                      host store, and the sign-code index stays
+                      device-resident so the page remains scorable.  A
+                      page shared with a still-live slot (prefix hit)
+                      keeps that slot's state — the hold is then a pure
+                      refcount attribute.
 
 Pinning (a live slot's write page / spec-window page) and CoW sharing
 (refcount > 1) are orthogonal *attributes* constrained by the
@@ -46,13 +54,16 @@ HOST = "host-current"
 STAGED_CLEAN = "staged-clean"
 STAGED_DIRTY = "staged-dirty"
 LANE = "lane"
+PREEMPTED = "preempted"
 
-STATES = (FREE, RESERVED, MAPPED, HOST, STAGED_CLEAN, STAGED_DIRTY, LANE)
+STATES = (FREE, RESERVED, MAPPED, HOST, STAGED_CLEAN, STAGED_DIRTY, LANE,
+          PREEMPTED)
 
 # scheduler-level events (the explorer's alphabet; prefetch dispatch and
 # lane commit are sub-steps of decode/spec, exactly as in the engine)
 EVENTS = ("admit_start", "admit_finish", "admit_hit", "admit_cancel",
-          "decode", "spec", "retire", "pressure", "demote")
+          "decode", "spec", "retire", "pressure", "demote",
+          "preempt", "resume")
 
 # any event that allocates (registry eviction under pressure) or
 # releases pages can free a mapped page in ANY payload placement — a
@@ -78,8 +89,11 @@ TRANSITIONS: Dict[str, FrozenSet[Tuple[str, str]]] = {
                                (RESERVED, MAPPED),
                                (STAGED_CLEAN, HOST),
                                (STAGED_DIRTY, HOST)}) | _TO_FREE,
-    # prefix hit: pure sharing (refcount attribute); no page moves
-    "admit_hit": frozenset(),
+    # prefix hit: pure sharing (refcount attribute); no page moves —
+    # except that sharing a PREEMPTED request's registered pages gives
+    # them a live slot again, so they surface as that slot's placement
+    "admit_hit": frozenset({(PREEMPTED, HOST), (PREEMPTED, MAPPED),
+                            (PREEMPTED, STAGED_CLEAN)}),
     # the pending pages (refcount 1 by construction) release
     "admit_cancel": frozenset({(RESERVED, FREE)}),
     # one append: fresh boundary/CoW pages stage dirty, a re-opened
@@ -93,7 +107,11 @@ TRANSITIONS: Dict[str, FrozenSet[Tuple[str, str]]] = {
                          (STAGED_CLEAN, STAGED_DIRTY),
                          (STAGED_CLEAN, HOST), (STAGED_DIRTY, HOST),
                          (HOST, LANE), (LANE, STAGED_CLEAN),
-                         (LANE, HOST)}) | _TO_FREE,
+                         (LANE, HOST),
+                         # CoW away from a page shared with a preemption
+                         # hold strands it with the hold alone
+                         (HOST, PREEMPTED),
+                         (STAGED_CLEAN, PREEMPTED)}) | _TO_FREE,
     # verify window prep is a multi-position decode prep; rollback
     # truncates the rejected tail (dirty pages DISCARDED, never written
     # back — already covered by staged-dirty -> free)
@@ -102,14 +120,47 @@ TRANSITIONS: Dict[str, FrozenSet[Tuple[str, str]]] = {
                        (STAGED_CLEAN, STAGED_DIRTY),
                        (STAGED_CLEAN, HOST), (STAGED_DIRTY, HOST),
                        (HOST, LANE), (LANE, STAGED_CLEAN),
-                       (LANE, HOST)}) | _TO_FREE,
+                       (LANE, HOST),
+                       (HOST, PREEMPTED),
+                       (STAGED_CLEAN, PREEMPTED)}) | _TO_FREE,
     # slot references drop; pages with no other sharer free (dirty
-    # content discarded), registry-shared pages merely lose a reference
-    "retire": _TO_FREE,
+    # content discarded), registry-shared pages merely lose a reference.
+    # Retiring (abandoning) a PREEMPTED request releases its hold: pages
+    # no one else references free; pages the registry (or another slot)
+    # still shares fall back to that holder's placement.  Conversely,
+    # retiring the LAST live sharer of a held page strands it with the
+    # hold alone — it becomes PREEMPTED (clean staged residency may ride
+    # along until the LRU reclaims it; SIKV-I011 forbids dirty).
+    "retire": _TO_FREE
+    | frozenset((PREEMPTED, s)
+                for s in (FREE, HOST, MAPPED, STAGED_CLEAN))
+    | frozenset((s, PREEMPTED)
+                for s in (HOST, MAPPED, STAGED_CLEAN)),
     # queue-head pressure: dirty cold pages write back IN PLACE
     "pressure": frozenset({(STAGED_DIRTY, STAGED_CLEAN)}),
     # explicit demotion (LRU eviction): writeback first when dirty
     "demote": frozenset({(STAGED_CLEAN, HOST), (STAGED_DIRTY, HOST)}),
+    # spill a victim slot: tiered pages demote (writeback when dirty or
+    # host-stale) then pass to the preemption hold; single-tier pools
+    # snapshot host-side and simply free (the hold is tiered-only).
+    # Pages shared with another live slot keep that slot's state
+    # (identity).  Registry evictions never happen here (no allocation).
+    # (staged-dirty -> staged-clean: the spill writes back pages a
+    # prefix sharer keeps staged, in place)
+    "preempt": frozenset({(STAGED_CLEAN, PREEMPTED),
+                          (STAGED_DIRTY, PREEMPTED),
+                          (STAGED_DIRTY, STAGED_CLEAN),
+                          (HOST, PREEMPTED), (MAPPED, PREEMPTED)})
+    | _TO_FREE,
+    # re-admit a preempted request into a free slot: held pages bind to
+    # the slot (payload still host-resident; the write page may re-stage
+    # immediately), single-tier pools re-allocate and scatter the
+    # snapshot back (fresh pages), and the allocation can evict LRU
+    # registry entries
+    "resume": frozenset({(PREEMPTED, HOST), (PREEMPTED, MAPPED),
+                         (PREEMPTED, STAGED_CLEAN),
+                         (PREEMPTED, STAGED_DIRTY),
+                         (FREE, MAPPED)}) | _TO_FREE,
 }
 
 
@@ -122,6 +173,13 @@ def page_label(page: int, *, pool, staging=None, host=None,
         return FREE
     if page in pending_pages:
         return RESERVED
+    held = sum(1 for pages in getattr(pool, "holds", {}).values()
+               if page in pages)
+    if held:
+        others = (pool.refcount[page] - held
+                  - (1 if page in pool._registry_pages else 0))
+        if others == 0:
+            return PREEMPTED
     if staging is None:
         return MAPPED
     if staging.slot_of(page) is not None:

@@ -15,6 +15,13 @@ https://ui.perfetto.dev — one lane per decode slot plus scheduler and
 transfer tracks (DESIGN.md §8).  Both files are written atomically
 (tmp + rename), so a crashed run never leaves truncated JSON behind.
 
+``--sched-policy slo`` swaps the FIFO loop for the SLO-aware scheduler
+(DESIGN.md §11): disaggregated prefill/decode roles, interactive-class
+priority admission (``--interactive-every``), per-tenant quotas
+(``--tenant-quota``, ``--tenants``), and preemption-by-spill when
+interactive work is blocked.  ``--max-queue`` bounds the submission
+queue under either policy.
+
 ``--audit-every N`` samples every Nth decode step through the engine's
 retrieval-quality audit probe (exact fp rescoring of the full cache:
 recall@k, attention-mass coverage, boundary margins — DESIGN.md §10);
@@ -41,7 +48,11 @@ def validate_serve_flags(*, paged: bool, method: str,
                          host_pages: bool, staging_pages: int | None,
                          prefetch_depth: int | None,
                          spec_depth: int | None = None,
-                         spec_draft_k: int | None = None) -> None:
+                         spec_draft_k: int | None = None,
+                         sched_policy: str = "fifo",
+                         tenant_quota: list[str] | None = None,
+                         interactive_every: int | None = None,
+                         tenants: str | None = None) -> None:
     """Reject contradictory flag combinations with a clear error instead of
     silently ignoring one of them (mirrors the --paged/--method guard)."""
     if paged and method != "sikv":
@@ -70,6 +81,15 @@ def validate_serve_flags(*, paged: bool, method: str,
             "--spec-draft-k sets the DRAFT retrieval budget of "
             "speculative decoding; without --spec-depth there is no "
             "draft pass — add --spec-depth or drop --spec-draft-k")
+    if sched_policy != "slo":
+        for flag, val in [("--tenant-quota", tenant_quota or None),
+                          ("--interactive-every", interactive_every),
+                          ("--tenants", tenants)]:
+            if val is not None:
+                raise ValueError(
+                    f"{flag} configures the SLO scheduler's class/tenant "
+                    f"policy; the fifo policy ignores it — add "
+                    f"--sched-policy slo or drop {flag}")
 
 
 def serve(arch: str, *, method: str = "sikv", batch: int = 4,
@@ -82,7 +102,12 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
           spec_depth: int | None = None, spec_draft_k: int | None = None,
           audit_every: int | None = None,
           metrics_json: str | None = None, trace: str | None = None,
-          check_invariants: bool = False):
+          check_invariants: bool = False,
+          sched_policy: str = "fifo",
+          tenant_quota: list[str] | None = None,
+          max_queue: int | None = None,
+          interactive_every: int | None = None,
+          tenants: str | None = None):
     if metrics_json is not None or trace is not None:
         # flip BEFORE building anything: engines/schedulers bind their
         # metric and tracer handles at construction time
@@ -93,7 +118,11 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
     validate_serve_flags(paged=paged, method=method, host_pages=host_pages,
                          staging_pages=staging_pages,
                          prefetch_depth=prefetch_depth,
-                         spec_depth=spec_depth, spec_draft_k=spec_draft_k)
+                         spec_depth=spec_depth, spec_draft_k=spec_draft_k,
+                         sched_policy=sched_policy,
+                         tenant_quota=tenant_quota,
+                         interactive_every=interactive_every,
+                         tenants=tenants)
     cfg = get_model_config(arch)
     if reduced:
         cfg = reduced_config(cfg)
@@ -124,12 +153,27 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
                                batch_size=batch, prompt_len=prompt_len,
                                max_new_tokens=max_new,
                                prefill_chunk=prefill_chunk, **spec)
-    sched = RequestScheduler(engine, check_invariants=check_invariants)
+    if sched_policy == "slo":
+        from repro.sched import SLOScheduler, parse_tenant_quotas
+        sched = SLOScheduler(engine, check_invariants=check_invariants,
+                             max_queue=max_queue,
+                             quotas=parse_tenant_quotas(tenant_quota or []))
+    else:
+        sched = RequestScheduler(engine, check_invariants=check_invariants,
+                                 max_queue=max_queue)
+    tenant_names = tenants.split(",") if tenants else ["default"]
     prompts = lm_sequence_batch(jax.random.PRNGKey(seed + 1), n_requests,
                                 prompt_len, cfg.vocab_size)
+    rejected = 0
     for i in range(n_requests):
-        sched.submit(Request(uid=i, prompt=[int(t) for t in prompts[i]],
-                             max_new_tokens=max_new))
+        klass = ("interactive" if interactive_every
+                 and i % interactive_every == 0 else "batch")
+        ok = sched.submit(Request(uid=i,
+                                  prompt=[int(t) for t in prompts[i]],
+                                  max_new_tokens=max_new, klass=klass,
+                                  tenant=tenant_names[i % len(tenant_names)]))
+        if not ok:
+            rejected += 1
     t0 = time.time()
     done = sched.flush()
     dt = time.time() - t0
@@ -144,6 +188,21 @@ def serve(arch: str, *, method: str = "sikv", batch: int = 4,
         print(f"[serve] {arch} {tag}: {done} requests, "
               f"{max_new} new tokens each, {dt:.2f}s "
               f"({tput:.1f} tok/s aggregate)")
+        if rejected:
+            print(f"[serve] queue: {rejected} submission(s) rejected "
+                  f"(--max-queue {max_queue})")
+        if sched_policy == "slo":
+            st = sched.service_stats()
+            for klass in ("interactive", "batch"):
+                if st.get(f"n_{klass}", 0):
+                    print(f"[serve] {klass}: n={int(st[f'n_{klass}'])} "
+                          f"ttft_p50={st[f'ttft_p50_{klass}']:.4f}s "
+                          f"ttft_p99={st[f'ttft_p99_{klass}']:.4f}s "
+                          f"tpot_p99={st[f'tpot_p99_{klass}']:.4f}s")
+            print(f"[serve] slo: preemptions={int(st['preemptions'])} "
+                  f"resumes={int(st['resumes'])} "
+                  f"spilled_pages={int(st['spilled_pages'])} "
+                  f"quota_deferrals={int(st['quota_deferrals'])}")
         if spec_depth is not None:
             st = sched.service_stats()
             toks = sum(r.decode_tokens for r in sched.completed.values())
@@ -237,6 +296,31 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="enable the step tracer and write a Chrome "
                          "trace-event JSON to PATH (open in Perfetto)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=("fifo", "slo"),
+                    help="request scheduler: the FIFO loop, or the "
+                         "SLO-aware scheduler (disaggregated prefill/"
+                         "decode roles, class-priority admission, tenant "
+                         "quotas, preemption-by-spill — DESIGN.md §11)")
+    ap.add_argument("--tenant-quota", action="append", default=None,
+                    metavar="NAME=SLOTS[,PAGES]",
+                    help="per-tenant admission quota (repeatable): max "
+                         "live slots and optionally max pool pages; '-' "
+                         "leaves a dimension unbounded (needs "
+                         "--sched-policy slo)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the submission queue: submit() rejects "
+                         "once this many requests wait (rejections are "
+                         "counted, never silently dropped)")
+    ap.add_argument("--interactive-every", type=int, default=None,
+                    metavar="N",
+                    help="mark every Nth request interactive-class; "
+                         "interactive requests jump the admission queue "
+                         "and may preempt batch work (needs "
+                         "--sched-policy slo)")
+    ap.add_argument("--tenants", default=None, metavar="A,B,...",
+                    help="assign submitted requests round-robin to these "
+                         "tenant names (needs --sched-policy slo)")
     ap.add_argument("--check-invariants", action="store_true",
                     help="run the page-protocol cross-structure checks "
                          "(SIKV-I rules, DESIGN.md §9) at every scheduler "
@@ -253,7 +337,10 @@ def main() -> None:
           spec_depth=args.spec_depth, spec_draft_k=args.spec_draft_k,
           audit_every=args.audit_every,
           metrics_json=args.metrics_json, trace=args.trace,
-          check_invariants=args.check_invariants)
+          check_invariants=args.check_invariants,
+          sched_policy=args.sched_policy, tenant_quota=args.tenant_quota,
+          max_queue=args.max_queue,
+          interactive_every=args.interactive_every, tenants=args.tenants)
 
 
 if __name__ == "__main__":

@@ -96,6 +96,15 @@ class PagePool:
         # can say WHO holds each promised page, not just how many.
         self.reserved: int = 0
         self.reservations: Dict[Any, int] = {}
+        # preemption holds: page lists kept alive on behalf of a preempted
+        # (slot-less) request.  Each hold owns one reference per page —
+        # exactly like the prefix registry's hold — so spilling a victim
+        # can release its slot without the refcount ever reaching zero
+        # (which would drop host copies through ``on_free`` in a tiered
+        # pool).  Keyed by an opaque owner (the scheduler uses the request
+        # uid); the ledger is public so the protocol invariants can count
+        # the extra references.
+        self.holds: Dict[Any, List[int]] = {}
         # optional per-page annotation hook (tiered engines / the protocol
         # harness set it) consulted by ``page_state``: returns extra detail
         # for a mapped page ("staged-dirty+pinned", "lane", ...) beyond
@@ -185,6 +194,37 @@ class PagePool:
                 out[t] = out.get(t, 0) + 1
         return out
 
+    # -- preemption holds ----------------------------------------------
+
+    def preempt_hold(self, owner: Any, page_ids: Sequence[int]) -> None:
+        """Take one extra reference per page on behalf of a preempted
+        request (``owner``).  Must be taken BEFORE the victim's slot is
+        released: the hold is what keeps shared pages mapped and — in a
+        tiered pool — keeps the refcount above zero so ``on_free`` never
+        drops the spilled host copies."""
+        assert owner not in self.holds, f"hold already taken for {owner!r}"
+        self.share(page_ids)
+        self.holds[owner] = list(page_ids)
+
+    def release_hold(self, owner: Any, *, transfer: bool = False) -> List[int]:
+        """Drop ``owner``'s preemption hold.  With ``transfer=True`` the
+        hold's references are handed to a new owner (a slot binding made
+        via ``SlotPageManager.assign``, which does not incref) instead of
+        being released — the resume path.  Plain release is the abandon
+        path (the request was cancelled while preempted)."""
+        pages = self.holds.pop(owner)
+        if not transfer:
+            self.release(pages)
+        return pages
+
+    def held_pages(self) -> Dict[int, int]:
+        """Per-page count of preemption-hold references."""
+        out: Dict[int, int] = {}
+        for pages in self.holds.values():
+            for p in pages:
+                out[p] = out.get(p, 0) + 1
+        return out
+
     def release(self, page_ids: Sequence[int]) -> None:
         freed: List[int] = []
         for p in page_ids:
@@ -242,13 +282,23 @@ class PagePool:
         itself knows (``+registry`` hold, ``+sharedN`` for CoW refs)."""
         if self.refcount[page] == 0:
             return None
-        label = None
-        if self.page_detail is not None:
-            label = self.page_detail(page)
-        if label is None:
-            label = self.tier[page] or "mapped"
+        held = self.held_pages().get(page, 0)
+        slot_refs = (self.refcount[page] - held
+                     - (1 if page in self._registry_pages else 0))
+        if held and slot_refs == 0:
+            # only preemption holds (plus possibly the registry) keep the
+            # page alive: no slot maps it, its payload lives on host
+            label = "preempted"
+        else:
+            label = None
+            if self.page_detail is not None:
+                label = self.page_detail(page)
+            if label is None:
+                label = self.tier[page] or "mapped"
         if page in self._registry_pages:
             label += "+registry"
+        if held:
+            label += f"+held{held}"
         live = self.live_refs(page)
         if live > 1:
             label += f"+shared{live}"
@@ -279,6 +329,8 @@ class PagePool:
             pages[p] = label
         snap["page_states"] = states
         snap["reservation_ledger"] = dict(self.reservations)
+        snap["preempt_holds"] = {repr(k): list(v)
+                                 for k, v in self.holds.items()}
         if detail:
             snap["pages"] = pages
         return snap

@@ -1,0 +1,12 @@
+"""SLO-aware multi-tenant scheduling (DESIGN.md §11): disaggregated
+prefill/decode roles, class-priority admission, per-tenant quotas, and
+preemption-by-spill over the serving engines' snapshot/hold protocol."""
+from repro.sched.quota import (TenantQuota, parse_tenant_quota,
+                               parse_tenant_quotas)
+from repro.sched.roles import DecodeRole, PageHandoff, PrefillRole
+from repro.sched.slo import CLASSES, SLOScheduler
+
+__all__ = [
+    "CLASSES", "DecodeRole", "PageHandoff", "PrefillRole", "SLOScheduler",
+    "TenantQuota", "parse_tenant_quota", "parse_tenant_quotas",
+]

@@ -1,0 +1,84 @@
+"""Per-tenant admission quotas (DESIGN.md §11.4).
+
+A tenant is a string label on each :class:`~repro.serving.scheduler.Request`
+(``tenant="default"`` when unset).  Quotas bound what one tenant can hold
+LIVE at once — they are admission gates, not rate limits: a request over
+quota stays queued (other tenants' work flows past it) and admits the
+moment its tenant drops back under.  Two independent axes:
+
+* ``max_live_slots`` — engine batch slots the tenant may occupy
+  simultaneously (an in-flight chunked admission counts; a preempted
+  request does NOT — its slot was given away, that is the point);
+* ``max_pool_pages`` — pool pages the tenant may pin: pages mapped by its
+  live slots, its outstanding admission reservations, and the pages its
+  preempted requests keep alive under a hold (spilled work still holds
+  index pages on the tiered store, so it stays inside the budget).
+
+The dense engine has no pages, so ``max_pool_pages`` only gates
+block-mapped engines; ``max_live_slots`` gates all three.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class TenantQuota:
+    """Admission bounds for one tenant; ``None`` = unbounded axis."""
+
+    max_live_slots: Optional[int] = None
+    max_pool_pages: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        for name in ("max_live_slots", "max_pool_pages"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(
+                    f"{name} must be positive (or None for unbounded), "
+                    f"got {v} — a zero quota would deadlock the tenant's "
+                    f"queue; reject at submit() instead")
+
+
+def parse_tenant_quota(spec: str) -> Tuple[str, TenantQuota]:
+    """Parse one ``--tenant-quota`` flag value: ``NAME=SLOTS`` or
+    ``NAME=SLOTS,PAGES`` (either position may be ``-`` for unbounded).
+
+    >>> parse_tenant_quota("acme=2,64")
+    ('acme', TenantQuota(max_live_slots=2, max_pool_pages=64))
+    """
+    name, sep, rest = spec.partition("=")
+    if not sep or not name:
+        raise ValueError(
+            f"tenant quota {spec!r} is not NAME=SLOTS[,PAGES] — e.g. "
+            f"'acme=2' (2 slots) or 'acme=2,64' (2 slots, 64 pages)")
+    parts = rest.split(",")
+    if len(parts) > 2 or not parts[0]:
+        raise ValueError(
+            f"tenant quota {spec!r} is not NAME=SLOTS[,PAGES]")
+
+    def num(s: str) -> Optional[int]:
+        if s == "-":
+            return None
+        try:
+            return int(s)
+        except ValueError:
+            raise ValueError(
+                f"tenant quota {spec!r}: {s!r} is not an integer or '-'")
+
+    slots = num(parts[0])
+    pages = num(parts[1]) if len(parts) == 2 else None
+    return name, TenantQuota(max_live_slots=slots, max_pool_pages=pages)
+
+
+def parse_tenant_quotas(specs) -> Dict[str, TenantQuota]:
+    """Fold repeated ``--tenant-quota`` values; duplicate names error (a
+    silently-last-wins quota is a misconfiguration magnet)."""
+    out: Dict[str, TenantQuota] = {}
+    for spec in specs or ():
+        name, quota = parse_tenant_quota(spec)
+        if name in out:
+            raise ValueError(f"tenant {name!r} given two quotas "
+                             f"({out[name]} and {quota}) — merge the flags")
+        out[name] = quota
+    return out

@@ -1,0 +1,174 @@
+"""Disaggregated prefill / decode roles (DESIGN.md §11.2).
+
+The SLO scheduler splits the serving loop into two cooperating WORKERS
+with an explicit handoff boundary between them, mirroring disaggregated
+prefill/decode deployments:
+
+* :class:`PrefillRole` drives admission: it picks the next admissible
+  request (class priority + tenant quota — policy lives on the
+  scheduler), runs ``admit_start`` / chunked ``admit_step`` programs, and
+  on completion emits a :class:`PageHandoff` — the finalized compressed
+  pages (block-mapped engines) or dense rows now belong to decode;
+* :class:`DecodeRole` consumes handoffs (binding the slot into its live
+  set), resumes preempted requests, steps the live batch (plain or
+  speculative), retires completions, and — under interactive pressure
+  flagged by the prefill role — preempts a batch victim by spilling it.
+
+Both roles are plain host-side objects driven in-process by one head
+loop (``SLOScheduler.run``), so CPU CI exercises the real protocol: the
+handoff queue is the only way state crosses the boundary, and the roles
+never touch each other's phase.  Prefill chunks do NOT piggyback decode
+launches here (``with_decode=False``) — the roles run disjoint programs,
+which is what makes the split observable in the trace.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.sched.slo import SLOScheduler
+    from repro.serving.scheduler import Request, _Admission
+
+
+@dataclass
+class PageHandoff:
+    """One finished admission crossing the prefill -> decode boundary."""
+
+    req: "Request"
+    slot: int
+    first_token: int
+    # pages the admission finalized (0 on the dense engine) and decode
+    # steps the engine ran while this prompt was admitting
+    n_pages: int = 0
+    decode_steps: int = 0
+
+
+@dataclass
+class PrefillRole:
+    """Admission worker: owns the queue head and the in-flight admission;
+    its only output is the handoff queue."""
+
+    sched: "SLOScheduler"
+    handoffs: Deque[PageHandoff] = field(default_factory=deque)
+    _admitting: Optional["_Admission"] = None
+
+    @property
+    def busy(self) -> bool:
+        return self._admitting is not None
+
+    def _emit_handoff(self, adm: "_Admission", first: int) -> None:
+        eng = self.sched.engine
+        pages = None
+        slots = getattr(eng, "slots", None)
+        if slots is not None:
+            pages = slots.slot_pages(adm.slot)
+        h = PageHandoff(req=adm.req, slot=adm.slot, first_token=first,
+                        n_pages=len(pages or ()),
+                        decode_steps=adm.decode_steps)
+        self.handoffs.append(h)
+        self.sched._trace.instant("sched/prefill", "handoff",
+                                  uid=adm.req.uid, slot=adm.slot,
+                                  pages=h.n_pages, klass=adm.req.klass)
+
+    def tick(self) -> int:
+        """One prefill phase: advance the in-flight admission by a chunk,
+        or start new admissions (instant ones — monolithic prefills and
+        prefix hits — complete inline, as many as fit; the first CHUNKED
+        admission stays in flight across ticks).  Returns the prompt
+        tokens processed, for the step-token accounting."""
+        sched = self.sched
+        eng = sched.engine
+        if self._admitting is not None:
+            adm = self._admitting
+            with sched._trace.span("sched/prefill", "admit_chunk",
+                                   uid=adm.req.uid):
+                try:
+                    first, _ = eng.admit_step(with_decode=False)
+                except Exception:
+                    self._admitting = None
+                    sched._release_slot_reservation(adm.slot)
+                    sched._admission_failed(adm.req)
+                    return 0
+            if first is not None:
+                self._admitting = None
+                self._emit_handoff(adm, first)
+            return eng.prefill_chunk or 0
+        tokens = 0
+        while True:
+            picked = sched._select_admission()
+            if picked is None:
+                return tokens
+            req, slot = picked
+            eng.admit_start(slot, req.prompt,
+                            max_new_tokens=sched._clamped_new(req))
+            sched.queue.remove(req)
+            sched._m_queue_depth.set(len(sched.queue))
+            from repro.serving.scheduler import _Admission
+            adm = _Admission(req=req, slot=slot)
+            sched._reserve_slot(slot, req)
+            if not eng.pending_instant:
+                self._admitting = adm
+                return tokens
+            try:
+                first, _ = eng.admit_step()
+            except Exception:
+                sched._release_slot_reservation(slot)
+                sched._admission_failed(req)
+                return tokens
+            self._emit_handoff(adm, first)
+            if not req.prefix_hit:
+                tokens += eng.prompt_len
+
+
+@dataclass
+class DecodeRole:
+    """Decode worker: binds handoffs into the live set, resumes spilled
+    requests, steps the batch, retires, and preempts under pressure."""
+
+    sched: "SLOScheduler"
+
+    def tick(self, prefill: PrefillRole) -> int:
+        """One decode phase.  Order matters: handoffs bind first (a slot
+        admitted this tick decodes this tick, matching the FIFO loop),
+        resumes next (spilled work re-enters ahead of stepping so its
+        stall ends at the earliest boundary), then preemption — freeing
+        resources the NEXT prefill tick consumes — then one batch step.
+        Returns decode token-positions processed."""
+        sched = self.sched
+        while prefill.handoffs:
+            h = prefill.handoffs.popleft()
+            sched._bind_handoff(h)
+        sched._try_resume()
+        if sched._interactive_pressure is not None:
+            sched._preempt_for(sched._interactive_pressure)
+            sched._interactive_pressure = None
+        active = sched._active_slots()
+        if not active:
+            return 0
+        if sched.engine.spec_depth is not None:
+            with sched._trace.span("sched/decode", "spec_step",
+                                   n_active=len(active)):
+                return sched._run_spec_step(sched._slots, active)
+        with sched._trace.span("sched/decode", "decode_step",
+                               n_active=len(active)):
+            dec_tokens = sched.engine.step()
+            sched._consume_audit(sched._slots, active)
+        now = time.time()
+        for i in active:
+            slot = sched._slots[i]
+            gap = now - slot.t_last
+            slot.req.result.append(dec_tokens[i])
+            slot.max_gap = max(slot.max_gap, gap)
+            slot.decode_time += gap
+            slot.decode_tokens += 1
+            slot.token_times.append(gap)
+            slot.t_last = now
+            slot.remaining -= 1
+            sched._trace.instant(f"slot/{i}", "token", uid=slot.req.uid,
+                                 n=1)
+            if slot.remaining <= 0:
+                sched._retire(sched._slots, i)
+        return len(active)

@@ -1,0 +1,353 @@
+"""SLO-aware multi-tenant scheduler (DESIGN.md §11).
+
+Extends the FIFO :class:`~repro.serving.scheduler.RequestScheduler` with:
+
+* **role-split serving** — admission runs in a :class:`PrefillRole`,
+  decode in a :class:`DecodeRole`, connected only by the page-handoff
+  queue; one head loop (:meth:`run`) drives both in-process;
+* **request classes + tenancy** — ``interactive`` requests jump the
+  queue ahead of ``batch`` (FIFO within a class); per-tenant
+  :class:`~repro.sched.quota.TenantQuota` caps live slots / pool pages,
+  and a quota-blocked request waits WITHOUT blocking other tenants;
+* **preemption-by-spill** — when an interactive request is blocked on
+  resources, a batch victim is spilled (``engine.preempt_slot``: pages
+  demoted through the tiered writeback protocol, per-slot state
+  snapshotted host-side), its slot freed, and the victim resumes
+  BIT-EXACTLY later (``engine.resume_slot``) — the committed token
+  stream of a preempted request is identical to an uninterrupted run.
+
+The robustness headline: under sustained overload, interactive latency
+holds (batch absorbs the degradation) — measured by
+``benchmarks/bench_serving.py``'s seeded bursty mixed-class workload.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.obs import percentiles
+from repro.sched.quota import TenantQuota
+from repro.sched.roles import DecodeRole, PageHandoff, PrefillRole
+from repro.serving.scheduler import Request, RequestScheduler, _Slot
+
+CLASSES = ("interactive", "batch")
+
+
+@dataclass
+class _Preempted:
+    """A spilled request: its engine snapshot plus the slot bookkeeping
+    needed to resume service stats exactly where they stopped."""
+
+    req: Request
+    snap: Dict[str, Any]
+    remaining: int
+    t_last: float
+    decode_time: float
+    decode_tokens: int
+    max_gap: float
+    token_times: List[float]
+
+
+@dataclass
+class SLOScheduler(RequestScheduler):
+    # tenant name -> quota; tenants without an entry are unbounded
+    quotas: Dict[str, TenantQuota] = field(default_factory=dict)
+    # counters surfaced by service_stats()
+    preemptions: int = 0
+    resumes: int = 0
+    spilled_pages: int = 0
+    quota_deferrals: int = 0
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        from repro.obs import get_registry
+        reg = get_registry()
+        self._m_preempt = reg.counter("sched.preemptions")
+        self._m_resume = reg.counter("sched.resumes")
+        self._m_spilled = reg.counter("sched.spilled_pages")
+        self._m_quota_deferrals = reg.counter("sched.quota_deferrals")
+        self._reg = reg
+        # persistent slot state: unlike the FIFO loop's run()-local list,
+        # preempted work survives across run() calls
+        self._slots: List[_Slot] = [_Slot()
+                                    for _ in range(self.engine.batch_size)]
+        self._preempted: List[_Preempted] = []
+        # slots taken by an admission whose handoff has not bound yet
+        self._reserved: Dict[int, Request] = {}
+        # interactive request blocked on resources this tick (set by
+        # admission selection, consumed by the decode role's preemption)
+        self._interactive_pressure: Optional[Request] = None
+        self._prefill = PrefillRole(self)
+        self._decode = DecodeRole(self)
+
+    # -- class/tenant metric seams ---------------------------------------
+
+    def _observe_ttft(self, req: Request) -> None:
+        self._reg.histogram("sched.ttft", klass=req.klass,
+                            tenant=req.tenant).observe(req.ttft)
+
+    def _observe_tpot(self, req: Request) -> None:
+        if req.decode_tokens:
+            self._reg.histogram("sched.tpot", klass=req.klass,
+                                tenant=req.tenant).observe(req.tpot)
+
+    def _retire(self, slots: List[_Slot], i: int) -> None:
+        req = slots[i].req
+        super()._retire(slots, i)
+        if req is not None:
+            self._observe_tpot(req)
+
+    # -- admission policy (consumed by PrefillRole) ----------------------
+
+    def _tenant_live_slots(self, tenant: str) -> int:
+        n = sum(1 for s in self._slots
+                if s.req is not None and s.req.tenant == tenant)
+        return n + sum(1 for r in self._reserved.values()
+                       if r.tenant == tenant)
+
+    def _tenant_pool_pages(self, tenant: str) -> int:
+        mgr = getattr(self.engine, "slots", None)
+        if mgr is None:
+            return 0
+        n = 0
+        for j, s in enumerate(self._slots):
+            if s.req is not None and s.req.tenant == tenant:
+                n += len(mgr.slot_pages(j) or ()) + mgr._resv[j]
+        for j, r in self._reserved.items():
+            if r.tenant == tenant:
+                n += len(mgr.slot_pages(j) or ()) + mgr._resv[j]
+        for pre in self._preempted:
+            if pre.req.tenant == tenant:
+                # spilled work still pins its index pages under the hold
+                n += pre.snap.get("n_pages", 0) + pre.snap.get("resv", 0)
+        return n
+
+    def _request_pages(self, req: Request) -> int:
+        ps = getattr(self.engine, "page_size", None)
+        if ps is None:
+            return 0
+        total = len(req.prompt) + self._clamped_new(req)
+        return -(-total // ps)
+
+    def _quota_ok(self, req: Request) -> bool:
+        quota = self.quotas.get(req.tenant)
+        if quota is None:
+            return True
+        if quota.max_live_slots is not None \
+                and self._tenant_live_slots(req.tenant) \
+                >= quota.max_live_slots:
+            return False
+        if quota.max_pool_pages is not None \
+                and self._tenant_pool_pages(req.tenant) \
+                + self._request_pages(req) > quota.max_pool_pages:
+            return False
+        return True
+
+    def _free_slots(self) -> List[int]:
+        return [j for j in range(self.engine.batch_size)
+                if self._slots[j].req is None and j not in self._reserved]
+
+    def _active_slots(self) -> List[int]:
+        return [j for j in range(self.engine.batch_size)
+                if self._slots[j].req is not None]
+
+    def _select_admission(self) -> Optional[Tuple[Request, int]]:
+        """Next request to admit, with the slot to admit it into.
+
+        Priority admission: interactive first, FIFO within a class.  A
+        QUOTA-blocked request is skipped (its tenant is the bottleneck —
+        other tenants' work flows past; ``quota_deferrals`` counts the
+        skips), but a RESOURCE-blocked class head stops its class — pages
+        free in retire order, so skipping ahead would starve it.  A
+        resource-blocked interactive head additionally raises the
+        pressure flag the decode role answers with a preemption.  While
+        spilled requests wait, new BATCH admissions hold off (resume has
+        priority over batch; interactive still jumps both)."""
+        free = self._free_slots()
+        for klass in CLASSES:
+            if klass == "batch" and self._preempted:
+                continue
+            for req in self.queue:
+                if req.klass != klass:
+                    continue
+                if not self._quota_ok(req):
+                    self.quota_deferrals += 1
+                    self._m_quota_deferrals.inc()
+                    continue
+                if not free:
+                    if klass == "interactive":
+                        self._interactive_pressure = req
+                    return None
+                if not self.engine.can_admit(req.prompt,
+                                             self._clamped_new(req)):
+                    if klass == "interactive":
+                        self._interactive_pressure = req
+                    self.engine.on_pressure(req.prompt,
+                                            self._clamped_new(req))
+                    return None
+                return req, free[0]
+        return None
+
+    def _reserve_slot(self, slot: int, req: Request) -> None:
+        self._reserved[slot] = req
+
+    def _release_slot_reservation(self, slot: int) -> None:
+        self._reserved.pop(slot, None)
+
+    def _bind_handoff(self, h: PageHandoff) -> None:
+        """Decode side of the page-handoff boundary: the finalized pages
+        (and the slot) now belong to the decode role's live set."""
+        self._release_slot_reservation(h.slot)
+        self._complete_admission(self._slots, h, h.first_token)
+        self._observe_ttft(h.req)
+        self._trace.instant("sched/decode", "handoff_bind", uid=h.req.uid,
+                            slot=h.slot, pages=h.n_pages)
+
+    # -- preemption / resume (consumed by DecodeRole) --------------------
+
+    def _pick_victim(self) -> Optional[int]:
+        """Batch-class victim with the most remaining tokens (spilling the
+        request farthest from completion preserves the most near-done
+        work); ties break to the highest slot index (deterministic)."""
+        best = None
+        for j in self._active_slots():
+            s = self._slots[j]
+            if s.req.klass != "batch":
+                continue
+            if best is None or s.remaining >= self._slots[best].remaining:
+                best = j
+        return best
+
+    def _preempt_for(self, blocked: Request) -> bool:
+        victim = self._pick_victim()
+        if victim is None:
+            return False
+        slot = self._slots[victim]
+        req = slot.req
+        with self._trace.span("sched/decode", "preempt", uid=req.uid,
+                              slot=victim, for_uid=blocked.uid):
+            snap = self.engine.preempt_slot(victim)
+        self._preempted.append(_Preempted(
+            req=req, snap=snap, remaining=slot.remaining,
+            t_last=slot.t_last, decode_time=slot.decode_time,
+            decode_tokens=slot.decode_tokens, max_gap=slot.max_gap,
+            token_times=slot.token_times))
+        slot.req = None
+        slot.token_times = []
+        req.preemptions += 1
+        self.preemptions += 1
+        self._m_preempt.inc()
+        spilled = int(snap.get("n_pages", 0))
+        self.spilled_pages += spilled
+        self._m_spilled.inc(spilled)
+        return True
+
+    def _try_resume(self) -> None:
+        """Re-admit spilled requests into free slots, oldest spill first,
+        skipping any whose resources are not back yet (they stay queued;
+        their pages stay alive under the hold — no leak)."""
+        i = 0
+        while i < len(self._preempted):
+            free = self._free_slots()
+            if not free:
+                return
+            pre = self._preempted[i]
+            if not self.engine.can_resume(pre.snap):
+                i += 1
+                continue
+            slot_id = free[0]
+            with self._trace.span("sched/decode", "resume",
+                                  uid=pre.req.uid, slot=slot_id):
+                self.engine.resume_slot(slot_id, pre.snap)
+            slot = self._slots[slot_id]
+            slot.req = pre.req
+            slot.remaining = pre.remaining
+            # t_last survives the spill: the first post-resume token books
+            # the whole preemption outage as this request's stall
+            slot.t_last = pre.t_last
+            slot.decode_time = pre.decode_time
+            slot.decode_tokens = pre.decode_tokens
+            slot.max_gap = pre.max_gap
+            slot.token_times = pre.token_times
+            self._preempted.pop(i)
+            self.resumes += 1
+            self._m_resume.inc()
+
+    # -- head loop -------------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        """Work outstanding: queued, admitting, spilled, or decoding."""
+        return bool(self.queue or self._prefill.busy or self._preempted
+                    or any(s.req is not None for s in self._slots))
+
+    def step_once(self) -> int:
+        """One head-loop iteration: a prefill tick, then a decode tick.
+        Public so drivers can interleave submissions with service — the
+        bursty-workload benchmark submits new requests mid-run.  Returns
+        the tokens (prompt + decode positions) processed."""
+        prefill = self._prefill
+        if self.check_invariants:
+            findings = self.engine.check_protocol_invariants()
+            if findings:
+                raise RuntimeError(
+                    "page-protocol invariant violation at a scheduler "
+                    "step boundary:\n" + "\n".join(findings))
+        step_tokens = prefill.tick()
+        dec_tokens = self._decode.tick(prefill)
+        if dec_tokens and prefill.busy:
+            prefill._admitting.decode_steps += 1
+        step_tokens += dec_tokens
+        self.peak_active = max(
+            self.peak_active,
+            len(self._active_slots()) + (1 if prefill.busy else 0))
+        self.max_step_tokens = max(self.max_step_tokens, step_tokens)
+        if step_tokens:
+            self._m_step_tokens.observe(step_tokens)
+        return step_tokens
+
+    def run(self) -> int:
+        """Drive both roles until queue, in-flight admission, live slots
+        AND spilled requests are all drained; returns completions."""
+        done0 = len(self.completed)
+        prev_sig = None
+        while self.busy:
+            step_tokens = self.step_once()
+            sig = (len(self.queue), self._prefill.busy,
+                   len(self._preempted), tuple(self._active_slots()),
+                   len(self.completed), tuple(sorted(self._reserved)))
+            if step_tokens == 0 and sig == prev_sig:
+                raise RuntimeError(
+                    f"SLO scheduler made no progress: queue="
+                    f"{[r.uid for r in self.queue]} preempted="
+                    f"{[p.req.uid for p in self._preempted]} active="
+                    f"{self._active_slots()} — the pool cannot ever fit "
+                    f"the remaining work (submit() validation should "
+                    f"have rejected it)")
+            prev_sig = sig
+        return len(self.completed) - done0
+
+    # -- stats -----------------------------------------------------------
+
+    def service_stats(self) -> Dict[str, float]:
+        """FIFO scheduler stats plus per-class latency percentiles and the
+        preemption counters (all-zero for classes with no completions)."""
+        out = super().service_stats()
+        reqs = list(self.completed.values())
+        for klass in CLASSES:
+            mine = [r for r in reqs if r.klass == klass]
+            dec = [r for r in mine if r.decode_tokens > 0]
+            tp = percentiles([t for r in dec for t in r.token_times])
+            tt = percentiles([r.ttft for r in mine])
+            out[f"ttft_p50_{klass}"] = tt[0]
+            out[f"ttft_p99_{klass}"] = tt[2]
+            out[f"tpot_p50_{klass}"] = tp[0]
+            out[f"tpot_p99_{klass}"] = tp[2]
+            out[f"n_{klass}"] = float(len(mine))
+        out["preemptions"] = float(self.preemptions)
+        out["resumes"] = float(self.resumes)
+        out["spilled_pages"] = float(self.spilled_pages)
+        out["quota_deferrals"] = float(self.quota_deferrals)
+        out["preempted_waiting"] = float(len(self._preempted))
+        return out

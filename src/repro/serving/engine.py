@@ -664,6 +664,51 @@ class ServingEngine:
         self._pos = self._pos.at[slot].set(self.capacity)
         self._tok = self._tok.at[slot].set(0)
 
+    # -- preemption: spill a live slot, resume it later bit-exactly -----
+
+    def preempt_slot(self, slot: int) -> Dict[str, Any]:
+        """Spill ``slot``'s live decode state to a host-side snapshot and
+        free the slot.  The snapshot is opaque to callers; feeding it back
+        through :meth:`resume_slot` continues the request with a token
+        stream bitwise identical to an uninterrupted run (device_get /
+        device_put round-trips are lossless, and ``retire`` only parks the
+        row — it never mutates cache content).
+
+        Host-orchestration only: the slice + transfer run outside jit, so
+        no jitted program changes shape or count (the launch budget of
+        DESIGN.md §7 is unaffected)."""
+        assert self._caches is not None, "no live state to preempt"
+        assert not (self._pending is not None
+                    and self._pending["slot"] == slot), \
+            "cannot preempt a slot with an admission in flight"
+        assert int(self._pos[slot]) < self.capacity, f"slot {slot} is dead"
+        snap = {
+            "caches": jax.device_get(jax.tree_util.tree_map(
+                lambda x: x[slot: slot + 1], self._caches)),
+            "tok": int(self._tok[slot]),
+            "pos": int(self._pos[slot]),
+        }
+        self.retire(slot)
+        return snap
+
+    def can_resume(self, snap: Dict[str, Any]) -> bool:
+        """Whether ``resume_slot`` would succeed right now, beyond the free
+        slot the caller supplies (dense rows are pre-allocated — always)."""
+        return True
+
+    def resume_slot(self, slot: int, snap: Dict[str, Any]) -> None:
+        """Re-admit a preempted request's snapshot into a free slot.  The
+        insert reuses the admission's jitted row-insert program — no new
+        program, one extra launch."""
+        assert self._caches is not None
+        assert not (self._pending is not None
+                    and self._pending["slot"] == slot), \
+            "cannot resume into a slot with an admission in flight"
+        self._caches = self._insert(self._caches, snap["caches"],
+                                    jnp.asarray(slot, jnp.int32))
+        self._tok = self._tok.at[slot].set(snap["tok"])
+        self._pos = self._pos.at[slot].set(snap["pos"])
+
     def decode_launches(self) -> int:
         """Main decode program launches — the per-token dispatch count the
         speculative path amortizes (plain decode: one per token; spec: one

@@ -40,11 +40,12 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, SIKVConfig
 from repro.core.cache import SIKVCache
 from repro.core.policy import pages_needed, spec_tail_pages
-from repro.paged.cache import (PER_SLOT_FIELDS, PagedSIKVCache,
-                               init_paged_cache, insert_prefill_pages,
-                               insert_slot_state, is_block_mapped_cache,
-                               paged_token_bytes, tree_clear_slot_row,
-                               tree_copy_page, tree_set_block_entry)
+from repro.paged.cache import (PER_SLOT_FIELDS, TOKEN_FIELDS,
+                               PagedSIKVCache, init_paged_cache,
+                               insert_prefill_pages, insert_slot_state,
+                               is_block_mapped_cache, paged_token_bytes,
+                               tree_clear_slot_row, tree_copy_page,
+                               tree_set_block_entry)
 from repro.paged.pool import PagePool, SlotPageManager
 from repro.serving.engine import ServingEngine, row_insert
 from repro.models.transformer import Params
@@ -439,6 +440,91 @@ class PagedServingEngine(ServingEngine):
         self.slots.release_slot(slot)
         self._host_pos[slot] = self.capacity
         super().retire(slot)
+
+    # -- preemption: spill to a host snapshot, resume bit-exactly --------
+
+    def _snapshot_slot_state(self, slot: int) -> Any:
+        """Per-slot leaves of the LIVE batched caches for ``slot`` (the
+        batched-row analogue of ``_extract_slot_state``), in the exact
+        pytree shape ``_insert_hit`` rebinds on resume."""
+        def ext(c):
+            if is_block_mapped_cache(c):
+                return {f: getattr(c, f)[slot: slot + 1]
+                        for f in PER_SLOT_FIELDS}
+            return c[slot: slot + 1]
+        return jax.tree_util.tree_map(
+            ext, self._caches, is_leaf=is_block_mapped_cache)
+
+    def preempt_slot(self, slot: int) -> Dict[str, Any]:
+        """Spill ``slot`` to a host snapshot and free its slot AND pages.
+
+        The snapshot carries the content of every page the slot maps (a
+        fancy-index gather per layer, outside jit — no program changes),
+        its per-slot state, and its remaining decode-tail reservation.
+        Shared prefix-cache pages are only READ here: retire drops just
+        this slot's reference, so the registry and any co-holder keep the
+        page; resume rebuilds private copies with bit-identical content."""
+        assert self._caches is not None, "no live state to preempt"
+        assert not (self._pending is not None
+                    and self._pending["slot"] == slot), \
+            "cannot preempt a slot with an admission in flight"
+        pages = self.slots.slot_pages(slot)
+        assert pages is not None, f"slot {slot} owns no pages"
+        ids = jnp.asarray(pages, jnp.int32)
+        leaves, _ = jax.tree_util.tree_flatten(
+            self._caches, is_leaf=is_block_mapped_cache)
+        content = jax.device_get([
+            {f: getattr(c, f)[ids] for f in TOKEN_FIELDS}
+            if is_block_mapped_cache(c) else None
+            for c in leaves])
+        length = next(int(c.length[slot]) for c in leaves
+                      if is_block_mapped_cache(c))
+        snap = {
+            "n_pages": len(pages),
+            "content": content,
+            "slot_state": jax.device_get(self._snapshot_slot_state(slot)),
+            "resv": self.slots._resv[slot],
+            "length": length,
+            "host_pos": self._host_pos[slot],
+            "tok": int(self._tok[slot]),
+            "pos": int(self._pos[slot]),
+        }
+        self.retire(slot)
+        return snap
+
+    def can_resume(self, snap: Dict[str, Any]) -> bool:
+        """Resume needs the snapshot's pages back plus its remaining
+        decode-tail reservation — the same worst-case guarantee admission
+        gave, so a resumed request can never exhaust the pool mid-decode."""
+        return self.pool.available() >= snap["n_pages"] + snap["resv"]
+
+    def resume_slot(self, slot: int, snap: Dict[str, Any]) -> None:
+        assert self._caches is not None
+        assert not (self._pending is not None
+                    and self._pending["slot"] == slot), \
+            "cannot resume into a slot with an admission in flight"
+        page_ids = self.pool.allocate(snap["n_pages"])
+        self.slots.assign(slot, page_ids, reserved=snap["resv"])
+        ids = jnp.asarray(page_ids, jnp.int32)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            self._caches, is_leaf=is_block_mapped_cache)
+        new_leaves = []
+        for c, rows in zip(leaves, snap["content"]):
+            if is_block_mapped_cache(c):
+                c = c._replace(**{
+                    f: getattr(c, f).at[ids].set(
+                        jnp.asarray(rows[f]).astype(getattr(c, f).dtype))
+                    for f in TOKEN_FIELDS})
+            new_leaves.append(c)
+        self._caches = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        self._caches = self._insert_hit(
+            self._caches, snap["slot_state"], jnp.asarray(slot, jnp.int32),
+            self._pad_pages(page_ids),
+            jnp.asarray(snap["length"], jnp.int32))
+        self.obs.add("aux_launches")              # _insert_hit
+        self._host_pos[slot] = snap["host_pos"]
+        self._tok = self._tok.at[slot].set(snap["tok"])
+        self._pos = self._pos.at[slot].set(snap["pos"])
 
     # -- accounting ------------------------------------------------------
 

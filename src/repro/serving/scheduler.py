@@ -59,7 +59,14 @@ class Request:
     prompt: List[int]
     # clamped to the engine's max_new_tokens (its cache headroom) at admission
     max_new_tokens: int = 32
+    # scheduling class ("interactive" jumps the queue under the SLO
+    # scheduler; "batch" is preemptible) and owning tenant — the FIFO
+    # scheduler ignores both (repro.sched.SLOScheduler consumes them)
+    klass: str = "batch"
+    tenant: str = "default"
     result: Optional[List[int]] = None
+    # times this request was preempted (spilled to host) and later resumed
+    preemptions: int = 0
     # service stats (filled by the scheduler)
     t_submit: float = 0.0
     ttft: float = 0.0
@@ -145,6 +152,12 @@ class RequestScheduler:
     # only — jitted programs and the launch budget are untouched — but
     # off by default; overhead measured in benchmarks/bench_analysis.py
     check_invariants: bool = False
+    # bounded submission queue: with ``max_queue`` set, ``submit()`` rejects
+    # (returns False) once that many requests wait, instead of queueing
+    # without bound; rejections are counted in ``queue_rejected`` and the
+    # ``scheduler.queue_rejected`` registry counter
+    max_queue: Optional[int] = None
+    queue_rejected: int = 0
     _admit_failures: Dict[int, int] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -157,6 +170,7 @@ class RequestScheduler:
         self._m_admit_retries = reg.counter("scheduler.admission_retries")
         self._m_step_tokens = reg.histogram("scheduler.step_tokens")
         self._m_completed = reg.counter("scheduler.requests_completed")
+        self._m_queue_rejected = reg.counter("scheduler.queue_rejected")
 
     @property
     def step_token_budget(self) -> int:
@@ -175,19 +189,32 @@ class RequestScheduler:
     def _clamped_new(self, req: Request) -> int:
         return min(req.max_new_tokens, self.engine.max_new_tokens)
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         """Queue a request; rejects infeasible ones immediately (prompt too
         long for the engine, or needing more pages than the pool holds)
         with a ValueError instead of letting them degrade silently.
         Validation sees the CLAMPED generation cap — admission clamps to
         the engine's headroom, so a huge ``max_new_tokens`` that fits after
-        clamping must not be rejected by the worst-case page count."""
+        clamping must not be rejected by the worst-case page count.
+
+        Returns whether the request was queued: with ``max_queue`` set, a
+        full queue rejects CLEANLY (``False`` + the ``queue_rejected``
+        counters) so a caller can shed load instead of growing an unbounded
+        backlog — an infeasible request still raises, a full queue does
+        not."""
         self.engine.validate_prompt(req.prompt, self._clamped_new(req))
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.queue_rejected += 1
+            self._m_queue_rejected.inc()
+            self._trace.instant("scheduler", "queue_reject", uid=req.uid,
+                                depth=len(self.queue))
+            return False
         req.t_submit = time.time()
         self.queue.append(req)
         self._trace.instant("scheduler", "submit", uid=req.uid,
                             prompt_len=len(req.prompt))
         self._m_queue_depth.set(len(self.queue))
+        return True
 
     # ------------------------------------------------------------------
     # continuous batching
@@ -565,6 +592,7 @@ class RequestScheduler:
                                  if drafted else 0.0),
             "n_requests": len(reqs),
             "n_decoded": len(dec),
+            "queue_rejected": float(self.queue_rejected),
             "ttft_p50": ttft_p[0], "ttft_p95": ttft_p[1],
             "ttft_p99": ttft_p[2],
             "tpot_p50": tpot_p[0], "tpot_p95": tpot_p[1],

@@ -181,6 +181,8 @@ class TieredServingEngine(PagedServingEngine):
         self._lane_live: List[int] = []
         # verify-window pages pinned for the current spec step, per slot
         self._spec_pins: Dict[int, List[int]] = {}
+        # monotonically increasing key for preemption-hold owners
+        self._hold_seq = 0
         # _insert_hit / _set_blk / _clear_row are inherited: the paged
         # engine's programs are block-table-generic over both layouts
         self._insert_prefill_t = jax.jit(_tree_insert_prefill_t)
@@ -458,6 +460,99 @@ class TieredServingEngine(PagedServingEngine):
             self._write_page[slot] = None
         super().retire(slot)
 
+    # -- preemption (spill to host tier) ---------------------------------
+
+    def preempt_slot(self, slot: int) -> Dict[str, Any]:
+        """Spill a victim slot: take a preemption hold on its pages FIRST
+        (so releasing the slot can never free them), demote its
+        exclusively-held staged payload to the host store (writeback when
+        dirty or host-stale — the tier's demotion protocol IS the spill),
+        snapshot the per-slot dense state, and release the slot.  Pages
+        shared with another live slot (prefix hit) keep that slot's
+        residency untouched; the hold only pins their refcount."""
+        assert self._caches is not None, "no live state to preempt"
+        assert not (self._pending is not None
+                    and self._pending["slot"] == slot)
+        assert not self._spec_pins.get(slot), \
+            "cannot preempt inside a spec window (commit/rollback first)"
+        pages = self.slots.slot_pages(slot)
+        assert pages is not None, f"slot {slot} owns no pages"
+        assert not (set(pages) & set(self._lane_live)), \
+            "cannot preempt while the victim's pages sit in the lane"
+        owner = ("preempt", self._hold_seq)
+        self._hold_seq += 1
+        self.pool.preempt_hold(owner, pages)
+        if self._write_page[slot] is not None:
+            self.staging.unpin(self._write_page[slot])
+            self._write_page[slot] = None
+        shared = {p for s in self.slots.active_slots() if s != slot
+                  for p in (self.slots.slot_pages(s) or [])}
+        demoted: List[int] = []
+        for page in pages:
+            sslot = self.staging.slot_of(page)
+            if sslot is None:
+                continue
+            # write back even pages a prefix sharer keeps staged: the
+            # hold outlives the sharer (it can CoW away or retire), and
+            # no one can dirty a held page afterwards (ensure_writable
+            # counts the hold as a live sharer), so refreshing the host
+            # copy HERE is what makes the spill durable
+            if self.staging.is_dirty(page) or page not in self.host.valid:
+                self._writeback(page, sslot)
+                self.staging.clear_dirty(page)
+            if page in shared:
+                continue
+            self.staging.release_page(page)
+            demoted.append(page)
+        if demoted:
+            self.pool.set_tier(demoted, "host")
+            self._flush_map(demoted, [-1] * len(demoted))
+            self.obs.add("demotions", len(demoted))
+        leaves = jax.tree_util.tree_leaves(
+            self._caches,
+            is_leaf=lambda x: isinstance(x, TieredSIKVCache))
+        length = next(int(c.length[slot]) for c in leaves
+                      if isinstance(c, TieredSIKVCache))
+        snap = {"hold": owner, "n_pages": len(pages),
+                "slot_state": jax.device_get(self._snapshot_slot_state(slot)),
+                "resv": self.slots._resv[slot],
+                "length": length, "host_pos": self._host_pos[slot],
+                "tok": int(self._tok[slot]), "pos": int(self._pos[slot])}
+        self.retire(slot)
+        return snap
+
+    def can_resume(self, snap: Dict[str, Any]) -> bool:
+        """Resume needs a staging pin slot for the request's write-page
+        obligation (same headroom rule as :meth:`can_admit`) and pool
+        headroom for its boundary reservation — its pages themselves are
+        alive under the hold and transfer for free."""
+        per_slot = (1 if self.spec_depth is None
+                    else spec_window_pages(self.spec_depth, self.page_size))
+        active = len(self.slots.active_slots())
+        if (active + 1) * per_slot > self.staging.num_slots:
+            return False
+        return self.pool.available() >= snap["resv"]
+
+    def resume_slot(self, slot: int, snap: Dict[str, Any]) -> None:
+        """Bit-exact resume: the held pages re-bind to ``slot`` (refs
+        transfer — ``assign`` does not incref), the dense per-slot state
+        scatters back via the prefix-hit insert program, and the write
+        page is left for the next ``_decode_prep`` to re-stage from its
+        host copy."""
+        assert self._caches is not None
+        assert not (self._pending is not None
+                    and self._pending["slot"] == slot)
+        pages = self.pool.release_hold(snap["hold"], transfer=True)
+        self.slots.assign(slot, pages, reserved=snap["resv"])
+        self._caches = self._insert_hit(
+            self._caches, snap["slot_state"], jnp.asarray(slot, jnp.int32),
+            self._pad_pages(pages),
+            jnp.asarray(snap["length"], jnp.int32))
+        self.obs.add("aux_launches")
+        self._host_pos[slot] = snap["host_pos"]
+        self._tok = self._tok.at[slot].set(snap["tok"])
+        self._pos = self._pos.at[slot].set(snap["pos"])
+
     # -- decode ----------------------------------------------------------
 
     def _dispatch_prefetch(self) -> None:
@@ -470,6 +565,14 @@ class TieredServingEngine(PagedServingEngine):
         if self.prefetch_depth:
             exclude = set(self.staging.cold_pages()) \
                 | {p for p in self._write_page if p is not None}
+            # ...and pages alive only under a preemption hold: a spilled
+            # request's pages stay scorable (last step's misses can name
+            # them) but must not re-promote while no slot maps them
+            held = set(self.pool.held_pages())
+            if held:
+                live = {p for s in self.slots.active_slots()
+                        for p in (self.slots.slot_pages(s) or [])}
+                exclude |= held - live
             # ...and each live slot's IMMINENT write page: the write-page
             # loop below stages it with a dedicated fetch, so prefetching
             # it into the lane would upload the same page twice

@@ -37,11 +37,15 @@ def test_paged_exploration_clean():
 def test_tiered_exploration_clean_covers_all_events():
     res = explore(make_tiered_harness, depth=5)
     assert res.violation is None, str(res.violation)
-    # the tiered alphabet in full: demotion and queue-head pressure are
-    # reachable within five events of the empty pool
+    # the tiered alphabet in full: demotion, queue-head pressure, and the
+    # preemption-by-spill cycle are all reachable within five events of
+    # the empty pool
     assert set(res.event_counts) == {"admit_start", "admit_finish",
                                      "admit_cancel", "decode", "retire",
-                                     "demote", "pressure"}
+                                     "demote", "pressure", "preempt",
+                                     "resume", "retire_preempted"}
+    assert res.event_counts["preempt"] > 0
+    assert res.event_counts["resume"] > 0
 
 
 def test_spec_exploration_clean():
